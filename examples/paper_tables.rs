@@ -1,0 +1,116 @@
+//! Regenerate every simulator-backed paper table/figure in one go and
+//! write the TSVs under reports/.  (Accuracy tables need the PJRT
+//! artifacts and live in `cargo bench` targets tab02..tab06, fig03b,
+//! fig05, fig08.)
+//!
+//! ```sh
+//! cargo run --release --example paper_tables
+//! ```
+
+use p3llm::accel::{fig9_systems, Accel};
+use p3llm::area::{pcu_area_table, pe_table};
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, f3, Table};
+use p3llm::workload::memory_breakdown;
+
+fn main() {
+    let dir = p3llm::benchkit::reports_dir();
+
+    // Fig 9 + summary
+    let systems = fig9_systems();
+    let mut fig9 = Table::new(
+        "Fig 9: speedup over NPU",
+        &["model", "bs", "NPU", "HBM-PIM", "Ecco", "P3-LLM"],
+    );
+    let mut sums = vec![0.0; systems.len()];
+    let mut n = 0;
+    for m in eval_models() {
+        for bs in [1usize, 2, 4, 8] {
+            let ns: Vec<f64> = systems
+                .iter()
+                .map(|a| a.decode_step(&m, bs, 4096).total_ns())
+                .collect();
+            fig9.row(
+                std::iter::once(m.name.to_string())
+                    .chain(std::iter::once(bs.to_string()))
+                    .chain(ns.iter().map(|&x| f2(ns[0] / x)))
+                    .collect(),
+            );
+            for (i, &x) in ns.iter().enumerate() {
+                sums[i] += x / ns[3];
+            }
+            n += 1;
+        }
+    }
+    fig9.print();
+    println!(
+        "P3 avg speedups -- NPU {:.2}x, HBM-PIM {:.2}x, Ecco {:.2}x (paper 7.8/4.9/2.0)\n",
+        sums[0] / n as f64,
+        sums[1] / n as f64,
+        sums[2] / n as f64
+    );
+    fig9.save(&dir, "paper_fig09").unwrap();
+
+    // Table VII/VIII
+    let mut t7 = Table::new("Table VII", &["design", "compute", "buffer", "overhead %"]);
+    for r in pcu_area_table() {
+        t7.row(vec![r.name.into(), f2(r.compute_mm2), f2(r.buffer_mm2),
+                    f2(r.hbm_overhead_pct)]);
+    }
+    t7.print();
+    t7.save(&dir, "paper_tab07").unwrap();
+
+    let mut t8 = Table::new("Table VIII", &["PE", "area um2", "pJ/MAC"]);
+    for r in pe_table() {
+        t8.row(vec![r.name.into(), f2(r.area_um2_28nm), f3(r.energy_pj_per_mac)]);
+    }
+    t8.print();
+    t8.save(&dir, "paper_tab08").unwrap();
+
+    // Fig 14
+    let mut f14 = Table::new(
+        "Fig 14: weights+KV GB (bs=8, ctx=4K)",
+        &["model", "FP16", "P3-LLM", "reduction"],
+    );
+    for m in eval_models() {
+        let fp = memory_breakdown(&m, 8, 4096, 16.0, 16.0, 16.0, 16.0);
+        let p3s = p3llm::config::scheme::QuantScheme::p3llm();
+        let p3 = memory_breakdown(&m, 8, 4096, p3s.bits.weights, 16.0,
+                                  p3s.bits.kv, 16.0);
+        let a = (fp.weights + fp.kv) / 1e9;
+        let b = (p3.weights + p3.kv) / 1e9;
+        f14.row(vec![m.name.into(), f2(a), f2(b), f2(a / b)]);
+    }
+    f14.print();
+    f14.save(&dir, "paper_fig14").unwrap();
+
+    // Fig 15 chain summary
+    let chain = [
+        Accel::hbm_pim(),
+        Accel::pim_w4a8kv4(),
+        Accel::pim_w4a8kv4_tep(),
+        Accel::p3llm(),
+    ];
+    let mut c = vec![0.0; chain.len()];
+    let mut n2 = 0;
+    for m in eval_models() {
+        for bs in [2usize, 4] {
+            let ns: Vec<f64> = chain
+                .iter()
+                .map(|a| a.decode_step(&m, bs, 4096).total_ns())
+                .collect();
+            for i in 0..chain.len() {
+                c[i] += ns[0] / ns[i];
+            }
+            n2 += 1;
+        }
+    }
+    println!(
+        "Fig 15 chain: +W4A8KV4 {:.2}x, +TEP x{:.2}, +P8 x{:.2} (paper 3.3/1.6/1.2)",
+        c[1] / n2 as f64,
+        c[2] / c[1],
+        c[3] / c[2]
+    );
+
+    println!("\nreports written to {}", dir.display());
+}

@@ -1,0 +1,64 @@
+//! Operator-mapping + PIM command-trace explorer (paper Fig. 6b/7):
+//! prints where every decode operator of a model runs (NPU vs PIM),
+//! the per-op latency, and the command timing of the first columns.
+//!
+//! ```sh
+//! cargo run --release --example pim_trace -- --model Llama-3.1-8B --batch 2
+//! ```
+
+use p3llm::accel::Accel;
+use p3llm::cli::Args;
+use p3llm::config::accel::{HbmTiming, PcuConfig, PimConfig};
+use p3llm::config::llm;
+use p3llm::coordinator::mapper::{command_timing, map_decode_step, Engine};
+use p3llm::report::{f2, Table};
+use p3llm::sim::pim::PimGemm;
+
+fn main() {
+    let args = Args::from_env();
+    let model = llm::by_name(args.get_or("model", "Llama-3.1-8B"))
+        .expect("unknown model");
+    let bs = args.get_usize("batch", 2);
+    let ctx = args.get_usize("ctx", 4096);
+    let accel = Accel::p3llm();
+
+    let mut t = Table::new(
+        format!("{} decode step mapping (bs={bs}, ctx={ctx})", model.name),
+        &["op", "engine", "us", "PIM commands"],
+    );
+    let mut pim_us = 0.0;
+    let mut npu_us = 0.0;
+    for a in map_decode_step(&accel, &model, bs, ctx) {
+        t.row(vec![
+            a.op.into(),
+            format!("{:?}", a.engine),
+            f2(a.ns / 1e3),
+            a.commands.to_string(),
+        ]);
+        match a.engine {
+            Engine::Pim => pim_us += a.ns / 1e3,
+            Engine::Npu => npu_us += a.ns / 1e3,
+        }
+    }
+    t.print();
+    println!("PIM {:.1} us, NPU {:.1} us per step\n", pim_us, npu_us);
+
+    let mut tt = Table::new(
+        "Fig 7 command timing (first 3 columns of a GEMV pass)",
+        &["pcu", "col", "event", "t ns"],
+    );
+    for pcu in [PcuConfig::hbm_pim(), PcuConfig::p3llm()] {
+        let bits = pcu.weight_bits.min(16.0);
+        let pim = PimConfig { hbm: HbmTiming::default(), pcu: pcu.clone() };
+        let g = PimGemm { m: 2, k: model.hidden, n: 128, count: 1, stored_bits: bits };
+        for (c, t_ns, ev) in command_timing(&pim, g, 3) {
+            tt.row(vec![
+                pcu.name.into(),
+                c.to_string(),
+                ev.into(),
+                format!("{t_ns:.1}"),
+            ]);
+        }
+    }
+    tt.print();
+}

@@ -1,0 +1,110 @@
+//! Numerical-format explorer: quantize a tensor with every format in
+//! the library and compare errors -- a tool for reproducing the
+//! paper's Section IV design choices interactively.
+//!
+//! ```sh
+//! cargo run --release --example quant_explore -- --dist softmax
+//! cargo run --release --example quant_explore -- --dist gaussian --outlier 20
+//! ```
+
+use p3llm::cli::Args;
+use p3llm::quant::{
+    bitmod_encode_group, bitmod_decode_group, fp8_e4m3, fp8_s0e4m4,
+    int8_unsigned, smoothing_factors,
+};
+use p3llm::quant::int::fake_quant_group_int;
+use p3llm::report::{Table, f3};
+use p3llm::testutil::Rng;
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) * (x - y)) as f64).sum::<f64>()
+        / a.len() as f64
+}
+
+fn rel(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y).abs() / (x.abs() + 1e-9)) as f64)
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+fn main() {
+    let args = Args::from_env();
+    let dist = args.get_or("dist", "softmax");
+    let outlier = args.get_f64("outlier", 1.0) as f32;
+    let n = args.get_usize("n", 4096);
+    let mut rng = Rng::new(args.get_usize("seed", 3) as u64);
+
+    let x: Vec<f32> = match dist {
+        "softmax" => {
+            // scores from a realistic logit spread
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+            let rows = n / 64;
+            let mut out = vec![0.0f32; n];
+            for r in 0..rows {
+                let row = &logits[r * 64..(r + 1) * 64];
+                let m = row.iter().cloned().fold(f32::MIN, f32::max);
+                let ex: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+                let s: f32 = ex.iter().sum();
+                for (i, e) in ex.iter().enumerate() {
+                    out[r * 64 + i] = e / s;
+                }
+            }
+            out
+        }
+        "gaussian" => (0..n)
+            .map(|i| rng.normal() * if i % 128 == 7 { outlier } else { 1.0 })
+            .collect(),
+        _ => panic!("--dist softmax|gaussian"),
+    };
+
+    let mut t = Table::new(
+        format!("format comparison on {dist} tensor (n={n}, outlier x{outlier})"),
+        &["format", "MSE", "mean rel err"],
+    );
+    let apply = |f: &dyn Fn(f32) -> f32| -> Vec<f32> {
+        x.iter().map(|&v| f(v)).collect()
+    };
+    t.row(vec!["FP8-E4M3".into(), f3(mse(&x, &apply(&fp8_e4m3))),
+               f3(rel(&x, &apply(&fp8_e4m3)))]);
+    if dist == "softmax" {
+        t.row(vec!["FP8-S0E4M4".into(), f3(mse(&x, &apply(&fp8_s0e4m4))),
+                   f3(rel(&x, &apply(&fp8_s0e4m4)))]);
+        t.row(vec!["INT8-unsigned".into(), f3(mse(&x, &apply(&int8_unsigned))),
+                   f3(rel(&x, &apply(&int8_unsigned)))]);
+    }
+    // group formats
+    for (name, bits) in [("INT4-Asym/128", 4u32), ("INT8-Asym/128", 8)] {
+        let mut q = x.clone();
+        for g in q.chunks_mut(128) {
+            fake_quant_group_int(g, bits);
+        }
+        t.row(vec![name.into(), f3(mse(&x, &q)), f3(rel(&x, &q))]);
+    }
+    {
+        let mut q = vec![0.0f32; x.len()];
+        for (xi, qi) in x.chunks(128).zip(q.chunks_mut(128)) {
+            let enc = bitmod_encode_group(xi);
+            bitmod_decode_group(&enc, qi);
+        }
+        t.row(vec!["BitMoD-FP4/128".into(), f3(mse(&x, &q)), f3(rel(&x, &q))]);
+    }
+    if dist == "gaussian" {
+        // smoothed INT4 (the P3 key-cache path), channels = 128
+        let f = smoothing_factors(&x, 128);
+        let mut q = x.clone();
+        for row in q.chunks_mut(128) {
+            for (v, fc) in row.iter_mut().zip(&f) {
+                *v /= fc;
+            }
+            fake_quant_group_int(row, 4);
+            for (v, fc) in row.iter_mut().zip(&f) {
+                *v *= fc;
+            }
+        }
+        t.row(vec!["INT4 + smoothing".into(), f3(mse(&x, &q)),
+                   f3(rel(&x, &q))]);
+    }
+    t.print();
+}

@@ -1,0 +1,38 @@
+//! Quickstart: load the AOT artifacts, run one prefill + a few decode
+//! steps through the PJRT runtime, and print the generated text.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use p3llm::coordinator::{Engine, EngineConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = p3llm::benchkit::artifacts_dir();
+    let mut engine = Engine::new(
+        &dir,
+        EngineConfig { quantized: true, max_batch: 1, ..Default::default() },
+    )?;
+    let prompt = "celund is the capital of";
+    println!("model: {} (W4A8KV4P8, BitMoD weights)", engine.model.name);
+    println!("prompt: {prompt:?}");
+    let toks: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+    let id = engine.submit(toks, 32);
+    let stats = engine.run_to_completion()?;
+    let req = engine.request(id).unwrap();
+    let text: String = req
+        .generated
+        .iter()
+        .map(|&t| if t == 0 { '\n' } else { t as u8 as char })
+        .collect();
+    println!("generated: {text:?}");
+    println!(
+        "{} tokens in {:.0} ms ({:.1} tok/s), ttft {:.1} ms, kv pool {} B packed",
+        stats.tokens_out,
+        stats.wall_ms,
+        stats.tokens_per_sec(),
+        stats.mean_ttft_ms(),
+        engine.pool_used_bytes(),
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""Analysis graphs for Fig. 5 (KV-cache distribution) and Fig. 8
+(layer-wise key-cache quantization error).
+
+These are lowered to HLO like every other graph; the Rust bench harness
+streams evaluation corpora through them and aggregates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, quant
+
+
+def k_caches(params, tokens, cfg: model.Config):
+    """Per-layer pre-RoPE and post-RoPE key caches for a token block.
+
+    tokens: [B, T] -> (k_pre [L, B, T, kvdim], k_post [L, B, T, kvdim]).
+    """
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = params["tok_emb"][tokens]
+    causal = jnp.tril(jnp.ones((T, T), jnp.float32))
+    pres, posts = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xa = model._rmsnorm(x, params[p + "norm_attn"], cfg.norm_eps)
+        q = xa @ params[p + "wq"]
+        k = xa @ params[p + "wk"]
+        v = xa @ params[p + "wv"]
+        pres.append(k)
+        qh = model._rope(q.reshape(B, T, cfg.n_heads, cfg.d_head), pos, cfg)
+        kh = model._rope(k.reshape(B, T, cfg.n_kv, cfg.d_head), pos, cfg)
+        posts.append(kh.reshape(B, T, cfg.n_kv * cfg.d_head))
+        g = cfg.gqa_group
+        att = jnp.einsum("bqhd,bkhd->bhqk", qh, jnp.repeat(kh, g, 2))
+        att = att / np.sqrt(cfg.d_head)
+        att = jnp.where(causal[None, None] > 0, att, -1e30)
+        pr = jax.nn.softmax(att, axis=-1)
+        vh = v.reshape(B, T, cfg.n_kv, cfg.d_head)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr, jnp.repeat(vh, g, 2))
+        x = x + o.reshape(B, T, -1) @ params[p + "wo"]
+        xm = model._rmsnorm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        act = jax.nn.silu(xm @ params[p + "wgate"]) * (xm @ params[p + "wup"])
+        x = x + act @ params[p + "wdown"]
+    return jnp.stack(pres), jnp.stack(posts)
+
+
+def kdist_report(params, block, cfg: model.Config):
+    """Fig. 5 statistics: per-channel absmax of the key cache pre-RoPE,
+    post-RoPE, and post-smoothing, plus per-channel mean |K|.
+
+    block: [B, T+1] -> dict of [L, kvdim] arrays.
+    """
+    k_pre, k_post = k_caches(params, block[:, :-1], cfg)
+    f = jnp.maximum(jnp.max(jnp.abs(k_post), axis=(1, 2)), 1e-6)  # [L, C]
+    k_sm = k_post / f[:, None, None, :]
+    return (
+        jnp.max(jnp.abs(k_pre), axis=(1, 2)),
+        jnp.max(jnp.abs(k_post), axis=(1, 2)),
+        jnp.max(jnp.abs(k_sm), axis=(1, 2)),
+        jnp.mean(jnp.abs(k_post), axis=(1, 2)),
+    )
+
+
+def kv_error_report(params, block, aux, cfg: model.Config):
+    """Fig. 8: per-layer key-cache quantization error of three methods,
+    normalized by the mean |K| of the layer.
+
+    Methods (all INT4, post-RoPE):
+      0  P3-LLM  -- dynamic per-channel smoothing from the live block
+      1  Oaken   -- calibrated outlier mask (aux[oaken_mask_k])
+      2  QoQ     -- calibrated smoothing factors (aux[qoq_ksm])
+
+    Returns [3, L] normalized mean-squared errors.
+    """
+    _, k_post = k_caches(params, block[:, :-1], cfg)
+    dh = cfg.d_head
+
+    def err(kq):
+        return jnp.mean((kq - k_post) ** 2, axis=(1, 2, 3))
+
+    f_dyn = jnp.maximum(jnp.max(jnp.abs(k_post), axis=(1, 2)), 1e-6)
+    p3 = quant.quant_kv_asym_per_head(
+        k_post / f_dyn[:, None, None, :], 4.0, dh) * f_dyn[:, None, None, :]
+    oaken = quant.quant_kv_oaken(
+        k_post, aux["oaken_mask_k"][:, None, None, :], dh)
+    f_cal = aux["qoq_ksm"][:, None, None, :]
+    qoq = quant.quant_kv_asym_per_head(k_post / f_cal, 4.0, dh) * f_cal
+    norm = jnp.mean(k_post**2, axis=(1, 2, 3)) + 1e-12
+    return jnp.stack([err(p3) / norm, err(oaken) / norm, err(qoq) / norm])

@@ -1,0 +1,610 @@
+"""AOT pipeline: train the tiny model, build every HLO artifact, data
+file, calibration blob and golden vector the Rust side consumes.
+
+Run as ``python -m compile.aot --out ../artifacts``.  Python's job ends
+here -- the `p3llm` Rust binary is self-contained afterwards.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the HLO text
+parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import analysis, baselines, corpus, model, quant, train
+from .kernels import attention as k_attn
+from .kernels import quantize as k_quant
+from .kernels import w4a8_gemv as k_gemv
+
+DECODE_BATCHES = (1, 2, 4, 8)
+KERNEL_DECODE_BATCHES = (1, 4)
+PREFILL_T = 64
+EVAL_B, EVAL_T = 8, 128
+BITMOD_GROUP = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # "{...}", which silently corrupts any graph with an embedded
+    # constant (e.g. the QuaRot Hadamard matrix) when the text is
+    # re-parsed by the Rust loader.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the xla_extension 0.5.1 parser predates jax's source_end_line
+    # metadata fields -- strip metadata entirely
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _dtype_tag(x):
+    return {np.dtype("float32"): "f32", np.dtype("int32"): "i32",
+            np.dtype("uint8"): "u8"}[np.dtype(x)]
+
+
+class Registry:
+    """Collects artifacts + a TSV manifest the Rust loader parses."""
+
+    def __init__(self, out_dir):
+        self.out = out_dir
+        self.rows = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def graph(self, name, fn, arg_specs):
+        """arg_specs: list of (arg_name, ShapeDtypeStruct)."""
+        t0 = time.time()
+        specs = [s for _, s in arg_specs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, path), "w") as f:
+            f.write(text)
+        sig = ";".join(
+            f"{n}:{'x'.join(map(str, s.shape))}:{_dtype_tag(s.dtype)}"
+            for n, s in arg_specs
+        )
+        self.rows.append(("graph", name, path, sig))
+        print(f"  graph {name:28s} {len(text)/1e6:6.2f} MB  "
+              f"{time.time()-t0:5.1f}s", flush=True)
+
+    def data(self, name, path, note=""):
+        self.rows.append(("data", name, path, note))
+
+    def write(self):
+        with open(os.path.join(self.out, "manifest.tsv"), "w") as f:
+            f.write("kind\tname\tfile\tinfo\n")
+            for r in self.rows:
+                f.write("\t".join(r) + "\n")
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _keep(*tensors):
+    """Zero-valued keep-alive term over float tensors.
+
+    XLA's compiler prunes parameters a graph does not use, which would
+    desynchronize the Rust caller (it feeds every manifest arg).  Adding
+    0 * sum(args) to one output keeps the parameter list stable across
+    every scheme variant without changing numerics.
+    """
+    acc = jnp.float32(0.0)
+    for t in tensors:
+        if jnp.issubdtype(jnp.asarray(t).dtype, jnp.floating):
+            acc = acc + jnp.sum(t)
+    return acc * 0.0
+
+
+def param_specs(cfg):
+    return [(n, spec(s)) for n, s in sorted(model.param_shapes(cfg).items())]
+
+
+def aux_specs(cfg):
+    ref = model.default_aux(cfg)
+    return [(f"aux.{n}", spec(np.asarray(ref[n]).shape)) for n in
+            model.AUX_ORDER]
+
+
+def reassemble(cfg, args):
+    """Inverse of the flat (params..., block, aux...) calling convention."""
+    names = sorted(model.param_shapes(cfg))
+    params = dict(zip(names, args[: len(names)]))
+    rest = args[len(names):]
+    block = rest[0]
+    aux = dict(zip(model.AUX_ORDER, rest[1:]))
+    return params, block, aux
+
+
+# ----------------------------------------------------------------------
+# Eval graphs (accuracy experiments)
+# ----------------------------------------------------------------------
+
+EVAL_SCHEMES = {
+    # name -> scheme kwargs (static; bit-widths et al. come from aux)
+    "fp": dict(),
+    "int": dict(a_fmt="int", kv_mode="int", p_fmt="int"),
+    "int_pre": dict(a_fmt="int", kv_mode="int", p_fmt="int", k_stage="pre"),
+    "int_had": dict(a_fmt="int", kv_mode="int", p_fmt="int", hadamard=True),
+    "int_sq": dict(a_fmt="int", a_smooth=True, kv_mode="smooth_calib",
+                   p_fmt="int"),
+    "smooth": dict(kv_mode="smooth"),
+    "smooth_pre": dict(kv_mode="smooth", k_stage="pre"),
+    "oaken": dict(kv_mode="oaken"),
+    "p3_pe4m3": dict(kv_mode="smooth", p_fmt="e4m3"),
+    "p3_ps0e4m4": dict(kv_mode="smooth", p_fmt="s0e4m4"),
+    "p_int8u": dict(kv_mode="smooth", p_fmt="int8u"),
+    "p3_ainte": dict(a_fmt="int", kv_mode="smooth", p_fmt="s0e4m4"),
+    "p3_full": dict(a_fmt="e4m3", kv_mode="smooth", p_fmt="s0e4m4"),
+    "p3_full_q8": dict(a_fmt="e4m3", kv_mode="smooth", p_fmt="s0e4m4",
+                       q_fmt="e4m3"),
+    "p3_full_pre": dict(a_fmt="e4m3", kv_mode="smooth", p_fmt="s0e4m4",
+                        k_stage="pre"),
+    "a_e4m3": dict(a_fmt="e4m3"),
+    "a_int": dict(a_fmt="int"),
+    "a_int_sq": dict(a_fmt="int", a_smooth=True),
+}
+
+
+def build_eval_graphs(reg, cfg):
+    pspecs = param_specs(cfg)
+    bspec = [("block", spec((EVAL_B, EVAL_T + 1), jnp.int32))]
+    aspecs = aux_specs(cfg)
+    for tag, kw in EVAL_SCHEMES.items():
+        s = model.scheme(**kw)
+
+        def fn(*args, _s=s):
+            params, block, aux = reassemble(cfg, args)
+            total, count, correct = model.nll(params, block, cfg, _s, aux)
+            return total + _keep(*args), count, correct
+
+        reg.graph(f"eval_{tag}", fn, pspecs + bspec + aspecs)
+
+
+# ----------------------------------------------------------------------
+# Serving graphs
+# ----------------------------------------------------------------------
+
+
+def build_serving_graphs(reg, cfg):
+    pspecs = param_specs(cfg)
+    L, kvdim, ctx = cfg.n_layers, cfg.n_kv * cfg.d_head, cfg.max_ctx
+
+    for quantized, tag in ((False, "fp"), (True, "q")):
+        def pf(*args, _q=quantized):
+            params = dict(zip(sorted(model.param_shapes(cfg)), args[:-2]))
+            tokens, true_len = args[-2], args[-1]
+            lg, kc, vc, sf = model.prefill(params, tokens, true_len, cfg,
+                                           quantized=_q)
+            return lg + _keep(*args), kc, vc, sf
+
+        reg.graph(
+            f"prefill_{tag}", pf,
+            pspecs + [("tokens", spec((1, PREFILL_T), jnp.int32)),
+                      ("true_len", spec((), jnp.int32))],
+        )
+
+    for quantized, tag in ((False, "fp"), (True, "q")):
+        for b in DECODE_BATCHES:
+            def df(*args, _q=quantized, _b=b):
+                names = sorted(model.param_shapes(cfg))
+                params = dict(zip(names, args[: len(names)]))
+                tokens, pos, kc, vc, sf = args[len(names):]
+                lg, nk, nv = model.decode_step(params, tokens, pos, kc, vc,
+                                               sf, cfg, quantized=_q)
+                return lg + _keep(*args), nk, nv
+
+            reg.graph(
+                f"decode_{tag}_b{b}", df,
+                pspecs + [
+                    ("tokens", spec((b,), jnp.int32)),
+                    ("pos", spec((b,), jnp.int32)),
+                    ("k_cache", spec((L, b, ctx, kvdim))),
+                    ("v_cache", spec((L, b, ctx, kvdim))),
+                    ("smooth_f", spec((L, b, kvdim))),
+                ],
+            )
+
+
+class _KernelShim:
+    """Adapter giving model.decode_step the L1 Pallas kernels."""
+
+    @staticmethod
+    def w4a8_matmul(x, codes, scales, specials):
+        return k_gemv.w4a8_matmul(x, codes, scales, specials,
+                                  group=BITMOD_GROUP)
+
+    @staticmethod
+    def decode_attention(q, khc, vhc, attend, quantized=True):
+        return k_attn.decode_attention(q, khc, vhc, attend,
+                                       quantized=quantized)
+
+
+def kernel_param_specs(cfg):
+    """Linear weights expand to (codes, scales, specials) triples."""
+    out = []
+    for n, shp in sorted(model.param_shapes(cfg).items()):
+        if n.endswith(model.LINEAR_NAMES) or n == "lm_head":
+            k, nn = shp
+            g = k // BITMOD_GROUP
+            out.append((f"{n}.codes", spec((k, nn), jnp.uint8)))
+            out.append((f"{n}.scales", spec((g, nn))))
+            out.append((f"{n}.specials", spec((g, nn), jnp.uint8)))
+        else:
+            out.append((n, spec(shp)))
+    return out
+
+
+def build_kernel_decode_graphs(reg, cfg):
+    L, kvdim, ctx = cfg.n_layers, cfg.n_kv * cfg.d_head, cfg.max_ctx
+    kspecs = kernel_param_specs(cfg)
+
+    for b in KERNEL_DECODE_BATCHES:
+        def df(*args, _b=b):
+            params = {}
+            i = 0
+            for n, shp in sorted(model.param_shapes(cfg).items()):
+                if n.endswith(model.LINEAR_NAMES) or n == "lm_head":
+                    params[n] = (args[i], args[i + 1], args[i + 2])
+                    i += 3
+                else:
+                    params[n] = args[i]
+                    i += 1
+            tokens, pos, kc, vc, sf = args[i:]
+            lg, nk, nv = model.decode_step(params, tokens, pos, kc, vc, sf,
+                                           cfg, quantized=True,
+                                           kernels=_KernelShim)
+            return lg + _keep(*args), nk, nv
+
+        reg.graph(
+            f"decode_qk_b{b}", df,
+            kspecs + [
+                ("tokens", spec((b,), jnp.int32)),
+                ("pos", spec((b,), jnp.int32)),
+                ("k_cache", spec((L, b, ctx, kvdim))),
+                ("v_cache", spec((L, b, ctx, kvdim))),
+                ("smooth_f", spec((L, b, kvdim))),
+            ],
+        )
+
+
+def build_kernel_microbench_graphs(reg, cfg):
+    """Standalone kernel artifacts for Rust microbenches + cross-checks."""
+    b, k, n = 8, 128, 256
+    g = k // BITMOD_GROUP
+    reg.graph(
+        "kernel_w4a8_gemv",
+        lambda x, c, s, sp: k_gemv.w4a8_matmul(x, c, s, sp,
+                                               group=BITMOD_GROUP),
+        [("x", spec((b, k))), ("codes", spec((k, n), jnp.uint8)),
+         ("scales", spec((g, n))), ("specials", spec((g, n), jnp.uint8))],
+    )
+    ctx = cfg.max_ctx
+    reg.graph(
+        "kernel_attn",
+        lambda q, kc, vc, m: k_attn.decode_attention(
+            q, kc, vc, m > 0, quantized=True),
+        [("q", spec((4, cfg.n_heads, cfg.d_head))),
+         ("k_cache", spec((4, ctx, cfg.n_kv, cfg.d_head))),
+         ("v_cache", spec((4, ctx, cfg.n_kv, cfg.d_head))),
+         ("mask", spec((4, ctx), jnp.int32))],
+    )
+    reg.graph(
+        "kernel_e4m3",
+        lambda x: k_quant.fp8_e4m3(x),
+        [("x", spec((64, 128)))],
+    )
+
+
+def build_analysis_graphs(reg, cfg):
+    pspecs = param_specs(cfg)
+    bspec = [("block", spec((EVAL_B, EVAL_T + 1), jnp.int32))]
+    aspecs = aux_specs(cfg)
+
+    def kdist(*args):
+        names = sorted(model.param_shapes(cfg))
+        params = dict(zip(names, args[:-1]))
+        pre, post, sm, mean = analysis.kdist_report(params, args[-1], cfg)
+        return pre + _keep(*args), post, sm, mean
+
+    reg.graph("kdist", kdist, pspecs + bspec)
+
+    def kverr(*args):
+        params, block, aux = reassemble(cfg, args)
+        return (analysis.kv_error_report(params, block, aux, cfg)
+                + _keep(*args),)
+
+    reg.graph("kverr", kverr, pspecs + bspec + aspecs)
+
+
+# ----------------------------------------------------------------------
+# Data artifacts
+# ----------------------------------------------------------------------
+
+
+def write_corpora(reg, out):
+    for name in ("wiki_syn", "c4_syn", "pile_syn"):
+        tr, ev = corpus.make_splits(name)
+        short = name.removesuffix("_syn")
+        for split, toks in (("train", tr), ("eval", ev)):
+            path = f"tokens_{short}_{split}.bin"
+            toks.astype(np.uint8).tofile(os.path.join(out, path))
+            reg.data(f"tokens_{short}_{split}", path,
+                     f"u8 tokens n={toks.size}")
+
+
+def aux_to_blob(cfg, aux_overrides):
+    """Flatten an aux dict (AUX_ORDER) to one little-endian f32 blob."""
+    ref = model.default_aux(cfg)
+    parts = []
+    for n in model.AUX_ORDER:
+        v = np.asarray(aux_overrides.get(n, ref[n]), np.float32)
+        assert v.shape == np.asarray(ref[n]).shape, (n, v.shape)
+        parts.append(np.atleast_1d(v).reshape(-1))
+    return np.concatenate(parts)
+
+
+def write_aux_manifest(out, cfg):
+    ref = model.default_aux(cfg)
+    off = 0
+    with open(os.path.join(out, "aux_layout.tsv"), "w") as f:
+        f.write("name\tshape\toffset_f32\tcount\n")
+        for n in model.AUX_ORDER:
+            a = np.atleast_1d(np.asarray(ref[n]))
+            f.write(f"{n}\t{'x'.join(map(str, a.shape))}\t{off}\t{a.size}\n")
+            off += a.size
+
+
+def build_weight_variants(reg, out, cfg, params, stats_pile, stats_wiki):
+    """Write every weight file + aux blob + the evalcfg registry."""
+    variants = {}  # name -> (params, aux_overrides)
+    variants["fp"] = (params, {})
+    variants["w4"] = (baselines.weights_int4(params), {})
+    variants["bitmod"] = (baselines.weights_bitmod(params), {})
+    qoq_aux, qoq_w = baselines.build_qoq(params, stats_pile, cfg)
+    variants["qoq_pile"] = (qoq_w, qoq_aux)
+    sq_aux, sq_w = baselines.build_smoothquant(params, stats_wiki, cfg)
+    variants["sq_wiki"] = (sq_w, sq_aux)
+    # SmoothQuant smoothing with fp weights (Table III W16 row)
+    sm_aux, sm_w = baselines.smooth_sites(stats_wiki, params, cfg)
+    variants["smoothed_fp"] = (sm_w, sm_aux)
+    sm_bm = baselines.weights_bitmod(sm_w)
+    variants["smoothed_bitmod"] = (sm_bm, sm_aux)
+    variants["quarot"] = (baselines.weights_quarot(params, cfg), {})
+    variants["awq_wiki"] = (baselines.weights_awq(params, stats_wiki, cfg),
+                            {})
+    oaken_wiki = baselines.build_oaken_masks(stats_pile, cfg)
+    variants["oaken_pile"] = (params, oaken_wiki)
+
+    # layout manifest (identical for every variant)
+    train.save_weights(params, os.path.join(out, "weights_fp.bin"),
+                       os.path.join(out, "weights.tsv"))
+    reg.data("weights_layout", "weights.tsv", "name/shape/offset/count")
+
+    for name, (p, auxo) in variants.items():
+        wpath = f"weights_{name}.bin"
+        train.save_weights(p, os.path.join(out, wpath))
+        reg.data(f"weights_{name}", wpath, "f32 flat, sorted-name order")
+        apath = f"aux_{name}.bin"
+        aux_to_blob(cfg, auxo).tofile(os.path.join(out, apath))
+        reg.data(f"aux_{name}", apath, "f32 flat, aux_layout.tsv order")
+
+    # packed BitMoD weights for the kernel decode graphs
+    packed = {}
+    for n, w in params.items():
+        if n.endswith(model.LINEAR_NAMES) or n == "lm_head":
+            codes, scales, specials = quant.quant_bitmod_encode(
+                np.asarray(w).T, BITMOD_GROUP)
+            k, nn = np.asarray(w).shape
+            g = k // BITMOD_GROUP
+            packed[f"{n}.codes"] = codes.T.astype(np.uint8)  # [K, N]
+            packed[f"{n}.scales"] = (
+                scales.reshape(nn, g).T.astype(np.float32))
+            packed[f"{n}.specials"] = (
+                specials.reshape(nn, g).T.astype(np.uint8))
+    ppath = os.path.join(out, "weights_packed.bin")
+    with open(ppath, "wb") as f, open(
+            os.path.join(out, "weights_packed.tsv"), "w") as m:
+        m.write("name\tshape\tdtype\toffset_bytes\tnbytes\n")
+        off = 0
+        for n in sorted(packed):
+            a = packed[n]
+            f.write(a.tobytes())
+            m.write(f"{n}\t{'x'.join(map(str, a.shape))}\t"
+                    f"{_dtype_tag(a.dtype)}\t{off}\t{a.nbytes}\n")
+            off += a.nbytes
+    reg.data("weights_packed", "weights_packed.bin",
+             "BitMoD codes/scales/specials, see weights_packed.tsv")
+
+
+# ----------------------------------------------------------------------
+# Golden vectors for Rust <-> Python bit-exactness
+# ----------------------------------------------------------------------
+
+
+def write_goldens(out, seed=7):
+    r = np.random.default_rng(seed)
+    lines = []
+
+    def csv(a):
+        return ",".join(f"{float(v):.9g}" for v in np.asarray(a).reshape(-1))
+
+    x = r.normal(0, 2.0, size=64).astype(np.float32)
+    lines.append(("e4m3", csv(x), csv(quant.quant_fp8_e4m3(jnp.asarray(x)))))
+    p = r.random(64).astype(np.float32)
+    lines.append(("s0e4m4", csv(p),
+                  csv(quant.quant_fp8_s0e4m4(jnp.asarray(p)))))
+    for i in range(4):
+        g = r.normal(0, 1 + i, size=16).astype(np.float32)
+        lines.append((f"int4asym", csv(g),
+                      csv(quant.quant_int_asym(jnp.asarray(g), 4.0))))
+    for i in range(3):
+        w = r.normal(0, 0.5, size=128).astype(np.float32)
+        codes, scales, specials = quant.quant_bitmod_encode(w, 128)
+        deq = quant.bitmod_decode(codes, scales, specials, 128)
+        lines.append(("bitmod", csv(w),
+                      csv(codes.astype(np.float32)) + "|" +
+                      f"{float(scales[0]):.9g}|{int(specials[0])}|" +
+                      csv(deq)))
+    k = r.normal(0, 1, size=(8, 32)).astype(np.float32)
+    k[:, 3] *= 8.0  # an outlier channel
+    f = np.asarray(quant.smoothing_factors(jnp.asarray(k)))
+    lines.append(("smooth", csv(k), csv(f)))
+    with open(os.path.join(out, "golden_quant.tsv"), "w") as fh:
+        fh.write("kind\tinput\toutput\n")
+        for kind, i, o in lines:
+            fh.write(f"{kind}\t{i}\t{o}\n")
+
+
+def write_evalcfg(out):
+    """Experiment-variant registry: which graph runs with which weight
+    file / aux blob.  The Rust bench harness reads this."""
+    rows = [
+        # name, graph, weights, aux, scalar overrides, note
+        ("fp16", "eval_fp", "fp", "fp", "", "FP16 baseline"),
+        ("p3_kv4", "eval_smooth", "fp", "fp", "kv_bits=4",
+         "P3 KV4-only (Table IV)"),
+        ("oaken_kv4", "eval_oaken", "fp", "oaken_pile", "",
+         "Oaken KV4-only, calibrated on pile_syn"),
+        ("naive_int", "eval_int", "w4", "fp",
+         "kv_bits=4,a_bits=8,p_bits=8",
+         "naive INT W4A8KV4P8 (Fig 3b highlight)"),
+        ("quarot", "eval_int_had", "quarot", "fp", "kv_bits=4,a_bits=8",
+         "QuaRot W4A8KV4 (rotated weights)"),
+        ("qoq", "eval_int_sq", "qoq_pile", "qoq_pile",
+         "kv_bits=4,a_bits=8", "QoQ W4A8KV4, calibrated on pile_syn"),
+        ("p3_full", "eval_p3_full", "bitmod", "fp", "kv_bits=4",
+         "P3-LLM W4A8KV4P8 (BitMoD weights)"),
+        ("p3_full_q8", "eval_p3_full_q8", "bitmod", "fp", "kv_bits=4",
+         "P3-LLM with FP8 query (Llama-3/Mistral mode)"),
+        # Table VI ablation chain
+        ("abl_int4kv_pre", "eval_int_pre", "fp", "fp", "kv_bits=4",
+         "+preRoPE INT4 KV"),
+        ("abl_int4kv_post", "eval_int", "fp", "fp", "kv_bits=4",
+         "+postRoPE INT4 KV"),
+        ("abl_smooth", "eval_smooth", "fp", "fp", "kv_bits=4",
+         "+dynamic smoothing"),
+        ("abl_w4", "eval_smooth", "w4", "fp", "kv_bits=4", "+INT4 weights"),
+        ("abl_bitmod", "eval_smooth", "bitmod", "fp", "kv_bits=4",
+         "+BitMoD weights"),
+        ("abl_p_e4m3", "eval_p3_pe4m3", "bitmod", "fp", "kv_bits=4",
+         "+E4M3 scores"),
+        ("abl_p_s0e4m4", "eval_p3_ps0e4m4", "bitmod", "fp", "kv_bits=4",
+         "+S0E4M4 scores"),
+        ("abl_a_int8", "eval_p3_ainte", "bitmod", "fp",
+         "kv_bits=4,a_bits=8", "+INT8 act"),
+        ("abl_a_e4m3", "eval_p3_full", "bitmod", "fp", "kv_bits=4",
+         "+E4M3 act"),
+        # Table II (attention-score formats, KV4 smoothed)
+        ("score_fp16", "eval_smooth", "fp", "fp", "kv_bits=4",
+         "KV4 + FP16 scores"),
+        ("score_int8", "eval_p_int8u", "fp", "fp", "kv_bits=4",
+         "KV4 + unsigned INT8 scores"),
+        ("score_e4m3", "eval_p3_pe4m3", "fp", "fp", "kv_bits=4",
+         "KV4 + E4M3 scores"),
+        ("score_s0e4m4", "eval_p3_ps0e4m4", "fp", "fp", "kv_bits=4",
+         "KV4 + S0E4M4 scores"),
+        # Table III (activation formats x weight precision)
+        ("act_sq8_w16", "eval_a_int_sq", "smoothed_fp", "smoothed_fp",
+         "a_bits=8", "INT8-SQ act, FP16 weights"),
+        ("act_e4m3_w16", "eval_a_e4m3", "fp", "fp", "",
+         "FP8-E4M3 act, FP16 weights"),
+        ("act_sq8_w4", "eval_a_int_sq", "smoothed_bitmod", "smoothed_fp",
+         "a_bits=8", "INT8-SQ act, 4-bit weights"),
+        ("act_e4m3_w4", "eval_a_e4m3", "bitmod", "fp", "",
+         "FP8-E4M3 act, 4-bit weights"),
+        # SW-quant perf baselines also have accuracy counterparts
+        ("smoothquant", "eval_a_int_sq", "sq_wiki", "sq_wiki", "a_bits=8",
+         "SmoothQuant W8A8"),
+        ("awq", "eval_fp", "awq_wiki", "fp", "", "AWQ W4A16"),
+    ]
+    with open(os.path.join(out, "evalcfg.tsv"), "w") as f:
+        f.write("name\tgraph\tweights\taux\tscalars\tnote\n")
+        for r in rows:
+            f.write("\t".join(r) + "\n")
+
+
+# ----------------------------------------------------------------------
+# main
+# ----------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--skip-graphs", action="store_true",
+                    help="only data/weights/goldens (debug)")
+    args = ap.parse_args()
+    cfg = model.TINY
+    out = args.out
+    reg = Registry(out)
+
+    print("[aot] corpora", flush=True)
+    write_corpora(reg, out)
+
+    wpath = os.path.join(out, "weights_fp.bin")
+    if os.path.exists(wpath):
+        print("[aot] reusing trained weights", flush=True)
+        params = {k: np.asarray(v) for k, v in
+                  train.load_weights(wpath, cfg).items()}
+    else:
+        print(f"[aot] training tiny model ({args.steps} steps)", flush=True)
+        params, log = train.train(cfg, steps=args.steps)
+        params = {k: np.asarray(v) for k, v in params.items()}
+        with open(os.path.join(out, "train_log.tsv"), "w") as f:
+            f.write("step\tloss\n")
+            for s, l in log:
+                f.write(f"{s}\t{l:.6f}\n")
+
+    print("[aot] calibration", flush=True)
+    calib_blocks = {}
+    for name in ("pile_syn", "wiki_syn"):
+        tr, _ = corpus.make_splits(name, n_train_sent=2000)
+        calib_blocks[name] = list(
+            corpus.batches(tr, EVAL_B, EVAL_T, n_batches=4))
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    stats_pile = baselines.calibrate(jparams, calib_blocks["pile_syn"], cfg)
+    stats_wiki = baselines.calibrate(jparams, calib_blocks["wiki_syn"], cfg)
+
+    print("[aot] weight variants + aux blobs", flush=True)
+    build_weight_variants(reg, out, cfg, params, stats_pile, stats_wiki)
+    write_aux_manifest(out, cfg)
+    write_evalcfg(out)
+
+    print("[aot] golden vectors", flush=True)
+    write_goldens(out)
+
+    if not args.skip_graphs:
+        print("[aot] eval graphs", flush=True)
+        build_eval_graphs(reg, cfg)
+        print("[aot] serving graphs", flush=True)
+        build_serving_graphs(reg, cfg)
+        print("[aot] kernel decode graphs", flush=True)
+        build_kernel_decode_graphs(reg, cfg)
+        print("[aot] kernel microbench graphs", flush=True)
+        build_kernel_microbench_graphs(reg, cfg)
+        print("[aot] analysis graphs", flush=True)
+        build_analysis_graphs(reg, cfg)
+
+    reg.write()
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print("[aot] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

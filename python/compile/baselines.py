@@ -1,0 +1,246 @@
+"""Baseline quantization algorithms (paper Section VI-A).
+
+Simplified-but-faithful re-implementations of the algorithms P3-LLM is
+compared against.  Each follows the published method's *mechanism*:
+
+  * Oaken  [42]: offline calibration picks per-channel KV outlier
+    channels; those stay at INT8, the rest go INT4 (effective ~4.8 bit).
+  * QuaRot [2]:  Hadamard rotation folded into weights offline, applied
+    to activations online; then plain INT W4A8KV4.
+  * QoQ/QServe [53]: SmoothQuant-style calibrated channel smoothing for
+    activations *and* key cache, then INT W4A8KV4.
+  * SmoothQuant [88]: calibrated smoothing, W8A8.
+  * AWQ [52]: activation-aware per-channel weight scaling, W4 group-128,
+    A16.
+
+All calibration statistics come from a *calibration corpus* -- the
+overfitting this induces when evaluating on a different corpus is one of
+the paper's central claims (Table IV, Fig. 8), so the corpus used for
+calibration is an explicit argument everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, quant
+
+
+# ----------------------------------------------------------------------
+# Calibration: per-channel activation / KV statistics
+# ----------------------------------------------------------------------
+
+
+def calibrate(params, blocks, cfg: model.Config):
+    """Run the fp model over calibration blocks and collect per-channel
+    absolute maxima at every quantization site.
+
+    Returns dict of numpy arrays:
+      asm_attn/asm_o/asm_mlp/asm_down : [L, site_dim] linear-input maxima
+      k_absmax_pre / k_absmax_post    : [L, kvdim]    key-cache maxima
+      v_absmax                        : [L, kvdim]    value-cache maxima
+    """
+    L = cfg.n_layers
+
+    @jax.jit
+    def stats_one(block):
+        tokens = block[:, :-1]
+        B, T = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x = params["tok_emb"][tokens]
+        causal = jnp.tril(jnp.ones((T, T), jnp.float32))
+        out = {k: [] for k in ("asm_attn", "asm_o", "asm_mlp", "asm_down",
+                               "k_absmax_pre", "k_absmax_post", "v_absmax")}
+        for i in range(L):
+            p = f"layer{i}."
+            xa = model._rmsnorm(x, params[p + "norm_attn"], cfg.norm_eps)
+            out["asm_attn"].append(jnp.max(jnp.abs(xa), axis=(0, 1)))
+            q = xa @ params[p + "wq"]
+            k = xa @ params[p + "wk"]
+            v = xa @ params[p + "wv"]
+            out["k_absmax_pre"].append(jnp.max(jnp.abs(k), axis=(0, 1)))
+            out["v_absmax"].append(jnp.max(jnp.abs(v), axis=(0, 1)))
+            qh = model._rope(
+                q.reshape(B, T, cfg.n_heads, cfg.d_head), pos, cfg)
+            kh = model._rope(
+                k.reshape(B, T, cfg.n_kv, cfg.d_head), pos, cfg)
+            kpost = kh.reshape(B, T, cfg.n_kv * cfg.d_head)
+            out["k_absmax_post"].append(jnp.max(jnp.abs(kpost), axis=(0, 1)))
+            g = cfg.gqa_group
+            att = jnp.einsum("bqhd,bkhd->bhqk", qh, jnp.repeat(kh, g, 2))
+            att = att / np.sqrt(cfg.d_head)
+            att = jnp.where(causal[None, None] > 0, att, -1e30)
+            pr = jax.nn.softmax(att, axis=-1)
+            vh = v.reshape(B, T, cfg.n_kv, cfg.d_head)
+            o = jnp.einsum("bhqk,bkhd->bqhd", pr, jnp.repeat(vh, g, 2))
+            o = o.reshape(B, T, cfg.n_heads * cfg.d_head)
+            out["asm_o"].append(jnp.max(jnp.abs(o), axis=(0, 1)))
+            x2 = x + o @ params[p + "wo"]
+            xm = model._rmsnorm(x2, params[p + "norm_mlp"], cfg.norm_eps)
+            out["asm_mlp"].append(jnp.max(jnp.abs(xm), axis=(0, 1)))
+            act = jax.nn.silu(xm @ params[p + "wgate"]) * (
+                xm @ params[p + "wup"])
+            out["asm_down"].append(jnp.max(jnp.abs(act), axis=(0, 1)))
+            x = x2 + act @ params[p + "wdown"]
+        return {k: jnp.stack(v) for k, v in out.items()}
+
+    acc = None
+    for block in blocks:
+        st = stats_one(jnp.asarray(block))
+        st = {k: np.asarray(v) for k, v in st.items()}
+        if acc is None:
+            acc = st
+        else:
+            acc = {k: np.maximum(acc[k], st[k]) for k in acc}
+    return acc
+
+
+# ----------------------------------------------------------------------
+# Weight transformations (host-side; mirrored bit-exactly in Rust where
+# the serving path needs them)
+# ----------------------------------------------------------------------
+
+_LINEAR_SUFFIXES = tuple(model.LINEAR_NAMES) + ("lm_head",)
+
+
+def _is_linear(name):
+    return name.endswith(_LINEAR_SUFFIXES)
+
+
+def _map_linear(params, fn):
+    return {k: (fn(k, v) if _is_linear(k) else v) for k, v in params.items()}
+
+
+def weights_int4(params, group=128):
+    """Plain INT4 asymmetric per-group (along input dim) fake-quant."""
+    def q(_, w):
+        return np.asarray(
+            quant.quant_int_asym_grouped(jnp.asarray(w).T, 4.0, group).T)
+    return _map_linear(params, q)
+
+
+def weights_bitmod(params, group=128):
+    """BitMoD 4-bit fake-quant (paper Section IV-C)."""
+    def q(_, w):
+        return np.asarray(quant.quant_bitmod(jnp.asarray(w).T, group).T)
+    return _map_linear(params, q)
+
+
+def weights_quarot(params, cfg, group=128, quant_bits=4):
+    """QuaRot: fold Hadamard into the input dim of the residual-stream
+    linears (wq/wk/wv/wgate/wup), then INT4 per-group quantization of all
+    linears.  The matching online rotation is scheme flag hadamard=True.
+    """
+    h = np.asarray(quant.hadamard_matrix(cfg.d_model))
+    rotated = {}
+    for k, v in params.items():
+        if k.endswith(("wq", "wk", "wv", "wgate", "wup")):
+            rotated[k] = h.T @ np.asarray(v)
+        else:
+            rotated[k] = np.asarray(v)
+    return weights_int4(rotated, group) if quant_bits == 4 else rotated
+
+
+def smooth_sites(stats, params, cfg, alpha=0.5):
+    """SmoothQuant/QoQ activation-smoothing factors per linear-input site
+    plus the matching input-channel-scaled weights.
+
+    Returns (aux_vectors dict, scaled params dict).  Activations get
+    divided by s, weight input channels multiplied by s.
+    """
+    L = cfg.n_layers
+    out_aux = {
+        "asm_attn": np.ones((L, cfg.d_model), np.float32),
+        "asm_o": np.ones((L, cfg.n_heads * cfg.d_head), np.float32),
+        "asm_mlp": np.ones((L, cfg.d_model), np.float32),
+        "asm_down": np.ones((L, cfg.d_ff), np.float32),
+    }
+    scaled = {k: np.asarray(v).copy() for k, v in params.items()}
+    site_weights = {
+        "asm_attn": ("wq", "wk", "wv"),
+        "asm_o": ("wo",),
+        "asm_mlp": ("wgate", "wup"),
+        "asm_down": ("wdown",),
+    }
+    for i in range(L):
+        for site, wnames in site_weights.items():
+            amax = stats[site][i]
+            wmax = np.max(
+                [np.abs(scaled[f"layer{i}.{w}"]).max(axis=1)
+                 for w in wnames],
+                axis=0,
+            )
+            s = np.asarray(quant.smoothquant_factors(
+                jnp.asarray(amax), jnp.asarray(wmax), alpha))
+            out_aux[site][i] = s
+            for w in wnames:
+                scaled[f"layer{i}.{w}"] *= s[:, None]
+    return out_aux, scaled
+
+
+def build_qoq(params, stats, cfg, alpha=0.5, group=128):
+    """QoQ: calibrated activation smoothing + calibrated key smoothing +
+    INT4 per-group weights.  Returns (aux updates, weights)."""
+    aux_vecs, scaled = smooth_sites(stats, params, cfg, alpha)
+    aux_vecs["qoq_ksm"] = np.maximum(stats["k_absmax_post"], 1e-6)
+    return aux_vecs, weights_int4(scaled, group)
+
+
+def build_smoothquant(params, stats, cfg, alpha=0.5):
+    """SmoothQuant: calibrated smoothing + INT8 per-group weights."""
+    aux_vecs, scaled = smooth_sites(stats, params, cfg, alpha)
+
+    def q8(_, w):
+        return np.asarray(
+            quant.quant_int_asym_grouped(jnp.asarray(w).T, 8.0, 128).T)
+    return aux_vecs, _map_linear(scaled, q8)
+
+
+def build_oaken_masks(stats, cfg, frac=0.1):
+    """Oaken: flag the top-`frac` key/value channels (by calibrated
+    absmax) per layer as INT8-resident outlier channels."""
+    def mask_of(absmax):
+        L, C = absmax.shape
+        n8 = max(1, int(round(frac * C)))
+        m = np.zeros((L, C), np.float32)
+        for i in range(L):
+            idx = np.argsort(absmax[i])[-n8:]
+            m[i, idx] = 1.0
+        return m
+    return {
+        "oaken_mask_k": mask_of(stats["k_absmax_post"]),
+        "oaken_mask_v": mask_of(stats["v_absmax"]),
+    }
+
+
+def weights_awq(params, stats, cfg, alpha=0.25, group=128):
+    """AWQ: activation-aware weight scaling s = amax_act^alpha applied to
+    weight input channels before INT4 group quant, inverted after --
+    weight-only, activations stay fp."""
+    site_of = {
+        "wq": "asm_attn", "wk": "asm_attn", "wv": "asm_attn",
+        "wo": "asm_o", "wgate": "asm_mlp", "wup": "asm_mlp",
+        "wdown": "asm_down",
+    }
+    out = {}
+    for k, v in params.items():
+        suffix = k.split(".")[-1]
+        if suffix in site_of:
+            layer = int(k.split(".")[0].removeprefix("layer"))
+            amax = stats[site_of[suffix]][layer]
+            s = np.maximum(amax, 1e-6) ** alpha
+            w = np.asarray(v) * s[:, None]
+            wq = np.asarray(
+                quant.quant_int_asym_grouped(jnp.asarray(w).T, 4.0, group).T)
+            out[k] = wq / s[:, None]
+        elif k == "lm_head":
+            out[k] = np.asarray(
+                quant.quant_int_asym_grouped(
+                    jnp.asarray(v).T, 4.0, group).T)
+        else:
+            out[k] = np.asarray(v)
+    return out

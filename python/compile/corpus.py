@@ -1,0 +1,161 @@
+"""Synthetic corpora standing in for Wikitext-2 / C4 / Pile.
+
+The paper's accuracy experiments need (a) text a small model can learn,
+and (b) *distribution shift between corpora* so that calibration-based
+baselines (Oaken, QoQ) visibly overfit (Table IV, Fig. 8).  We generate
+three byte-level corpora from three different probabilistic grammars:
+
+  * ``wiki_syn`` -- encyclopedia-style sentences: entity + relation +
+    attribute templates with a closed world of facts (so repeated entities
+    create learnable long-range structure).
+  * ``c4_syn``   -- webby mixture: product reviews, how-to fragments and
+    number-heavy lines; different lexicon and punctuation statistics.
+  * ``pile_syn`` -- code-ish / log-ish lines; used only as the calibration
+    corpus for the QoQ baseline (mirroring the paper, which calibrates QoQ
+    on Pile).
+
+Tokenization is byte-level (vocab 256); token 0 is reserved as BOS/newline
+separator.  Everything is deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 256
+BOS = 0
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------
+# wiki_syn grammar
+# ----------------------------------------------------------------------
+
+_ENTITIES = [
+    "aldora", "brevik", "celund", "dravos", "eltheria", "fenwick",
+    "gorlim", "halvard", "ithilan", "jorveth", "kelmora", "lunden",
+    "morvane", "nerith", "oskaria", "pellago", "quenlan", "rothgar",
+    "sylvane", "torvald",
+]
+_RELATIONS = [
+    "is the capital of", "lies north of", "was founded by",
+    "exports grain to", "borders", "is governed by", "trades with",
+    "was rebuilt after", "is twinned with", "pays tribute to",
+]
+_ATTRS = [
+    "a walled city", "a river port", "a mountain hold", "a fishing town",
+    "an old republic", "a mining colony", "a free harbor", "a salt market",
+]
+
+
+def _wiki_sentence(r):
+    a = _ENTITIES[r.integers(len(_ENTITIES))]
+    b = _ENTITIES[r.integers(len(_ENTITIES))]
+    rel = _RELATIONS[r.integers(len(_RELATIONS))]
+    if r.random() < 0.4:
+        attr = _ATTRS[r.integers(len(_ATTRS))]
+        return f"{a} {rel} {b} , and {a} is {attr} ."
+    year = 800 + int(r.integers(400))
+    return f"in {year} , {a} {rel} {b} ."
+
+
+# ----------------------------------------------------------------------
+# c4_syn grammar
+# ----------------------------------------------------------------------
+
+_PRODUCTS = [
+    "kettle", "lantern", "backpack", "router", "blender", "drone",
+    "keyboard", "tripod", "heater", "speaker",
+]
+_OPINIONS = [
+    "works great", "stopped working", "exceeded my expectations",
+    "arrived late", "is worth every penny", "feels cheap",
+    "does the job", "broke after a week",
+]
+_STEPS = [
+    "unplug the unit", "press and hold the reset button",
+    "check the firmware version", "clean the filter",
+    "charge it overnight", "update the app",
+]
+
+
+def _c4_sentence(r):
+    p = _PRODUCTS[r.integers(len(_PRODUCTS))]
+    if r.random() < 0.5:
+        op = _OPINIONS[r.integers(len(_OPINIONS))]
+        stars = 1 + int(r.integers(5))
+        return f"the {p} {op} ! rating : {stars} / 5 ."
+    s1 = _STEPS[r.integers(len(_STEPS))]
+    s2 = _STEPS[r.integers(len(_STEPS))]
+    return f"to fix your {p} , first {s1} , then {s2} ."
+
+
+# ----------------------------------------------------------------------
+# pile_syn grammar (calibration only)
+# ----------------------------------------------------------------------
+
+_FUNCS = ["init", "read", "write", "flush", "close", "sync", "poll", "map"]
+_OBJS = ["buf", "ctx", "dev", "node", "page", "sock", "ring", "slot"]
+
+
+def _pile_sentence(r):
+    f = _FUNCS[r.integers(len(_FUNCS))]
+    o = _OBJS[r.integers(len(_OBJS))]
+    if r.random() < 0.5:
+        code = int(r.integers(256))
+        return f"[{code:02x}] {f}_{o} returned {int(r.integers(64))} ;"
+    return f"if ( {f}_{o} ( {o} ) < 0 ) goto err_{o} ;"
+
+
+_GRAMMARS = {
+    "wiki_syn": (_wiki_sentence, 1234),
+    "c4_syn": (_c4_sentence, 5678),
+    "pile_syn": (_pile_sentence, 9012),
+}
+
+
+def generate_text(name, n_sentences, seed_offset=0):
+    fn, seed = _GRAMMARS[name]
+    r = _rng(seed + seed_offset)
+    return "\n".join(fn(r) for _ in range(n_sentences))
+
+
+def tokenize(text):
+    """Byte-level tokens; newlines become BOS separators."""
+    raw = text.encode("utf-8", errors="replace")
+    toks = np.frombuffer(raw, dtype=np.uint8).astype(np.int32)
+    toks = np.where(toks == ord("\n"), BOS, toks)
+    return toks
+
+
+def detokenize(tokens):
+    b = bytes(int(t) if t != BOS else ord("\n") for t in np.asarray(tokens))
+    return b.decode("utf-8", errors="replace")
+
+
+def corpus_tokens(name, n_sentences, seed_offset=0):
+    return tokenize(generate_text(name, n_sentences, seed_offset))
+
+
+def make_splits(name, n_train_sent=20000, n_eval_sent=2000):
+    """(train_tokens, eval_tokens) with disjoint sentence streams."""
+    train = corpus_tokens(name, n_train_sent, seed_offset=0)
+    evals = corpus_tokens(name, n_eval_sent, seed_offset=1_000_003)
+    return train, evals
+
+
+def batches(tokens, batch, seqlen, rng=None, n_batches=None):
+    """Yield [batch, seqlen+1] teacher-forcing blocks (inputs+targets)."""
+    span = seqlen + 1
+    n = (len(tokens) - 1) // span
+    starts = np.arange(n) * span
+    if rng is not None:
+        rng.shuffle(starts)
+    if n_batches is not None:
+        starts = starts[: n_batches * batch]
+    for i in range(0, len(starts) - batch + 1, batch):
+        idx = starts[i : i + batch]
+        yield np.stack([tokens[s : s + span] for s in idx]).astype(np.int32)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: quantized GQA decode attention (paper Fig. 6b/6c).
+
+One grid step handles one (batch, kv-head) pair: the G = n_heads/n_kv
+query heads that share a kv head compute Q.K^T over the whole cache,
+softmax, FP8-S0E4M4 score rounding, and P.V -- the full self-attention
+offload that the low-precision PCU enables (Section IV-B: without 8-bit
+scores the P.V GEMV would have to fall back to the NPU).
+
+The kv cache arrives as fp values already snapped to the INT4-Asym grid
+(dequantized by the KV manager / PCU decoder); score quantization is
+done in-kernel, after softmax, exactly where Fig. 6(c) fuses it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _s0e4m4(p):
+    """Unsigned FP8-S0E4M4 rounding (4-bit exp bias 15, 4-bit mantissa),
+    p in [0, 1].  Mirrors quant.quant_fp8_s0e4m4 with in-kernel ops."""
+    p = jnp.clip(p, 0.0, 1.0)
+    e = jnp.floor(jnp.log2(jnp.maximum(p, 1e-38)))
+    e = jnp.clip(e, -14.0, 0.0)
+    ulp = jnp.exp2(e - 4.0)
+    q = jnp.asarray(jnp.rint(p / ulp), p.dtype) * ulp
+    return jnp.minimum(q, 1.0)
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale, quantized):
+    q = q_ref[...][0]  # [G, dh]
+    k = k_ref[...][0, :, 0]  # [ctx, dh]
+    v = v_ref[...][0, :, 0]  # [ctx, dh]
+    m = mask_ref[...][0]  # [ctx]
+    att = (q @ k.T) * scale  # [G, ctx]
+    att = jnp.where(m[None, :] > 0, att, -1e30)
+    att = att - jnp.max(att, axis=-1, keepdims=True)
+    ex = jnp.exp(att)
+    p = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    if quantized:
+        p = _s0e4m4(p)
+    o_ref[...] = (p @ v)[None]
+
+
+def decode_attention(q, k_cache, v_cache, attend, *, quantized=True):
+    """q: [B, nh, dh]; k_cache/v_cache: [B, ctx, n_kv, dh];
+    attend: [B, ctx] bool/int mask.  Returns [B, nh, dh]."""
+    b, nh, dh = q.shape
+    _, ctx, nkv, _ = k_cache.shape
+    g = nh // nkv
+    scale = 1.0 / float(dh) ** 0.5
+    mask = attend.astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, quantized=quantized),
+        grid=(b, nkv),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ctx, 1, dh), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, ctx, 1, dh), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, ctx), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, dh), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, mask)
+
+
+def vmem_bytes(b, nh, dh, ctx, nkv):
+    """Estimated VMEM working set of one grid step (for §Perf)."""
+    g = nh // nkv
+    return 4 * (g * dh + 2 * ctx * dh + ctx + g * ctx + g * dh)

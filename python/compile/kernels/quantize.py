@@ -1,0 +1,70 @@
+"""L1 Pallas kernels: standalone quantizers.
+
+These run on the NPU side of Fig. 6 (activations / new KV entries are
+quantized before being shipped to the PCU input registers).  They are
+lowered both standalone (kernel microbench artifacts) and fused into
+the decode graphs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _e4m3_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-38)))
+    e = jnp.clip(e, -6.0, 8.0)
+    ulp = jnp.exp2(e - 3.0)
+    q = jnp.asarray(jnp.rint(ax / ulp), x.dtype) * ulp
+    o_ref[...] = jnp.sign(x) * jnp.minimum(q, 448.0)
+
+
+def fp8_e4m3(x, row_blk=None):
+    """Row-blocked FP8-E4M3 cast of a 2-D tensor."""
+    r, c = x.shape
+    rb = r if row_blk is None else min(row_blk, r)
+    assert r % rb == 0
+    return pl.pallas_call(
+        _e4m3_kernel,
+        grid=(r // rb,),
+        in_specs=[pl.BlockSpec((rb, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _int4_asym_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [rows, group]
+    levels = 15.0
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum(xmax - xmin, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - xmin) / scale), 0.0, levels)
+    o_ref[...] = q * scale + xmin
+
+
+def int4_asym_per_head(x, head_dim, row_blk=64):
+    """INT4-Asym per-head fake-quant of [T, kvdim] new KV entries; each
+    contiguous `head_dim` span of one token shares (scale, zero)."""
+    t, kvdim = x.shape
+    assert kvdim % head_dim == 0
+    rows = t * (kvdim // head_dim)
+    xg = x.reshape(rows, head_dim)
+    rb = min(row_blk, rows)
+    assert rows % rb == 0
+    out = pl.pallas_call(
+        _int4_asym_kernel,
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, head_dim), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, head_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, head_dim), jnp.float32),
+        interpret=True,
+    )(xg)
+    return out.reshape(t, kvdim)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+pytest (python/tests/test_kernels.py) asserts kernel == ref to within
+float tolerance across hypothesis-driven shape/value sweeps; this is the
+core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import quant
+
+
+def w4a8_matmul_ref(x, codes, scales, specials, group=128):
+    """Reference fused dequant matmul: decode BitMoD codes eagerly with
+    the same table math, then a plain jnp matmul."""
+    tables = np.tile(quant.FP4_BASE[None, :], (4, 1))
+    tables = np.concatenate(
+        [tables, np.asarray(quant.BITMOD_SPECIALS)[:, None]], axis=1
+    )
+    table = jnp.asarray(tables.reshape(-1), jnp.float32)
+    sel = jnp.repeat(specials.astype(jnp.int32), group, axis=0)
+    sc = jnp.repeat(scales, group, axis=0)
+    w = jnp.take(table, sel * 16 + codes.astype(jnp.int32)) * sc
+    return x @ w
+
+
+def decode_attention_ref(q, k_cache, v_cache, attend, quantized=True):
+    """Reference GQA decode attention with S0E4M4 score rounding."""
+    b, nh, dh = q.shape
+    _, ctx, nkv, _ = k_cache.shape
+    g = nh // nkv
+    kg = jnp.repeat(k_cache, g, axis=2)  # [B, ctx, nh, dh]
+    vg = jnp.repeat(v_cache, g, axis=2)
+    att = jnp.einsum("bhd,bkhd->bhk", q, kg) / np.sqrt(dh)
+    att = jnp.where(attend[:, None, :], att, -1e30)
+    att = att - jnp.max(att, axis=-1, keepdims=True)
+    ex = jnp.exp(att)
+    p = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    if quantized:
+        p = quant.quant_fp8_s0e4m4(p)
+    return jnp.einsum("bhk,bkhd->bhd", p, vg)
+
+
+def fp8_e4m3_ref(x):
+    return quant.quant_fp8_e4m3(x)
+
+
+def int4_asym_per_head_ref(x, head_dim):
+    return quant.quant_kv_asym_per_head(x, 4.0, head_dim)

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused BitMoD-W4 x FP8-A8 GEMV/GEMM (paper Fig. 6c).
+
+This is the PCU's dataflow expressed as a Pallas kernel: 4-bit weight
+*codes* travel to the compute unit untouched (as they would over the
+256-bit DRAM column bus) and are dequantized *inside* the kernel right
+before the multiply -- operator fusion eliminates any materialized fp16
+weight tensor, which is the paper's "minimize runtime dequantization
+overhead" co-design point.
+
+Tiling (§Hardware-Adaptation of DESIGN.md): the PCU computes a 1x4x16
+GEMV tile (4 8-bit inputs x 64 4-bit weights -> 16 accumulators).  On
+TPU we scale the same schedule up to VMEM/MXU granularity: the grid
+walks output-column blocks of N_BLK (the "16 PEs" axis, x4 PCUs per
+group) while the full K axis (the "4-way dot product" axis, unrolled
+over commands) stays resident in VMEM -- K is at most a few hundred for
+the edge models this targets, exactly like a DRAM row worth of codes.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerical behaviour is identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..quant import BITMOD_SPECIALS, FP4_BASE
+
+N_BLK = 64  # output columns per grid step = one PCU command's 64 weights
+GROUP = 128  # BitMoD quantization group along K
+
+
+def _dequant_table():
+    """Flat [4*16] BitMoD dequant LUT: entry 16*s + c decodes code c under
+    special-select s.  Code 15 is the special-value slot."""
+    t = np.tile(FP4_BASE[None, :], (4, 1))  # [4, 15]
+    t = np.concatenate([t, np.asarray(BITMOD_SPECIALS)[:, None]], axis=1)
+    return jnp.asarray(t.reshape(-1), jnp.float32)  # [64]
+
+
+def _kernel(table_ref, x_ref, codes_ref, scales_ref, specials_ref, o_ref,
+            *, group):
+    table = table_ref[...]  # [64] BitMoD dequant LUT
+    x = x_ref[...]  # [B, K] fp8-e4m3-grid values
+    codes = codes_ref[...].astype(jnp.int32)  # [K, Nb] in 0..15
+    scales = scales_ref[...]  # [K//group, Nb]
+    specials = specials_ref[...].astype(jnp.int32)  # [K//group, Nb]
+    # expand per-group metadata along K
+    sel = jnp.repeat(specials, group, axis=0)  # [K, Nb]
+    sc = jnp.repeat(scales, group, axis=0)  # [K, Nb]
+    w = jnp.take(table, sel * 16 + codes) * sc  # fused dequant
+    o_ref[...] = x @ w
+
+
+def w4a8_matmul(x, codes, scales, specials, *, group=GROUP, n_blk=N_BLK):
+    """x: [B, K] f32 (values on the FP8-E4M3 grid -- the caller quantizes
+    activations, mirroring the NPU->PCU input registers), codes: [K, N]
+    uint8 BitMoD codes, scales: [K//group, N] f32, specials: [K//group, N]
+    uint8.  Returns [B, N] f32 with 32-bit accumulation (f32 here)."""
+    b, k = x.shape
+    kc, n = codes.shape
+    assert kc == k and k % group == 0, (x.shape, codes.shape, group)
+    nb = min(n_blk, n)
+    assert n % nb == 0, (n, nb)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=(n // nb,),
+        in_specs=[
+            pl.BlockSpec((64,), lambda j: (0,)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, nb), lambda j: (0, j)),
+            pl.BlockSpec((k // group, nb), lambda j: (0, j)),
+            pl.BlockSpec((k // group, nb), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, nb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(_dequant_table(), x, codes, scales, specials)
+
+
+def vmem_bytes(b, k, n, *, group=GROUP, n_blk=N_BLK):
+    """Estimated VMEM working set of one grid step (for §Perf)."""
+    nb = min(n_blk, n)
+    return (
+        b * k * 4  # x block (f32)
+        + k * nb * 1  # codes (u8)
+        + 2 * (k // group) * nb * 4  # scales + specials blocks
+        + b * nb * 4  # output accumulators
+    )

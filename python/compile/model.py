@@ -1,0 +1,503 @@
+"""L2: the GQA decoder transformer (paper Fig. 1) in JAX.
+
+One generic ``forward`` implements both the FP baseline and every
+quantized variant; the quantization *scheme* is static (python-side
+branching at trace time) while calibration data / bit-widths that the
+experiments sweep are traced inputs, so a single HLO artifact covers a
+whole sweep (e.g. Fig. 3b's per-operand bit-width sweep).
+
+The model mirrors Llama-style architecture at tiny scale: RMSNorm,
+rotary position embeddings, grouped-query attention (G = n_heads/n_kv),
+SwiGLU MLP.  Defaults give ~1M parameters so that build-time training on
+the synthetic corpus takes minutes on CPU while still producing
+meaningful perplexity orderings between numerical formats.
+
+Weights are always *runtime inputs* of the lowered graphs (fed by the
+Rust runtime from ``weights.bin``); weight quantization (BitMoD / INT4 /
+AWQ / rotation folding) is applied host-side -- in python for tests and
+golden vectors, in Rust (bit-exactly) on the serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv: int = 2
+    d_head: int = 16
+    d_ff: int = 256
+    max_ctx: int = 160
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def gqa_group(self):
+        return self.n_heads // self.n_kv
+
+
+TINY = Config()
+
+# Linear-layer names, in forward order, per layer.
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+
+def param_shapes(cfg: Config) -> Dict[str, tuple]:
+    """Name -> shape for every parameter.  Iteration order (sorted name)
+    defines the flat input ordering of all lowered graphs and of
+    weights.bin -- the Rust loader follows the same order via the TSV
+    manifest."""
+    shapes = {
+        "tok_emb": (cfg.vocab, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "lm_head": (cfg.d_model, cfg.vocab),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes[p + "norm_attn"] = (cfg.d_model,)
+        shapes[p + "norm_mlp"] = (cfg.d_model,)
+        shapes[p + "wq"] = (cfg.d_model, cfg.n_heads * cfg.d_head)
+        shapes[p + "wk"] = (cfg.d_model, cfg.n_kv * cfg.d_head)
+        shapes[p + "wv"] = (cfg.d_model, cfg.n_kv * cfg.d_head)
+        shapes[p + "wo"] = (cfg.n_heads * cfg.d_head, cfg.d_model)
+        shapes[p + "wgate"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "wup"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "wdown"] = (cfg.d_ff, cfg.d_model)
+    return dict(sorted(shapes.items()))
+
+
+OUTLIER_EMB_CHANNELS = (11, 47, 83, 120)
+OUTLIER_KEY_CHANNELS = (3, 9)  # per kv head
+
+
+def init_params(cfg: Config, seed=0, outliers=True) -> Dict[str, jnp.ndarray]:
+    """Initialize parameters.
+
+    `outliers=True` injects per-channel scale diversity: a few residual
+    channels (tok_emb columns) and key-projection output channels start
+    ~6x larger.  Billion-parameter LLMs *develop* exactly this fixed
+    outlier-channel structure in activations and key caches (paper
+    Fig. 5; also [12], [88]); at 1M-parameter/600-step scale it does not
+    emerge on its own, so we seed it at init -- training preserves the
+    relative channel scales.  This substitution (documented in
+    DESIGN.md) is what makes the outlier-driven format comparisons
+    (smoothing, FP8-vs-INT8 activations) meaningful on the tiny model.
+    """
+    r = np.random.default_rng(seed)
+    params = {}
+    for name, shp in param_shapes(cfg).items():
+        if name.endswith(("norm_attn", "norm_mlp", "final_norm")):
+            params[name] = jnp.ones(shp, jnp.float32)
+        else:
+            fan_in = shp[0]
+            std = 1.0 / np.sqrt(fan_in)
+            w = r.normal(0.0, std, size=shp).astype(np.float32)
+            if outliers and name == "tok_emb":
+                for c in OUTLIER_EMB_CHANNELS:
+                    w[:, c] *= 16.0
+            if outliers and name.endswith(".wk"):
+                for h in range(cfg.n_kv):
+                    for c in OUTLIER_KEY_CHANNELS:
+                        w[:, h * cfg.d_head + c] *= 6.0
+            params[name] = jnp.asarray(w)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Quantization scheme plumbing
+# ----------------------------------------------------------------------
+
+FP_SCHEME: Dict[str, Any] = dict(
+    a_fmt="fp",        # "fp" | "int" (bits from aux) | "e4m3"
+    a_smooth=False,    # divide activations by calibrated factors (aux)
+    kv_mode="fp",      # "fp" | "int" (bits from aux) | "smooth" | "oaken"
+    k_stage="post",    # quantize key "pre" or "post" RoPE
+    p_fmt="fp",        # "fp" | "int8u" | "e4m3" | "s0e4m4" | "int" (aux)
+    q_fmt="fp",        # "fp" | "e4m3"
+    hadamard=False,    # QuaRot-style online rotation of linear inputs
+)
+
+
+def scheme(**kw) -> Dict[str, Any]:
+    s = dict(FP_SCHEME)
+    for k, v in kw.items():
+        assert k in s, k
+        s[k] = v
+    return s
+
+
+# Traced auxiliary inputs; every eval graph takes all of them so the I/O
+# signature is scheme-independent.
+def default_aux(cfg: Config):
+    """Neutral aux values (everything disabled / identity)."""
+    L, d, ff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    kvdim = cfg.n_kv * cfg.d_head
+    return dict(
+        a_bits=jnp.float32(16.0),
+        kv_bits=jnp.float32(16.0),
+        p_bits=jnp.float32(16.0),
+        # SmoothQuant/QoQ calibrated per-channel activation factors, one
+        # per linear-input site (ones = disabled).
+        asm_attn=jnp.ones((L, d), jnp.float32),
+        asm_o=jnp.ones((L, cfg.n_heads * cfg.d_head), jnp.float32),
+        asm_mlp=jnp.ones((L, d), jnp.float32),
+        asm_down=jnp.ones((L, ff), jnp.float32),
+        # Oaken offline outlier mask over key/value channels (per layer).
+        oaken_mask_k=jnp.zeros((L, kvdim), jnp.float32),
+        oaken_mask_v=jnp.zeros((L, kvdim), jnp.float32),
+        # QoQ-style *calibrated* per-channel key smoothing factors
+        # (kv_mode="smooth_calib"); contrast with the dynamic factors of
+        # kv_mode="smooth" that P3-LLM computes from the live prefill.
+        qoq_ksm=jnp.ones((L, kvdim), jnp.float32),
+    )
+
+
+AUX_ORDER = (
+    "a_bits", "kv_bits", "p_bits",
+    "asm_attn", "asm_o", "asm_mlp", "asm_down",
+    "oaken_mask_k", "oaken_mask_v", "qoq_ksm",
+)
+
+
+def _quant_act(x, sm_vec, s, aux):
+    """Quantize a linear-layer input activation per the scheme."""
+    if s["a_smooth"]:
+        x = x / sm_vec
+    if s["a_fmt"] == "int":
+        x = quant.quant_int_asym(x, aux["a_bits"], axis=-1)  # per token
+    elif s["a_fmt"] == "e4m3":
+        x = quant.quant_fp8_e4m3(x)
+    return x
+
+
+def _linear(x, w, sm_vec, s, aux, h=None):
+    """Quantized linear: activation-quant then matmul.  `h` is the
+    Hadamard matrix when QuaRot rotation is enabled for this site (the
+    matching inverse rotation is folded into `w` host-side)."""
+    if s["hadamard"] and h is not None:
+        x = quant.hadamard_rotate(x, h)
+    x = _quant_act(x, sm_vec, s, aux)
+    return x @ w
+
+
+def _rope(x, pos, cfg: Config):
+    """Rotary embedding.  x: [..., T, n, d_head]; pos: [..., T]."""
+    dh = cfg.d_head
+    half = dh // 2
+    freqs = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _rmsnorm(x, g, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _quant_kv(x, s, aux, cfg, mask8=None, smooth=False, token_mask=None,
+              calib_f=None):
+    """Quantize a KV tensor [..., T, kvdim] per the scheme."""
+    dh = cfg.d_head
+    if s["kv_mode"] == "fp":
+        return x
+    if s["kv_mode"] == "oaken":
+        return quant.quant_kv_oaken(x, mask8, dh)
+    if s["kv_mode"] == "smooth_calib" and smooth:
+        f = calib_f  # offline-calibrated factors: the overfitting path
+        return quant.quant_kv_asym_per_head(x / f, aux["kv_bits"], dh) * f
+    if s["kv_mode"] == "smooth" and smooth:
+        if token_mask is not None:
+            masked = jnp.where(token_mask[..., :, None] > 0, jnp.abs(x), 0.0)
+            f = jnp.maximum(jnp.max(masked, axis=-2, keepdims=True), 1e-6)
+        else:
+            f = quant.smoothing_factors(x)
+        return quant.quant_kv_asym_per_head(x / f, aux["kv_bits"], dh) * f
+    # "int" and the value-cache path of "smooth"/"oaken" fall through to
+    # plain per-head asymmetric quantization.
+    return quant.quant_kv_asym_per_head(x, aux["kv_bits"], dh)
+
+
+def _quant_scores(p, s, aux):
+    if s["p_fmt"] == "fp":
+        return p
+    if s["p_fmt"] == "int8u":
+        return quant.quant_int8_unsigned(p)
+    if s["p_fmt"] == "e4m3":
+        return quant.quant_fp8_e4m3(p)
+    if s["p_fmt"] == "s0e4m4":
+        return quant.quant_fp8_s0e4m4(p)
+    if s["p_fmt"] == "int":
+        # unsigned int-b with fixed scale over [0, 1]
+        levels = jnp.exp2(aux["p_bits"]) - 1.0
+        q = jnp.clip(jnp.round(p * levels), 0.0, levels) / levels
+        return jnp.where(aux["p_bits"] >= 16.0, p, q)
+    raise ValueError(s["p_fmt"])
+
+
+# ----------------------------------------------------------------------
+# Teacher-forced forward (prefill-shaped): the accuracy workhorse
+# ----------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: Config, s=FP_SCHEME, aux=None, h=None):
+    """tokens: [B, T] int32 -> logits [B, T, vocab].
+
+    Causal full-sequence forward.  The full sequence plays the role of
+    the prefill context: smoothing factors are per-channel abs-maxima
+    over the sequence, exactly as the serving path computes them at
+    prefill time (Section IV-A).
+    """
+    if aux is None:
+        aux = default_aux(cfg)
+    if s["hadamard"] and h is None:
+        h = quant.hadamard_matrix(cfg.d_model)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = params["tok_emb"][tokens]  # [B, T, d]
+    causal = jnp.tril(jnp.ones((T, T), jnp.float32))
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xa = _rmsnorm(x, params[p + "norm_attn"], cfg.norm_eps)
+        q = _linear(xa, params[p + "wq"], aux["asm_attn"][i], s, aux, h)
+        k = _linear(xa, params[p + "wk"], aux["asm_attn"][i], s, aux, h)
+        v = _linear(xa, params[p + "wv"], aux["asm_attn"][i], s, aux, h)
+
+        if s["kv_mode"] != "fp" and s["k_stage"] == "pre":
+            k = _quant_kv(k, s, aux, cfg, aux["oaken_mask_k"][i],
+                          smooth=True, calib_f=aux["qoq_ksm"][i])
+        qh = q.reshape(B, T, cfg.n_heads, cfg.d_head)
+        kh = k.reshape(B, T, cfg.n_kv, cfg.d_head)
+        qh = _rope(qh, pos, cfg)
+        kh = _rope(kh, pos, cfg)
+        if s["kv_mode"] != "fp" and s["k_stage"] == "post":
+            kflat = kh.reshape(B, T, cfg.n_kv * cfg.d_head)
+            kflat = _quant_kv(kflat, s, aux, cfg, aux["oaken_mask_k"][i],
+                              smooth=True, calib_f=aux["qoq_ksm"][i])
+            kh = kflat.reshape(B, T, cfg.n_kv, cfg.d_head)
+        if s["kv_mode"] != "fp":
+            v = _quant_kv(v, s, aux, cfg, aux["oaken_mask_v"][i])
+        vh = v.reshape(B, T, cfg.n_kv, cfg.d_head)
+
+        if s["q_fmt"] == "e4m3":
+            qh = quant.quant_fp8_e4m3(qh)
+
+        # GQA: repeat kv heads G times.
+        g = cfg.gqa_group
+        kg = jnp.repeat(kh, g, axis=2)  # [B, T, nh, dh]
+        vg = jnp.repeat(vh, g, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", qh, kg) / np.sqrt(cfg.d_head)
+        att = jnp.where(causal[None, None] > 0, att, -1e30)
+        pr = jax.nn.softmax(att, axis=-1)
+        pr = _quant_scores(pr, s, aux)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pr, vg)
+        out = out.reshape(B, T, cfg.n_heads * cfg.d_head)
+        x = x + _linear(out, params[p + "wo"], aux["asm_o"][i], s, aux, None)
+
+        xm = _rmsnorm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        gate = _linear(xm, params[p + "wgate"], aux["asm_mlp"][i], s, aux, h)
+        up = _linear(xm, params[p + "wup"], aux["asm_mlp"][i], s, aux, h)
+        act = jax.nn.silu(gate) * up
+        x = x + _linear(act, params[p + "wdown"], aux["asm_down"][i], s, aux,
+                        None)
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def nll(params, block, cfg: Config, s=FP_SCHEME, aux=None):
+    """block: [B, T+1] -> (sum NLL, token count, top-1 correct count).
+
+    The correct count feeds the Table V task-accuracy substitute
+    (held-out next-token accuracy; see DESIGN.md substitutions).
+    """
+    inputs, targets = block[:, :-1], block[:, 1:]
+    logits = forward(params, inputs, cfg, s, aux)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return -jnp.sum(picked), jnp.float32(targets.size), correct
+
+
+def loss_fn(params, block, cfg: Config):
+    total, count, _ = nll(params, block, cfg)
+    return total / count
+
+
+# ----------------------------------------------------------------------
+# Serving graphs: prefill + single-token decode with external KV cache
+# ----------------------------------------------------------------------
+
+
+def prefill(params, tokens, true_len, cfg: Config, quantized=False):
+    """tokens: [1, T] padded prompt, true_len: [] int32.
+
+    Returns (logits_last [1, vocab], k_cache [L, 1, T, kvdim],
+    v_cache [L, 1, T, kvdim], smooth_f [L, kvdim]).
+
+    The caches hold fp values already snapped to the INT4 grid when
+    `quantized`; the Rust KV-cache manager packs them bit-exactly
+    (mirroring Fig. 6's split where quantization of KV entries happens
+    outside the PIM banks).  Smoothing factors are per-channel
+    abs-maxima over the valid prompt region (Eq. 2), returned for reuse
+    during decode.
+    """
+    s = FP_SCHEME
+    aux = default_aux(cfg)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    valid = (jnp.arange(T, dtype=jnp.int32) < true_len)[None]  # [1, T]
+    x = params["tok_emb"][tokens]
+    causal = jnp.tril(jnp.ones((T, T), jnp.float32)) * valid[0][None, :]
+    ks, vs, sfs = [], [], []
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xa = _rmsnorm(x, params[p + "norm_attn"], cfg.norm_eps)
+        q = _linear(xa, params[p + "wq"], aux["asm_attn"][i], s, aux)
+        k = _linear(xa, params[p + "wk"], aux["asm_attn"][i], s, aux)
+        v = _linear(xa, params[p + "wv"], aux["asm_attn"][i], s, aux)
+        qh = _rope(q.reshape(B, T, cfg.n_heads, cfg.d_head), pos, cfg)
+        kh = _rope(k.reshape(B, T, cfg.n_kv, cfg.d_head), pos, cfg)
+        kflat = kh.reshape(B, T, cfg.n_kv * cfg.d_head)
+        # smoothing factors over the valid prompt region
+        kabs = jnp.where(valid[..., None] > 0, jnp.abs(kflat), 0.0)
+        sf = jnp.maximum(jnp.max(kabs, axis=(0, 1)), 1e-6)  # [kvdim]
+        sfs.append(sf)
+        if quantized:
+            kq = quant.quant_kv_asym_per_head(
+                kflat / sf, 4.0, cfg.d_head) * sf
+            vq = quant.quant_kv_asym_per_head(v, 4.0, cfg.d_head)
+        else:
+            kq, vq = kflat, v
+        ks.append(kq)
+        vs.append(vq)
+        kh2 = kq.reshape(B, T, cfg.n_kv, cfg.d_head)
+        vh = vq.reshape(B, T, cfg.n_kv, cfg.d_head)
+        g = cfg.gqa_group
+        att = jnp.einsum("bqhd,bkhd->bhqk", qh, jnp.repeat(kh2, g, 2))
+        att = att / np.sqrt(cfg.d_head)
+        att = jnp.where(causal[None, None] > 0, att, -1e30)
+        pr = jax.nn.softmax(att, axis=-1)
+        if quantized:
+            pr = quant.quant_fp8_s0e4m4(pr)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pr, jnp.repeat(vh, g, 2))
+        out = out.reshape(B, T, cfg.n_heads * cfg.d_head)
+        x = x + _linear(out, params[p + "wo"], aux["asm_o"][i], s, aux)
+        xm = _rmsnorm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        gate = _linear(xm, params[p + "wgate"], aux["asm_mlp"][i], s, aux)
+        up = _linear(xm, params[p + "wup"], aux["asm_mlp"][i], s, aux)
+        act = jax.nn.silu(gate) * up
+        x = x + _linear(act, params[p + "wdown"], aux["asm_down"][i], s, aux)
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (true_len - 1).reshape(1, 1, 1).astype(jnp.int32), axis=1
+    )  # [1, 1, d]
+    logits = (last @ params["lm_head"])[:, 0]
+    return (
+        logits,
+        jnp.stack(ks),   # [L, 1, T, kvdim]
+        jnp.stack(vs),
+        jnp.stack(sfs),  # [L, kvdim]
+    )
+
+
+def decode_step(params, tokens, pos, k_cache, v_cache, smooth_f,
+                cfg: Config, quantized=False, kernels=None):
+    """One decode iteration over a batch.
+
+    tokens: [B] int32, pos: [B] int32 (index where the new token goes),
+    k_cache/v_cache: [L, B, ctx, kvdim] fp (dequantized by the Rust KV
+    manager), smooth_f: [L, B, kvdim].
+
+    Returns (logits [B, vocab], new_k [L, B, kvdim], new_v [L, B, kvdim]).
+    new_k/new_v are already snapped to the INT4 grid when `quantized`, so
+    the Rust manager's packing round-trips bit-exactly.
+
+    When `kernels` is set (a module exposing w4a8_matmul /
+    decode_attention), linear layers and attention run through the L1
+    Pallas kernels with packed BitMoD weights -- that variant expects
+    `params[name]` for linear weights to be (codes, scales, specials)
+    tuples and is lowered separately by aot.py.
+    """
+    B = tokens.shape[0]
+    L, _, ctx, kvdim = k_cache.shape
+    x = params["tok_emb"][tokens]  # [B, d]
+    slot = jax.nn.one_hot(pos, ctx, dtype=jnp.float32)  # [B, ctx]
+    # cache slot j is attendable iff j < pos (history) or j == pos (self)
+    attend = jnp.arange(ctx, dtype=jnp.int32)[None] <= pos[:, None]
+
+    def linear(h, name, i):
+        wname = f"layer{i}.{name}" if i >= 0 else name
+        hq = quant.quant_fp8_e4m3(h) if quantized else h
+        if kernels is not None and (name in LINEAR_NAMES or
+                                    name == "lm_head"):
+            codes, scales, specials = params[wname]
+            return kernels.w4a8_matmul(hq, codes, scales, specials)
+        return hq @ params[wname]
+
+    new_ks, new_vs = [], []
+    for i in range(L):
+        p = f"layer{i}."
+        xa = _rmsnorm(x, params[p + "norm_attn"], cfg.norm_eps)
+        q = linear(xa, "wq", i)
+        k = linear(xa, "wk", i)
+        v = linear(xa, "wv", i)
+        qh = _rope(q.reshape(B, 1, cfg.n_heads, cfg.d_head),
+                   pos[:, None], cfg)[:, 0]  # [B, nh, dh]
+        kh = _rope(k.reshape(B, 1, cfg.n_kv, cfg.d_head),
+                   pos[:, None], cfg)[:, 0]
+        kflat = kh.reshape(B, kvdim)
+        if quantized:
+            sf = smooth_f[i]
+            kflat = quant.quant_kv_asym_per_head(
+                kflat / sf, 4.0, cfg.d_head) * sf
+            v = quant.quant_kv_asym_per_head(v, 4.0, cfg.d_head)
+        new_ks.append(kflat)
+        new_vs.append(v)
+        # insert into the (fp view of the) cache at `pos`
+        kc = k_cache[i] + slot[:, :, None] * kflat[:, None, :]
+        vc = v_cache[i] + slot[:, :, None] * v[:, None, :]
+        khc = kc.reshape(B, ctx, cfg.n_kv, cfg.d_head)
+        vhc = vc.reshape(B, ctx, cfg.n_kv, cfg.d_head)
+        if quantized:
+            qh = quant.quant_fp8_e4m3(qh)
+        if kernels is not None:
+            out = kernels.decode_attention(
+                qh, khc, vhc, attend, quantized=quantized)
+        else:
+            g = cfg.gqa_group
+            kg = jnp.repeat(khc, g, axis=2)
+            vg = jnp.repeat(vhc, g, axis=2)
+            att = jnp.einsum("bhd,bkhd->bhk", qh, kg) / np.sqrt(cfg.d_head)
+            att = jnp.where(attend[:, None, :], att, -1e30)
+            pr = jax.nn.softmax(att, axis=-1)
+            if quantized:
+                pr = quant.quant_fp8_s0e4m4(pr)
+            out = jnp.einsum("bhk,bkhd->bhd", pr, vg)
+        out = out.reshape(B, cfg.n_heads * cfg.d_head)
+        x = x + linear(out, "wo", i)
+        xm = _rmsnorm(x, params[p + "norm_mlp"], cfg.norm_eps)
+        act = jax.nn.silu(linear(xm, "wgate", i)) * linear(xm, "wup", i)
+        x = x + linear(act, "wdown", i)
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = linear(x, "lm_head", -1)
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)

@@ -1,0 +1,295 @@
+"""Hybrid numerical formats for P3-LLM (Section IV of the paper).
+
+Every function here is a *fake-quant* transformation: it maps an fp32
+tensor to the exact value grid of the target format and back, so the
+returned tensor is fp32 but numerically identical to what the PCU
+computes after dequantization.  All functions are written in jnp and are
+jax-traceable, so they can be used both (a) eagerly for host-side weight
+quantization / golden-vector generation, and (b) inside the L2 eval/decode
+graphs that get AOT-lowered to HLO.
+
+Formats implemented:
+  * INT-b asymmetric / symmetric per-group quantization (b may be a traced
+    scalar -> the "operand bit-width sweep" of Fig. 3b lowers to ONE graph)
+  * FP8-E4M3   (standard OCP format, bias 7, max 448)       -- activations
+  * FP8-S0E4M4 (paper's unsigned sign-free format, bias 15)  -- attn scores
+  * BitMoD FP4 (FP4 grid + per-group remapped special value) -- weights
+  * Dynamic per-channel key-cache smoothing (Eq. 2)
+
+The Rust crate re-implements the packed/encoded versions bit-exactly
+(`rust/src/quant/`); `aot.py` emits golden vectors produced by this module
+that the Rust tests must match exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Integer quantization (Eq. 1 of the paper)
+# --------------------------------------------------------------------------
+
+
+def quant_int_asym(x, bits, axis=-1):
+    """Asymmetric integer fake-quant along `axis`.
+
+    `bits` may be a python int or a traced fp scalar (>= 16 disables
+    quantization, used by the Fig. 3b sweep graph).
+    """
+    bits = jnp.asarray(bits, jnp.float32)
+    levels = jnp.exp2(bits) - 1.0
+    xmin = jnp.min(x, axis=axis, keepdims=True)
+    xmax = jnp.max(x, axis=axis, keepdims=True)
+    scale = jnp.maximum(xmax - xmin, 1e-8) / levels
+    q = jnp.round((x - xmin) / scale)
+    q = jnp.clip(q, 0.0, levels)
+    xq = q * scale + xmin
+    return jnp.where(bits >= 16.0, x, xq)
+
+
+def quant_int_sym(x, bits, axis=-1):
+    """Symmetric integer fake-quant along `axis` (zero-point = 0)."""
+    bits = jnp.asarray(bits, jnp.float32)
+    qmax = jnp.exp2(bits - 1.0) - 1.0
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return jnp.where(bits >= 16.0, x, q * scale)
+
+
+def quant_int_asym_grouped(x, bits, group):
+    """Asymmetric int fake-quant over contiguous groups of the last axis."""
+    shp = x.shape
+    assert shp[-1] % group == 0, (shp, group)
+    xg = x.reshape(shp[:-1] + (shp[-1] // group, group))
+    return quant_int_asym(xg, bits, axis=-1).reshape(shp)
+
+
+# --------------------------------------------------------------------------
+# FP8 formats
+# --------------------------------------------------------------------------
+
+
+def _round_fp(x, n_mantissa, e_min, e_max, max_val):
+    """Round |x| to a float grid with `n_mantissa` mantissa bits and
+    exponent range [e_min, e_max] (normal numbers), with subnormals at
+    e_min.  Round-half-to-even on the mantissa ULP.  Sign preserved.
+    """
+    ax = jnp.abs(x)
+    sign = jnp.sign(x)
+    # exponent of the representable value
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-38)))
+    e = jnp.clip(e, e_min, e_max)
+    ulp = jnp.exp2(e - n_mantissa)
+    # round-half-even via rint (numpy/jax rint is half-to-even)
+    q = jnp.asarray(jnp.rint(ax / ulp), x.dtype) * ulp
+    # rounding may bump the exponent (e.g. 1.96 -> 2.0); that is still on
+    # the grid, but may exceed max_val -> saturate.
+    q = jnp.minimum(q, max_val)
+    return sign * q
+
+
+def quant_fp8_e4m3(x):
+    """OCP FP8-E4M3: 4-bit exponent (bias 7), 3-bit mantissa, max 448."""
+    return _round_fp(x, n_mantissa=3, e_min=-6.0, e_max=8.0, max_val=448.0)
+
+
+def quant_fp8_e5m2(x):
+    """OCP FP8-E5M2: 5-bit exponent (bias 15), 2-bit mantissa, max 57344."""
+    return _round_fp(x, n_mantissa=2, e_min=-14.0, e_max=15.0, max_val=57344.0)
+
+
+def quant_fp8_s0e4m4(x):
+    """Paper's unsigned FP8-S0E4M4 for attention scores (Section IV-B).
+
+    No sign bit, 4-bit exponent with bias 15 (stored 1..15 -> e in
+    [-14, 0]), 4-bit mantissa; stored-exponent 0 holds subnormals with
+    e = -14.  The grid covers [0, 1]: softmax outputs need nothing more
+    (exactly-1.0 is representable as stored_e=15, m=0).
+    """
+    x = jnp.clip(x, 0.0, 1.0)
+    return _round_fp(x, n_mantissa=4, e_min=-14.0, e_max=0.0, max_val=1.0)
+
+
+def quant_int8_unsigned(x):
+    """Unsigned INT8 for attention scores in [0, 1] (SageAttention-style),
+    scale fixed at 1/255 -- the Table II 'INT8' row."""
+    return jnp.clip(jnp.round(x * 255.0), 0.0, 255.0) / 255.0
+
+
+# --------------------------------------------------------------------------
+# BitMoD weight format (Section IV-C)
+# --------------------------------------------------------------------------
+
+# FP4 basic grid: +-{0, 0.5, 1, 1.5, 2, 3, 4, 6}; negative zero is redundant
+# and is remapped to one of the special values {-8, -5, +5, +8} per group.
+FP4_BASE = np.array(
+    [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0],
+    dtype=np.float32,
+)  # 15 values; the 16th slot is the per-group special value
+BITMOD_SPECIALS = np.array([-8.0, -5.0, 5.0, 8.0], dtype=np.float32)
+
+
+def _bitmod_tables():
+    """All four candidate 16-entry dequant tables, shape [4, 16]."""
+    tables = np.tile(FP4_BASE[None, :], (4, 1))
+    tables = np.concatenate([tables, BITMOD_SPECIALS[:, None]], axis=1)
+    return jnp.asarray(tables)  # [4, 16]
+
+
+def quant_bitmod(w, group=128):
+    """BitMoD fake-quant of a weight matrix along the last axis.
+
+    For every contiguous group of `group` elements, tries each of the four
+    special-value tables; for each candidate the scale is
+    max|w| / max|table|, values snap to the nearest table entry, and the
+    table with the smallest squared error wins.  Returns the dequantized
+    tensor (same shape as w).
+    """
+    shp = w.shape
+    assert shp[-1] % group == 0, (shp, group)
+    wg = w.reshape(-1, group)  # [G, group]
+    tables = _bitmod_tables()  # [4, 16]
+    amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True)  # [G, 1]
+    tmax = jnp.max(jnp.abs(tables), axis=-1)  # [4]
+    # scale per (group, table): [G, 4]
+    scales = jnp.maximum(amax, 1e-8) / tmax[None, :]
+
+    def snap(table, scale):
+        # wg: [G, group], table: [16], scale: [G, 1]
+        grid = table[None, None, :] * scale[:, :, None]  # [G, 1, 16]
+        d = jnp.abs(wg[:, :, None] - grid)  # [G, group, 16]
+        idx = jnp.argmin(d, axis=-1)  # [G, group]
+        return jnp.take(table, idx) * scale  # [G, group]
+
+    cands = [snap(tables[t], scales[:, t : t + 1]) for t in range(4)]
+    cands = jnp.stack(cands, axis=0)  # [4, G, group]
+    errs = jnp.sum((cands - wg[None]) ** 2, axis=-1)  # [4, G]
+    best = jnp.argmin(errs, axis=0)  # [G]
+    out = jnp.take_along_axis(cands, best[None, :, None], axis=0)[0]
+    return out.reshape(shp)
+
+
+def quant_bitmod_encode(w, group=128):
+    """Eager (numpy) BitMoD *encoder*: returns (codes u8 in 0..15,
+    scales f32 [G], specials u8 in 0..3) for the packed artifact path and
+    for golden vectors.  Code 15 is the special value slot.
+    """
+    w = np.asarray(w, np.float32)
+    shp = w.shape
+    wg = w.reshape(-1, group)
+    tables = np.asarray(_bitmod_tables())  # [4, 16]
+    amax = np.maximum(np.abs(wg).max(axis=-1, keepdims=True), 1e-8)
+    tmax = np.abs(tables).max(axis=-1)
+    scales = amax / tmax[None, :]  # [G, 4]
+    best_err = np.full(wg.shape[0], np.inf, np.float32)
+    best_codes = np.zeros(wg.shape, np.uint8)
+    best_sel = np.zeros(wg.shape[0], np.uint8)
+    best_scale = np.zeros(wg.shape[0], np.float32)
+    for t in range(4):
+        grid = tables[t][None, :] * scales[:, t : t + 1]  # [G, 16]
+        idx = np.abs(wg[:, :, None] - grid[:, None, :]).argmin(axis=-1)
+        deq = np.take_along_axis(grid, idx, axis=1)
+        err = ((deq - wg) ** 2).sum(axis=-1)
+        upd = err < best_err
+        best_err = np.where(upd, err, best_err)
+        best_codes[upd] = idx[upd]
+        best_sel[upd] = t
+        best_scale[upd] = scales[upd, t]
+    return (
+        best_codes.reshape(shp),
+        best_scale.astype(np.float32),
+        best_sel,
+    )
+
+
+def bitmod_decode(codes, scales, specials, group=128):
+    """Eager decoder matching `quant_bitmod_encode` (numpy)."""
+    tables = np.asarray(_bitmod_tables())
+    codes = np.asarray(codes, np.int64)
+    shp = codes.shape
+    cg = codes.reshape(-1, group)
+    vals = tables[np.asarray(specials, np.int64)[:, None], cg]
+    return (vals * np.asarray(scales)[:, None]).reshape(shp).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# KV-cache quantization with dynamic smoothing (Section IV-A)
+# --------------------------------------------------------------------------
+
+
+def smoothing_factors(k, eps=1e-6):
+    """Per-channel absolute maxima of the key cache (Eq. 2).
+
+    k: [..., T, C] -> factors [..., 1, C], computed over the token axis.
+    During serving these are computed once at prefill and reused in decode;
+    in the teacher-forced eval graphs the full sequence plays the role of
+    the prefill context.
+    """
+    return jnp.maximum(jnp.max(jnp.abs(k), axis=-2, keepdims=True), eps)
+
+
+def quant_kv_asym_per_head(x, bits, head_dim):
+    """INT-b asymmetric per-head KV quantization: each group of `head_dim`
+    contiguous channels of one token shares (scale, zero-point)."""
+    return quant_int_asym_grouped(x, bits, head_dim)
+
+
+def quant_key_smoothed(k, bits, head_dim, factors=None):
+    """Dynamic input-aware smoothed key quantization.
+
+    k: [..., T, C]; divide channels by the smoothing factors, INT-b
+    per-head fake-quant, multiply back.  (Serving fuses the multiply into
+    the query -- numerically identical.)
+    """
+    f = smoothing_factors(k) if factors is None else factors
+    return quant_kv_asym_per_head(k / f, bits, head_dim) * f
+
+
+def quant_kv_oaken(x, mask8, head_dim):
+    """Oaken-style mixed-precision KV quant: channels flagged by `mask8`
+    (an offline-calibrated outlier mask, broadcastable over tokens) are
+    kept at INT8, the rest at INT4.  Effective precision ~4 + 4*frac bits.
+    """
+    q4 = quant_kv_asym_per_head(x, 4.0, head_dim)
+    q8 = quant_kv_asym_per_head(x, 8.0, head_dim)
+    return jnp.where(mask8 > 0.5, q8, q4)
+
+
+# --------------------------------------------------------------------------
+# Hadamard rotation (QuaRot baseline, Section VI-A)
+# --------------------------------------------------------------------------
+
+
+def hadamard_matrix(n):
+    """Normalized Hadamard matrix of size n (n must be a power of two)."""
+    assert n & (n - 1) == 0, n
+    h = np.array([[1.0]], np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h / np.sqrt(n))
+
+
+def hadamard_rotate(x, h):
+    """Rotate the channel (last) axis: x @ H."""
+    return x @ h
+
+
+# --------------------------------------------------------------------------
+# SmoothQuant-style calibrated smoothing (QoQ / SmoothQuant baselines)
+# --------------------------------------------------------------------------
+
+
+def smoothquant_factors(act_absmax, w_absmax, alpha=0.5, eps=1e-6):
+    """Per-channel migration factors s = amax_a^alpha / amax_w^(1-alpha).
+
+    Activations are divided by s, weight *input* channels multiplied by s.
+    `act_absmax` comes from an offline calibration corpus -- this is the
+    overfitting-prone step the paper criticizes (Fig. 8 / Table IV).
+    """
+    a = jnp.maximum(act_absmax, eps)
+    w = jnp.maximum(w_absmax, eps)
+    s = a**alpha / w ** (1.0 - alpha)
+    return jnp.maximum(s, eps)

@@ -1,0 +1,103 @@
+"""Build-time training of the tiny GQA transformer on the synthetic
+corpus.  Runs once inside `make artifacts`; never on the request path.
+
+Plain Adam in jnp -- the model is ~1M parameters, a few hundred steps on
+CPU take a couple of minutes.  The loss curve is logged to
+artifacts/train_log.tsv and summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.float32(0.0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: model.Config, steps=400, batch=16, seqlen=128, lr=1e-3,
+          seed=0, log_every=20, corpus_names=("wiki_syn", "c4_syn"),
+          verbose=True):
+    """Returns (params, log) where log is a list of (step, loss).
+
+    Trains on a mixture of corpora (like the paper's models, which are
+    competent on both Wikitext-2 and C4) so that both evaluation
+    corpora are in-domain; pile_syn stays calibration-only.
+    """
+    params = model.init_params(cfg, seed)
+    state = adam_init(params)
+
+    @jax.jit
+    def update(params, state, block):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, block, cfg)
+        new, state = adam_update(params, grads, state, lr)
+        return new, state, loss
+
+    tokens = np.concatenate(
+        [corpus.make_splits(n)[0] for n in corpus_names])
+    rng = np.random.default_rng(seed + 1)
+    log = []
+    t0 = time.time()
+    step = 0
+    while step < steps:
+        for block in corpus.batches(tokens, batch, seqlen, rng):
+            params, state, loss = update(params, state, jnp.asarray(block))
+            step += 1
+            if step % log_every == 0 or step == 1:
+                log.append((step, float(loss)))
+                if verbose:
+                    print(f"  step {step:4d}  loss {float(loss):.4f}  "
+                          f"({time.time() - t0:.1f}s)", flush=True)
+            if step >= steps:
+                break
+    return params, log
+
+
+def save_weights(params: Dict[str, jnp.ndarray], bin_path, tsv_path=None):
+    """Flat f32 little-endian in sorted-name order + TSV manifest."""
+    names = sorted(params)
+    with open(bin_path, "wb") as f:
+        offset = 0
+        rows = []
+        for n in names:
+            a = np.asarray(params[n], np.float32)
+            f.write(a.tobytes())
+            rows.append((n, "x".join(map(str, a.shape)), offset, a.size))
+            offset += a.size
+    if tsv_path:
+        with open(tsv_path, "w") as f:
+            f.write("name\tshape\toffset_f32\tcount\n")
+            for n, shp, off, cnt in rows:
+                f.write(f"{n}\t{shp}\t{off}\t{cnt}\n")
+
+
+def load_weights(bin_path, cfg: model.Config):
+    shapes = model.param_shapes(cfg)
+    flat = np.fromfile(bin_path, dtype="<f4")
+    params, off = {}, 0
+    for n in sorted(shapes):
+        cnt = int(np.prod(shapes[n]))
+        params[n] = jnp.asarray(flat[off:off + cnt].reshape(shapes[n]))
+        off += cnt
+    assert off == flat.size, (off, flat.size)
+    return params

@@ -1,0 +1,9 @@
+import hypothesis
+
+# jax tracing/compilation inside property bodies blows the default 200 ms
+# deadline; wall-clock flakiness is not what these tests measure.
+hypothesis.settings.register_profile(
+    "jax", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("jax")

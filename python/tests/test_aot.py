@@ -1,0 +1,77 @@
+"""AOT pipeline tests: manifests, blobs, goldens, graph emission."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+
+
+CFG = model.TINY
+
+
+def test_aux_blob_layout_roundtrip(tmp_path):
+    aot.write_aux_manifest(str(tmp_path), CFG)
+    blob = aot.aux_to_blob(CFG, {"kv_bits": np.float32(4.0)})
+    layout = {}
+    with open(tmp_path / "aux_layout.tsv") as f:
+        next(f)
+        for line in f:
+            name, shape, off, cnt = line.strip().split("\t")
+            layout[name] = (int(off), int(cnt))
+    # scalar override landed at its offset
+    off, cnt = layout["kv_bits"]
+    assert cnt == 1 and blob[off] == 4.0
+    # total size matches
+    assert blob.size == sum(c for _, c in layout.values())
+
+
+def test_weights_roundtrip(tmp_path):
+    params = model.init_params(model.Config(n_layers=1), seed=3)
+    cfg1 = model.Config(n_layers=1)
+    train.save_weights(params, tmp_path / "w.bin", tmp_path / "w.tsv")
+    loaded = train.load_weights(tmp_path / "w.bin", cfg1)
+    for k in params:
+        np.testing.assert_array_equal(
+            np.asarray(params[k]), np.asarray(loaded[k]))
+
+
+def test_graph_emission_hlo_text(tmp_path):
+    reg = aot.Registry(str(tmp_path))
+    reg.graph("add", lambda a, b: (a + b,),
+              [("a", aot.spec((2, 2))), ("b", aot.spec((2, 2)))])
+    reg.write()
+    text = (tmp_path / "add.hlo.txt").read_text()
+    assert "HloModule" in text
+    manifest = (tmp_path / "manifest.tsv").read_text()
+    assert "add\tadd.hlo.txt\ta:2x2:f32;b:2x2:f32" in manifest
+
+
+def test_reassemble_inverse():
+    names = sorted(model.param_shapes(CFG))
+    args = list(range(len(names))) + ["block"] + [
+        f"aux{i}" for i in range(len(model.AUX_ORDER))]
+    params, block, aux = aot.reassemble(CFG, args)
+    assert block == "block"
+    assert len(params) == len(names)
+    assert list(aux) == list(model.AUX_ORDER)
+
+
+def test_eval_scheme_table_complete():
+    """Every graph referenced by evalcfg must exist in EVAL_SCHEMES."""
+    import io
+    from unittest import mock
+    buf = {}
+    def fake_open(path, mode="r"):
+        buf[path] = io.StringIO()
+        buf[path].close = lambda: None
+        return buf[path]
+    with mock.patch("builtins.open", fake_open):
+        aot.write_evalcfg("/x")
+    content = next(iter(buf.values())).getvalue()
+    for line in content.splitlines()[1:]:
+        graph = line.split("\t")[1]
+        tag = graph.removeprefix("eval_")
+        assert tag in aot.EVAL_SCHEMES, graph

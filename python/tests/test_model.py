@@ -1,0 +1,155 @@
+"""L2 model tests: shapes, serving-path consistency, scheme behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model, quant
+
+CFG = model.Config(n_layers=2)  # shallow for speed
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def block():
+    toks = corpus.corpus_tokens("wiki_syn", 80)
+    return jnp.asarray(toks[: 4 * 33].reshape(4, 33))
+
+
+def test_param_shapes_sorted_and_complete():
+    shapes = model.param_shapes(CFG)
+    assert list(shapes) == sorted(shapes)
+    n = sum(int(np.prod(s)) for s in shapes.values())
+    assert n > 100_000
+
+
+def test_forward_shapes(params, block):
+    logits = model.forward(params, block[:, :-1], CFG)
+    assert logits.shape == (4, 32, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_nll_positive(params, block):
+    total, count, correct = model.nll(params, block, CFG)
+    assert float(total) > 0 and int(count) == 4 * 32
+
+
+def test_quant_scheme_changes_but_stays_close(params, block):
+    base, _, _ = model.nll(params, block, CFG)
+    s = model.scheme(a_fmt="e4m3", kv_mode="smooth", p_fmt="s0e4m4")
+    aux = model.default_aux(CFG)
+    aux["kv_bits"] = jnp.float32(4.0)
+    q, _, _ = model.nll(params, block, CFG, s, aux)
+    assert float(q) != float(base)
+    assert abs(float(q) - float(base)) / float(base) < 0.2
+
+
+def test_bits16_aux_is_noop(params, block):
+    base, _, _ = model.nll(params, block, CFG)
+    s = model.scheme(a_fmt="int", kv_mode="int", p_fmt="int")
+    same, _, _ = model.nll(params, block, CFG, s, model.default_aux(CFG))
+    np.testing.assert_allclose(float(base), float(same), rtol=1e-6)
+
+
+def test_quarot_rotation_identity_at_fp(params, block):
+    """Rotating weights + activations with no quantization must be a
+    numerical no-op (H is orthonormal)."""
+    h = np.asarray(quant.hadamard_matrix(CFG.d_model))
+    p2 = {}
+    for k, v in params.items():
+        if k.endswith(("wq", "wk", "wv", "wgate", "wup")):
+            p2[k] = jnp.asarray(h.T @ np.asarray(v))
+        else:
+            p2[k] = v
+    base, _, _ = model.nll(params, block, CFG)
+    s = model.scheme(hadamard=True)
+    rot, _, _ = model.nll(p2, block, CFG, s, model.default_aux(CFG))
+    np.testing.assert_allclose(float(base), float(rot), rtol=1e-3)
+
+
+def test_prefill_matches_forward(params, block):
+    pt = block[:1, :17]
+    lg, kc, vc, sf = model.prefill(params, pt[:, :16], jnp.int32(16), CFG)
+    logits_f = model.forward(params, pt[:, :16], CFG)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_f[:, 15]), atol=1e-4)
+    assert kc.shape == (CFG.n_layers, 1, 16, CFG.n_kv * CFG.d_head)
+    assert (np.asarray(sf) > 0).all()
+
+
+def test_prefill_respects_true_len(params, block):
+    """Padding beyond true_len must not change outputs."""
+    pt = np.asarray(block[:1, :16])
+    padded = pt.copy()
+    padded[:, 10:] = 7  # garbage pad
+    lg1, *_ = model.prefill(params, jnp.asarray(pt), jnp.int32(10), CFG)
+    lg2, *_ = model.prefill(params, jnp.asarray(padded), jnp.int32(10), CFG)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)
+
+
+def _decode_setup(params, block, ctx=32, quantized=False):
+    pt = block[:1, :17]
+    lg, kc, vc, sf = model.prefill(params, pt[:, :16], jnp.int32(16), CFG,
+                                   quantized=quantized)
+    L = CFG.n_layers
+    kvdim = CFG.n_kv * CFG.d_head
+    kcache = np.zeros((L, 1, ctx, kvdim), np.float32)
+    vcache = np.zeros((L, 1, ctx, kvdim), np.float32)
+    kcache[:, :, :16] = np.asarray(kc)
+    vcache[:, :, :16] = np.asarray(vc)
+    sfb = jnp.asarray(np.asarray(sf)[:, None, :])
+    return pt, jnp.asarray(kcache), jnp.asarray(vcache), sfb
+
+
+def test_decode_matches_forward(params, block):
+    pt, kc, vc, sf = _decode_setup(params, block)
+    lg, nk, nv = model.decode_step(
+        params, pt[:, 16], jnp.asarray([16], jnp.int32), kc, vc, sf, CFG)
+    want = model.forward(params, pt, CFG)[:, 16]
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(want), atol=1e-4)
+    assert nk.shape == (CFG.n_layers, 1, CFG.n_kv * CFG.d_head)
+
+
+def test_decode_quantized_runs_and_snaps_kv(params, block):
+    pt, kc, vc, sf = _decode_setup(params, block, quantized=True)
+    lg, nk, nv = model.decode_step(
+        params, pt[:, 16], jnp.asarray([16], jnp.int32), kc, vc, sf, CFG,
+        quantized=True)
+    assert np.isfinite(np.asarray(lg)).all()
+    # new_v must already be on the INT4 grid (idempotent requant)
+    again = quant.quant_kv_asym_per_head(nv, 4.0, CFG.d_head)
+    np.testing.assert_allclose(np.asarray(again), np.asarray(nv),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_batch_positions_independent(params, block):
+    """Each batch lane attends only to its own prefix length."""
+    ctx = 32
+    L, kvdim = CFG.n_layers, CFG.n_kv * CFG.d_head
+    r = np.random.default_rng(0)
+    kc = r.normal(size=(L, 2, ctx, kvdim)).astype(np.float32)
+    vc = r.normal(size=(L, 2, ctx, kvdim)).astype(np.float32)
+    sf = jnp.ones((L, 2, kvdim), jnp.float32)
+    toks = jnp.asarray([5, 9], jnp.int32)
+    pos = jnp.asarray([4, 20], jnp.int32)
+    lg1, *_ = model.decode_step(params, toks, pos, jnp.asarray(kc),
+                                jnp.asarray(vc), sf, CFG)
+    # garbage beyond each lane's position must not matter
+    kc2, vc2 = kc.copy(), vc.copy()
+    kc2[:, 0, 5:] = 42.0
+    vc2[:, 1, 21:] = -42.0
+    lg2, *_ = model.decode_step(params, toks, pos, jnp.asarray(kc2),
+                                jnp.asarray(vc2), sf, CFG)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)
+
+
+def test_smooth_calib_mode(params, block):
+    s = model.scheme(kv_mode="smooth_calib")
+    aux = model.default_aux(CFG)
+    aux["kv_bits"] = jnp.float32(4.0)
+    q, _, _ = model.nll(params, block, CFG, s, aux)
+    assert np.isfinite(float(q))

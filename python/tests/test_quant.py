@@ -1,0 +1,215 @@
+"""Unit + property tests for the hybrid numerical formats (Section IV)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+
+finite_f32 = st.floats(
+    min_value=-1e4, max_value=1e4, allow_nan=False, width=32)
+
+
+def arr(shape, min_value=-1e4, max_value=1e4):
+    return hnp.arrays(
+        np.float32, shape,
+        elements=st.floats(min_value=min_value, max_value=max_value,
+                           allow_nan=False, width=32),
+    )
+
+
+# ---------------------------------------------------------------- INT
+
+
+@hypothesis.given(arr((4, 32)))
+def test_int_asym_error_bound(x):
+    """|x - q(x)| <= scale/2 with scale = range/(2^b - 1)."""
+    q = np.asarray(quant.quant_int_asym(jnp.asarray(x), 4))
+    rng = x.max(-1) - x.min(-1)
+    bound = np.maximum(rng / 15.0, 1e-8) / 2 + 1e-5 * (1 + np.abs(x).max())
+    assert (np.abs(q - x) <= bound[:, None] + 1e-6).all()
+
+
+@hypothesis.given(arr((2, 16)))
+def test_int_asym_idempotent(x):
+    q1 = np.asarray(quant.quant_int_asym(jnp.asarray(x), 4))
+    q2 = np.asarray(quant.quant_int_asym(jnp.asarray(q1), 4))
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6)
+
+
+def test_int_bits16_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)),
+                    jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(quant.quant_int_asym(x, 16.0)), np.asarray(x))
+
+
+def test_int_sym_preserves_sign_and_zero():
+    x = jnp.asarray([[-3.0, 0.0, 5.0, -0.1]])
+    q = np.asarray(quant.quant_int_sym(x, 4))
+    assert q[0, 1] == 0.0
+    assert q[0, 0] <= 0.0 and q[0, 2] > 0.0
+
+
+def test_int_grouped_matches_manual():
+    x = np.random.default_rng(1).normal(size=(2, 8)).astype(np.float32)
+    g = np.asarray(quant.quant_int_asym_grouped(jnp.asarray(x), 4, 4))
+    m = np.asarray(
+        quant.quant_int_asym(jnp.asarray(x.reshape(2, 2, 4)), 4)
+    ).reshape(2, 8)
+    np.testing.assert_allclose(g, m)
+
+
+# ---------------------------------------------------------------- FP8
+
+
+def test_e4m3_exact_values():
+    # values exactly representable in E4M3 must round-trip
+    exact = np.array([0.0, 0.5, 1.0, 1.5, -2.0, 448.0, 0.001953125],
+                     np.float32)
+    q = np.asarray(quant.quant_fp8_e4m3(jnp.asarray(exact)))
+    np.testing.assert_array_equal(q, exact)
+
+
+def test_e4m3_saturates():
+    q = np.asarray(quant.quant_fp8_e4m3(jnp.asarray([1e6, -1e6],
+                                                    jnp.float32)))
+    np.testing.assert_array_equal(q, [448.0, -448.0])
+
+
+@hypothesis.given(arr((64,), min_value=-448, max_value=448))
+def test_e4m3_relative_error(x):
+    """Normals: relative error <= 2^-4 (half ULP of 3-bit mantissa)."""
+    q = np.asarray(quant.quant_fp8_e4m3(jnp.asarray(x)))
+    normal = np.abs(x) >= 2.0**-6
+    rel = np.abs(q - x) / np.maximum(np.abs(x), 1e-30)
+    assert (rel[normal] <= 2.0**-4 + 1e-6).all()
+
+
+def test_s0e4m4_range_and_fidelity():
+    p = np.linspace(0, 1, 1001).astype(np.float32)
+    q = np.asarray(quant.quant_fp8_s0e4m4(jnp.asarray(p)))
+    assert (q >= 0).all() and (q <= 1).all()
+    assert q[-1] == 1.0 and q[0] == 0.0
+    # 4-bit mantissa: rel error of normals <= 2^-5
+    normal = p >= 2.0**-14
+    rel = np.abs(q - p)[normal] / p[normal]
+    assert (rel <= 2.0**-5 + 1e-6).all()
+
+
+def test_s0e4m4_beats_e4m3_and_int8_on_softmax_tensors():
+    """Table II's mechanism: S0E4M4 has the best numerical fidelity on
+    softmax-distributed scores.  Relative error is the relevant metric
+    (perplexity perturbations track relative error of attention
+    weights); int8 zeroes every score below 1/510 and e4m3 only keeps 3
+    mantissa bits, while s0e4m4's 4-bit mantissa covers [0,1] exactly."""
+    r = np.random.default_rng(0)
+    logits = r.normal(0, 3, size=(256, 64)).astype(np.float32)
+    p = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    pj = jnp.asarray(p)
+    def relerr(q):
+        return float(jnp.mean(jnp.abs(q - pj) / (pj + 1e-12)))
+    e_s0 = relerr(quant.quant_fp8_s0e4m4(pj))
+    e_e4 = relerr(quant.quant_fp8_e4m3(pj))
+    e_i8 = relerr(quant.quant_int8_unsigned(pj))
+    assert e_s0 < e_e4 < e_i8
+    # and on the attention output (P @ V) at long context, MSE too
+    ctx = 256
+    logits = r.normal(0, 3, size=(64, ctx)).astype(np.float32)
+    p = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    v = r.normal(size=(ctx, 16)).astype(np.float32)
+    pj, vj = jnp.asarray(p), jnp.asarray(v)
+    out = pj @ vj
+    def pv_mse(q):
+        return float(jnp.mean((q @ vj - out) ** 2))
+    assert pv_mse(quant.quant_fp8_s0e4m4(pj)) < pv_mse(
+        quant.quant_int8_unsigned(pj))
+    assert pv_mse(quant.quant_fp8_s0e4m4(pj)) < pv_mse(
+        quant.quant_fp8_e4m3(pj))
+
+
+@hypothesis.given(arr((32,), min_value=0.0, max_value=1.0))
+def test_s0e4m4_idempotent(p):
+    q1 = np.asarray(quant.quant_fp8_s0e4m4(jnp.asarray(p)))
+    q2 = np.asarray(quant.quant_fp8_s0e4m4(jnp.asarray(q1)))
+    np.testing.assert_array_equal(q1, q2)
+
+
+# ------------------------------------------------------------- BitMoD
+
+
+def test_bitmod_encode_decode_roundtrip():
+    r = np.random.default_rng(2)
+    w = r.normal(0, 0.3, size=(4, 128)).astype(np.float32)
+    codes, scales, specials = quant.quant_bitmod_encode(w, 128)
+    deq = quant.bitmod_decode(codes, scales, specials, 128)
+    fq = np.asarray(quant.quant_bitmod(jnp.asarray(w), 128))
+    np.testing.assert_allclose(deq, fq, atol=1e-6)
+    assert codes.max() <= 15 and specials.max() <= 3
+
+
+def test_bitmod_beats_int4_on_gaussian_weights():
+    """BitMoD's claim: lower error than asymmetric INT4 on
+    normally-distributed weight groups."""
+    r = np.random.default_rng(3)
+    w = r.normal(0, 0.1, size=(64, 128)).astype(np.float32)
+    wj = jnp.asarray(w)
+    e_bm = float(jnp.mean((quant.quant_bitmod(wj, 128) - wj) ** 2))
+    e_i4 = float(jnp.mean(
+        (quant.quant_int_asym_grouped(wj, 4, 128) - wj) ** 2))
+    assert e_bm < e_i4
+
+
+def test_bitmod_uses_special_values():
+    """A group with one large-magnitude outlier should pick a +-8/5
+    special value for it."""
+    w = np.full(128, 0.1, np.float32)
+    w[7] = -0.8  # 8x the rest -> special -8 fits
+    codes, scales, specials = quant.quant_bitmod_encode(w, 128)
+    assert codes.reshape(-1)[7] == 15  # special slot
+    assert specials[0] in (0, 1)  # -8 or -5
+
+
+# ---------------------------------------------------------- smoothing
+
+
+def test_smoothing_suppresses_outlier_channels():
+    r = np.random.default_rng(4)
+    k = r.normal(size=(64, 32)).astype(np.float32)
+    k[:, 5] *= 20.0
+    kj = jnp.asarray(k)
+    f = quant.smoothing_factors(kj)
+    ks = np.asarray(kj / f)
+    assert np.abs(ks).max() <= 1.0 + 1e-6
+    # quantization error (relative) improves vs direct per-head INT4
+    e_direct = float(jnp.mean(
+        (quant.quant_kv_asym_per_head(kj, 4.0, 16) - kj) ** 2))
+    e_smooth = float(jnp.mean(
+        (quant.quant_key_smoothed(kj, 4.0, 16) - kj) ** 2))
+    assert e_smooth < e_direct
+
+
+def test_oaken_mixed_precision():
+    r = np.random.default_rng(5)
+    x = r.normal(size=(8, 32)).astype(np.float32)
+    mask = np.zeros(32, np.float32)
+    mask[3] = 1.0
+    q = np.asarray(quant.quant_kv_oaken(jnp.asarray(x),
+                                        jnp.asarray(mask), 16))
+    q8 = np.asarray(quant.quant_kv_asym_per_head(jnp.asarray(x), 8.0, 16))
+    np.testing.assert_allclose(q[:, 3], q8[:, 3], atol=1e-6)
+
+
+def test_hadamard_orthonormal():
+    h = np.asarray(quant.hadamard_matrix(64))
+    np.testing.assert_allclose(h @ h.T, np.eye(64), atol=1e-5)
+
+
+def test_smoothquant_factors_migrate():
+    a = jnp.asarray([10.0, 0.1])
+    w = jnp.asarray([0.1, 0.1])
+    s = np.asarray(quant.smoothquant_factors(a, w, 0.5))
+    assert s[0] > s[1]  # big-activation channel gets shrunk more

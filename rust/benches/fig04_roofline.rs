@@ -1,0 +1,54 @@
+//! Fig. 4: roofline analysis of NPU, HBM-PIM and P3-LLM with the
+//! paper's operator markers (MHA, GQA G in {2,4,8}, linear BS in
+//! {4,16,64}).
+
+use p3llm::config::accel::{HbmTiming, NpuConfig, PcuConfig};
+use p3llm::report::{f2, si, Table};
+use p3llm::sim::roofline::{npu_platform, op_intensity, pim_platform};
+
+fn main() {
+    let hbm = HbmTiming::default();
+    let plats = [
+        npu_platform(&NpuConfig::default(), &hbm),
+        pim_platform(&PcuConfig::hbm_pim(), &hbm),
+        pim_platform(&PcuConfig::p3llm(), &hbm),
+    ];
+    let mut t = Table::new(
+        "Fig 4: attainable MAC/s per platform and operator",
+        &["operator", "intensity MAC/B", "NPU", "HBM-PIM", "P3-LLM"],
+    );
+    // markers: (name, rows sharing a matrix pass, stored bits)
+    let markers: [(&str, usize, f64); 7] = [
+        ("MHA (G=1, fp16)", 1, 16.0),
+        ("GQA G=2 (fp16)", 2, 16.0),
+        ("GQA G=4 (fp16)", 4, 16.0),
+        ("GQA G=8 (fp16)", 8, 16.0),
+        ("Linear BS=4 (fp16)", 4, 16.0),
+        ("Linear BS=16 (fp16)", 16, 16.0),
+        ("Linear BS=4 (W4, P3)", 4, 4.25),
+    ];
+    for (name, rows, bits) in markers {
+        let ai = op_intensity(rows, bits);
+        let mut row = vec![name.to_string(), f2(ai)];
+        for p in &plats {
+            row.push(si(p.attainable(ai)));
+        }
+        t.row(row);
+    }
+    t.print();
+    let mut roofs = Table::new(
+        "Fig 4 roofs: peak MAC/s + knee intensity",
+        &["platform", "peak MAC/s", "feed BW B/s", "knee MAC/B"],
+    );
+    for p in &plats {
+        roofs.row(vec![p.name.clone(), si(p.peak), si(p.bw), f2(p.knee())]);
+    }
+    roofs.print();
+    println!(
+        "expected shape: HBM-PIM advantage over NPU vanishes around G/BS=4; \
+         P3 roofline 8x HBM-PIM"
+    );
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, "fig04_roofline").unwrap();
+    roofs.save(&dir, "fig04_roofs").unwrap();
+}

@@ -1,0 +1,78 @@
+//! Fig. 8: layer-wise key-cache quantization error of P3 (dynamic
+//! smoothing) vs Oaken (calibrated outlier mask) vs QoQ (calibrated
+//! smoothing), evaluated on both corpora -- the calibration-overfitting
+//! experiment.  Calibration stats come from pile_syn (QoQ) and wiki
+//! (Oaken), matching the paper's setup.
+
+use p3llm::report::{Table, f3};
+use p3llm::runtime::artifacts::{lit_f32, lit_i32, vec_f32};
+use p3llm::runtime::eval::{blocks, EVAL_B, EVAL_T};
+use p3llm::runtime::{Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let exe = rt.load("kverr").unwrap();
+    let weights = ev.load_weights("fp").unwrap();
+    // oaken masks calibrated on pile; qoq factors calibrated on pile
+    let aux_oaken = ev.load_aux("oaken_pile").unwrap();
+    let aux_qoq = ev.load_aux("qoq_pile").unwrap();
+    // merge: masks from oaken blob, qoq_ksm from qoq blob
+    let mut aux = aux_oaken.clone();
+    if let Some((dims, data)) = aux_qoq.view("qoq_ksm") {
+        let total: usize = dims.iter().product();
+        let off = aux
+            .layout
+            .iter()
+            .find(|(n, ..)| n == "qoq_ksm")
+            .map(|(_, _, off, _)| *off)
+            .unwrap();
+        aux.data[off..off + total].copy_from_slice(data);
+    }
+
+    let mut t = Table::new(
+        "Fig 8: normalized key-cache quant MSE per layer (INT4)",
+        &["corpus", "layer", "P3 dynamic", "Oaken(pile)", "QoQ(pile)"],
+    );
+    let mut sums = [[0.0f64; 3]; 2];
+    for (ci, corpus) in ["wiki", "c4"].iter().enumerate() {
+        let toks = ev.load_corpus(corpus, "eval").unwrap();
+        let blk = &blocks(&toks, 1)[0];
+        let mut args: Vec<xla::Literal> = weights
+            .tensors
+            .iter()
+            .map(|w| lit_f32(&w.dims, &w.f32_data))
+            .collect::<Result<_, _>>()
+            .unwrap();
+        args.push(lit_i32(&[EVAL_B, EVAL_T + 1], blk).unwrap());
+        for (_, dims, off, cnt) in &aux.layout {
+            args.push(lit_f32(dims, &aux.data[*off..*off + *cnt]).unwrap());
+        }
+        let out = exe.run(&args).unwrap();
+        let errs = vec_f32(&out[0]).unwrap(); // [3, L]
+        let l = errs.len() / 3;
+        for layer in 0..l {
+            t.row(vec![
+                corpus.to_string(),
+                layer.to_string(),
+                f3(errs[layer] as f64),
+                f3(errs[l + layer] as f64),
+                f3(errs[2 * l + layer] as f64),
+            ]);
+            for m in 0..3 {
+                sums[ci][m] += errs[m * l + layer] as f64 / l as f64;
+            }
+        }
+    }
+    t.print();
+    for (ci, corpus) in ["wiki", "c4"].iter().enumerate() {
+        let [p3, oaken, qoq] = sums[ci];
+        println!(
+            "{corpus}: P3 {:.4} vs Oaken {:.4} vs QoQ {:.4} -> P3 lowest: {}",
+            p3, oaken, qoq,
+            if p3 <= oaken && p3 <= qoq { "HOLDS" } else { "CHECK" }
+        );
+    }
+    t.save(p3llm::benchkit::reports_dir(), "fig08_kverror").unwrap();
+}

@@ -1,0 +1,51 @@
+//! Fig. 9: normalized decoding speedup vs batch size for NPU, HBM-PIM,
+//! Ecco and P3-LLM across the five evaluation models (ctx 4K).
+
+use p3llm::accel::{fig9_systems, Accel};
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 9: normalized decoding speedup (ctx=4K, NPU=1.0)",
+        &["model", "bs", "NPU", "HBM-PIM", "Ecco", "P3-LLM"],
+    );
+    let systems = fig9_systems();
+    let mut p3_over = vec![0.0f64; systems.len()];
+    let mut n = 0usize;
+    for m in eval_models() {
+        for bs in [1usize, 2, 4, 8] {
+            let ns: Vec<f64> = systems
+                .iter()
+                .map(|a| a.decode_step(&m, bs, 4096).total_ns())
+                .collect();
+            let base = ns[0];
+            t.row(
+                std::iter::once(m.name.to_string())
+                    .chain(std::iter::once(bs.to_string()))
+                    .chain(ns.iter().map(|&x| f2(base / x)))
+                    .collect(),
+            );
+            let p3 = *ns.last().unwrap();
+            for (i, &x) in ns.iter().enumerate() {
+                p3_over[i] += x / p3;
+            }
+            n += 1;
+        }
+    }
+    t.print();
+    let mut avg = Table::new(
+        "Fig 9 summary: average P3-LLM speedup (paper: 7.8x NPU, 4.9x HBM-PIM, 2.0x Ecco)",
+        &["over", "speedup"],
+    );
+    for (i, a) in [Accel::npu_fp16(), Accel::hbm_pim(), Accel::ecco()]
+        .iter()
+        .enumerate()
+    {
+        avg.row(vec![a.name.into(), f2(p3_over[i] / n as f64)]);
+    }
+    avg.print();
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, "fig09_speedup").unwrap();
+    avg.save(&dir, "fig09_summary").unwrap();
+}

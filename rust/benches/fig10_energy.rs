@@ -1,0 +1,47 @@
+//! Fig. 10: normalized energy consumption vs batch size with the
+//! attention/linear breakdown (ctx 4K).
+
+use p3llm::accel::fig9_systems;
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, f3, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 10: normalized energy (P3-LLM total = 1.0) + attn/linear split",
+        &["model", "bs", "system", "attn", "linear", "other", "total"],
+    );
+    let systems = fig9_systems();
+    let mut sums = vec![0.0f64; systems.len()];
+    let mut n = 0;
+    for m in eval_models() {
+        for bs in [1usize, 2, 4, 8] {
+            let p3 = systems.last().unwrap().decode_step(&m, bs, 4096).total_pj();
+            for (i, a) in systems.iter().enumerate() {
+                let c = a.decode_step(&m, bs, 4096);
+                t.row(vec![
+                    m.name.into(),
+                    bs.to_string(),
+                    a.name.into(),
+                    f3(c.attn.pj / p3),
+                    f3(c.linear.pj / p3),
+                    f3(c.other.pj / p3),
+                    f2(c.total_pj() / p3),
+                ]);
+                sums[i] += c.total_pj() / p3;
+            }
+            n += 1;
+        }
+    }
+    t.print();
+    let mut avg = Table::new(
+        "Fig 10 summary: average energy vs P3 (paper: 6.3x NPU, 3.5x HBM-PIM, 2.1x Ecco)",
+        &["system", "energy ratio"],
+    );
+    for (i, a) in systems.iter().enumerate() {
+        avg.row(vec![a.name.into(), f2(sums[i] / n as f64)]);
+    }
+    avg.print();
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, "fig10_energy").unwrap();
+    avg.save(&dir, "fig10_summary").unwrap();
+}

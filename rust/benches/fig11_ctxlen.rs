@@ -1,0 +1,31 @@
+//! Fig. 11: single-batch decoding speedup across context lengths
+//! 2K-16K.  Llama-2-7B (pre-RoPE key quantization -> Q.K^T on NPU)
+//! should show the flattest scaling.
+
+use p3llm::accel::Accel;
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 11: P3-LLM speedup over HBM-PIM vs context length (bs=1)",
+        &["model", "2K", "4K", "8K", "16K"],
+    );
+    let p3 = Accel::p3llm();
+    let base = Accel::hbm_pim();
+    for m in eval_models() {
+        let mut row = vec![m.name.to_string()];
+        for ctx in [2048usize, 4096, 8192, 16384] {
+            let s = base.decode_step(&m, 1, ctx).total_ns()
+                / p3.decode_step(&m, 1, ctx).total_ns();
+            row.push(f2(s));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!(
+        "expected shape: speedup grows with ctx for post-RoPE models; \
+         Llama-2 (pre-RoPE, attention QK on NPU) grows least"
+    );
+    t.save(p3llm::benchkit::reports_dir(), "fig11_ctxlen").unwrap();
+}

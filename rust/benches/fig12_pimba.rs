@@ -1,0 +1,41 @@
+//! Fig. 12: P3-LLM vs Pimba (original KV8-only and enhanced W8A8KV8)
+//! at batch sizes 2 and 4, ctx 4K.
+
+use p3llm::accel::Accel;
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 12: speedup over Pimba-orig (paper: enhanced ~2.1x, P3 ~3.4x over enhanced)",
+        &["model", "bs", "Pimba", "Pimba-W8A8", "P3-LLM"],
+    );
+    let mut enh_sum = 0.0;
+    let mut p3_sum = 0.0;
+    let mut n = 0;
+    for m in eval_models() {
+        for bs in [2usize, 4] {
+            let orig = Accel::pimba_orig().decode_step(&m, bs, 4096).total_ns();
+            let enh =
+                Accel::pimba_enhanced().decode_step(&m, bs, 4096).total_ns();
+            let p3 = Accel::p3llm().decode_step(&m, bs, 4096).total_ns();
+            t.row(vec![
+                m.name.into(),
+                bs.to_string(),
+                "1.00".into(),
+                f2(orig / enh),
+                f2(orig / p3),
+            ]);
+            enh_sum += orig / enh;
+            p3_sum += enh / p3;
+            n += 1;
+        }
+    }
+    t.print();
+    println!(
+        "avg: enhanced {:.2}x over orig; P3 {:.2}x over enhanced",
+        enh_sum / n as f64,
+        p3_sum / n as f64
+    );
+    t.save(p3llm::benchkit::reports_dir(), "fig12_pimba").unwrap();
+}

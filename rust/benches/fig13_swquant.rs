@@ -1,0 +1,38 @@
+//! Fig. 13: decoding throughput of P3-LLM vs software quantization
+//! (SmoothQuant W8A8, AWQ W4A16) running on the baseline NPU.
+
+use p3llm::accel::Accel;
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 13: decode throughput tok/s (ctx=4K); paper: P3 3.9x SmoothQuant, 3.0x AWQ",
+        &["model", "bs", "SmoothQuant", "AWQ", "P3-LLM"],
+    );
+    let (mut r_sq, mut r_awq, mut n) = (0.0, 0.0, 0);
+    for m in eval_models() {
+        for bs in [1usize, 2, 4, 8] {
+            let sq = Accel::smoothquant().decode_tokens_per_sec(&m, bs, 4096);
+            let awq = Accel::awq().decode_tokens_per_sec(&m, bs, 4096);
+            let p3 = Accel::p3llm().decode_tokens_per_sec(&m, bs, 4096);
+            t.row(vec![
+                m.name.into(),
+                bs.to_string(),
+                f2(sq),
+                f2(awq),
+                f2(p3),
+            ]);
+            r_sq += p3 / sq;
+            r_awq += p3 / awq;
+            n += 1;
+        }
+    }
+    t.print();
+    println!(
+        "avg P3 speedup: {:.2}x over SmoothQuant, {:.2}x over AWQ",
+        r_sq / n as f64,
+        r_awq / n as f64
+    );
+    t.save(p3llm::benchkit::reports_dir(), "fig13_swquant").unwrap();
+}

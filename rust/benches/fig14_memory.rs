@@ -1,0 +1,38 @@
+//! Fig. 14: weights + KV memory during decoding (bs=8, ctx=4K) for
+//! FP16, SmoothQuant, AWQ, Ecco and P3-LLM.
+
+use p3llm::config::llm::eval_models;
+use p3llm::config::scheme::QuantScheme;
+use p3llm::report::{f2, Table};
+use p3llm::workload::memory_breakdown;
+
+fn main() {
+    let schemes = [
+        QuantScheme::fp16(),
+        QuantScheme::smoothquant(),
+        QuantScheme::awq(),
+        QuantScheme::ecco(),
+        QuantScheme::p3llm(),
+    ];
+    let mut t = Table::new(
+        "Fig 14: weights+KV GB at bs=8 ctx=4K (paper: Ecco 3.8x, P3 3.7x reduction)",
+        &["model", "FP16", "SmoothQuant", "AWQ", "Ecco", "P3-LLM", "P3 reduction"],
+    );
+    for m in eval_models() {
+        let gb: Vec<f64> = schemes
+            .iter()
+            .map(|s| {
+                let mb = memory_breakdown(
+                    &m, 8, 4096, s.bits.weights, 16.0, s.bits.kv, 16.0,
+                );
+                (mb.weights + mb.kv) / 1e9
+            })
+            .collect();
+        let mut row = vec![m.name.to_string()];
+        row.extend(gb.iter().map(|&x| f2(x)));
+        row.push(f2(gb[0] / gb[4]));
+        t.row(row);
+    }
+    t.print();
+    t.save(p3llm::benchkit::reports_dir(), "fig14_memory").unwrap();
+}

@@ -1,0 +1,48 @@
+//! Fig. 15: architecture ablation -- HBM-PIM -> +W4A8KV4 -> +TEP ->
+//! +P8 scores (= P3-LLM), batch 2 and 4, ctx 4K.
+//! Paper: W4A8KV4 3.3x, +TEP another 1.6x, +P8 another 1.2x.
+
+use p3llm::accel::Accel;
+use p3llm::config::llm::eval_models;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let steps = [
+        Accel::hbm_pim(),
+        Accel::pim_w4a8kv4(),
+        Accel::pim_w4a8kv4_tep(),
+        Accel::p3llm(),
+    ];
+    let mut t = Table::new(
+        "Fig 15: architectural ablation, speedup over HBM-PIM",
+        &["model", "bs", "HBM-PIM", "+W4A8KV4", "+TEP", "+P8 (=P3)"],
+    );
+    let mut sums = vec![0.0f64; steps.len()];
+    let mut n = 0;
+    for m in eval_models() {
+        for bs in [2usize, 4] {
+            let ns: Vec<f64> = steps
+                .iter()
+                .map(|a| a.decode_step(&m, bs, 4096).total_ns())
+                .collect();
+            t.row(
+                std::iter::once(m.name.to_string())
+                    .chain(std::iter::once(bs.to_string()))
+                    .chain(ns.iter().map(|&x| f2(ns[0] / x)))
+                    .collect(),
+            );
+            for i in 0..steps.len() {
+                sums[i] += ns[0] / ns[i];
+            }
+            n += 1;
+        }
+    }
+    t.print();
+    println!(
+        "avg chain: quant {:.2}x, +TEP {:.2}x, +P8 {:.2}x",
+        sums[1] / n as f64,
+        sums[2] / sums[1],
+        sums[3] / sums[2]
+    );
+    t.save(p3llm::benchkit::reports_dir(), "fig15_archablation").unwrap();
+}

@@ -1,0 +1,37 @@
+//! Fig. 16: large-batch decoding latency breakdown (attention vs
+//! linear) for Ecco and P3-LLM, batch 2-64, Llama-3 models.
+
+use p3llm::accel::Accel;
+use p3llm::config::llm::{LLAMA31_8B, LLAMA32_3B};
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 16: decode latency ms (attn + linear) vs batch, ctx=4K",
+        &["model", "bs", "Ecco attn", "Ecco lin", "Ecco tot", "P3 attn",
+          "P3 lin", "P3 tot", "P3 speedup"],
+    );
+    for m in [&LLAMA31_8B, &LLAMA32_3B] {
+        for bs in [2usize, 4, 8, 16, 32, 64] {
+            let e = Accel::ecco().decode_step(m, bs, 4096);
+            let p = Accel::p3llm().decode_step(m, bs, 4096);
+            t.row(vec![
+                m.name.into(),
+                bs.to_string(),
+                f2(e.attn.ns / 1e6),
+                f2(e.linear.ns / 1e6),
+                f2(e.total_ns() / 1e6),
+                f2(p.attn.ns / 1e6),
+                f2(p.linear.ns / 1e6),
+                f2(p.total_ns() / 1e6),
+                f2(e.total_ns() / p.total_ns()),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "expected shape: linear latency converges by bs>=8 (P3 offloads \
+         linears to NPU); P3 keeps winning on attention (GQA low reuse)"
+    );
+    t.save(p3llm::benchkit::reports_dir(), "fig16_largebatch").unwrap();
+}

@@ -1,0 +1,111 @@
+//! Microbenchmarks of the L3 hot paths (feeds the §Perf pass in
+//! EXPERIMENTS.md): KV pack/dequant, BitMoD encode, simulator step
+//! cost, PJRT kernel + decode-step latency.
+
+use p3llm::accel::Accel;
+use p3llm::benchkit::{time, Timing};
+use p3llm::config::llm::LLAMA31_8B;
+use p3llm::coordinator::{Engine, EngineConfig, KvEntry, KvLayout, KvPool};
+use p3llm::quant::bitmod::bitmod_encode_group;
+use p3llm::report::{f2, Table};
+use p3llm::testutil::Rng;
+
+fn row(t: &mut Table, name: &str, timing: Timing, unit_note: &str) {
+    t.row(vec![
+        name.into(),
+        f2(timing.mean_us()),
+        f2(timing.median_ns / 1e3),
+        f2(timing.min_ns / 1e3),
+        unit_note.into(),
+    ]);
+}
+
+fn main() {
+    let mut t = Table::new(
+        "L3 hot-path microbenchmarks",
+        &["path", "mean us", "median us", "min us", "unit"],
+    );
+    let mut rng = Rng::new(1);
+
+    // KV pack + dequant of one full tiny-model cache
+    let layout = KvLayout { layers: 4, kv_dim: 32, head_dim: 16, max_ctx: 160 };
+    let mut pool = KvPool::new(layout.clone(), 64 << 20);
+    let smooth = vec![vec![1.0f32; 32]; 4];
+    let entry = pool.alloc(1, smooth).unwrap();
+    let k: Vec<f32> = rng.vec_f32(32, -1.0, 1.0);
+    let v: Vec<f32> = rng.vec_f32(32, -1.0, 1.0);
+    for _ in 0..128 {
+        for l in 0..4 {
+            entry.push_token(l, &k, &v);
+        }
+        entry.commit_token();
+    }
+    let tm = time(3, 20, || {
+        let e: &KvEntry = pool.get(1).unwrap();
+        let mut ko = vec![0.0f32; 160 * 32];
+        let mut vo = vec![0.0f32; 160 * 32];
+        for l in 0..4 {
+            e.dequant_layer(l, &mut ko, &mut vo);
+            std::hint::black_box((&ko, &vo));
+        }
+    });
+    row(&mut t, "kv dequant (4 layers x 128 tok)", tm, "per request-step");
+
+    let tm = time(3, 20, || {
+        let mut p = KvPool::new(layout.clone(), 64 << 20);
+        let e = p.alloc(2, vec![vec![1.0f32; 32]; 4]).unwrap();
+        for _ in 0..128 {
+            for l in 0..4 {
+                e.push_token(l, &k, &v);
+            }
+            e.commit_token();
+        }
+        std::hint::black_box(p.used_bytes());
+    });
+    row(&mut t, "kv pack (4 layers x 128 tok)", tm, "per prefill");
+
+    let w: Vec<f32> = rng.vec_f32(128, -0.5, 0.5);
+    let tm = time(10, 100, || {
+        std::hint::black_box(bitmod_encode_group(&w));
+    });
+    row(&mut t, "bitmod encode (group 128)", tm, "per group");
+
+    let a = Accel::p3llm();
+    let tm = time(3, 50, || {
+        std::hint::black_box(a.decode_step(&LLAMA31_8B, 4, 4096));
+    });
+    row(&mut t, "simulator decode-step cost", tm, "per call");
+
+    // PJRT decode step on the tiny model (the serving hot path)
+    if let Some(dir) = p3llm::benchkit::require_artifacts() {
+        for device_weights in [false, true] {
+            let cfg = EngineConfig {
+                quantized: true,
+                max_batch: 4,
+                device_weights,
+                ..Default::default()
+            };
+            let mut eng = Engine::new(&dir, cfg).unwrap();
+            for i in 0..4 {
+                eng.submit(vec![104, 105, 32 + i], 200);
+            }
+            eng.step().unwrap(); // prefill + first decode
+            let tm = time(2, 15, || {
+                eng.step().unwrap();
+            });
+            row(
+                &mut t,
+                if device_weights {
+                    "pjrt decode step b4 (device weights)"
+                } else {
+                    "pjrt decode step b4 (literal upload)"
+                },
+                tm,
+                "per decode step",
+            );
+        }
+    }
+
+    t.print();
+    t.save(p3llm::benchkit::reports_dir(), "micro_hotpath").unwrap();
+}

@@ -1,0 +1,40 @@
+//! Table II: attention-score format comparison (FP16 / INT8 /
+//! FP8-E4M3 / FP8-S0E4M4) with INT4-Asym smoothed KV, on the tiny
+//! trained model via the AOT eval graphs.
+
+use p3llm::report::{Table, f3};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let cfgs = eval_configs(&rt.artifacts.dir).unwrap();
+    let blocks = p3llm::benchkit::eval_blocks();
+    let mut t = Table::new(
+        "Table II: 8-bit attention-score formats, perplexity (KV4 smoothed)",
+        &["format", "wiki ppl", "c4 ppl"],
+    );
+    let rows = [
+        ("FP16", "score_fp16"),
+        ("INT8", "score_int8"),
+        ("FP8-E4M3", "score_e4m3"),
+        ("FP8-S0E4M4", "score_s0e4m4"),
+    ];
+    let mut results = vec![];
+    for (label, name) in rows {
+        let cfg = cfgs.iter().find(|c| c.name == name).unwrap();
+        let w = ev.perplexity(cfg, "wiki", blocks, &[]).unwrap();
+        let c = ev.perplexity(cfg, "c4", blocks, &[]).unwrap();
+        t.row(vec![label.into(), f3(w), f3(c)]);
+        results.push((label, w, c));
+    }
+    t.print();
+    let s0 = results.iter().find(|r| r.0 == "FP8-S0E4M4").unwrap();
+    let i8 = results.iter().find(|r| r.0 == "INT8").unwrap();
+    println!(
+        "expected shape: S0E4M4 <= E4M3 < INT8 perplexity loss -- {}",
+        if s0.1 <= i8.1 && s0.2 <= i8.2 { "HOLDS" } else { "CHECK" }
+    );
+    t.save(p3llm::benchkit::reports_dir(), "tab02_scores").unwrap();
+}

@@ -1,0 +1,41 @@
+//! Table III: activation formats (INT8-SmoothQuant vs FP8-E4M3) under
+//! FP16 and 4-bit (BitMoD) weights.
+
+use p3llm::report::{f3, Table};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let cfgs = eval_configs(&rt.artifacts.dir).unwrap();
+    let blocks = p3llm::benchkit::eval_blocks();
+    let mut t = Table::new(
+        "Table III: weight x activation formats, perplexity",
+        &["weights", "activation", "wiki ppl", "c4 ppl"],
+    );
+    let rows = [
+        ("FP16", "FP16", "fp16"),
+        ("FP16", "INT8-SQ", "act_sq8_w16"),
+        ("FP16", "FP8-E4M3", "act_e4m3_w16"),
+        ("4-bit", "INT8-SQ", "act_sq8_w4"),
+        ("4-bit", "FP8-E4M3", "act_e4m3_w4"),
+    ];
+    let mut res = vec![];
+    for (wl, al, name) in rows {
+        let cfg = cfgs.iter().find(|c| c.name == name).unwrap();
+        let w = ev.perplexity(cfg, "wiki", blocks, &[]).unwrap();
+        let c = ev.perplexity(cfg, "c4", blocks, &[]).unwrap();
+        t.row(vec![wl.into(), al.into(), f3(w), f3(c)]);
+        res.push((name, w, c));
+    }
+    t.print();
+    let sq4 = res.iter().find(|r| r.0 == "act_sq8_w4").unwrap();
+    let fp4 = res.iter().find(|r| r.0 == "act_e4m3_w4").unwrap();
+    println!(
+        "expected shape: under 4-bit weights, FP8-E4M3 beats INT8-SQ \
+         (SQ migrates difficulty onto already-fragile weights) -- {}",
+        if fp4.1 <= sq4.1 && fp4.2 <= sq4.2 { "HOLDS" } else { "CHECK" }
+    );
+    t.save(p3llm::benchkit::reports_dir(), "tab03_act").unwrap();
+}

@@ -1,0 +1,50 @@
+//! Table IV: perplexity of KV-cache-only quantization (Oaken vs P3)
+//! and weight-activation quantization (QuaRot, QoQ vs P3) on both
+//! evaluation corpora, with mean delta-ppl vs the FP16 baseline.
+
+use p3llm::report::{f3, Table};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let cfgs = eval_configs(&rt.artifacts.dir).unwrap();
+    let blocks = p3llm::benchkit::eval_blocks();
+    let rows = [
+        ("Baseline FP16", "fp16"),
+        ("Oaken KV4", "oaken_kv4"),
+        ("P3-LLM KV4", "p3_kv4"),
+        ("QuaRot W4A8KV4", "quarot"),
+        ("QoQ W4A8KV4", "qoq"),
+        ("P3-LLM W4A8KV4P8", "p3_full"),
+        ("P3-LLM +FP8 query", "p3_full_q8"),
+    ];
+    let mut t = Table::new(
+        "Table IV: perplexity under quantization methods",
+        &["method", "wiki ppl", "c4 ppl", "mean d-ppl"],
+    );
+    let mut base = (0.0, 0.0);
+    let mut deltas = vec![];
+    for (label, name) in rows {
+        let cfg = cfgs.iter().find(|c| c.name == name).unwrap();
+        let w = ev.perplexity(cfg, "wiki", blocks, &[]).unwrap();
+        let c = ev.perplexity(cfg, "c4", blocks, &[]).unwrap();
+        if name == "fp16" {
+            base = (w, c);
+        }
+        let d = ((w - base.0) + (c - base.1)) / 2.0;
+        t.row(vec![label.into(), f3(w), f3(c), f3(d)]);
+        deltas.push((name, d));
+    }
+    t.print();
+    let d = |n: &str| deltas.iter().find(|x| x.0 == n).unwrap().1;
+    println!(
+        "expected shape: P3 KV4 <= Oaken KV4 ({}); P3 full < QuaRot ({}) \
+         and < QoQ ({})",
+        if d("p3_kv4") <= d("oaken_kv4") { "HOLDS" } else { "CHECK" },
+        if d("p3_full") < d("quarot") { "HOLDS" } else { "CHECK" },
+        if d("p3_full") < d("qoq") { "HOLDS" } else { "CHECK" },
+    );
+    t.save(p3llm::benchkit::reports_dir(), "tab04_ppl").unwrap();
+}

@@ -1,0 +1,47 @@
+//! Table V: task accuracy under quantization.  Substitute task (see
+//! DESIGN.md): held-out next-token top-1 accuracy on both corpora --
+//! what matters is the method-vs-method ordering.
+
+use p3llm::report::{f2, Table};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let cfgs = eval_configs(&rt.artifacts.dir).unwrap();
+    let blocks = p3llm::benchkit::eval_blocks();
+    let rows = [
+        ("FP16", "fp16"),
+        ("Oaken KV4", "oaken_kv4"),
+        ("P3-LLM KV4", "p3_kv4"),
+        ("QuaRot", "quarot"),
+        ("QoQ", "qoq"),
+        ("P3-LLM full", "p3_full"),
+    ];
+    let mut t = Table::new(
+        "Table V (substitute): held-out next-token accuracy %",
+        &["method", "wiki acc", "c4 acc", "avg"],
+    );
+    let mut accs = vec![];
+    for (label, name) in rows {
+        let cfg = cfgs.iter().find(|c| c.name == name).unwrap();
+        let w = ev.evaluate(cfg, "wiki", blocks, &[]).unwrap().accuracy;
+        let c = ev.evaluate(cfg, "c4", blocks, &[]).unwrap().accuracy;
+        t.row(vec![
+            label.into(),
+            f2(w * 100.0),
+            f2(c * 100.0),
+            f2((w + c) * 50.0),
+        ]);
+        accs.push((name, (w + c) / 2.0));
+    }
+    t.print();
+    let a = |n: &str| accs.iter().find(|x| x.0 == n).unwrap().1;
+    println!(
+        "expected shape: P3 full > QuaRot ({}) and > QoQ ({})",
+        if a("p3_full") >= a("quarot") { "HOLDS" } else { "CHECK" },
+        if a("p3_full") >= a("qoq") { "HOLDS" } else { "CHECK" },
+    );
+    t.save(p3llm::benchkit::reports_dir(), "tab05_acc").unwrap();
+}

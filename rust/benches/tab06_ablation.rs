@@ -1,0 +1,55 @@
+//! Table VI: stepwise ablation of the P3-LLM quantization techniques
+//! (wiki perplexity), matching the paper's chain:
+//! FP16 -> +INT4 KV (pre/post RoPE) -> +dynamic smoothing -> +INT4
+//! weights -> +BitMoD -> +E4M3/S0E4M4 scores -> +INT8/E4M3 activations.
+
+use p3llm::report::{f3, Table};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+fn main() {
+    let Some(dir) = p3llm::benchkit::require_artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ev = Evaluator::new(&rt).unwrap();
+    let cfgs = eval_configs(&rt.artifacts.dir).unwrap();
+    let blocks = p3llm::benchkit::eval_blocks();
+    let chain = [
+        ("Baseline FP16", "fp16"),
+        ("+ pre-RoPE INT4 KV", "abl_int4kv_pre"),
+        ("+ post-RoPE INT4 KV", "abl_int4kv_post"),
+        ("-> dynamic key smoothing", "abl_smooth"),
+        ("+ INT4 weights", "abl_w4"),
+        ("-> BitMoD weights", "abl_bitmod"),
+        ("+ FP8-E4M3 scores", "abl_p_e4m3"),
+        ("-> FP8-S0E4M4 scores", "abl_p_s0e4m4"),
+        ("+ INT8 activations", "abl_a_int8"),
+        ("-> FP8-E4M3 activations", "abl_a_e4m3"),
+    ];
+    let mut t = Table::new(
+        "Table VI: quantization ablation (wiki + c4 perplexity)",
+        &["step", "wiki ppl", "c4 ppl"],
+    );
+    let mut res = vec![];
+    for (label, name) in chain {
+        let cfg = cfgs.iter().find(|c| c.name == name).unwrap();
+        let w = ev.perplexity(cfg, "wiki", blocks, &[]).unwrap();
+        let c = ev.perplexity(cfg, "c4", blocks, &[]).unwrap();
+        t.row(vec![label.into(), f3(w), f3(c)]);
+        res.push((name, w, c));
+    }
+    t.print();
+    let g = |n: &str| res.iter().find(|x| x.0 == n).unwrap();
+    let checks = [
+        ("smoothing improves over raw INT4 KV",
+         g("abl_smooth").1 <= g("abl_int4kv_post").1),
+        ("BitMoD improves over INT4 weights",
+         g("abl_bitmod").1 <= g("abl_w4").1),
+        ("S0E4M4 scores <= E4M3 scores",
+         g("abl_p_s0e4m4").1 <= g("abl_p_e4m3").1),
+        ("E4M3 activations <= INT8 activations",
+         g("abl_a_e4m3").1 <= g("abl_a_int8").1),
+    ];
+    for (msg, ok) in checks {
+        println!("{}: {}", msg, if ok { "HOLDS" } else { "CHECK" });
+    }
+    t.save(p3llm::benchkit::reports_dir(), "tab06_ablation").unwrap();
+}

@@ -1,0 +1,21 @@
+//! Table VII: PCU area + HBM area overhead, HBM-PIM vs P3-LLM.
+
+use p3llm::area::pcu_area_table;
+use p3llm::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table VII (paper: HBM-PIM 7.7+6.2 = 16.4%; P3 8.4+6.2 = 17.5%)",
+        &["design", "compute mm2", "buffer mm2", "HBM overhead %"],
+    );
+    for r in pcu_area_table() {
+        t.row(vec![
+            r.name.into(),
+            f2(r.compute_mm2),
+            f2(r.buffer_mm2),
+            f2(r.hbm_overhead_pct),
+        ]);
+    }
+    t.print();
+    t.save(p3llm::benchkit::reports_dir(), "tab07_area").unwrap();
+}

@@ -1,0 +1,26 @@
+//! Table VIII: PE area + energy/MAC at 1 GHz for HBM-PIM (FP16 MAC),
+//! MANT, BitMoD and the P3-LLM PE.
+
+use p3llm::area::pe_table;
+use p3llm::report::{f2, f3, Table};
+
+fn main() {
+    let rows = pe_table();
+    let base = rows[0].clone();
+    let mut t = Table::new(
+        "Table VIII (paper: MANT 0.70x/0.58x, BitMoD 1.26x/0.88x, P3 1.08x/0.26x)",
+        &["PE", "MAC/cycle", "area um2", "area ratio", "pJ/MAC", "energy ratio"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.into(),
+            format!("{}", r.macs_per_cycle),
+            f2(r.area_um2_28nm),
+            f2(r.area_um2_28nm / base.area_um2_28nm),
+            f3(r.energy_pj_per_mac),
+            f2(r.energy_pj_per_mac / base.energy_pj_per_mac),
+        ]);
+    }
+    t.print();
+    t.save(p3llm::benchkit::reports_dir(), "tab08_pe").unwrap();
+}

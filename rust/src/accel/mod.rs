@@ -1,0 +1,355 @@
+//! Accelerator system models (paper Section VI baselines + P3-LLM).
+//!
+//! Every system is an instance of [`Accel`]: a quantization scheme, an
+//! optional PIM subsystem, and the operator-mapping policy of Fig. 6(b)
+//! -- the same cost-based mapper the L3 coordinator uses online.  The
+//! policy picks, per operator, the cheaper of NPU and PIM execution
+//! (when the operator is PIM-eligible under the scheme), which
+//! reproduces the paper's behaviours: HBM-PIM losing to the NPU at
+//! batch >= 4, P3 offloading linears back to the NPU at batch >= 8
+//! (Fig. 16), and pre-RoPE models keeping Q.K^T on the NPU (Fig. 11).
+
+use crate::config::accel::{PcuConfig, PimConfig, SystemConfig};
+use crate::config::llm::{LlmConfig, RopeStage};
+use crate::config::scheme::QuantScheme;
+use crate::sim::{npu, pim::PimGemm, Cost};
+use crate::workload::{decode_trace, Op, OpClass, Operand};
+
+/// Per-class cost of one decode step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    pub attn: Cost,
+    pub linear: Cost,
+    pub other: Cost,
+}
+
+impl StepCost {
+    pub fn total_ns(&self) -> f64 {
+        self.attn.ns + self.linear.ns + self.other.ns
+    }
+    pub fn total_pj(&self) -> f64 {
+        self.attn.pj + self.linear.pj + self.other.pj
+    }
+    fn slot(&mut self, class: OpClass) -> &mut Cost {
+        match class {
+            OpClass::Attention => &mut self.attn,
+            OpClass::Linear => &mut self.linear,
+            OpClass::Other => &mut self.other,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Accel {
+    pub name: &'static str,
+    pub scheme: QuantScheme,
+    pub system: SystemConfig,
+}
+
+impl Accel {
+    pub fn npu_fp16() -> Self {
+        Accel {
+            name: "NPU",
+            scheme: QuantScheme::fp16(),
+            system: SystemConfig::npu_only(),
+        }
+    }
+
+    pub fn hbm_pim() -> Self {
+        Accel {
+            name: "HBM-PIM",
+            scheme: QuantScheme::fp16(),
+            system: SystemConfig::with_pcu(PcuConfig::hbm_pim()),
+        }
+    }
+
+    pub fn ecco() -> Self {
+        Accel {
+            name: "Ecco",
+            scheme: QuantScheme::ecco(),
+            system: SystemConfig::npu_only(),
+        }
+    }
+
+    pub fn p3llm() -> Self {
+        Accel {
+            name: "P3-LLM",
+            scheme: QuantScheme::p3llm(),
+            system: SystemConfig::with_pcu(PcuConfig::p3llm()),
+        }
+    }
+
+    pub fn p3llm_no_tep() -> Self {
+        Accel {
+            name: "P3-noTEP",
+            scheme: QuantScheme::p3llm(),
+            system: SystemConfig::with_pcu(PcuConfig::p3llm_no_tep()),
+        }
+    }
+
+    /// Fig. 15 step 2: W4A8KV4 quantization on PIM, fp16 scores, no TEP.
+    pub fn pim_w4a8kv4() -> Self {
+        Accel {
+            name: "PIM-W4A8KV4",
+            scheme: QuantScheme::p3_no_p8(),
+            system: SystemConfig::with_pcu(PcuConfig::p3llm_no_tep()),
+        }
+    }
+
+    /// Fig. 15 step 3: + throughput-enhanced PCU, still fp16 scores.
+    pub fn pim_w4a8kv4_tep() -> Self {
+        Accel {
+            name: "PIM-W4A8KV4+TEP",
+            scheme: QuantScheme::p3_no_p8(),
+            system: SystemConfig::with_pcu(PcuConfig::p3llm()),
+        }
+    }
+
+    pub fn pimba_orig() -> Self {
+        Accel {
+            name: "Pimba",
+            scheme: QuantScheme::pimba_orig(),
+            system: SystemConfig::with_pcu(PcuConfig::pimba()),
+        }
+    }
+
+    pub fn pimba_enhanced() -> Self {
+        Accel {
+            name: "Pimba-W8A8",
+            scheme: QuantScheme::pimba_enhanced(),
+            system: SystemConfig::with_pcu(PcuConfig::pimba()),
+        }
+    }
+
+    pub fn smoothquant() -> Self {
+        Accel {
+            name: "SmoothQuant",
+            scheme: QuantScheme::smoothquant(),
+            system: SystemConfig::npu_only(),
+        }
+    }
+
+    pub fn awq() -> Self {
+        Accel {
+            name: "AWQ",
+            scheme: QuantScheme::awq(),
+            system: SystemConfig::npu_only(),
+        }
+    }
+
+    fn stored_bits(&self, operand: Operand) -> f64 {
+        match operand {
+            Operand::Weight => self.scheme.bits.weights,
+            Operand::KeyCache | Operand::ValueCache => self.scheme.bits.kv,
+        }
+    }
+
+    /// Is this GEMM eligible for the PIM under the scheme + RoPE stage?
+    fn pim_eligible(&self, model: &LlmConfig, name: &str, operand: Operand) -> bool {
+        let Some(_) = self.system.pim else { return false };
+        match operand {
+            Operand::Weight => true,
+            Operand::KeyCache => {
+                // pre-RoPE quantized keys lack positional info: Q.K^T
+                // must run on the NPU after online RoPE (Section V-B)
+                !(name == "qk" && model.rope_stage == RopeStage::Pre
+                    && self.scheme.bits.kv < 16.0)
+            }
+            Operand::ValueCache => {
+                // P.V on PIM needs quantized scores (Section IV-B)
+                self.scheme.attention_on_pim
+            }
+        }
+    }
+
+    fn npu_cost(&self, g: &Op) -> Cost {
+        let Op::Gemm { m, k, n, count, operand, .. } = g else {
+            unreachable!()
+        };
+        let act_bits = match operand {
+            Operand::Weight => self.scheme.bits.activations,
+            Operand::KeyCache => self.scheme.bits.activations, // query
+            Operand::ValueCache => self.scheme.bits.scores,
+        };
+        npu::gemm(
+            &self.system.npu,
+            &self.system.hbm,
+            npu::NpuGemm {
+                m: *m,
+                k: *k,
+                n: *n,
+                count: *count,
+                stored_bits: self.stored_bits(*operand),
+                act_bits,
+                decompress_factor: if self.scheme.npu_decompress { 1.15 } else { 1.0 },
+            },
+        )
+    }
+
+    fn pim_cost(&self, pimc: &PimConfig, g: &Op) -> Cost {
+        let Op::Gemm { m, k, n, count, operand, .. } = g else {
+            unreachable!()
+        };
+        let mut c = pimc.gemm(PimGemm {
+            m: *m,
+            k: *k,
+            n: *n,
+            count: *count,
+            stored_bits: self.stored_bits(*operand),
+        });
+        // results return to the NPU over the external bus (fp16 partials)
+        let out_bytes = (*m * *n * *count) as f64 * 2.0;
+        c.add(npu::transfer(&self.system.hbm, out_bytes));
+        c
+    }
+
+    /// Cost-based operator mapping + timing for one decode step.
+    pub fn decode_step(&self, model: &LlmConfig, bs: usize, ctx: usize) -> StepCost {
+        let mut out = StepCost::default();
+        for op in decode_trace(model, bs, ctx) {
+            let class = op.class();
+            let cost = match &op {
+                Op::Vector { elems, .. } => npu::vector(&self.system.npu, *elems),
+                Op::Gemm { name, operand, .. } => {
+                    let npu_c = self.npu_cost(&op);
+                    match (&self.system.pim, self.pim_eligible(model, name, *operand)) {
+                        (Some(p), true) => {
+                            let pim_c = self.pim_cost(p, &op);
+                            if pim_c.ns <= npu_c.ns {
+                                pim_c
+                            } else {
+                                npu_c
+                            }
+                        }
+                        _ => npu_c,
+                    }
+                }
+            };
+            out.slot(class).add(cost);
+        }
+        out
+    }
+
+    /// Public cost accessors for the online mapper (`coordinator::mapper`).
+    pub fn npu_cost_pub(&self, g: &Op) -> Cost {
+        self.npu_cost(g)
+    }
+
+    pub fn pim_cost_pub(&self, p: &PimConfig, g: &Op) -> Cost {
+        self.pim_cost(p, g)
+    }
+
+    pub fn pim_eligible_pub(
+        &self,
+        model: &LlmConfig,
+        name: &str,
+        operand: Operand,
+    ) -> bool {
+        self.pim_eligible(model, name, operand)
+    }
+
+    /// Decode throughput in tokens/s at the given batch.
+    pub fn decode_tokens_per_sec(&self, model: &LlmConfig, bs: usize, ctx: usize) -> f64 {
+        let ns = self.decode_step(model, bs, ctx).total_ns();
+        bs as f64 / (ns * 1e-9)
+    }
+}
+
+/// The Fig. 9 baseline set.
+pub fn fig9_systems() -> Vec<Accel> {
+    vec![Accel::npu_fp16(), Accel::hbm_pim(), Accel::ecco(), Accel::p3llm()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llm::{LLAMA2_7B, LLAMA31_8B, MISTRAL_7B};
+
+    #[test]
+    fn fig9_ordering_at_low_batch() {
+        for m in [&LLAMA2_7B, &LLAMA31_8B] {
+            let npu = Accel::npu_fp16().decode_step(m, 1, 4096).total_ns();
+            let hbm = Accel::hbm_pim().decode_step(m, 1, 4096).total_ns();
+            let ecco = Accel::ecco().decode_step(m, 1, 4096).total_ns();
+            let p3 = Accel::p3llm().decode_step(m, 1, 4096).total_ns();
+            assert!(hbm < npu, "{}: HBM-PIM should beat NPU at bs=1", m.name);
+            assert!(ecco < npu);
+            assert!(p3 < ecco, "{}: P3 {p3} vs Ecco {ecco}", m.name);
+            assert!(p3 < hbm);
+        }
+    }
+
+    #[test]
+    fn hbm_pim_advantage_fades_at_bs4_for_gqa() {
+        // Fig. 9: "as the batch size reaches 4, the performance
+        // advantage of HBM-PIM ... disappears for Llama-3 and Mistral"
+        let m = &MISTRAL_7B;
+        let npu = Accel::npu_fp16().decode_step(m, 4, 4096).total_ns();
+        let hbm = Accel::hbm_pim().decode_step(m, 4, 4096).total_ns();
+        assert!(hbm > 0.8 * npu, "hbm {hbm} npu {npu}");
+    }
+
+    #[test]
+    fn p3_peak_speedup_at_bs2() {
+        // Fig. 9: P3's highest speedup over HBM-PIM lands at batch 2
+        // (TEP processes two inputs per weight read)
+        let m = &LLAMA31_8B;
+        let s = |bs| {
+            Accel::hbm_pim().decode_step(m, bs, 4096).total_ns()
+                / Accel::p3llm().decode_step(m, bs, 4096).total_ns()
+        };
+        let (s1, s2, s4) = (s(1), s(2), s(4));
+        assert!(s2 > s1, "{s1} {s2}");
+        assert!(s2 >= s4 * 0.95, "{s2} {s4}");
+    }
+
+    #[test]
+    fn avg_speedups_in_paper_ballpark() {
+        // paper: 7.8x over NPU, 4.9x over HBM-PIM, 2.0x over Ecco
+        // (averaged over models and batch sizes 1..8)
+        let models = crate::config::llm::eval_models();
+        let mut r_npu = vec![];
+        let mut r_hbm = vec![];
+        let mut r_ecco = vec![];
+        for m in &models {
+            for bs in [1usize, 2, 4, 8] {
+                let p3 = Accel::p3llm().decode_step(m, bs, 4096).total_ns();
+                r_npu.push(Accel::npu_fp16().decode_step(m, bs, 4096).total_ns() / p3);
+                r_hbm.push(Accel::hbm_pim().decode_step(m, bs, 4096).total_ns() / p3);
+                r_ecco.push(Accel::ecco().decode_step(m, bs, 4096).total_ns() / p3);
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (a, b, c) = (avg(&r_npu), avg(&r_hbm), avg(&r_ecco));
+        assert!((4.0..18.0).contains(&a), "NPU ratio {a}");
+        assert!((2.5..8.0).contains(&b), "HBM-PIM ratio {b}");
+        assert!((1.2..3.5).contains(&c), "Ecco ratio {c}");
+    }
+
+    #[test]
+    fn pimba_enhanced_beats_orig() {
+        let m = &LLAMA31_8B;
+        let orig = Accel::pimba_orig().decode_step(m, 2, 4096).total_ns();
+        let enh = Accel::pimba_enhanced().decode_step(m, 2, 4096).total_ns();
+        let p3 = Accel::p3llm().decode_step(m, 2, 4096).total_ns();
+        assert!(enh < orig);
+        assert!(p3 < enh);
+    }
+
+    #[test]
+    fn energy_ordering_fig10() {
+        let m = &LLAMA31_8B;
+        let npu = Accel::npu_fp16().decode_step(m, 2, 4096).total_pj();
+        let hbm = Accel::hbm_pim().decode_step(m, 2, 4096).total_pj();
+        let p3 = Accel::p3llm().decode_step(m, 2, 4096).total_pj();
+        assert!(p3 < hbm && p3 < npu);
+    }
+
+    #[test]
+    fn prerope_model_keeps_qk_on_npu() {
+        // Llama-2 (pre-RoPE): fig 11's reduced long-context gain
+        let a = Accel::p3llm();
+        assert!(!a.pim_eligible(&LLAMA2_7B, "qk", Operand::KeyCache));
+        assert!(a.pim_eligible(&LLAMA31_8B, "qk", Operand::KeyCache));
+    }
+}

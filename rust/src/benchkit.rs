@@ -1,0 +1,88 @@
+//! Bench harness support (criterion substitute -- the offline vendored
+//! crate set has no criterion; see DESIGN.md).  Every `rust/benches/`
+//! target is a `harness = false` binary that uses these helpers, prints
+//! a paper-style table and saves TSV under `reports/`.
+
+use std::time::Instant;
+
+/// Where bench TSVs land.
+pub fn reports_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("P3LLM_REPORTS").unwrap_or_else(|_| "reports".into()),
+    )
+}
+
+pub fn artifacts_dir() -> String {
+    std::env::var("P3LLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// Measure `f` with warmup; criterion-lite.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        median_ns: samples[iters / 2],
+        min_ns: samples[0],
+    }
+}
+
+/// Quick-mode switch: `P3LLM_BENCH_FAST=1` trims block counts so the
+/// full `cargo bench` suite stays in CI budget.
+pub fn eval_blocks() -> usize {
+    match std::env::var("P3LLM_BENCH_FAST").as_deref() {
+        Ok("1") => 2,
+        _ => 8,
+    }
+}
+
+/// Guard for benches that need artifacts: print a skip note instead of
+/// failing when `make artifacts` has not run.
+pub fn require_artifacts() -> Option<String> {
+    let dir = artifacts_dir();
+    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        println!("SKIP: artifacts not found at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_monotone() {
+        let t = super::time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.min_ns <= t.mean_ns * 1.001);
+        assert_eq!(t.iters, 5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny hand-rolled CLI argument parser (the vendored offline crate set
+//! has no clap; see DESIGN.md environment substitutions).
+//!
+//! Supports `binary <subcommand> --flag value --switch positional`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(mut argv: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut rest: Vec<String> = argv.by_ref().collect();
+        rest.reverse();
+        while let Some(a) = rest.pop() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if rest
+                    .last()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = rest.pop().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
+        self.get(k).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, k: &str, default: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, k: &str) -> bool {
+        self.switches.iter().any(|s| s == k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        let a = parse("serve --model tiny-1M --batch=4 req1 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("tiny-1M"));
+        assert_eq!(a.get_usize("batch", 1), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["req1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.get_or("corpus", "wiki"), "wiki");
+        assert_eq!(a.get_f64("kv_bits", 4.0), 4.0);
+        assert!(!a.has("verbose"));
+    }
+}

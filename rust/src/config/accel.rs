@@ -1,0 +1,249 @@
+//! Accelerator hardware parameters (paper Section VI-A methodology).
+//!
+//! Baseline system: 4 NPU cores (128x128 systolic array + 128-way
+//! vector unit + 16 MB scratchpad, 1 GHz) and 16 pseudo HBM channels.
+//! PIM variants differ in PCU datapath width, operand precision,
+//! command period (t_CCD_L vs t_CCD_S) and temporal weight reuse.
+
+/// HBM2 timing in nanoseconds (JESD235); the PIM command cadence is the
+/// column-to-column delay of the paper's Fig. 7.
+#[derive(Debug, Clone)]
+pub struct HbmTiming {
+    pub t_ccd_l_ns: f64,
+    pub t_ccd_s_ns: f64,
+    pub t_rcd_ns: f64,
+    pub t_rp_ns: f64,
+    /// row buffer per bank (bytes)
+    pub row_bytes: usize,
+    /// one column access (bytes) = 256 bits
+    pub col_bytes: usize,
+    pub banks_per_channel: usize,
+    pub channels: usize,
+    /// off-chip (host-visible) bandwidth of the whole stack, GB/s
+    pub ext_bw_gbps: f64,
+}
+
+impl Default for HbmTiming {
+    fn default() -> Self {
+        HbmTiming {
+            t_ccd_l_ns: 4.0,
+            t_ccd_s_ns: 2.0,
+            t_rcd_ns: 14.0,
+            t_rp_ns: 14.0,
+            row_bytes: 1024,
+            col_bytes: 32,
+            banks_per_channel: 16,
+            channels: 16,
+            ext_bw_gbps: 512.0,
+        }
+    }
+}
+
+impl HbmTiming {
+    /// Internal all-bank PIM bandwidth at command period `t_ccd` (GB/s):
+    /// every channel streams one 32 B column per bank per command.
+    pub fn pim_internal_bw_gbps(&self, t_ccd_ns: f64) -> f64 {
+        let bytes = (self.channels * self.banks_per_channel * self.col_bytes)
+            as f64;
+        bytes / t_ccd_ns // B/ns == GB/s
+    }
+}
+
+/// PIM compute unit configuration (one PCU is shared by 2 banks).
+#[derive(Debug, Clone)]
+pub struct PcuConfig {
+    pub name: &'static str,
+    /// multipliers fed per command (HBM-PIM: 16 FP16; P3: 64 4-bit)
+    pub macs_per_command: usize,
+    /// command period in ns (t_CCD_L = 4, t_CCD_S = 2)
+    pub t_cmd_ns: f64,
+    /// temporal weight reuse per column read (P3's TEP: 2)
+    pub weight_reuse: usize,
+    /// stored weight/KV operand width in bits on the PIM side
+    pub weight_bits: f64,
+    /// input operand width in bits (activations / scores)
+    pub input_bits: f64,
+    /// energy per MAC in pJ (Table VIII)
+    pub mac_energy_pj: f64,
+    /// relative PIM power increase from running at t_CCD_S (paper: +28%)
+    pub power_factor: f64,
+}
+
+impl PcuConfig {
+    /// HBM-PIM [49]: 16-way FP16 SIMD MAC per PCU, one command per
+    /// t_CCD_L, no weight reuse.
+    pub fn hbm_pim() -> Self {
+        PcuConfig {
+            name: "HBM-PIM-FP16",
+            macs_per_command: 16,
+            t_cmd_ns: 4.0,
+            weight_reuse: 1,
+            weight_bits: 16.0,
+            input_bits: 16.0,
+            mac_energy_pj: 0.69,
+            power_factor: 1.0,
+        }
+    }
+
+    /// P3-LLM PCU (Section V-A/V-D): 64 4-bit multipliers, t_CCD_S
+    /// cadence, 2x temporal weight reuse.  Effective weight bits 4.16
+    /// (INT4-Asym per-head metadata) / BitMoD ~4.25 with group-128
+    /// scale+select.
+    pub fn p3llm() -> Self {
+        PcuConfig {
+            name: "P3-PCU",
+            macs_per_command: 64,
+            t_cmd_ns: 2.0,
+            weight_reuse: 2,
+            weight_bits: 4.25,
+            input_bits: 8.0,
+            mac_energy_pj: 0.18,
+            power_factor: 1.28,
+        }
+    }
+
+    /// P3 PCU without the throughput enhancement (Fig. 15 ablation).
+    pub fn p3llm_no_tep() -> Self {
+        PcuConfig {
+            name: "P3-PCU-noTEP",
+            t_cmd_ns: 4.0,
+            weight_reuse: 1,
+            power_factor: 1.0,
+            ..Self::p3llm()
+        }
+    }
+
+    /// Pimba [44]: 8-bit microscaling PCU, t_CCD_L cadence.
+    pub fn pimba() -> Self {
+        PcuConfig {
+            name: "Pimba-MX8",
+            macs_per_command: 32,
+            t_cmd_ns: 4.0,
+            weight_reuse: 1,
+            weight_bits: 8.25, // MX: shared 8-bit exponent per 32 elems
+            input_bits: 8.0,
+            mac_energy_pj: 0.40,
+            power_factor: 1.0,
+        }
+    }
+
+    /// System-wide MAC throughput (MAC/s).  Column reads are bound to
+    /// t_CCD_L by the DRAM (internal bandwidth is identical for every
+    /// PIM variant); each 32 B column feeds `macs_per_command`
+    /// multipliers, and the throughput-enhanced PCU re-applies the
+    /// column to `weight_reuse` inputs by computing at t_CCD_S.  So:
+    /// HBM-PIM 16/32B x1 -> 0.5 MAC/B; P3 64/32B x2 -> 4 MAC/B = the
+    /// paper's 8x roofline (Section III-B).
+    pub fn system_macs_per_sec(&self, hbm: &HbmTiming) -> f64 {
+        let bw = hbm.pim_internal_bw_gbps(hbm.t_ccd_l_ns) * 1e9; // B/s
+        bw * self.macs_per_command as f64 / hbm.col_bytes as f64
+            * self.weight_reuse as f64
+    }
+}
+
+/// NPU configuration (Section VI-A: based on NeuPIMs [27]).
+#[derive(Debug, Clone)]
+pub struct NpuConfig {
+    pub cores: usize,
+    pub systolic: usize,
+    pub vector_lanes: usize,
+    pub scratchpad_mb: usize,
+    pub freq_ghz: f64,
+    /// energy per fp16 MAC in the logic process (pJ)
+    pub mac_energy_pj: f64,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        NpuConfig {
+            cores: 4,
+            systolic: 128,
+            vector_lanes: 128,
+            scratchpad_mb: 16,
+            freq_ghz: 1.0,
+            mac_energy_pj: 0.31,
+        }
+    }
+}
+
+impl NpuConfig {
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        (self.cores * self.systolic * self.systolic) as f64
+            * self.freq_ghz
+            * 1e9
+    }
+
+    pub fn vector_ops_per_sec(&self) -> f64 {
+        (self.cores * self.vector_lanes) as f64 * self.freq_ghz * 1e9
+    }
+}
+
+/// PIM subsystem = timing + PCU.
+#[derive(Debug, Clone)]
+pub struct PimConfig {
+    pub hbm: HbmTiming,
+    pub pcu: PcuConfig,
+}
+
+impl PimConfig {
+    /// Column-read bandwidth: t_CCD_L cadence regardless of PCU clock
+    /// (the TEP reuses columns, it cannot read them faster).
+    pub fn internal_bw_gbps(&self) -> f64 {
+        self.hbm.pim_internal_bw_gbps(self.hbm.t_ccd_l_ns)
+    }
+}
+
+/// A complete system under evaluation.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub npu: NpuConfig,
+    pub hbm: HbmTiming,
+    pub pim: Option<PimConfig>,
+}
+
+impl SystemConfig {
+    pub fn npu_only() -> Self {
+        SystemConfig {
+            npu: NpuConfig::default(),
+            hbm: HbmTiming::default(),
+            pim: None,
+        }
+    }
+
+    pub fn with_pcu(pcu: PcuConfig) -> Self {
+        let hbm = HbmTiming::default();
+        SystemConfig {
+            npu: NpuConfig::default(),
+            hbm: hbm.clone(),
+            pim: Some(PimConfig { hbm, pcu }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hbm_pim_bw_is_4x_external() {
+        let h = HbmTiming::default();
+        let ratio = h.pim_internal_bw_gbps(h.t_ccd_l_ns) / h.ext_bw_gbps;
+        assert!((ratio - 4.0).abs() < 0.5, "{ratio}");
+    }
+
+    #[test]
+    fn p3_throughput_8x_hbm_pim() {
+        // Section III-B: 4x multipliers x 2x frequency = 8x roofline
+        let h = HbmTiming::default();
+        let base = PcuConfig::hbm_pim().system_macs_per_sec(&h);
+        let p3 = PcuConfig::p3llm().system_macs_per_sec(&h);
+        assert!((p3 / base - 8.0).abs() < 0.01, "{}", p3 / base);
+    }
+
+    #[test]
+    fn npu_peak() {
+        let npu = NpuConfig::default();
+        assert!((npu.peak_macs_per_sec() - 65.536e12).abs() / 65.536e12
+            < 1e-6);
+    }
+}

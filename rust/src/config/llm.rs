@@ -1,0 +1,206 @@
+//! LLM architecture configs (paper Section VI-A evaluates eight models;
+//! the perf simulator only needs layer shapes, not weights).
+
+/// Whether the key cache is quantized before or after RoPE
+/// (Section IV-A: pre-RoPE for short-max-context models like Llama-1/2,
+/// post-RoPE for long-context Llama-3 / Mistral).  The choice changes
+/// the operator mapping: pre-RoPE forces Q.K^T onto the NPU (Fig. 6b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RopeStage {
+    Pre,
+    Post,
+}
+
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub hidden: usize,
+    pub layers: usize,
+    pub n_heads: usize,
+    pub n_kv: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_ctx: usize,
+    pub rope_stage: RopeStage,
+}
+
+impl LlmConfig {
+    pub const fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv
+    }
+
+    /// kv channels per layer (keys or values)
+    pub const fn kv_dim(&self) -> usize {
+        self.n_kv * self.head_dim
+    }
+
+    /// total parameter count (embedding + decoder layers + lm head)
+    pub fn n_params(&self) -> usize {
+        let attn = self.hidden * self.n_heads * self.head_dim * 2
+            + self.hidden * self.kv_dim() * 2;
+        let mlp = 3 * self.hidden * self.ffn;
+        self.layers * (attn + mlp + 2 * self.hidden)
+            + 2 * self.vocab * self.hidden
+            + self.hidden
+    }
+
+    /// KV-cache elements for one request at context length `ctx`.
+    pub fn kv_elems(&self, ctx: usize) -> usize {
+        2 * self.layers * self.kv_dim() * ctx
+    }
+}
+
+pub const LLAMA2_7B: LlmConfig = LlmConfig {
+    name: "Llama-2-7B",
+    hidden: 4096,
+    layers: 32,
+    n_heads: 32,
+    n_kv: 32,
+    head_dim: 128,
+    ffn: 11008,
+    vocab: 32000,
+    max_ctx: 4096,
+    rope_stage: RopeStage::Pre,
+};
+
+pub const LLAMA2_13B: LlmConfig = LlmConfig {
+    name: "Llama-2-13B",
+    hidden: 5120,
+    layers: 40,
+    n_heads: 40,
+    n_kv: 40,
+    head_dim: 128,
+    ffn: 13824,
+    vocab: 32000,
+    max_ctx: 4096,
+    rope_stage: RopeStage::Pre,
+};
+
+pub const LLAMA1_7B: LlmConfig =
+    LlmConfig { name: "Llama-1-7B", max_ctx: 2048, ..LLAMA2_7B };
+pub const LLAMA1_13B: LlmConfig =
+    LlmConfig { name: "Llama-1-13B", max_ctx: 2048, ..LLAMA2_13B };
+
+pub const LLAMA31_8B: LlmConfig = LlmConfig {
+    name: "Llama-3.1-8B",
+    hidden: 4096,
+    layers: 32,
+    n_heads: 32,
+    n_kv: 8,
+    head_dim: 128,
+    ffn: 14336,
+    vocab: 128256,
+    max_ctx: 131072,
+    rope_stage: RopeStage::Post,
+};
+
+pub const LLAMA32_3B: LlmConfig = LlmConfig {
+    name: "Llama-3.2-3B",
+    hidden: 3072,
+    layers: 28,
+    n_heads: 24,
+    n_kv: 8,
+    head_dim: 128,
+    ffn: 8192,
+    vocab: 128256,
+    max_ctx: 131072,
+    rope_stage: RopeStage::Post,
+};
+
+pub const MISTRAL_7B: LlmConfig = LlmConfig {
+    name: "Mistral-7B",
+    hidden: 4096,
+    layers: 32,
+    n_heads: 32,
+    n_kv: 8,
+    head_dim: 128,
+    ffn: 14336,
+    vocab: 32768,
+    max_ctx: 32768,
+    rope_stage: RopeStage::Post,
+};
+
+/// The build-time-trained tiny model shipped in artifacts/ (serving
+/// demo + accuracy experiments run real numerics through it).
+pub const TINY: LlmConfig = LlmConfig {
+    name: "tiny-1M",
+    hidden: 128,
+    layers: 4,
+    n_heads: 8,
+    n_kv: 2,
+    head_dim: 16,
+    ffn: 256,
+    vocab: 256,
+    max_ctx: 160,
+    rope_stage: RopeStage::Post,
+};
+
+/// The five models the paper's accelerator evaluation uses (Fig. 9+).
+pub fn eval_models() -> Vec<LlmConfig> {
+    vec![
+        LLAMA2_7B.clone(),
+        LLAMA2_13B.clone(),
+        LLAMA31_8B.clone(),
+        LLAMA32_3B.clone(),
+        MISTRAL_7B.clone(),
+    ]
+}
+
+/// All eight models of Table IV.
+pub fn all_models() -> Vec<LlmConfig> {
+    vec![
+        LLAMA1_7B.clone(),
+        LLAMA1_13B.clone(),
+        LLAMA2_7B.clone(),
+        LLAMA2_13B.clone(),
+        LLAMA31_8B.clone(),
+        LLAMA32_3B.clone(),
+        MISTRAL_7B.clone(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<LlmConfig> {
+    let mut all = all_models();
+    all.push(TINY.clone());
+    all.into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_roughly_match_names() {
+        assert!((6.0e9..8.0e9).contains(&(LLAMA2_7B.n_params() as f64)));
+        assert!((12.0e9..14.5e9).contains(&(LLAMA2_13B.n_params() as f64)));
+        assert!((7.0e9..9.0e9).contains(&(LLAMA31_8B.n_params() as f64)));
+        assert!((2.5e9..4.0e9).contains(&(LLAMA32_3B.n_params() as f64)));
+        let tiny = TINY.n_params() as f64;
+        assert!((0.5e6..2.0e6).contains(&tiny), "{tiny}");
+    }
+
+    #[test]
+    fn gqa_groups() {
+        assert_eq!(LLAMA2_7B.gqa_group(), 1);
+        assert_eq!(LLAMA31_8B.gqa_group(), 4);
+        assert_eq!(LLAMA32_3B.gqa_group(), 3);
+        assert_eq!(MISTRAL_7B.gqa_group(), 4);
+        assert_eq!(TINY.gqa_group(), 4);
+    }
+
+    #[test]
+    fn kv_cache_size_llama2_dominates() {
+        // Fig 3a: Llama-2-7B needs much more KV than GQA models
+        let kv2 = LLAMA2_7B.kv_elems(4096);
+        let kv3 = LLAMA31_8B.kv_elems(4096);
+        assert!(kv2 > 3 * kv3);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("llama-2-7b").is_some());
+        assert!(by_name("tiny-1M").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

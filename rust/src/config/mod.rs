@@ -1,0 +1,10 @@
+//! Configuration: LLM architectures, accelerator hardware parameters,
+//! and quantization schemes.
+
+pub mod accel;
+pub mod llm;
+pub mod scheme;
+
+pub use accel::{HbmTiming, NpuConfig, PcuConfig, PimConfig, SystemConfig};
+pub use llm::{LlmConfig, RopeStage};
+pub use scheme::{OperandBits, QuantScheme};

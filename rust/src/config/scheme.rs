@@ -1,0 +1,133 @@
+//! Quantization schemes as the perf/memory model sees them: bits per
+//! operand *including metadata overhead* (Table I / Section VI-B).
+
+/// Effective stored bits for one operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperandBits {
+    pub weights: f64,
+    pub activations: f64,
+    pub kv: f64,
+    pub scores: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantScheme {
+    pub name: &'static str,
+    pub bits: OperandBits,
+    /// can the PIM-side low-precision PCU run Q.K^T / P.V?
+    pub attention_on_pim: bool,
+    /// does the scheme require NPU-side decompression before compute
+    /// (Ecco's codebook+Huffman path)?
+    pub npu_decompress: bool,
+}
+
+impl QuantScheme {
+    pub fn fp16() -> Self {
+        QuantScheme {
+            name: "FP16",
+            bits: OperandBits { weights: 16.0, activations: 16.0, kv: 16.0, scores: 16.0 },
+            attention_on_pim: true, // fp16 PCU computes it (slowly)
+            npu_decompress: false,
+        }
+    }
+
+    /// P3-LLM W4A8KV4P8: BitMoD weights 4 + group-128 metadata (16-bit
+    /// scale + 2-bit select per 128) = 4.14; KV INT4-Asym per-head-128
+    /// would be 4.16 -- the tiny model's head_dim is smaller but the
+    /// *paper's* accounting uses 128, which we follow for the HW model.
+    pub fn p3llm() -> Self {
+        QuantScheme {
+            name: "P3-LLM-W4A8KV4P8",
+            bits: OperandBits { weights: 4.14, activations: 8.0, kv: 4.16, scores: 8.0 },
+            attention_on_pim: true,
+            npu_decompress: false,
+        }
+    }
+
+    /// Ecco W4A8KV4 with k-means codebooks + Huffman (slightly better
+    /// compression than P3, Fig. 14), NPU-side decompression.
+    pub fn ecco() -> Self {
+        QuantScheme {
+            name: "Ecco-W4A8KV4",
+            bits: OperandBits { weights: 4.05, activations: 8.0, kv: 4.05, scores: 16.0 },
+            attention_on_pim: false,
+            npu_decompress: true,
+        }
+    }
+
+    /// Pimba: KV-only 8-bit microscaling (original design).
+    pub fn pimba_orig() -> Self {
+        QuantScheme {
+            name: "Pimba-KV8",
+            bits: OperandBits { weights: 16.0, activations: 16.0, kv: 8.25, scores: 16.0 },
+            attention_on_pim: true,
+            npu_decompress: false,
+        }
+    }
+
+    /// Enhanced Pimba with 8-bit weight-activation quantization (Fig 12).
+    pub fn pimba_enhanced() -> Self {
+        QuantScheme {
+            name: "Pimba-W8A8KV8",
+            bits: OperandBits { weights: 8.25, activations: 8.0, kv: 8.25, scores: 16.0 },
+            attention_on_pim: true,
+            npu_decompress: false,
+        }
+    }
+
+    /// SmoothQuant W8A8 running on the NPU (Fig. 13).
+    pub fn smoothquant() -> Self {
+        QuantScheme {
+            name: "SmoothQuant-W8A8",
+            bits: OperandBits { weights: 8.0, activations: 8.0, kv: 16.0, scores: 16.0 },
+            attention_on_pim: false,
+            npu_decompress: false,
+        }
+    }
+
+    /// AWQ W4A16 (group 128) on the NPU (Fig. 13).
+    pub fn awq() -> Self {
+        QuantScheme {
+            name: "AWQ-W4A16",
+            bits: OperandBits { weights: 4.14, activations: 16.0, kv: 16.0, scores: 16.0 },
+            attention_on_pim: false,
+            npu_decompress: false,
+        }
+    }
+
+    /// W4A8KV4 without 8-bit scores (Fig. 15 ablation step): P.V must
+    /// run where scores live -- scores stay fp16 so P.V goes to NPU.
+    pub fn p3_no_p8() -> Self {
+        QuantScheme {
+            name: "W4A8KV4-P16",
+            bits: OperandBits { weights: 4.14, activations: 8.0, kv: 4.16, scores: 16.0 },
+            attention_on_pim: false,
+            npu_decompress: false,
+        }
+    }
+
+    pub fn weight_bytes(&self, elems: usize) -> f64 {
+        elems as f64 * self.bits.weights / 8.0
+    }
+
+    pub fn kv_bytes(&self, elems: usize) -> f64 {
+        elems as f64 * self.bits.kv / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compression_ratios_match_fig14() {
+        let fp = QuantScheme::fp16();
+        let p3 = QuantScheme::p3llm();
+        let ecco = QuantScheme::ecco();
+        let r_p3 = fp.bits.weights / p3.bits.weights;
+        let r_ecco = fp.bits.weights / ecco.bits.weights;
+        // Fig 14: Ecco 3.8x, P3 3.7x -- Ecco slightly smaller
+        assert!(r_ecco > r_p3);
+        assert!((3.4..4.1).contains(&r_p3), "{r_p3}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Continuous batcher: admits queued requests into the active decode
+//! set at step boundaries and picks the AOT graph batch size.
+//!
+//! The decode graphs are compiled for batch sizes {1, 2, 4, 8}; the
+//! batcher selects the smallest compiled size that covers the active
+//! set and pads the rest (padding lanes attend to a zeroed slot-0 and
+//! their outputs are discarded).
+
+use super::request::RequestId;
+
+pub const COMPILED_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub max_batch: usize,
+    queue: std::collections::VecDeque<RequestId>,
+    active: Vec<RequestId>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(COMPILED_BATCHES.contains(&max_batch));
+        Batcher { max_batch, queue: Default::default(), active: vec![] }
+    }
+
+    pub fn enqueue(&mut self, id: RequestId) {
+        self.queue.push_back(id);
+    }
+
+    /// Admit as many queued requests as fit; returns the newly admitted
+    /// ids (they need prefill before the next decode step).
+    pub fn admit(&mut self) -> Vec<RequestId> {
+        let mut newly = vec![];
+        while self.active.len() < self.max_batch {
+            match self.queue.pop_front() {
+                Some(id) => {
+                    self.active.push(id);
+                    newly.push(id);
+                }
+                None => break,
+            }
+        }
+        newly
+    }
+
+    pub fn retire(&mut self, id: RequestId) {
+        self.active.retain(|&r| r != id);
+    }
+
+    pub fn active(&self) -> &[RequestId] {
+        &self.active
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Smallest compiled batch covering the active set.
+    pub fn graph_batch(&self) -> Option<usize> {
+        let n = self.active.len();
+        if n == 0 {
+            return None;
+        }
+        COMPILED_BATCHES.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Rng, Runner};
+
+    fn id(n: u64) -> RequestId {
+        RequestId(n)
+    }
+
+    #[test]
+    fn admits_up_to_max() {
+        let mut b = Batcher::new(4);
+        for i in 0..6 {
+            b.enqueue(id(i));
+        }
+        let newly = b.admit();
+        assert_eq!(newly.len(), 4);
+        assert_eq!(b.queued(), 2);
+        assert_eq!(b.graph_batch(), Some(4));
+        b.retire(id(0));
+        assert_eq!(b.graph_batch(), Some(4)); // 3 active -> graph 4
+        b.retire(id(1));
+        b.retire(id(2));
+        assert_eq!(b.graph_batch(), Some(1));
+        let newly = b.admit();
+        assert_eq!(newly.len(), 2);
+        assert_eq!(b.graph_batch(), Some(4)); // 3 active again
+    }
+
+    #[test]
+    fn graph_batch_covers_active() {
+        Runner::new(64).run(|r: &mut Rng| {
+            let max = *r.pick(&COMPILED_BATCHES);
+            let mut b = Batcher::new(max);
+            let n = r.usize(0, 20);
+            for i in 0..n as u64 {
+                b.enqueue(id(i));
+            }
+            b.admit();
+            // invariants: active <= max; graph batch covers active;
+            // admitted + queued conserve the submitted count
+            assert!(b.active().len() <= max);
+            assert_eq!(b.active().len() + b.queued(), n);
+            if let Some(g) = b.graph_batch() {
+                assert!(g >= b.active().len());
+                assert!(COMPILED_BATCHES.contains(&g));
+            } else {
+                assert!(b.active().is_empty());
+            }
+        });
+    }
+
+    #[test]
+    fn continuous_admission_after_retire() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.enqueue(id(i));
+        }
+        b.admit();
+        assert_eq!(b.active(), &[id(0), id(1)]);
+        b.retire(id(0));
+        b.admit();
+        assert_eq!(b.active(), &[id(1), id(2)]);
+    }
+}

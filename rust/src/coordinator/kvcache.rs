@@ -1,0 +1,333 @@
+//! KV-cache manager: quantized (INT4-Asym per-head) block-pooled
+//! storage + the smoothing-factor store (paper Sections IV-A, V-C).
+//!
+//! The pool is the system of record for KV state: new K/V vectors are
+//! packed to 4-bit nibbles with per-(token, head) scale/zero metadata,
+//! exactly matching the fake-quant grid the AOT decode graphs emit (so
+//! pack -> unpack round-trips bit-exactly); dequantized f32 views are
+//! materialized per decode step as the graph's cache inputs -- the
+//! CPU-side analogue of the PCU's in-bank decode.
+//!
+//! Keys are stored *smoothed* (divided by the per-channel prefill
+//! factors); the factors are multiplied back when building the f32
+//! view, numerically identical to the paper's query-side fusion.
+
+use anyhow::{bail, Result};
+
+use crate::quant::int::{pack_nibbles, quant_group_int4};
+
+#[derive(Debug, Clone)]
+pub struct KvLayout {
+    pub layers: usize,
+    pub kv_dim: usize,
+    pub head_dim: usize,
+    pub max_ctx: usize,
+}
+
+impl KvLayout {
+    pub fn heads(&self) -> usize {
+        self.kv_dim / self.head_dim
+    }
+
+    /// packed bytes per token per layer per cache side
+    fn token_bytes(&self) -> usize {
+        self.kv_dim / 2
+    }
+}
+
+/// Quantized storage for one request: codes + per-group metadata for
+/// both K and V across all layers.
+#[derive(Debug)]
+pub struct KvEntry {
+    layout: KvLayout,
+    /// [layer][token] -> packed nibbles (kv_dim/2 bytes)  (keys, smoothed)
+    k_codes: Vec<Vec<u8>>,
+    v_codes: Vec<Vec<u8>>,
+    /// [layer][token*heads] -> (scale, zero)
+    k_meta: Vec<Vec<(f32, f32)>>,
+    v_meta: Vec<Vec<(f32, f32)>>,
+    /// per-layer per-channel smoothing factors (from prefill)
+    pub smooth: Vec<Vec<f32>>,
+    pub len: usize,
+}
+
+impl KvEntry {
+    fn new(layout: KvLayout, smooth: Vec<Vec<f32>>) -> Self {
+        let l = layout.layers;
+        KvEntry {
+            layout,
+            k_codes: vec![vec![]; l],
+            v_codes: vec![vec![]; l],
+            k_meta: vec![vec![]; l],
+            v_meta: vec![vec![]; l],
+            smooth,
+            len: 0,
+        }
+    }
+
+    /// Append one token's K and V for layer `layer`.  `k` must already
+    /// be in the *unsmoothed* domain; it is divided by the smoothing
+    /// factors before quantization.
+    pub fn push_token(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let dh = self.layout.head_dim;
+        debug_assert_eq!(k.len(), self.layout.kv_dim);
+        let sf = &self.smooth[layer];
+        let ks: Vec<f32> =
+            k.iter().zip(sf).map(|(x, f)| x / f).collect();
+        for head in ks.chunks_exact(dh) {
+            let g = quant_group_int4(head);
+            self.k_meta[layer].push((g.scale, g.zero));
+            self.k_codes[layer].extend(pack_nibbles(&g.codes));
+        }
+        for head in v.chunks_exact(dh) {
+            let g = quant_group_int4(head);
+            self.v_meta[layer].push((g.scale, g.zero));
+            self.v_codes[layer].extend(pack_nibbles(&g.codes));
+        }
+    }
+
+    /// Mark one token complete across all layers.
+    pub fn commit_token(&mut self) {
+        self.len += 1;
+        debug_assert!(self
+            .k_codes
+            .iter()
+            .all(|c| c.len() == self.len * self.layout.token_bytes()));
+    }
+
+    /// Dequantize layer `layer` into `k_out`/`v_out`, each sized
+    /// [max_ctx * kv_dim] (row-major over tokens); tokens beyond `len`
+    /// are zero.  Keys get the smoothing factors multiplied back.
+    ///
+    /// Allocation-free hot path (§Perf): nibbles are decoded in-place
+    /// two at a time -- this runs once per (request, layer) per decode
+    /// step, the L3 equivalent of the PCU's in-bank decode.
+    pub fn dequant_layer(&self, layer: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let dh = self.layout.head_dim;
+        let kvd = self.layout.kv_dim;
+        let heads = self.layout.heads();
+        k_out[self.len * kvd..].fill(0.0);
+        v_out[self.len * kvd..].fill(0.0);
+        let sf = &self.smooth[layer];
+        let (kc, vc) = (&self.k_codes[layer], &self.v_codes[layer]);
+        let (km, vm) = (&self.k_meta[layer], &self.v_meta[layer]);
+        for t in 0..self.len {
+            for h in 0..heads {
+                let gi = t * heads + h;
+                let code_off = gi * dh / 2;
+                let (ks, kz) = km[gi];
+                let (vs, vz) = vm[gi];
+                let kdst = &mut k_out[t * kvd + h * dh..t * kvd + (h + 1) * dh];
+                let vdst = &mut v_out[t * kvd + h * dh..t * kvd + (h + 1) * dh];
+                let sfh = &sf[h * dh..(h + 1) * dh];
+                for j in 0..dh / 2 {
+                    let kb = kc[code_off + j];
+                    let vb = vc[code_off + j];
+                    kdst[2 * j] =
+                        ((kb & 0xf) as f32 * ks + kz) * sfh[2 * j];
+                    kdst[2 * j + 1] =
+                        ((kb >> 4) as f32 * ks + kz) * sfh[2 * j + 1];
+                    vdst[2 * j] = (vb & 0xf) as f32 * vs + vz;
+                    vdst[2 * j + 1] = (vb >> 4) as f32 * vs + vz;
+                }
+            }
+        }
+    }
+
+    /// Packed bytes held (codes only; metadata accounted separately).
+    pub fn packed_bytes(&self) -> usize {
+        self.k_codes.iter().map(|c| c.len()).sum::<usize>()
+            + self.v_codes.iter().map(|c| c.len()).sum::<usize>()
+    }
+
+    /// Effective bits/element incl. scale+zero metadata (paper: 4.16
+    /// bits at head_dim 128; larger for the tiny model's head_dim 16).
+    pub fn effective_bits(&self) -> f64 {
+        let elems = (2 * self.len * self.layout.layers * self.layout.kv_dim)
+            .max(1) as f64;
+        let meta_bits = (self.k_meta.iter().map(|m| m.len()).sum::<usize>()
+            + self.v_meta.iter().map(|m| m.len()).sum::<usize>())
+            as f64
+            * 20.0; // 16-bit scale + 4-bit zero, as in the paper
+        (self.packed_bytes() as f64 * 8.0 + meta_bits) / elems
+    }
+}
+
+/// Fixed-capacity pool of per-request entries.
+pub struct KvPool {
+    pub layout: KvLayout,
+    pub capacity_bytes: usize,
+    entries: std::collections::HashMap<u64, KvEntry>,
+}
+
+impl KvPool {
+    pub fn new(layout: KvLayout, capacity_bytes: usize) -> Self {
+        KvPool { layout, capacity_bytes, entries: Default::default() }
+    }
+
+    /// Worst-case packed bytes for a full-context request.
+    pub fn bytes_per_request(&self) -> usize {
+        2 * self.layout.layers * self.layout.max_ctx * self.layout.token_bytes()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.packed_bytes()).sum()
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.entries.len() * self.bytes_per_request()
+    }
+
+    pub fn alloc(&mut self, id: u64, smooth: Vec<Vec<f32>>) -> Result<&mut KvEntry> {
+        if self.entries.contains_key(&id) {
+            bail!("request {id} already has a KV entry");
+        }
+        if self.reserved_bytes() + self.bytes_per_request() > self.capacity_bytes {
+            bail!("KV pool capacity exceeded");
+        }
+        if smooth.len() != self.layout.layers {
+            bail!("smoothing factors: wrong layer count");
+        }
+        Ok(self
+            .entries
+            .entry(id)
+            .or_insert_with(|| KvEntry::new(self.layout.clone(), smooth)))
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut KvEntry> {
+        self.entries.get_mut(&id)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&KvEntry> {
+        self.entries.get(&id)
+    }
+
+    pub fn free(&mut self, id: u64) -> bool {
+        self.entries.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Rng, Runner};
+
+    fn layout() -> KvLayout {
+        KvLayout { layers: 2, kv_dim: 32, head_dim: 16, max_ctx: 8 }
+    }
+
+    fn ones_smooth(l: &KvLayout) -> Vec<Vec<f32>> {
+        vec![vec![1.0; l.kv_dim]; l.layers]
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_grid_values() {
+        // values already on the INT4 grid must round-trip exactly
+        Runner::new(16).run(|r: &mut Rng| {
+            let lay = layout();
+            let mut e = KvEntry::new(lay.clone(), ones_smooth(&lay));
+            let mut k: Vec<f32> = r.vec_f32(32, -2.0, 2.0);
+            let mut v: Vec<f32> = r.vec_f32(32, -1.0, 3.0);
+            for h in 0..2 {
+                crate::quant::int::fake_quant_group_int4(
+                    &mut k[h * 16..(h + 1) * 16],
+                );
+                crate::quant::int::fake_quant_group_int4(
+                    &mut v[h * 16..(h + 1) * 16],
+                );
+            }
+            for layer in 0..2 {
+                e.push_token(layer, &k, &v);
+            }
+            e.commit_token();
+            let mut ko = vec![0.0; 8 * 32];
+            let mut vo = vec![0.0; 8 * 32];
+            e.dequant_layer(0, &mut ko, &mut vo);
+            for i in 0..32 {
+                assert!((ko[i] - k[i]).abs() < 1e-5, "{} vs {}", ko[i], k[i]);
+                assert!((vo[i] - v[i]).abs() < 1e-5);
+            }
+            // beyond len stays zero
+            assert!(ko[32..].iter().all(|&x| x == 0.0));
+        });
+    }
+
+    #[test]
+    fn smoothing_factors_applied_on_keys() {
+        let lay = layout();
+        let smooth = vec![vec![2.0; 32], vec![4.0; 32]];
+        let mut e = KvEntry::new(lay, smooth);
+        let k = vec![1.0f32; 32];
+        let v = vec![0.5f32; 32];
+        e.push_token(0, &k, &v);
+        e.push_token(1, &k, &v);
+        e.commit_token();
+        let mut ko = vec![0.0; 8 * 32];
+        let mut vo = vec![0.0; 8 * 32];
+        e.dequant_layer(1, &mut ko, &mut vo);
+        // k/4 quantized (constant group -> ~exact) then *4
+        assert!((ko[0] - 1.0).abs() < 1e-4, "{}", ko[0]);
+        assert!((vo[0] - 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pool_capacity_enforced() {
+        let lay = layout();
+        let per = 2 * 2 * 8 * 16; // layers*2sides*ctx*token_bytes
+        let mut pool = KvPool::new(lay.clone(), 2 * per);
+        pool.alloc(1, ones_smooth(&lay)).unwrap();
+        pool.alloc(2, ones_smooth(&lay)).unwrap();
+        assert!(pool.alloc(3, ones_smooth(&lay)).is_err());
+        assert!(pool.free(1));
+        pool.alloc(3, ones_smooth(&lay)).unwrap();
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn pool_invariants_under_random_ops() {
+        // property: reserved bytes never exceed capacity; double-alloc
+        // and double-free are rejected; used <= reserved
+        Runner::new(32).run(|r: &mut Rng| {
+            let lay = layout();
+            let per = KvPool::new(lay.clone(), usize::MAX).bytes_per_request();
+            let mut pool = KvPool::new(lay.clone(), 5 * per);
+            let mut live: Vec<u64> = vec![];
+            for i in 0..40u64 {
+                if r.bool() || live.is_empty() {
+                    match pool.alloc(i, ones_smooth(&lay)) {
+                        Ok(_) => live.push(i),
+                        Err(_) => assert!(live.len() >= 5),
+                    }
+                } else {
+                    let idx = r.usize(0, live.len());
+                    let id = live.swap_remove(idx);
+                    assert!(pool.free(id));
+                    assert!(!pool.free(id));
+                }
+                assert!(pool.reserved_bytes() <= pool.capacity_bytes);
+                assert!(pool.used_bytes() <= pool.reserved_bytes());
+                assert_eq!(pool.len(), live.len());
+            }
+        });
+    }
+
+    #[test]
+    fn effective_bits_reasonable() {
+        let lay = KvLayout { layers: 1, kv_dim: 128, head_dim: 128, max_ctx: 4 };
+        let mut e = KvEntry::new(lay, vec![vec![1.0; 128]]);
+        let k: Vec<f32> = (0..128).map(|i| (i as f32).sin()).collect();
+        e.push_token(0, &k, &k);
+        e.commit_token();
+        let bits = e.effective_bits();
+        // paper: 4.16 effective bits at head_dim 128
+        assert!((4.1..4.3).contains(&bits), "{bits}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Online NPU/PIM operator mapper (paper Fig. 6b + Section V-B).
+//!
+//! Shares the cost model with `accel::Accel`: for every operator of the
+//! decode trace it picks the cheaper engine, honoring the scheme's
+//! eligibility rules (pre-RoPE keys pin Q.K^T to the NPU; fp16 scores
+//! pin P.V to the NPU).  The serving engine queries it per step; the
+//! `pim_trace` example prints the resulting assignment + the Fig. 7
+//! command timing.
+
+use crate::accel::Accel;
+use crate::config::llm::LlmConfig;
+use crate::sim::pim::PimGemm;
+use crate::workload::{decode_trace, Op, Operand};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Npu,
+    Pim,
+}
+
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub op: &'static str,
+    pub engine: Engine,
+    pub ns: f64,
+    /// PIM command count (0 for NPU ops)
+    pub commands: usize,
+}
+
+/// Map one decode step's operators.
+pub fn map_decode_step(
+    accel: &Accel,
+    model: &LlmConfig,
+    bs: usize,
+    ctx: usize,
+) -> Vec<Assignment> {
+    let mut out = vec![];
+    for op in decode_trace(model, bs, ctx) {
+        match &op {
+            Op::Vector { name, elems, .. } => {
+                let c = crate::sim::npu::vector(&accel.system.npu, *elems);
+                out.push(Assignment {
+                    op: name,
+                    engine: Engine::Npu,
+                    ns: c.ns,
+                    commands: 0,
+                });
+            }
+            Op::Gemm { name, m, k, n, count, operand, .. } => {
+                let npu_c = accel.npu_cost_pub(&op);
+                let pim = accel
+                    .system
+                    .pim
+                    .as_ref()
+                    .filter(|_| accel.pim_eligible_pub(model, name, *operand));
+                match pim {
+                    Some(p) => {
+                        let pim_c = accel.pim_cost_pub(p, &op);
+                        if pim_c.ns <= npu_c.ns {
+                            let stored = match operand {
+                                Operand::Weight => accel.scheme.bits.weights,
+                                _ => accel.scheme.bits.kv,
+                            };
+                            let passes = m.div_ceil(p.pcu.weight_reuse);
+                            let cmds = p.commands_per_pass(*k, *n, stored)
+                                * passes
+                                * count;
+                            out.push(Assignment {
+                                op: name,
+                                engine: Engine::Pim,
+                                ns: pim_c.ns,
+                                commands: cmds,
+                            });
+                        } else {
+                            out.push(Assignment {
+                                op: name,
+                                engine: Engine::Npu,
+                                ns: npu_c.ns,
+                                commands: 0,
+                            });
+                        }
+                    }
+                    None => out.push(Assignment {
+                        op: name,
+                        engine: Engine::Npu,
+                        ns: npu_c.ns,
+                        commands: 0,
+                    }),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fig. 7-style command timing of one PIM GEMV pass: returns the start
+/// time (ns) of each of the first `max_cmds` commands for the baseline
+/// (t_CCD_L) and TEP (t_CCD_S compute on each column twice) PCU.
+pub fn command_timing(
+    pim: &crate::config::accel::PimConfig,
+    g: PimGemm,
+    max_cmds: usize,
+) -> Vec<(usize, f64, &'static str)> {
+    let mut out = vec![];
+    let reuse = pim.pcu.weight_reuse;
+    let n_cols = pim.commands_per_pass(g.k, g.n, g.stored_bits).min(max_cmds);
+    for c in 0..n_cols {
+        let t_col = c as f64 * pim.hbm.t_ccd_l_ns;
+        out.push((c, t_col, "col_read"));
+        for r in 0..reuse {
+            out.push((c, t_col + r as f64 * pim.pcu.t_cmd_ns, "mac"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llm::{LLAMA2_7B, LLAMA31_8B};
+
+    #[test]
+    fn p3_offloads_everything_at_bs1_gqa() {
+        let a = Accel::p3llm();
+        let asg = map_decode_step(&a, &LLAMA31_8B, 1, 4096);
+        for x in &asg {
+            if ["qkv_proj", "qk", "pv", "o_proj", "gate_up", "down"]
+                .contains(&x.op)
+            {
+                assert_eq!(x.engine, Engine::Pim, "{}", x.op);
+                assert!(x.commands > 0);
+            }
+            if ["rope", "softmax", "norms", "silu_mul"].contains(&x.op) {
+                assert_eq!(x.engine, Engine::Npu, "{}", x.op);
+            }
+        }
+    }
+
+    #[test]
+    fn prerope_model_runs_qk_on_npu() {
+        let a = Accel::p3llm();
+        let asg = map_decode_step(&a, &LLAMA2_7B, 1, 4096);
+        let qk = asg.iter().find(|x| x.op == "qk").unwrap();
+        assert_eq!(qk.engine, Engine::Npu);
+    }
+
+    #[test]
+    fn large_batch_moves_linears_to_npu() {
+        // Fig. 16: at batch >= 8 the PIM becomes compute-bound on
+        // linear layers and P3 offloads them to the NPU
+        let a = Accel::p3llm();
+        let asg = map_decode_step(&a, &LLAMA31_8B, 64, 4096);
+        let lin = asg.iter().find(|x| x.op == "gate_up").unwrap();
+        assert_eq!(lin.engine, Engine::Npu);
+        // but attention stays on PIM (GQA G=4 has little reuse)
+        let qk = asg.iter().find(|x| x.op == "qk").unwrap();
+        assert_eq!(qk.engine, Engine::Pim);
+    }
+
+    #[test]
+    fn command_timing_tep_two_macs_per_column() {
+        let pim = crate::config::accel::PimConfig {
+            hbm: Default::default(),
+            pcu: crate::config::accel::PcuConfig::p3llm(),
+        };
+        let g = PimGemm { m: 2, k: 128, n: 128, count: 1, stored_bits: 4.25 };
+        let t = command_timing(&pim, g, 4);
+        let macs: Vec<_> = t.iter().filter(|(_, _, k)| *k == "mac").collect();
+        let cols: Vec<_> =
+            t.iter().filter(|(_, _, k)| *k == "col_read").collect();
+        assert_eq!(macs.len(), 2 * cols.len());
+    }
+}

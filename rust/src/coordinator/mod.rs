@@ -1,0 +1,17 @@
+//! L3 coordinator (the paper's system layer, Fig. 6): request router +
+//! continuous batcher, quantized KV-cache manager with smoothing-factor
+//! store, online NPU/PIM operator mapper, and the serving engine that
+//! drives the AOT-compiled PJRT graphs.
+
+pub mod batcher;
+pub mod kvcache;
+pub mod mapper;
+pub mod request;
+pub mod scheduler;
+pub mod serve;
+
+pub use batcher::Batcher;
+pub use kvcache::{KvEntry, KvLayout, KvPool};
+pub use mapper::{map_decode_step, Assignment, Engine as MapEngine};
+pub use request::{Request, RequestId, State};
+pub use serve::{Engine, EngineConfig, Stats};

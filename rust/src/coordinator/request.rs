@@ -1,0 +1,81 @@
+//! Request lifecycle for the edge serving loop.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// byte-level prompt tokens
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub state: State,
+    pub generated: Vec<i32>,
+    /// absolute position of the next KV slot (= tokens so far)
+    pub pos: usize,
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Request {
+            id: RequestId(id),
+            prompt,
+            max_new_tokens,
+            state: State::Queued,
+            generated: vec![],
+            pos: 0,
+            submitted: Instant::now(),
+            first_token: None,
+            finished: None,
+        }
+    }
+
+    pub fn last_token(&self) -> i32 {
+        *self
+            .generated
+            .last()
+            .or_else(|| self.prompt.last())
+            .expect("request with empty prompt")
+    }
+
+    pub fn done(&self, max_ctx: usize) -> bool {
+        self.generated.len() >= self.max_new_tokens
+            || self.pos >= max_ctx
+    }
+
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token
+            .map(|t| t.duration_since(self.submitted).as_secs_f64() * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_helpers() {
+        let mut r = Request::new(1, vec![5, 6, 7], 4);
+        assert_eq!(r.last_token(), 7);
+        assert!(!r.done(100));
+        r.generated.extend([1, 2, 3, 4]);
+        assert_eq!(r.last_token(), 4);
+        assert!(r.done(100));
+        let mut r2 = Request::new(2, vec![1], 100);
+        r2.pos = 50;
+        assert!(r2.done(50));
+    }
+}

@@ -1,0 +1,215 @@
+//! Serving-level timeline simulation: Poisson arrivals, prefill/decode
+//! interleaving, TTFT / per-token latency distributions under each
+//! modeled accelerator.  This is the coordinator-policy view the edge
+//! scenarios of Section I imply (chatbot interaction with a
+//! time-to-first-token SLO, cf. the 250 ms DistServe reference the
+//! paper cites for its smoothing-overhead budget).
+
+use crate::accel::Accel;
+use crate::config::llm::LlmConfig;
+use crate::sim::npu;
+use crate::workload::{prefill_trace, Op};
+
+#[derive(Debug, Clone)]
+pub struct ServingParams {
+    /// mean request inter-arrival (ms)
+    pub interarrival_ms: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub n_requests: usize,
+    pub max_batch: usize,
+    /// context length used for decode-step costing
+    pub ctx: usize,
+}
+
+impl Default for ServingParams {
+    fn default() -> Self {
+        ServingParams {
+            interarrival_ms: 150.0,
+            prompt_tokens: 512,
+            output_tokens: 128,
+            n_requests: 32,
+            max_batch: 8,
+            ctx: 4096,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServingReport {
+    pub mean_ttft_ms: f64,
+    pub p95_ttft_ms: f64,
+    pub mean_tpot_ms: f64,
+    pub throughput_tok_s: f64,
+    pub makespan_ms: f64,
+    /// fraction of requests meeting a 250 ms TTFT SLO
+    pub slo_250ms: f64,
+}
+
+/// Prefill latency of one request on the NPU (prefill is always NPU
+/// territory -- compute-bound GEMM, Section II).
+pub fn prefill_ms(accel: &Accel, model: &LlmConfig, n_tokens: usize) -> f64 {
+    let mut ns = 0.0;
+    for op in prefill_trace(model, 1, n_tokens) {
+        ns += match &op {
+            Op::Vector { elems, .. } => {
+                npu::vector(&accel.system.npu, *elems).ns
+            }
+            Op::Gemm { .. } => accel.npu_cost_pub(&op).ns,
+        };
+    }
+    ns / 1e6
+}
+
+/// Deterministic-seed Poisson-ish arrival simulation with continuous
+/// batching: decode proceeds in steps over the active set; new
+/// requests join at step boundaries after their (serialized) prefill.
+pub fn simulate(
+    accel: &Accel,
+    model: &LlmConfig,
+    p: &ServingParams,
+    seed: u64,
+) -> ServingReport {
+    let mut rng = crate::testutil::Rng::new(seed);
+    // exponential inter-arrivals
+    let mut arrivals = Vec::with_capacity(p.n_requests);
+    let mut t = 0.0f64;
+    for _ in 0..p.n_requests {
+        let u = (rng.f32() as f64).max(1e-6);
+        t += -p.interarrival_ms * u.ln();
+        arrivals.push(t);
+    }
+    let pre_ms = prefill_ms(accel, model, p.prompt_tokens);
+
+    #[derive(Clone)]
+    struct R {
+        arrival: f64,
+        first_token: Option<f64>,
+        remaining: usize,
+        done_at: f64,
+    }
+    let mut reqs: Vec<R> = arrivals
+        .iter()
+        .map(|&a| R {
+            arrival: a,
+            first_token: None,
+            remaining: p.output_tokens,
+            done_at: 0.0,
+        })
+        .collect();
+
+    let mut now = 0.0f64;
+    let mut active: Vec<usize> = vec![];
+    let mut next = 0usize;
+    let mut tokens_done = 0usize;
+    while tokens_done < p.n_requests * p.output_tokens {
+        // admit arrived requests (serialized prefill on the NPU)
+        while next < reqs.len()
+            && reqs[next].arrival <= now
+            && active.len() < p.max_batch
+        {
+            now = now.max(reqs[next].arrival) + pre_ms;
+            reqs[next].first_token = Some(now);
+            reqs[next].remaining -= 1;
+            tokens_done += 1;
+            active.push(next);
+            next += 1;
+        }
+        if active.is_empty() {
+            if next < reqs.len() {
+                now = reqs[next].arrival;
+                continue;
+            }
+            break;
+        }
+        // one decode step over the active batch
+        let bs = active.len();
+        let step_ms =
+            accel.decode_step(model, bs, p.ctx).total_ns() / 1e6;
+        now += step_ms;
+        let mut still = vec![];
+        for &i in &active {
+            reqs[i].remaining -= 1;
+            tokens_done += 1;
+            if reqs[i].remaining == 0 {
+                reqs[i].done_at = now;
+            } else {
+                still.push(i);
+            }
+        }
+        active = still;
+    }
+
+    let mut ttfts: Vec<f64> = reqs
+        .iter()
+        .filter_map(|r| r.first_token.map(|f| f - r.arrival))
+        .collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = ttfts.len().max(1);
+    let mean_ttft = ttfts.iter().sum::<f64>() / n as f64;
+    let p95 = ttfts[(n * 95 / 100).min(n - 1)];
+    let makespan = reqs
+        .iter()
+        .map(|r| r.done_at)
+        .fold(0.0f64, f64::max)
+        .max(now);
+    let total_tokens = (p.n_requests * p.output_tokens) as f64;
+    ServingReport {
+        mean_ttft_ms: mean_ttft,
+        p95_ttft_ms: p95,
+        mean_tpot_ms: makespan / total_tokens,
+        throughput_tok_s: total_tokens / (makespan / 1e3),
+        makespan_ms: makespan,
+        slo_250ms: ttfts.iter().filter(|&&t| t <= 250.0).count() as f64
+            / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llm::LLAMA32_3B;
+    use crate::testutil::Runner;
+
+    #[test]
+    fn p3_beats_npu_on_throughput_and_ttft() {
+        let p = ServingParams { n_requests: 16, ..Default::default() };
+        let m = &LLAMA32_3B;
+        let npu = simulate(&Accel::npu_fp16(), m, &p, 1);
+        let p3 = simulate(&Accel::p3llm(), m, &p, 1);
+        assert!(p3.throughput_tok_s > npu.throughput_tok_s);
+        assert!(p3.mean_ttft_ms <= npu.mean_ttft_ms * 1.01);
+    }
+
+    #[test]
+    fn all_tokens_accounted() {
+        Runner::new(8).run(|r| {
+            let p = ServingParams {
+                n_requests: r.usize(2, 12),
+                output_tokens: r.usize(4, 40),
+                interarrival_ms: r.range_f32(10.0, 400.0) as f64,
+                ..Default::default()
+            };
+            let rep = simulate(&Accel::p3llm(), &LLAMA32_3B, &p, r.next_u64());
+            // throughput * makespan == total tokens (conservation)
+            let tokens = rep.throughput_tok_s * rep.makespan_ms / 1e3;
+            let want = (p.n_requests * p.output_tokens) as f64;
+            assert!((tokens - want).abs() < 1.0, "{tokens} vs {want}");
+            assert!(rep.mean_ttft_ms >= 0.0);
+            assert!(rep.p95_ttft_ms >= rep.mean_ttft_ms * 0.5);
+        });
+    }
+
+    #[test]
+    fn saturation_raises_ttft() {
+        let m = &LLAMA32_3B;
+        let slow = ServingParams { interarrival_ms: 1.0, ..Default::default() };
+        let calm = ServingParams {
+            interarrival_ms: 5000.0,
+            ..Default::default()
+        };
+        let a = simulate(&Accel::hbm_pim(), m, &slow, 3);
+        let b = simulate(&Accel::hbm_pim(), m, &calm, 3);
+        assert!(a.mean_ttft_ms > b.mean_ttft_ms);
+    }
+}

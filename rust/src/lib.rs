@@ -1,0 +1,30 @@
+//! P3-LLM: an integrated NPU-PIM accelerator for edge LLM inference
+//! using hybrid numerical formats -- reproduction library.
+//!
+//! Layers (see DESIGN.md):
+//! * `quant` -- bit-exact hybrid numerical formats (Section IV)
+//! * `pcu` -- functional model of the low-precision PIM compute unit
+//! * `config`/`workload`/`sim`/`accel`/`area` -- the cycle-level
+//!   evaluation substrate behind every table and figure (Section VI)
+//! * `coordinator`/`runtime` -- the serving system: request router,
+//!   KV-cache manager, NPU/PIM operator mapper, PJRT execution of the
+//!   AOT-compiled model graphs (python never runs at inference time)
+//! * `report`/`testutil`/`cli` -- harness utilities
+
+pub mod accel;
+pub mod area;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod pcu;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

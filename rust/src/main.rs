@@ -1,0 +1,167 @@
+//! p3llm -- leader binary: serve / eval / simulate / report.
+//!
+//! Everything runs from AOT artifacts (see `make artifacts`); python is
+//! never on the request path.
+
+use anyhow::{anyhow, Result};
+
+use p3llm::accel::Accel;
+use p3llm::cli::Args;
+use p3llm::config::llm;
+use p3llm::coordinator::{Engine, EngineConfig};
+use p3llm::report::{f2, Table};
+use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+
+const USAGE: &str = "\
+p3llm <command> [options]
+
+commands:
+  serve      run the edge serving demo on the tiny shipped model
+             --requests N --max-new N --batch {1,2,4,8} --fp16 --device-weights
+  eval       perplexity of a configured quantization variant
+             --config NAME --corpus {wiki,c4} --blocks N  (see evalcfg.tsv)
+  list-eval  list configured accuracy variants
+  simulate   decode latency on the modeled NPU-PIM systems
+             --model NAME --batch N --ctx N
+  version
+
+common: --artifacts DIR (default: artifacts)";
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("list-eval") => cmd_list_eval(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("version") => {
+            println!("p3llm {}", p3llm::version());
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = EngineConfig {
+        quantized: !args.has("fp16"),
+        max_batch: args.get_usize("batch", 8),
+        device_weights: args.has("device-weights"),
+        ..Default::default()
+    };
+    let n_requests = args.get_usize("requests", 8);
+    let max_new = args.get_usize("max-new", 48);
+    let mut engine = Engine::new(&artifacts_dir(args), cfg)?;
+    println!(
+        "serving {n_requests} requests on {} (quantized={})",
+        engine.model.name, engine.cfg.quantized
+    );
+    let prompts = [
+        "in 980 , aldora",
+        "the kettle works",
+        "to fix your router , first",
+        "celund is the capital of",
+    ];
+    for i in 0..n_requests {
+        let p = prompts[i % prompts.len()];
+        let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+        engine.submit(toks, max_new);
+    }
+    let stats = engine.run_to_completion()?;
+    println!(
+        "completed={} steps={} tokens={} decode_tok/s={:.1} mean_ttft={:.1}ms wall={:.0}ms",
+        stats.completed,
+        stats.decode_steps,
+        stats.tokens_out,
+        stats.tokens_per_sec(),
+        stats.mean_ttft_ms(),
+        stats.wall_ms
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::new(&dir)?;
+    let ev = Evaluator::new(&rt)?;
+    let cfgs = eval_configs(&rt.artifacts.dir)?;
+    let name = args.get_or("config", "fp16");
+    let cfg = cfgs
+        .iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow!("unknown config {name}; try list-eval"))?;
+    let corpus = args.get_or("corpus", "wiki");
+    let blocks = args.get_usize("blocks", 8);
+    // --set kv_bits=2,a_bits=8 style scalar overrides
+    let overrides: Vec<(String, f32)> = args
+        .get_or("set", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .filter_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            Some((k.to_string(), v.parse().ok()?))
+        })
+        .collect();
+    let refs: Vec<(&str, f32)> =
+        overrides.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let r = ev.evaluate(cfg, corpus, blocks, &refs)?;
+    println!(
+        "{name} on {corpus}: ppl {:.4}  acc {:.2}%   ({})",
+        r.ppl,
+        r.accuracy * 100.0,
+        cfg.note
+    );
+    Ok(())
+}
+
+fn cmd_list_eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let cfgs = eval_configs(std::path::Path::new(&dir))?;
+    let mut t = Table::new("eval configs", &["name", "graph", "weights", "note"]);
+    for c in cfgs {
+        t.row(vec![c.name, c.graph, c.weights, c.note]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = llm::by_name(args.get_or("model", "Llama-3.1-8B"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let bs = args.get_usize("batch", 1);
+    let ctx = args.get_usize("ctx", 4096);
+    let mut t = Table::new(
+        format!("{} decode step, bs={bs}, ctx={ctx}", model.name),
+        &["system", "attn ms", "linear ms", "total ms", "tok/s", "energy mJ"],
+    );
+    for a in [
+        Accel::npu_fp16(),
+        Accel::hbm_pim(),
+        Accel::ecco(),
+        Accel::pimba_enhanced(),
+        Accel::p3llm(),
+    ] {
+        let c = a.decode_step(&model, bs, ctx);
+        t.row(vec![
+            a.name.into(),
+            f2(c.attn.ns / 1e6),
+            f2(c.linear.ns / 1e6),
+            f2(c.total_ns() / 1e6),
+            f2(bs as f64 / (c.total_ns() * 1e-9)),
+            f2(c.total_pj() / 1e9),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! BitMoD 4-bit weight format (paper Section IV-C).
+//!
+//! FP4 base grid {±0, ±0.5, ±1, ±1.5, ±2, ±3, ±4, ±6} with the
+//! redundant negative zero remapped per group of 128 weights to one of
+//! the special values {-8, -5, +5, +8}; the encoder searches all four
+//! candidate tables and keeps the lowest squared error -- identical
+//! search order and tie-breaking as `quant.quant_bitmod_encode`.
+
+/// 15 shared base values; the 16th slot (code 15) is the special value.
+pub const FP4_BASE: [f32; 15] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.5, -1.0, -1.5, -2.0, -3.0,
+    -4.0, -6.0,
+];
+pub const SPECIALS: [f32; 4] = [-8.0, -5.0, 5.0, 8.0];
+
+/// The 4 candidate 16-entry dequant tables.
+pub fn tables() -> [[f32; 16]; 4] {
+    let mut t = [[0.0f32; 16]; 4];
+    for (s, row) in t.iter_mut().enumerate() {
+        row[..15].copy_from_slice(&FP4_BASE);
+        row[15] = SPECIALS[s];
+    }
+    t
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitmodGroup {
+    pub scale: f32,
+    /// index into SPECIALS (2 bits of metadata per group)
+    pub special: u8,
+    /// 4-bit codes, one per weight
+    pub codes: Vec<u8>,
+}
+
+/// Encode one group of weights (group size 128 in the paper; any length
+/// works).  Scale per candidate table is max|w| / max|table|.
+pub fn bitmod_encode_group(w: &[f32]) -> BitmodGroup {
+    let tabs = tables();
+    let amax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let mut best: Option<(f32, BitmodGroup)> = None;
+    for (s, tab) in tabs.iter().enumerate() {
+        let tmax = tab.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = amax / tmax;
+        let mut codes = Vec::with_capacity(w.len());
+        let mut err = 0.0f32;
+        for &v in w {
+            let mut bi = 0usize;
+            let mut bd = f32::INFINITY;
+            for (i, &t) in tab.iter().enumerate() {
+                let d = (v - t * scale).abs();
+                if d < bd {
+                    bd = d;
+                    bi = i;
+                }
+            }
+            codes.push(bi as u8);
+            let dq = tab[bi] * scale;
+            err += (dq - v) * (dq - v);
+        }
+        let cand = BitmodGroup { scale, special: s as u8, codes };
+        match &best {
+            Some((be, _)) if *be <= err => {}
+            _ => best = Some((err, cand)),
+        }
+    }
+    best.unwrap().1
+}
+
+/// Exact decoder (the PCU's 6-bit fixed-point dequant path models this
+/// table lookup + scale in `pcu`).
+pub fn bitmod_decode_group(g: &BitmodGroup, out: &mut [f32]) {
+    let tab = tables()[g.special as usize];
+    for (o, &c) in out.iter_mut().zip(&g.codes) {
+        *o = tab[c as usize] * g.scale;
+    }
+}
+
+/// Fake-quant a weight matrix laid out [k, n] with groups of `group`
+/// along k for each output column n (the layout the GEMV kernel uses).
+pub fn fake_quant_weights(w: &mut [f32], k: usize, n: usize, group: usize) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(k % group, 0);
+    let mut col = vec![0.0f32; group];
+    for j in 0..n {
+        for g0 in (0..k).step_by(group) {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = w[(g0 + i) * n + j];
+            }
+            let enc = bitmod_encode_group(&col);
+            bitmod_decode_group(&enc, &mut col);
+            for (i, &c) in col.iter().enumerate() {
+                w[(g0 + i) * n + j] = c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+    }
+
+    #[test]
+    fn encode_decode_within_grid_error() {
+        let mut s = 42u64;
+        let w: Vec<f32> = (0..128).map(|_| lcg(&mut s) * 0.5).collect();
+        let g = bitmod_encode_group(&w);
+        let mut y = vec![0.0; 128];
+        bitmod_decode_group(&g, &mut y);
+        // max grid gap is 2 (between 4 and 6) at scale
+        let bound = g.scale * 1.01 + 1e-6;
+        for (a, b) in w.iter().zip(&y) {
+            assert!((a - b).abs() <= bound, "{a} {b} scale={}", g.scale);
+        }
+    }
+
+    #[test]
+    fn outlier_gets_special_slot() {
+        let mut w = vec![0.1f32; 128];
+        w[7] = -0.8;
+        let g = bitmod_encode_group(&w);
+        assert_eq!(g.codes[7], 15);
+        assert!(g.special == 0 || g.special == 1); // -8 or -5
+    }
+
+    #[test]
+    fn beats_int4_on_gaussianish_weights() {
+        let mut rng = crate::testutil::Rng::new(7);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal() * 0.1).collect();
+        let mut bm_err = 0.0f64;
+        let mut i4_err = 0.0f64;
+        for chunk in w.chunks(128) {
+            let g = bitmod_encode_group(chunk);
+            let mut y = vec![0.0; chunk.len()];
+            bitmod_decode_group(&g, &mut y);
+            bm_err += chunk
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>();
+            let mut z = chunk.to_vec();
+            crate::quant::int::fake_quant_group_int(&mut z, 4);
+            i4_err += chunk
+                .iter()
+                .zip(&z)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>();
+        }
+        assert!(bm_err < i4_err, "{bm_err} vs {i4_err}");
+    }
+
+    #[test]
+    fn fake_quant_weights_layout() {
+        let mut s = 3u64;
+        let (k, n) = (256, 8);
+        let mut w: Vec<f32> = (0..k * n).map(|_| lcg(&mut s)).collect();
+        let orig = w.clone();
+        fake_quant_weights(&mut w, k, n, 128);
+        assert_ne!(w, orig);
+        // idempotent
+        let once = w.clone();
+        fake_quant_weights(&mut w, k, n, 128);
+        assert_eq!(w, once);
+    }
+}

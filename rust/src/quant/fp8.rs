@@ -1,0 +1,149 @@
+//! FP8 grids: OCP E4M3 (activations) and the paper's unsigned S0E4M4
+//! (attention scores, Section IV-B).
+//!
+//! Both are *value-grid* roundings of f32 (fake-quant): the serving
+//! graphs consume f32 values that lie exactly on the 8-bit grid, the
+//! same convention the python side uses.  `floor(log2|x|)` is computed
+//! from the f32 bit pattern so the exponent is exact (no libm rounding
+//! drift against the jnp reference -- boundary cases converge to the
+//! same grid point either way, but bit-exactness is simpler to test).
+
+/// Exact floor(log2(|x|)) for positive finite f32 (normals and
+/// subnormals); returns a very small value for 0.
+#[inline]
+fn floor_log2(ax: f32) -> i32 {
+    debug_assert!(ax >= 0.0);
+    if ax < f32::MIN_POSITIVE {
+        // python clamps |x| to 1e-38 before log2, which lands in the
+        // subnormal range and then gets clipped by e_min anyway.
+        return -127;
+    }
+    ((ax.to_bits() >> 23) & 0xff) as i32 - 127
+}
+
+#[inline]
+fn round_fp(x: f32, n_mantissa: i32, e_min: i32, e_max: i32, max_val: f32) -> f32 {
+    let ax = x.abs();
+    let sign = if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        return 0.0 * x; // preserves signed zero like jnp.sign
+    };
+    let e = floor_log2(ax).clamp(e_min, e_max);
+    let ulp = (e - n_mantissa) as f32;
+    let ulp = ulp.exp2();
+    let q = (ax / ulp).round_ties_even() * ulp;
+    sign * q.min(max_val)
+}
+
+/// OCP FP8-E4M3: 4-bit exponent (bias 7), 3-bit mantissa, max 448.
+#[inline]
+pub fn fp8_e4m3(x: f32) -> f32 {
+    round_fp(x, 3, -6, 8, 448.0)
+}
+
+/// Paper's unsigned FP8-S0E4M4 for attention scores: no sign bit,
+/// 4-bit exponent (bias 15), 4-bit mantissa; covers [0, 1] with 1.0
+/// exactly representable.
+#[inline]
+pub fn fp8_s0e4m4(x: f32) -> f32 {
+    let x = x.clamp(0.0, 1.0);
+    round_fp(x, 4, -14, 0, 1.0)
+}
+
+/// Unsigned INT8 with fixed 1/255 scale (the Table II INT8 row).
+#[inline]
+pub fn int8_unsigned(x: f32) -> f32 {
+    ((x * 255.0).round_ties_even()).clamp(0.0, 255.0) / 255.0
+}
+
+/// Storage encoding of an S0E4M4 value (exponent/mantissa byte) -- used
+/// by the PCU functional model; `decode` is its exact inverse on grid
+/// values.
+pub fn s0e4m4_encode(x: f32) -> u8 {
+    let x = fp8_s0e4m4(x);
+    if x == 0.0 {
+        return 0;
+    }
+    let e = floor_log2(x).clamp(-14, 0);
+    let m = (x / (e as f32).exp2() - 1.0) * 16.0;
+    if x < (-14f32).exp2() {
+        // subnormal: stored exponent 0, value = m/16 * 2^-14
+        let m = x / (-14f32 - 4.0).exp2();
+        return m as u8;
+    }
+    let stored_e = (e + 15) as u8;
+    (stored_e << 4) | (m.round_ties_even() as u8 & 0xf)
+}
+
+pub fn s0e4m4_decode(b: u8) -> f32 {
+    let stored_e = (b >> 4) as i32;
+    let m = (b & 0xf) as f32;
+    if stored_e == 0 {
+        m * (-18f32).exp2()
+    } else {
+        (1.0 + m / 16.0) * ((stored_e - 15) as f32).exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_exact_values_roundtrip() {
+        for v in [0.0f32, 0.5, 1.0, 1.5, -2.0, 448.0, 0.001953125] {
+            assert_eq!(fp8_e4m3(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(fp8_e4m3(1e6), 448.0);
+        assert_eq!(fp8_e4m3(-1e6), -448.0);
+    }
+
+    #[test]
+    fn e4m3_idempotent() {
+        let mut x = -500.0f32;
+        while x < 500.0 {
+            let q = fp8_e4m3(x);
+            assert_eq!(fp8_e4m3(q), q);
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn s0e4m4_covers_unit_interval() {
+        assert_eq!(fp8_s0e4m4(0.0), 0.0);
+        assert_eq!(fp8_s0e4m4(1.0), 1.0);
+        assert_eq!(fp8_s0e4m4(2.0), 1.0);
+        assert_eq!(fp8_s0e4m4(-0.5), 0.0);
+        for i in 0..=1000 {
+            let p = i as f32 / 1000.0;
+            let q = fp8_s0e4m4(p);
+            assert!((0.0..=1.0).contains(&q));
+            if p >= 2f32.powi(-14) {
+                assert!((q - p).abs() / p <= 2f32.powi(-5) + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn s0e4m4_encode_decode_roundtrip() {
+        for i in 0..=4096 {
+            let p = i as f32 / 4096.0;
+            let q = fp8_s0e4m4(p);
+            assert_eq!(s0e4m4_decode(s0e4m4_encode(q)), q, "p={p}");
+        }
+    }
+
+    #[test]
+    fn int8u_grid() {
+        assert_eq!(int8_unsigned(0.0), 0.0);
+        assert_eq!(int8_unsigned(1.0), 1.0);
+        assert!((int8_unsigned(0.5) - 0.5019608).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,149 @@
+//! Asymmetric INT4 group quantization + nibble packing (KV-cache,
+//! Section IV-A).  Matches `quant.quant_int_asym` in python bit-exactly
+//! (same scale formula, round-half-even, same clip).
+//!
+//! A *group* is one attention head's worth of channels for one token
+//! (per-head quantization, Section V-C): every group stores a 16-bit
+//! scale and 4-bit zero-point in the paper; here scale/zero stay f32 in
+//! metadata while the codes pack two-per-byte, giving the same 4.16
+//! effective bits the paper reports for head_dim 128.
+
+/// Quantization metadata + codes for one group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int4Group {
+    /// dequant: x = code * scale + zero
+    pub scale: f32,
+    pub zero: f32,
+    /// one code per element, values 0..=15 (unpacked view)
+    pub codes: Vec<u8>,
+}
+
+/// Quantize one group (e.g. one head x one token) to INT4-Asym.
+pub fn quant_group_int4(x: &[f32]) -> Int4Group {
+    let levels = 15.0f32;
+    let mut xmin = f32::INFINITY;
+    let mut xmax = f32::NEG_INFINITY;
+    for &v in x {
+        xmin = xmin.min(v);
+        xmax = xmax.max(v);
+    }
+    let scale = ((xmax - xmin).max(1e-8)) / levels;
+    let codes = x
+        .iter()
+        .map(|&v| ((v - xmin) / scale).round_ties_even().clamp(0.0, levels) as u8)
+        .collect();
+    Int4Group { scale, zero: xmin, codes }
+}
+
+/// Dequantize a group back to f32 (the PCU-side decode).
+pub fn dequant_group_int4(g: &Int4Group, out: &mut [f32]) {
+    debug_assert_eq!(g.codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(&g.codes) {
+        *o = c as f32 * g.scale + g.zero;
+    }
+}
+
+/// Fake-quant convenience: quantize + dequantize in place.
+pub fn fake_quant_group_int4(x: &mut [f32]) {
+    let g = quant_group_int4(x);
+    dequant_group_int4(&g, x);
+}
+
+/// Pack 4-bit codes two per byte (low nibble = even index), the DRAM
+/// storage layout the KV pool and Fig. 14 memory accounting use.
+pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = pair[0] & 0xf;
+        let hi = if pair.len() == 2 { pair[1] & 0xf } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+pub fn unpack_nibbles(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for &b in packed {
+        out.push(b & 0xf);
+        if out.len() < n {
+            out.push(b >> 4);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// General INT-b asymmetric fake-quant of a group (b <= 8), used by the
+/// Oaken mixed-precision path and tests.
+pub fn fake_quant_group_int(x: &mut [f32], bits: u32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut xmin = f32::INFINITY;
+    let mut xmax = f32::NEG_INFINITY;
+    for &v in x.iter() {
+        xmin = xmin.min(v);
+        xmax = xmax.max(v);
+    }
+    let scale = ((xmax - xmin).max(1e-8)) / levels;
+    for v in x.iter_mut() {
+        let q = ((*v - xmin) / scale).round_ties_even().clamp(0.0, levels);
+        *v = q * scale + xmin;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin() * 3.0).collect();
+        let g = quant_group_int4(&x);
+        let mut y = vec![0.0; 16];
+        dequant_group_int4(&g, &mut y);
+        let bound = g.scale / 2.0 + 1e-6;
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= bound, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn extremes_exact() {
+        let x = [-2.0f32, 0.1, 0.5, 7.0];
+        let g = quant_group_int4(&x);
+        let mut y = [0.0; 4];
+        dequant_group_int4(&g, &mut y);
+        assert!((y[0] - -2.0).abs() < 1e-5);
+        assert!((y[3] - 7.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x = [0.3f32, -1.2, 4.5, 0.0, 2.2, -0.7, 1.1, 3.3];
+        fake_quant_group_int4(&mut x);
+        let once = x;
+        fake_quant_group_int4(&mut x);
+        assert_eq!(once, x);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..31).map(|i| (i * 7) % 16).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), 16);
+        assert_eq!(unpack_nibbles(&packed, 31), codes);
+    }
+
+    #[test]
+    fn int8_group_finer_than_int4() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).cos() * 2.0).collect();
+        let (mut a, mut b) = (x.clone(), x.clone());
+        fake_quant_group_int(&mut a, 4);
+        fake_quant_group_int(&mut b, 8);
+        let e4: f32 = x.iter().zip(&a).map(|(u, v)| (u - v).powi(2)).sum();
+        let e8: f32 = x.iter().zip(&b).map(|(u, v)| (u - v).powi(2)).sum();
+        assert!(e8 < e4);
+    }
+}

@@ -1,0 +1,22 @@
+//! Hybrid numerical formats (paper Section IV), bit-exact with the
+//! python reference in `python/compile/quant.py`.
+//!
+//! The Rust implementations are the system of record on the serving
+//! path: the KV-cache manager packs INT4-Asym nibbles, the weight
+//! loader encodes BitMoD codes, and activations round through FP8 grids
+//! before being fed to the PJRT executables.  `artifacts/golden_quant.tsv`
+//! (produced by `python -m compile.aot`) pins both sides together;
+//! `tests/golden.rs` asserts exact equality.
+
+pub mod bitmod;
+pub mod fp8;
+pub mod int;
+pub mod smoothing;
+
+pub use bitmod::{bitmod_decode_group, bitmod_encode_group, BitmodGroup};
+pub use fp8::{fp8_e4m3, fp8_s0e4m4, int8_unsigned};
+pub use int::{
+    dequant_group_int4, pack_nibbles, quant_group_int4, unpack_nibbles,
+    Int4Group,
+};
+pub use smoothing::smoothing_factors;

@@ -1,0 +1,81 @@
+//! Dynamic input-aware key-cache smoothing (paper Eq. 2).
+//!
+//! Factors are per-channel absolute maxima over the prefill tokens,
+//! computed once at prefill and reused for every decode step; the
+//! serving path stores them in the KV-cache manager's smoothing store.
+
+/// k: row-major [tokens, channels] -> per-channel |max| (>= eps).
+pub fn smoothing_factors(k: &[f32], channels: usize) -> Vec<f32> {
+    assert_eq!(k.len() % channels, 0);
+    let mut f = vec![0.0f32; channels];
+    for row in k.chunks_exact(channels) {
+        for (fc, &v) in f.iter_mut().zip(row) {
+            *fc = fc.max(v.abs());
+        }
+    }
+    for fc in f.iter_mut() {
+        *fc = fc.max(1e-6);
+    }
+    f
+}
+
+/// Merge newly observed tokens into existing factors (decode-time
+/// growth is clamped: the paper reuses prefill factors unchanged, and
+/// so do we -- this helper exists for the ablation that re-derives
+/// factors online).
+pub fn update_factors(f: &mut [f32], row: &[f32]) {
+    for (fc, &v) in f.iter_mut().zip(row) {
+        *fc = fc.max(v.abs());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int::fake_quant_group_int4;
+
+    #[test]
+    fn factors_are_channel_maxima() {
+        let k = vec![1.0f32, -4.0, 0.5, 2.0, 3.0, -0.25];
+        let f = smoothing_factors(&k, 3);
+        assert_eq!(f, vec![2.0, 4.0, 0.5]);
+    }
+
+    #[test]
+    fn smoothing_reduces_outlier_channel_quant_error() {
+        // 8 tokens x 16 channels, channel 5 is a 20x outlier
+        let mut s = 9u64;
+        let mut lcg = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+        };
+        let t = 8;
+        let c = 16;
+        let mut k = vec![0.0f32; t * c];
+        for (i, v) in k.iter_mut().enumerate() {
+            *v = lcg() * if i % c == 5 { 20.0 } else { 1.0 };
+        }
+        let f = smoothing_factors(&k, c);
+        let direct_err: f64 = {
+            let mut q = k.clone();
+            for row in q.chunks_exact_mut(c) {
+                fake_quant_group_int4(row);
+            }
+            k.iter().zip(&q).map(|(a, b)| ((a - b) * (a - b)) as f64).sum()
+        };
+        let smooth_err: f64 = {
+            let mut q = k.clone();
+            for row in q.chunks_exact_mut(c) {
+                for (v, fc) in row.iter_mut().zip(&f) {
+                    *v /= fc;
+                }
+                fake_quant_group_int4(row);
+                for (v, fc) in row.iter_mut().zip(&f) {
+                    *v *= fc;
+                }
+            }
+            k.iter().zip(&q).map(|(a, b)| ((a - b) * (a - b)) as f64).sum()
+        };
+        assert!(smooth_err < direct_err, "{smooth_err} vs {direct_err}");
+    }
+}

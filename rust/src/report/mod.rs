@@ -1,0 +1,122 @@
+//! Report rendering: paper-style tables printed to stdout and saved as
+//! TSV under `reports/` so EXPERIMENTS.md can cite exact files.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "{}", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write TSV to `reports/<name>.tsv` (dir created on demand).
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> std::io::Result<()> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)?;
+        let mut s = String::new();
+        let _ = writeln!(s, "# {}", self.title);
+        let _ = writeln!(s, "{}", self.headers.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join("\t"));
+        }
+        fs::write(dir.join(format!("{name}.tsv")), s)
+    }
+}
+
+/// Format helpers used across bench harnesses.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn si(x: f64) -> String {
+    if x >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_save() {
+        let mut t = Table::new("demo", &["a", "bee"]);
+        t.row(vec!["1".into(), "2.50".into()]);
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("bee"));
+        let dir = std::env::temp_dir().join("p3llm_report_test");
+        t.save(&dir, "demo").unwrap();
+        let got = std::fs::read_to_string(dir.join("demo.tsv")).unwrap();
+        assert!(got.contains("1\t2.50"));
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(2.5e12), "2.50T");
+        assert_eq!(si(999.0), "999.00");
+    }
+}

@@ -1,0 +1,258 @@
+//! Artifact registry + PJRT execution (the `xla` crate wrapping the
+//! PJRT C API; see /opt/xla-example for the reference wiring).
+//!
+//! `manifest.tsv` (written by `python -m compile.aot`) lists every HLO
+//! graph with its input signature; graphs are compiled once per process
+//! and cached.  Interchange is HLO *text*: jax >= 0.5 emits protos with
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            _ => bail!("unknown dtype {s}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+}
+
+impl GraphSpec {
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+}
+
+/// Parsed manifest.tsv.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub graphs: HashMap<String, GraphSpec>,
+    pub data: HashMap<String, PathBuf>,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {manifest:?} (run `make artifacts`)")
+        })?;
+        let mut graphs = HashMap::new();
+        let mut data = HashMap::new();
+        for line in text.lines().skip(1) {
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 4 {
+                continue;
+            }
+            let (kind, name, file, info) = (cols[0], cols[1], cols[2], cols[3]);
+            match kind {
+                "graph" => {
+                    let args = info
+                        .split(';')
+                        .filter(|s| !s.is_empty())
+                        .map(|spec| {
+                            let p: Vec<&str> = spec.split(':').collect();
+                            if p.len() != 3 {
+                                bail!("bad arg spec {spec}");
+                            }
+                            let dims = if p[1].is_empty() {
+                                vec![]
+                            } else {
+                                p[1].split('x')
+                                    .map(|d| d.parse::<usize>())
+                                    .collect::<std::result::Result<_, _>>()?
+                            };
+                            Ok(ArgSpec {
+                                name: p[0].to_string(),
+                                dims,
+                                dtype: DType::parse(p[2])?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    graphs.insert(
+                        name.to_string(),
+                        GraphSpec {
+                            name: name.to_string(),
+                            file: dir.join(file),
+                            args,
+                        },
+                    );
+                }
+                "data" => {
+                    data.insert(name.to_string(), dir.join(file));
+                }
+                _ => {}
+            }
+        }
+        Ok(Artifacts { dir, graphs, data })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph {name} not in manifest"))
+    }
+
+    pub fn data_path(&self, name: &str) -> Result<&PathBuf> {
+        self.data
+            .get(name)
+            .ok_or_else(|| anyhow!("data {name} not in manifest"))
+    }
+}
+
+/// Literal construction helpers.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("{e:?}"))
+}
+
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )
+    .map_err(|e| anyhow!("{e:?}"))
+}
+
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        dims,
+        data,
+    )
+    .map_err(|e| anyhow!("{e:?}"))
+}
+
+/// A compiled graph.
+pub struct Executable {
+    pub spec: GraphSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple
+    /// (aot.py lowers everything with return_tuple=True).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.spec.name,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        let out =
+            self.exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("{e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute with device buffers (persistent-weights fast path).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute_b(args).map_err(|e| anyhow!("{e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    pub artifacts: Artifacts,
+    pub client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts = Artifacts::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Runtime { artifacts, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.artifacts.graph(name)?.clone();
+        let proto =
+            xla::HloModuleProto::from_text_file(spec.file.to_str().unwrap())
+                .map_err(|e| anyhow!("loading {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("{e:?}"))?;
+        let arc = Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Upload a literal to the first addressable device (persistent
+    /// buffer for execute_b).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let devices = self.client.addressable_devices();
+        self.client
+            .buffer_from_host_literal(Some(&devices[0]), lit)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0])
+}
+
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}

@@ -1,0 +1,200 @@
+//! Perplexity / accuracy evaluation driver: streams a token corpus
+//! through an AOT-lowered teacher-forced eval graph and aggregates NLL.
+//! This is how every accuracy table (II-VI, Fig. 3b, Fig. 8) is
+//! regenerated from Rust -- python never runs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{lit_f32, lit_i32, vec_f32, Runtime};
+use super::weights::{load_tokens, AuxBlob, EvalCfg, Weights};
+
+pub const EVAL_B: usize = 8;
+pub const EVAL_T: usize = 128;
+
+/// Token blocks of shape [EVAL_B, EVAL_T+1].
+pub fn blocks(tokens: &[i32], max_blocks: usize) -> Vec<Vec<i32>> {
+    let span = EVAL_T + 1;
+    let per_block = EVAL_B * span;
+    tokens
+        .chunks_exact(per_block)
+        .take(max_blocks)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+pub struct Evaluator<'a> {
+    pub rt: &'a Runtime,
+    pub weights_layout: std::path::PathBuf,
+    pub aux_layout: std::path::PathBuf,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(rt: &'a Runtime) -> Result<Self> {
+        Ok(Evaluator {
+            rt,
+            weights_layout: rt.artifacts.dir.join("weights_fp.tsv"),
+            aux_layout: rt.artifacts.dir.join("aux_layout.tsv"),
+        })
+    }
+
+    fn weights_tsv(&self) -> Result<std::path::PathBuf> {
+        // the layout TSV is written once as weights.tsv by train.py; if
+        // absent, fall back to deriving from any weights_*.tsv present
+        let p = self.rt.artifacts.dir.join("weights.tsv");
+        if p.exists() {
+            return Ok(p);
+        }
+        Err(anyhow!("weights.tsv missing from artifacts"))
+    }
+
+    pub fn load_weights(&self, variant: &str) -> Result<Weights> {
+        let bin = self.rt.artifacts.data_path(&format!("weights_{variant}"))?;
+        Weights::load(bin, &self.weights_tsv()?)
+    }
+
+    pub fn load_aux(&self, variant: &str) -> Result<AuxBlob> {
+        let bin = self.rt.artifacts.dir.join(format!("aux_{variant}.bin"));
+        AuxBlob::load(&bin, &self.aux_layout)
+    }
+
+    pub fn load_corpus(&self, corpus: &str, split: &str) -> Result<Vec<i32>> {
+        let path = self.rt.artifacts.data_path(&format!(
+            "tokens_{corpus}_{split}"
+        ))?;
+        load_tokens(path)
+    }
+
+    /// Perplexity of one configured variant on an eval corpus.
+    pub fn perplexity(
+        &self,
+        cfg: &EvalCfg,
+        corpus: &str,
+        max_blocks: usize,
+        extra_scalars: &[(&str, f32)],
+    ) -> Result<f64> {
+        Ok(self.evaluate(cfg, corpus, max_blocks, extra_scalars)?.ppl)
+    }
+
+    /// Full evaluation (perplexity + held-out top-1 accuracy).
+    pub fn evaluate(
+        &self,
+        cfg: &EvalCfg,
+        corpus: &str,
+        max_blocks: usize,
+        extra_scalars: &[(&str, f32)],
+    ) -> Result<EvalResult> {
+        let weights = self.load_weights(&cfg.weights)?;
+        let mut aux = self.load_aux(&cfg.aux)?;
+        for (k, v) in &cfg.scalars {
+            aux.set_scalar(k, *v)?;
+        }
+        for (k, v) in extra_scalars {
+            aux.set_scalar(k, *v)?;
+        }
+        self.evaluate_raw(&cfg.graph, &weights, &aux, corpus, max_blocks)
+    }
+
+    pub fn perplexity_raw(
+        &self,
+        graph: &str,
+        weights: &Weights,
+        aux: &AuxBlob,
+        corpus: &str,
+        max_blocks: usize,
+    ) -> Result<f64> {
+        Ok(self.evaluate_raw(graph, weights, aux, corpus, max_blocks)?.ppl)
+    }
+
+    /// Evaluation with explicit weights + aux (sweep entry point).
+    pub fn evaluate_raw(
+        &self,
+        graph: &str,
+        weights: &Weights,
+        aux: &AuxBlob,
+        corpus: &str,
+        max_blocks: usize,
+    ) -> Result<EvalResult> {
+        let exe = self.rt.load(graph)?;
+        let tokens = self.load_corpus(corpus, "eval")?;
+        let blks = blocks(&tokens, max_blocks);
+        if blks.is_empty() {
+            return Err(anyhow!("corpus {corpus} too small"));
+        }
+
+        // graph signature: [params sorted...] block [aux...]
+        // §Perf: weights + aux go to device buffers once; only the
+        // token block is uploaded per iteration (run_b fast path).
+        // NOTE: host literals must outlive their device buffers --
+        // PJRT's BufferFromHostLiteral may reference host memory
+        // asynchronously (dropping the literal early segfaults).
+        let mut keep_lits: Vec<xla::Literal> = Vec::new();
+        let mut fixed_bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        for t in &weights.tensors {
+            let lit = lit_f32(&t.dims, &t.f32_data)?;
+            fixed_bufs.push(self.rt.to_device(&lit)?);
+            keep_lits.push(lit);
+        }
+        let mut aux_bufs = Vec::new();
+        for (_, dims, off, cnt) in &aux.layout {
+            let lit = lit_f32(dims, &aux.data[*off..*off + *cnt])?;
+            aux_bufs.push(self.rt.to_device(&lit)?);
+            keep_lits.push(lit);
+        }
+
+        let mut total_nll = 0.0f64;
+        let mut total_cnt = 0.0f64;
+        let mut total_correct = 0.0f64;
+        for blk in &blks {
+            let blk_lit = lit_i32(&[EVAL_B, EVAL_T + 1], blk)?;
+            let blk_buf = self.rt.to_device(&blk_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> = fixed_bufs.iter().collect();
+            args.push(&blk_buf);
+            args.extend(aux_bufs.iter());
+            let out = exe.run_b(&args)?;
+            total_nll += vec_f32(&out[0])?[0] as f64;
+            total_cnt += vec_f32(&out[1])?[0] as f64;
+            total_correct += vec_f32(&out[2])?[0] as f64;
+        }
+        drop(keep_lits);
+        Ok(EvalResult {
+            ppl: (total_nll / total_cnt).exp(),
+            accuracy: total_correct / total_cnt,
+            tokens: total_cnt as usize,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub ppl: f64,
+    /// held-out next-token top-1 accuracy (Table V substitute)
+    pub accuracy: f64,
+    pub tokens: usize,
+}
+
+/// xla::Literal has no Clone; round-trip through raw bytes.
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            lit_f32(&dims, &l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+        xla::ElementType::S32 => super::artifacts::lit_i32(
+            &dims,
+            &l.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+        ),
+        xla::ElementType::U8 => super::artifacts::lit_u8(
+            &dims,
+            &l.to_vec::<u8>().map_err(|e| anyhow!("{e:?}"))?,
+        ),
+        t => Err(anyhow!("clone_literal: unsupported {t:?}")),
+    }
+}
+
+/// Load all eval configurations.
+pub fn eval_configs(dir: &Path) -> Result<Vec<EvalCfg>> {
+    super::weights::load_evalcfg(&dir.join("evalcfg.tsv"))
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: artifact registry, weight/aux loaders, executable
+//! cache, and the accuracy-evaluation driver.  Python runs only at
+//! build time (`make artifacts`); everything here is pure Rust over
+//! the PJRT C API.
+
+pub mod artifacts;
+pub mod eval;
+pub mod weights;
+
+pub use artifacts::{Artifacts, Executable, Runtime};
+pub use eval::Evaluator;
+pub use weights::{AuxBlob, EvalCfg, Weights};

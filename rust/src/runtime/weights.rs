@@ -1,0 +1,243 @@
+//! Weight / aux / token data loaders for the artifact files emitted by
+//! `python -m compile.aot` (flat little-endian binaries + TSV layouts).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::DType;
+
+/// One named tensor backed by a slice of the flat weight file.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub u8_data: Vec<u8>,
+    pub dtype: DType,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+        .collect()
+}
+
+fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?} not a multiple of 4 bytes");
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Model weights: sorted-name order matching the graph input order
+/// (weights_*.tsv layout is shared by every weights_*.bin variant).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    /// in sorted-name (graph input) order
+    pub tensors: Vec<Tensor>,
+    pub by_name: HashMap<String, usize>,
+}
+
+impl Weights {
+    /// `layout_tsv` is artifacts/weights.tsv (name/shape/offset/count);
+    /// the same layout applies to every weight variant file.
+    pub fn load(bin: &Path, layout_tsv: &Path) -> Result<Self> {
+        let flat = read_f32_file(bin)?;
+        let layout = std::fs::read_to_string(layout_tsv)
+            .with_context(|| format!("reading {layout_tsv:?}"))?;
+        let mut tensors = vec![];
+        let mut by_name = HashMap::new();
+        for line in layout.lines().skip(1) {
+            let c: Vec<&str> = line.split('\t').collect();
+            if c.len() != 4 {
+                continue;
+            }
+            let dims = parse_shape(c[1])?;
+            let off: usize = c[2].parse()?;
+            let cnt: usize = c[3].parse()?;
+            if off + cnt > flat.len() {
+                bail!("{}: out of range in {bin:?}", c[0]);
+            }
+            by_name.insert(c[0].to_string(), tensors.len());
+            tensors.push(Tensor {
+                name: c[0].to_string(),
+                dims,
+                f32_data: flat[off..off + cnt].to_vec(),
+                u8_data: vec![],
+                dtype: DType::F32,
+            });
+        }
+        if tensors.is_empty() {
+            bail!("empty layout {layout_tsv:?}");
+        }
+        Ok(Weights { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+}
+
+/// Packed BitMoD weights (codes/scales/specials) for the kernel decode
+/// graphs; layout in weights_packed.tsv with per-tensor dtypes.
+pub fn load_packed(bin: &Path, layout_tsv: &Path) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(bin).with_context(|| format!("{bin:?}"))?;
+    let layout = std::fs::read_to_string(layout_tsv)?;
+    let mut out = vec![];
+    for line in layout.lines().skip(1) {
+        let c: Vec<&str> = line.split('\t').collect();
+        if c.len() != 5 {
+            continue;
+        }
+        let dims = parse_shape(c[1])?;
+        let dtype = DType::parse(c[2])?;
+        let off: usize = c[3].parse()?;
+        let nbytes: usize = c[4].parse()?;
+        let chunk = &bytes[off..off + nbytes];
+        let (f32_data, u8_data) = match dtype {
+            DType::F32 => (
+                chunk
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+                vec![],
+            ),
+            DType::U8 => (vec![], chunk.to_vec()),
+            DType::I32 => bail!("unexpected i32 packed tensor"),
+        };
+        out.push(Tensor {
+            name: c[0].to_string(),
+            dims,
+            f32_data,
+            u8_data,
+            dtype,
+        });
+    }
+    Ok(out)
+}
+
+/// Aux blob: flat f32 in aux_layout.tsv order, with named scalar/vector
+/// views + override support for the experiment sweeps.
+#[derive(Debug, Clone)]
+pub struct AuxBlob {
+    pub layout: Vec<(String, Vec<usize>, usize, usize)>, // name,dims,off,cnt
+    pub data: Vec<f32>,
+}
+
+impl AuxBlob {
+    pub fn load(bin: &Path, layout_tsv: &Path) -> Result<Self> {
+        let data = read_f32_file(bin)?;
+        let text = std::fs::read_to_string(layout_tsv)?;
+        let mut layout = vec![];
+        for line in text.lines().skip(1) {
+            let c: Vec<&str> = line.split('\t').collect();
+            if c.len() != 4 {
+                continue;
+            }
+            layout.push((
+                c[0].to_string(),
+                parse_shape(c[1])?,
+                c[2].parse()?,
+                c[3].parse()?,
+            ));
+        }
+        let total: usize = layout.iter().map(|l| l.3).sum();
+        if total != data.len() {
+            bail!("aux blob size {} != layout {}", data.len(), total);
+        }
+        Ok(AuxBlob { layout, data })
+    }
+
+    /// Override a scalar aux field (e.g. kv_bits=4 for a sweep point).
+    pub fn set_scalar(&mut self, name: &str, value: f32) -> Result<()> {
+        for (n, _, off, cnt) in &self.layout {
+            if n == name {
+                if *cnt != 1 {
+                    bail!("{name} is not a scalar");
+                }
+                self.data[*off] = value;
+                return Ok(());
+            }
+        }
+        bail!("aux field {name} not found")
+    }
+
+    pub fn view(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.layout.iter().find(|(n, ..)| n == name).map(
+            |(_, dims, off, cnt)| (dims.as_slice(), &self.data[*off..off + cnt]),
+        )
+    }
+}
+
+/// Byte-level token stream (tokens_*.bin).
+pub fn load_tokens(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("{path:?}"))?;
+    Ok(bytes.into_iter().map(|b| b as i32).collect())
+}
+
+/// evalcfg.tsv rows: experiment-variant registry.
+#[derive(Debug, Clone)]
+pub struct EvalCfg {
+    pub name: String,
+    pub graph: String,
+    pub weights: String,
+    pub aux: String,
+    /// "k=v,k=v" scalar overrides
+    pub scalars: Vec<(String, f32)>,
+    pub note: String,
+}
+
+pub fn load_evalcfg(path: &Path) -> Result<Vec<EvalCfg>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = vec![];
+    for line in text.lines().skip(1) {
+        let c: Vec<&str> = line.split('\t').collect();
+        if c.len() != 6 {
+            continue;
+        }
+        let scalars = c[4]
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|kv| {
+                let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("{kv}"))?;
+                Ok((k.to_string(), v.parse::<f32>()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.push(EvalCfg {
+            name: c[0].into(),
+            graph: c[1].into(),
+            weights: c[2].into(),
+            aux: c[3].into(),
+            scalars,
+            note: c[5].into(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shapes() {
+        assert_eq!(parse_shape("4x2x3").unwrap(), vec![4, 2, 3]);
+        assert_eq!(parse_shape("").unwrap(), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,33 @@
+//! Energy constants (pJ), calibrated so the relative numbers of the
+//! paper's Fig. 10 / Table VIII hold:
+//!
+//! * internal DRAM access (cell array + column decoder): the dominant
+//!   PIM energy term the paper says does not change under TEP,
+//! * external HBM transfer (array + PHY + interface) ~2.8x internal,
+//! * PCU MAC energies come from Table VIII via `PcuConfig`.
+
+/// DRAM array read energy per byte, inside the die (no PHY): 2.5 pJ/bit.
+pub const DRAM_INTERNAL_PJ_PER_BYTE: f64 = 20.0;
+
+/// Full off-chip HBM access per byte: ~7 pJ/bit.
+pub const DRAM_EXT_PJ_PER_BYTE: f64 = 56.0;
+
+/// One bank-row activation.
+pub const ROW_ACT_PJ: f64 = 1000.0;
+
+/// On-chip SRAM (scratchpad) access per byte.
+pub const SRAM_PJ_PER_BYTE: f64 = 1.5;
+
+/// NPU vector-unit op.
+pub const VECTOR_OP_PJ: f64 = 0.8;
+
+/// Ecco-style codebook + Huffman decode, per decompressed byte.
+pub const DECOMPRESS_PJ_PER_BYTE: f64 = 6.0;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn external_costs_more_than_internal() {
+        assert!(super::DRAM_EXT_PJ_PER_BYTE > 2.0 * super::DRAM_INTERNAL_PJ_PER_BYTE);
+    }
+}

@@ -1,0 +1,28 @@
+//! Cycle-level performance and energy models (paper Section VI-A:
+//! "we develop a cycle-level simulator to model the P3-LLM system with
+//! 4 NPU cores and 16 pseudo HBM channels", PIM methodology following
+//! Newton [23]).
+//!
+//! Time is modeled in nanoseconds at DRAM-command granularity for the
+//! PIM side and systolic/bandwidth rooflines for the NPU side; energy
+//! in picojoules from per-access constants (`energy`).
+
+pub mod energy;
+pub mod npu;
+pub mod dram;
+pub mod pim;
+pub mod roofline;
+
+/// Cost of running one operator somewhere.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cost {
+    pub ns: f64,
+    pub pj: f64,
+}
+
+impl Cost {
+    pub fn add(&mut self, o: Cost) {
+        self.ns += o.ns;
+        self.pj += o.pj;
+    }
+}

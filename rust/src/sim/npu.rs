@@ -1,0 +1,117 @@
+//! NPU timing model: 4 cores x 128x128 systolic array + vector units,
+//! fed from HBM at the external bandwidth (512 GB/s).  GEMMs are
+//! double-buffered through the 16 MB scratchpad, so time is the max of
+//! the compute and memory rooflines plus a small fill/drain overhead.
+
+use crate::config::accel::{HbmTiming, NpuConfig};
+use crate::sim::{energy, Cost};
+
+#[derive(Debug, Clone, Copy)]
+pub struct NpuGemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub count: usize,
+    /// stored operand bits (weights read from DRAM)
+    pub stored_bits: f64,
+    /// activation bits
+    pub act_bits: f64,
+    /// extra per-byte decompression cost factor (Ecco's codebook +
+    /// Huffman decode path; 1.0 = none)
+    pub decompress_factor: f64,
+}
+
+impl Default for NpuGemm {
+    fn default() -> Self {
+        NpuGemm {
+            m: 1,
+            k: 1,
+            n: 1,
+            count: 1,
+            stored_bits: 16.0,
+            act_bits: 16.0,
+            decompress_factor: 1.0,
+        }
+    }
+}
+
+/// Systolic array fill/drain overhead per GEMM instance tile wave.
+const TILE_OVERHEAD_NS: f64 = 0.3;
+
+pub fn gemm(npu: &NpuConfig, hbm: &HbmTiming, g: NpuGemm) -> Cost {
+    let macs = (g.m * g.k * g.n * g.count) as f64;
+    // low-precision operands double MAC issue rate on 8-bit paths
+    // (the NPU supports INT8/FP8 at 2x rate like modern tensor cores)
+    let speed = if g.stored_bits <= 8.0 && g.act_bits <= 8.0 { 2.0 } else { 1.0 };
+    let compute_ns = macs / (npu.peak_macs_per_sec() * speed) * 1e9;
+
+    let stored_bytes = (g.k * g.n * g.count) as f64 * g.stored_bits / 8.0;
+    let act_bytes = (g.m * g.k * g.count) as f64 * g.act_bits / 8.0
+        + (g.m * g.n * g.count) as f64 * 2.0;
+    let mem_ns =
+        (stored_bytes * g.decompress_factor + act_bytes) / hbm.ext_bw_gbps;
+
+    let ns = compute_ns.max(mem_ns) + TILE_OVERHEAD_NS;
+    let pj = macs * npu.mac_energy_pj
+        + (stored_bytes + act_bytes)
+            * (energy::DRAM_EXT_PJ_PER_BYTE + energy::SRAM_PJ_PER_BYTE)
+        + stored_bytes * (g.decompress_factor - 1.0)
+            * energy::DECOMPRESS_PJ_PER_BYTE;
+    Cost { ns, pj }
+}
+
+/// Vector-unit op (softmax, RoPE, norms, requant epilogues).
+pub fn vector(npu: &NpuConfig, elems: usize) -> Cost {
+    // ~4 vector ops per element (exp + sum + div etc. amortized)
+    let ops = elems as f64 * 4.0;
+    Cost {
+        ns: ops / npu.vector_ops_per_sec() * 1e9,
+        pj: ops * energy::VECTOR_OP_PJ,
+    }
+}
+
+/// Move bytes across the NPU<->PIM boundary (external bus).
+pub fn transfer(hbm: &HbmTiming, bytes: f64) -> Cost {
+    Cost {
+        ns: bytes / hbm.ext_bw_gbps,
+        pj: bytes * energy::DRAM_EXT_PJ_PER_BYTE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_gemv_is_memory_bound() {
+        let npu = NpuConfig::default();
+        let hbm = HbmTiming::default();
+        let g = NpuGemm { m: 1, k: 4096, n: 4096, ..Default::default() };
+        let c = gemm(&npu, &hbm, g);
+        // memory roofline: 32 MB fp16 weights / 512 GB/s = 65.5 us
+        assert!((c.ns - 65536.0).abs() / 65536.0 < 0.1, "{}", c.ns);
+    }
+
+    #[test]
+    fn large_batch_becomes_compute_bound() {
+        let npu = NpuConfig::default();
+        let hbm = HbmTiming::default();
+        let b1 = gemm(&npu, &hbm, NpuGemm { m: 1, k: 4096, n: 4096, ..Default::default() });
+        let b256 = gemm(&npu, &hbm,
+            NpuGemm { m: 256, k: 4096, n: 4096, ..Default::default() });
+        // 256x work in much less than 256x time (reuse)
+        assert!(b256.ns < 4.0 * b1.ns);
+    }
+
+    #[test]
+    fn quantized_weights_cut_memory_time() {
+        let npu = NpuConfig::default();
+        let hbm = HbmTiming::default();
+        let fp = gemm(&npu, &hbm, NpuGemm { m: 1, k: 4096, n: 4096, ..Default::default() });
+        let q = gemm(&npu, &hbm,
+            NpuGemm { m: 1, k: 4096, n: 4096, stored_bits: 4.14, act_bits: 8.0,
+                      ..Default::default() });
+        let r = fp.ns / q.ns;
+        assert!((3.0..4.5).contains(&r), "{r}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Roofline analysis (paper Fig. 4): attainable MAC throughput vs
+//! arithmetic intensity for NPU, HBM-PIM and P3-LLM, with the paper's
+//! operator markers (MHA, GQA at group G, linear at batch BS).
+
+use crate::config::accel::{HbmTiming, NpuConfig, PcuConfig};
+
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    /// peak MAC/s
+    pub peak: f64,
+    /// bytes/s the compute units can be fed at
+    pub bw: f64,
+}
+
+impl Platform {
+    /// attainable MAC/s at arithmetic intensity `ai` (MACs per byte of
+    /// stored-operand traffic)
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (self.bw * ai).min(self.peak)
+    }
+
+    /// intensity where the roof flattens
+    pub fn knee(&self) -> f64 {
+        self.peak / self.bw
+    }
+}
+
+pub fn npu_platform(npu: &NpuConfig, hbm: &HbmTiming) -> Platform {
+    Platform {
+        name: "NPU".into(),
+        peak: npu.peak_macs_per_sec(),
+        bw: hbm.ext_bw_gbps * 1e9,
+    }
+}
+
+pub fn pim_platform(pcu: &PcuConfig, hbm: &HbmTiming) -> Platform {
+    Platform {
+        name: pcu.name.into(),
+        peak: pcu.system_macs_per_sec(hbm),
+        bw: hbm.pim_internal_bw_gbps(hbm.t_ccd_l_ns) * 1e9,
+    }
+}
+
+/// Arithmetic intensity of a decode operator: MACs per stored byte.
+/// A GEMV over an fp16 matrix has intensity 0.5 MAC/B; GQA with group G
+/// (or a batch-BS linear) raises it to G (BS) rows per matrix pass.
+pub fn op_intensity(rows_sharing: usize, stored_bits: f64) -> f64 {
+    rows_sharing as f64 / (stored_bits / 8.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_hbm_pim_advantage_dies_at_g4() {
+        let hbm = HbmTiming::default();
+        let npu = npu_platform(&NpuConfig::default(), &hbm);
+        let pim = pim_platform(&PcuConfig::hbm_pim(), &hbm);
+        // MHA (G=1, fp16): PIM wins big
+        let ai = op_intensity(1, 16.0);
+        assert!(pim.attainable(ai) > 3.0 * npu.attainable(ai));
+        // PIM roof flattens at its knee: G=4 fp16 already saturates it
+        let ai4 = op_intensity(4, 16.0);
+        assert!(pim.attainable(ai4) <= pim.peak * 1.001);
+        // NPU is still memory-bound even at BS=16
+        let ai16 = op_intensity(16, 16.0);
+        assert!(npu.attainable(ai16) < npu.peak);
+    }
+
+    #[test]
+    fn p3_roofline_8x_hbm_pim() {
+        let hbm = HbmTiming::default();
+        let base = pim_platform(&PcuConfig::hbm_pim(), &hbm);
+        let p3 = pim_platform(&PcuConfig::p3llm(), &hbm);
+        assert!((p3.peak / base.peak - 8.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,9 @@
+//! Minimal property-testing framework (proptest substitute -- the
+//! offline vendored crate set has no proptest, see DESIGN.md).
+//!
+//! Seeded xoshiro-style generator + a `prop` runner that reports the
+//! failing case number/seed so failures reproduce deterministically.
+
+pub mod prop;
+
+pub use prop::{Rng, Runner};

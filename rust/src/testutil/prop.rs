@@ -1,0 +1,124 @@
+//! Seeded RNG + property runner.
+
+/// splitmix64-seeded xorshift64* -- deterministic, fast, good enough
+/// for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        Rng(z ^ (z >> 31) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545f4914f6cdd1d)
+    }
+
+    /// uniform in [0, 1)
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// uniform in [lo, hi)
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// roughly standard normal (sum of 12 uniforms)
+    pub fn normal(&mut self) -> f32 {
+        (0..12).map(|_| self.f32()).sum::<f32>() - 6.0
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.range_f32(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len())]
+    }
+}
+
+/// Runs a property `cases` times with derived seeds; panics with the
+/// case index + seed on first failure.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { cases: 64, seed: 0x5eed_2026 }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize) -> Self {
+        Runner { cases, ..Default::default() }
+    }
+
+    pub fn run<F: FnMut(&mut Rng)>(&self, mut f: F) {
+        for i in 0..self.cases {
+            let seed = self.seed.wrapping_add(i as u64 * 0x9e3779b9);
+            let mut rng = Rng::new(seed);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || f(&mut rng),
+            ));
+            if let Err(e) = r {
+                eprintln!("property failed at case {i} (seed {seed:#x})");
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        Runner::new(32).run(|r| {
+            let v = r.range_f32(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let u = r.usize(5, 9);
+            assert!((5..9).contains(&u));
+        });
+    }
+
+    #[test]
+    fn normal_has_reasonable_moments() {
+        let mut r = Rng::new(7);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / n as f32;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.1, "{var}");
+    }
+}

@@ -1,0 +1,278 @@
+//! LLM workload model: the operator trace of one decode step (or a
+//! prefill) plus per-operand memory accounting (Fig. 3a / Fig. 14).
+//!
+//! A trace is a list of [`Op`]s; accelerator models (`accel/`) map each
+//! op to NPU or PIM and cost it with the `sim` timing models.
+
+use crate::config::llm::LlmConfig;
+
+/// Which stored operand a matrix op streams (decides its precision
+/// under a scheme and its Fig. 10 attn/linear energy class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    Weight,
+    KeyCache,
+    ValueCache,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Linear,
+    Attention,
+    Other,
+}
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// `count` independent GEMMs: [m, k] x stored [k, n].  `m` rows
+    /// share the same stored matrix (the data-reuse opportunity the
+    /// paper's Section III-B analysis is about).
+    Gemm {
+        name: &'static str,
+        m: usize,
+        k: usize,
+        n: usize,
+        count: usize,
+        operand: Operand,
+        class: OpClass,
+    },
+    /// Element-wise / reduction work on the NPU vector unit
+    /// (RoPE, softmax, norms, dequant-rescale fusion epilogues).
+    Vector { name: &'static str, elems: usize, class: OpClass },
+}
+
+impl Op {
+    pub fn class(&self) -> OpClass {
+        match self {
+            Op::Gemm { class, .. } | Op::Vector { class, .. } => *class,
+        }
+    }
+
+    /// total multiply-accumulates
+    pub fn macs(&self) -> f64 {
+        match self {
+            Op::Gemm { m, k, n, count, .. } => {
+                (*m as f64) * (*k as f64) * (*n as f64) * (*count as f64)
+            }
+            Op::Vector { .. } => 0.0,
+        }
+    }
+
+    /// stored-operand elements streamed once (one pass over the matrix)
+    pub fn stored_elems(&self) -> f64 {
+        match self {
+            Op::Gemm { k, n, count, .. } => (*k as f64) * (*n as f64) * (*count as f64),
+            Op::Vector { .. } => 0.0,
+        }
+    }
+}
+
+/// One decode step for `bs` concurrent requests at context length `ctx`
+/// (all requests at the same length -- the batch-sweep experiments use
+/// uniform contexts like the paper).
+pub fn decode_trace(m: &LlmConfig, bs: usize, ctx: usize) -> Vec<Op> {
+    let l = m.layers;
+    let g = m.gqa_group();
+    let qkv_n = (m.n_heads + 2 * m.n_kv) * m.head_dim;
+    let attn_dim = m.n_heads * m.head_dim;
+    vec![
+        Op::Gemm {
+            name: "qkv_proj",
+            m: bs,
+            k: m.hidden,
+            n: qkv_n,
+            count: l,
+            operand: Operand::Weight,
+            class: OpClass::Linear,
+        },
+        Op::Vector {
+            name: "rope",
+            elems: bs * (m.n_heads + m.n_kv) * m.head_dim * l,
+            class: OpClass::Other,
+        },
+        // Q.K^T: per (request, kv head), G query heads share the key
+        // matrix [ctx, head_dim]
+        Op::Gemm {
+            name: "qk",
+            m: g,
+            k: m.head_dim,
+            n: ctx,
+            count: bs * m.n_kv * l,
+            operand: Operand::KeyCache,
+            class: OpClass::Attention,
+        },
+        Op::Vector {
+            name: "softmax",
+            elems: bs * m.n_heads * ctx * l,
+            class: OpClass::Attention,
+        },
+        // P.V: same sharing structure over the value matrix [ctx, head_dim]
+        Op::Gemm {
+            name: "pv",
+            m: g,
+            k: ctx,
+            n: m.head_dim,
+            count: bs * m.n_kv * l,
+            operand: Operand::ValueCache,
+            class: OpClass::Attention,
+        },
+        Op::Gemm {
+            name: "o_proj",
+            m: bs,
+            k: attn_dim,
+            n: m.hidden,
+            count: l,
+            operand: Operand::Weight,
+            class: OpClass::Linear,
+        },
+        Op::Gemm {
+            name: "gate_up",
+            m: bs,
+            k: m.hidden,
+            n: 2 * m.ffn,
+            count: l,
+            operand: Operand::Weight,
+            class: OpClass::Linear,
+        },
+        Op::Vector {
+            name: "silu_mul",
+            elems: bs * m.ffn * l,
+            class: OpClass::Other,
+        },
+        Op::Gemm {
+            name: "down",
+            m: bs,
+            k: m.ffn,
+            n: m.hidden,
+            count: l,
+            operand: Operand::Weight,
+            class: OpClass::Linear,
+        },
+        Op::Vector {
+            name: "norms",
+            elems: bs * m.hidden * (2 * l + 1),
+            class: OpClass::Other,
+        },
+        Op::Gemm {
+            name: "lm_head",
+            m: bs,
+            k: m.hidden,
+            n: m.vocab,
+            count: 1,
+            operand: Operand::Weight,
+            class: OpClass::Linear,
+        },
+    ]
+}
+
+/// Prefill over `n_tokens` prompt tokens (GEMM-shaped, NPU territory).
+pub fn prefill_trace(m: &LlmConfig, bs: usize, n_tokens: usize) -> Vec<Op> {
+    let mut ops = decode_trace(m, bs * n_tokens, n_tokens);
+    // attention in prefill is causal [T, T] per head, not [1, ctx]:
+    for op in ops.iter_mut() {
+        if let Op::Gemm { name, m: mm, n, count, .. } = op {
+            if *name == "qk" {
+                *mm = m.gqa_group() * n_tokens;
+                *n = n_tokens;
+                *count = bs * m.n_kv * m.layers;
+            } else if *name == "pv" {
+                *mm = m.gqa_group() * n_tokens;
+                *count = bs * m.n_kv * m.layers;
+            }
+        }
+    }
+    ops
+}
+
+/// Per-operand memory footprint in bytes at the given element widths
+/// (Fig. 3a uses fp16 = 16 bits everywhere; Fig. 14 plugs scheme bits).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBreakdown {
+    pub weights: f64,
+    pub kv: f64,
+    pub activations: f64,
+    pub scores: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights + self.kv + self.activations + self.scores
+    }
+}
+
+pub fn memory_breakdown(
+    m: &LlmConfig,
+    bs: usize,
+    ctx: usize,
+    w_bits: f64,
+    a_bits: f64,
+    kv_bits: f64,
+    p_bits: f64,
+) -> MemoryBreakdown {
+    let weights = m.n_params() as f64 * w_bits / 8.0;
+    let kv = (bs * m.kv_elems(ctx)) as f64 * kv_bits / 8.0;
+    // live activations: residual stream + the widest intermediate (ffn),
+    // released after each module (Section III-A)
+    let act = (bs * ctx * (m.hidden + 2 * m.ffn)) as f64 * a_bits / 8.0;
+    // attention scores for one layer's worth (released immediately)
+    let scores = (bs * m.n_heads * ctx) as f64 * p_bits / 8.0;
+    MemoryBreakdown { weights, kv, activations: act, scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llm::{LLAMA2_7B, LLAMA31_8B};
+
+    #[test]
+    fn decode_macs_scale_with_batch() {
+        let t1: f64 = decode_trace(&LLAMA2_7B, 1, 4096).iter().map(Op::macs).sum();
+        let t4: f64 = decode_trace(&LLAMA2_7B, 4, 4096).iter().map(Op::macs).sum();
+        assert!((t4 / t1 - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn linear_macs_about_2x_params() {
+        // one decode token: ~2 MACs per weight-parameter... actually 1
+        // MAC per parameter of the matmul weights
+        let macs: f64 = decode_trace(&LLAMA2_7B, 1, 1)
+            .iter()
+            .filter(|o| o.class() == OpClass::Linear)
+            .map(Op::macs)
+            .sum();
+        let params = LLAMA2_7B.n_params() as f64;
+        assert!((macs / params - 1.0).abs() < 0.1, "{}", macs / params);
+    }
+
+    #[test]
+    fn gqa_reduces_kv_traffic_not_attention_macs() {
+        let mha: f64 = decode_trace(&LLAMA2_7B, 1, 4096)
+            .iter()
+            .filter(|o| matches!(o, Op::Gemm { operand: Operand::KeyCache, .. }))
+            .map(Op::stored_elems)
+            .sum();
+        let gqa: f64 = decode_trace(&LLAMA31_8B, 1, 4096)
+            .iter()
+            .filter(|o| matches!(o, Op::Gemm { operand: Operand::KeyCache, .. }))
+            .map(Op::stored_elems)
+            .sum();
+        assert!(mha / gqa > 3.0); // 4x fewer kv heads
+    }
+
+    #[test]
+    fn memory_kv_grows_with_batch_weights_constant() {
+        let a = memory_breakdown(&LLAMA2_7B, 1, 4096, 16.0, 16.0, 16.0, 16.0);
+        let b = memory_breakdown(&LLAMA2_7B, 8, 4096, 16.0, 16.0, 16.0, 16.0);
+        assert_eq!(a.weights, b.weights);
+        assert!((b.kv / a.kv - 8.0).abs() < 0.01);
+        // Fig 3a: at bs=8 ctx=4K, Llama-2-7B KV rivals weights
+        assert!(b.kv > 0.8 * b.weights);
+    }
+
+    #[test]
+    fn prefill_is_compute_heavy() {
+        let d: f64 = decode_trace(&LLAMA2_7B, 1, 512).iter().map(Op::macs).sum();
+        let p: f64 = prefill_trace(&LLAMA2_7B, 1, 512).iter().map(Op::macs).sum();
+        assert!(p > 100.0 * d);
+    }
+}

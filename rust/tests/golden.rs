@@ -1,0 +1,110 @@
+//! Rust <-> Python bit-exactness: every format in `p3llm::quant` must
+//! reproduce the golden vectors emitted by `python -m compile.aot`
+//! (artifacts/golden_quant.tsv) EXACTLY -- the two sides share the
+//! serving path (python builds the graphs, Rust packs/unpacks KV and
+//! weights), so any drift is a correctness bug.
+
+use p3llm::quant::{
+    bitmod_decode_group, bitmod_encode_group, fp8_e4m3, fp8_s0e4m4,
+    quant_group_int4, smoothing_factors,
+};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("P3LLM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if dir.join("golden_quant.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        None
+    }
+}
+
+fn parse_csv(s: &str) -> Vec<f32> {
+    s.split(',').map(|v| v.parse().unwrap()).collect()
+}
+
+fn rows(kind: &str) -> Vec<(Vec<f32>, String)> {
+    let Some(dir) = artifacts() else { return vec![] };
+    let text = std::fs::read_to_string(dir.join("golden_quant.tsv")).unwrap();
+    text.lines()
+        .skip(1)
+        .filter_map(|l| {
+            let c: Vec<&str> = l.split('\t').collect();
+            (c[0] == kind).then(|| (parse_csv(c[1]), c[2].to_string()))
+        })
+        .collect()
+}
+
+#[test]
+fn golden_e4m3_exact() {
+    for (input, out) in rows("e4m3") {
+        let want = parse_csv(&out);
+        for (x, w) in input.iter().zip(&want) {
+            assert_eq!(fp8_e4m3(*x), *w, "e4m3({x})");
+        }
+    }
+}
+
+#[test]
+fn golden_s0e4m4_exact() {
+    for (input, out) in rows("s0e4m4") {
+        let want = parse_csv(&out);
+        for (x, w) in input.iter().zip(&want) {
+            assert_eq!(fp8_s0e4m4(*x), *w, "s0e4m4({x})");
+        }
+    }
+}
+
+#[test]
+fn golden_int4_asym_exact() {
+    for (input, out) in rows("int4asym") {
+        let want = parse_csv(&out);
+        let g = quant_group_int4(&input);
+        let mut got = vec![0.0f32; input.len()];
+        p3llm::quant::dequant_group_int4(&g, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                "int4: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_bitmod_exact() {
+    let cases = rows("bitmod");
+    assert!(!cases.is_empty() || artifacts().is_none());
+    for (input, out) in cases {
+        let parts: Vec<&str> = out.split('|').collect();
+        let want_codes: Vec<f32> = parse_csv(parts[0]);
+        let want_scale: f32 = parts[1].parse().unwrap();
+        let want_special: u8 = parts[2].parse().unwrap();
+        let want_deq = parse_csv(parts[3]);
+        let g = bitmod_encode_group(&input);
+        assert_eq!(g.special, want_special);
+        assert!((g.scale - want_scale).abs() <= 1e-6 * want_scale.abs());
+        for (i, c) in g.codes.iter().enumerate() {
+            assert_eq!(*c as f32, want_codes[i], "code {i}");
+        }
+        let mut deq = vec![0.0f32; input.len()];
+        bitmod_decode_group(&g, &mut deq);
+        for (a, b) in deq.iter().zip(&want_deq) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()));
+        }
+    }
+}
+
+#[test]
+fn golden_smoothing_exact() {
+    for (input, out) in rows("smooth") {
+        let want = parse_csv(&out);
+        let channels = want.len();
+        let got = smoothing_factors(&input, channels);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b, "smoothing factor");
+        }
+    }
+}
