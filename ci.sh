@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# One gate for every PR: tier-1 verify (hard) + fmt/clippy hygiene.
+#
+#   ./ci.sh            # build + test are fatal; fmt/clippy report only
+#   ./ci.sh --strict   # fmt/clippy failures are fatal too
+#
+# Keep this green.  The hygiene checks are advisory by default so the
+# gate stays usable on toolchains without rustfmt/clippy components.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+STRICT=0
+[ "${1:-}" = "--strict" ] && STRICT=1
+
+hygiene() {
+    local name="$1"; shift
+    if ! command -v cargo >/dev/null; then
+        echo "ci: cargo not found" >&2; exit 1
+    fi
+    if "$@"; then
+        echo "ci: $name OK"
+    else
+        if [ "$STRICT" = 1 ]; then
+            echo "ci: $name FAILED (strict)" >&2; exit 1
+        fi
+        echo "ci: $name failed (advisory; run with --strict to enforce)" >&2
+    fi
+}
+
+hygiene "cargo fmt" cargo fmt --all -- --check
+hygiene "cargo clippy" cargo clippy --workspace --all-targets -- -D warnings
+
+echo "ci: tier-1 build"
+cargo build --release
+echo "ci: tier-1 tests"
+cargo test -q
+echo "ci: PASS"

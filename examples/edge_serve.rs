@@ -2,16 +2,15 @@
 //! batched requests through the full stack -- continuous batcher,
 //! INT4-packed KV pool with dynamic smoothing factors, AOT W4A8KV4P8
 //! decode graphs on PJRT -- reporting latency/throughput, the fp16-vs-
-//! quantized perplexity delta, and the modeled NPU-PIM speedup for the
-//! same workload.  Results are recorded in EXPERIMENTS.md.
+//! quantized perplexity delta, and the *same serving loop* replayed on
+//! the modeled NPU-PIM hardware via the sim backend.  Results are
+//! recorded in EXPERIMENTS.md.
 
-use p3llm::accel::Accel;
-use p3llm::config::llm::TINY;
-use p3llm::coordinator::{Engine, EngineConfig};
 use p3llm::report::{f2, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+use p3llm::EngineBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> p3llm::Result<()> {
     let dir = p3llm::benchkit::artifacts_dir();
     let n_requests = 16;
     let max_new = 48;
@@ -26,27 +25,29 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "edge_serve: 16 requests, 48 new tokens each, tiny-1M",
-        &["pipeline", "tok/s", "mean ttft ms", "steps", "wall ms"],
+        &["pipeline", "tok/s", "p50 ttft ms", "p95 ttft ms", "steps", "wall ms"],
     );
-    for quantized in [false, true] {
-        let mut engine = Engine::new(
-            &dir,
-            EngineConfig { quantized, max_batch: 8, ..Default::default() },
-        )?;
+    for scheme in ["fp16", "p3llm"] {
+        let mut engine = EngineBuilder::pjrt(&dir)
+            .scheme(scheme)
+            .max_batch(8)
+            .build()?;
         for i in 0..n_requests {
             let p = prompts[i % prompts.len()];
-            engine.submit(p.bytes().map(|b| b as i32).collect(), max_new);
+            engine.submit(p.bytes().map(|b| b as i32).collect(), max_new)?;
         }
-        let stats = engine.run_to_completion()?;
-        assert_eq!(stats.completed, n_requests);
+        let m = engine.run_to_completion()?;
+        assert_eq!(m.completed, n_requests);
         t.row(vec![
-            if quantized { "W4A8KV4P8 (P3-LLM)" } else { "FP16" }.into(),
-            f2(stats.tokens_per_sec()),
-            f2(stats.mean_ttft_ms()),
-            stats.decode_steps.to_string(),
-            f2(stats.wall_ms),
+            if scheme == "p3llm" { "W4A8KV4P8 (P3-LLM)" } else { "FP16" }
+                .into(),
+            f2(m.tokens_per_sec()),
+            f2(m.ttft_ms.p50),
+            f2(m.ttft_ms.p95),
+            m.decode_steps.to_string(),
+            f2(m.wall_ms),
         ]);
-        if quantized {
+        if scheme == "p3llm" {
             println!(
                 "packed KV pool bytes at peak batch: {}",
                 engine.pool_used_bytes()
@@ -67,19 +68,33 @@ fn main() -> anyhow::Result<()> {
              (q / fp - 1.0) * 100.0);
     assert!(q / fp < 1.05, "quantization cost exceeded 5%");
 
-    // modeled hardware: what this workload costs on the simulated
-    // NPU-PIM systems (per decode step of a 7B-class model, the class
-    // this serving stack targets)
+    // modeled hardware: the same 7B-class workload through the same
+    // engine/batcher/pool, with the sim backend advancing modeled time
     let mut hw = Table::new(
-        "modeled decode step (Llama-3.1-8B, bs=8, ctx=4K)",
-        &["system", "ms/step", "tok/s"],
+        "modeled serving loop (Llama-3.1-8B, bs=8, 16-tok prompts, 48 new)",
+        &["system", "sim ms", "p95 ttft ms", "tok/s (modeled)"],
     );
-    for a in [Accel::npu_fp16(), Accel::hbm_pim(), Accel::p3llm()] {
-        let m = p3llm::config::llm::LLAMA31_8B.clone();
-        let ns = a.decode_step(&m, 8, 4096).total_ns();
-        hw.row(vec![a.name.into(), f2(ns / 1e6), f2(8.0 / (ns * 1e-9))]);
+    for system in ["NPU", "HBM-PIM", "P3-LLM"] {
+        let mut engine = EngineBuilder::sim()
+            .model("Llama-3.1-8B")
+            .system(system)
+            .max_batch(8)
+            .ctx_limit(512)
+            .kv_capacity(1 << 30)
+            .build()?;
+        for i in 0..n_requests {
+            let toks: Vec<i32> =
+                (0..16).map(|t| ((i * 13 + t) % 250) as i32).collect();
+            engine.submit(toks, max_new)?;
+        }
+        let m = engine.run_to_completion()?;
+        hw.row(vec![
+            system.into(),
+            f2(m.wall_ms),
+            f2(m.ttft_ms.p95),
+            f2(m.tokens_per_sec()),
+        ]);
     }
     hw.print();
-    let _ = TINY; // tiny config is what actually ran above
     Ok(())
 }

@@ -14,12 +14,12 @@ use p3llm::coordinator::mapper::{command_timing, map_decode_step, Engine};
 use p3llm::report::{f2, Table};
 use p3llm::sim::pim::PimGemm;
 
-fn main() {
+fn main() -> p3llm::Result<()> {
     let args = Args::from_env();
     let model = llm::by_name(args.get_or("model", "Llama-3.1-8B"))
         .expect("unknown model");
-    let bs = args.get_usize("batch", 2);
-    let ctx = args.get_usize("ctx", 4096);
+    let bs = args.get_usize("batch", 2)?;
+    let ctx = args.get_usize("ctx", 4096)?;
     let accel = Accel::p3llm();
 
     let mut t = Table::new(
@@ -61,4 +61,5 @@ fn main() {
         }
     }
     tt.print();
+    Ok(())
 }

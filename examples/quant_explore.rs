@@ -29,12 +29,12 @@ fn rel(a: &[f32], b: &[f32]) -> f64 {
         / a.len() as f64
 }
 
-fn main() {
+fn main() -> p3llm::Result<()> {
     let args = Args::from_env();
     let dist = args.get_or("dist", "softmax");
-    let outlier = args.get_f64("outlier", 1.0) as f32;
-    let n = args.get_usize("n", 4096);
-    let mut rng = Rng::new(args.get_usize("seed", 3) as u64);
+    let outlier = args.get_f64("outlier", 1.0)? as f32;
+    let n = args.get_usize("n", 4096)?;
+    let mut rng = Rng::new(args.get_usize("seed", 3)? as u64);
 
     let x: Vec<f32> = match dist {
         "softmax" => {
@@ -107,4 +107,5 @@ fn main() {
                    f3(rel(&x, &q))]);
     }
     t.print();
+    Ok(())
 }

@@ -4,21 +4,25 @@
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! No artifacts handy?  Swap `EngineBuilder::pjrt(..)` for
+//! `EngineBuilder::sim()` and the same lifecycle runs on the NPU-PIM
+//! cost model (tokens become synthetic, timing becomes simulated).
 
-use p3llm::coordinator::{Engine, EngineConfig};
+use p3llm::EngineBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> p3llm::Result<()> {
     let dir = p3llm::benchkit::artifacts_dir();
-    let mut engine = Engine::new(
-        &dir,
-        EngineConfig { quantized: true, max_batch: 1, ..Default::default() },
-    )?;
+    let mut engine = EngineBuilder::pjrt(&dir)
+        .scheme("p3llm")
+        .max_batch(1)
+        .build()?;
     let prompt = "celund is the capital of";
-    println!("model: {} (W4A8KV4P8, BitMoD weights)", engine.model.name);
+    println!("model: {} (W4A8KV4P8, BitMoD weights)", engine.model().name);
     println!("prompt: {prompt:?}");
     let toks: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
-    let id = engine.submit(toks, 32);
-    let stats = engine.run_to_completion()?;
+    let id = engine.submit(toks, 32)?;
+    let metrics = engine.run_to_completion()?;
     let req = engine.request(id).unwrap();
     let text: String = req
         .generated
@@ -27,11 +31,13 @@ fn main() -> anyhow::Result<()> {
         .collect();
     println!("generated: {text:?}");
     println!(
-        "{} tokens in {:.0} ms ({:.1} tok/s), ttft {:.1} ms, kv pool {} B packed",
-        stats.tokens_out,
-        stats.wall_ms,
-        stats.tokens_per_sec(),
-        stats.mean_ttft_ms(),
+        "{} tokens in {:.0} ms ({:.1} tok/s), ttft {:.1} ms (p99 {:.1}), \
+         kv pool {} B packed",
+        metrics.tokens_out,
+        metrics.wall_ms,
+        metrics.tokens_per_sec(),
+        metrics.mean_ttft_ms(),
+        metrics.ttft_ms.p99,
         engine.pool_used_bytes(),
     );
     Ok(())

@@ -5,7 +5,8 @@
 use p3llm::accel::Accel;
 use p3llm::benchkit::{time, Timing};
 use p3llm::config::llm::LLAMA31_8B;
-use p3llm::coordinator::{Engine, EngineConfig, KvEntry, KvLayout, KvPool};
+use p3llm::coordinator::{KvEntry, KvLayout, KvPool};
+use p3llm::EngineBuilder;
 use p3llm::quant::bitmod::bitmod_encode_group;
 use p3llm::report::{f2, Table};
 use p3llm::testutil::Rng;
@@ -79,15 +80,14 @@ fn main() {
     // PJRT decode step on the tiny model (the serving hot path)
     if let Some(dir) = p3llm::benchkit::require_artifacts() {
         for device_weights in [false, true] {
-            let cfg = EngineConfig {
-                quantized: true,
-                max_batch: 4,
-                device_weights,
-                ..Default::default()
-            };
-            let mut eng = Engine::new(&dir, cfg).unwrap();
+            let mut eng = EngineBuilder::pjrt(&dir)
+                .scheme("p3llm")
+                .max_batch(4)
+                .device_weights(device_weights)
+                .build()
+                .unwrap();
             for i in 0..4 {
-                eng.submit(vec![104, 105, 32 + i], 200);
+                eng.submit(vec![104, 105, 32 + i], 200).unwrap();
             }
             eng.step().unwrap(); // prefill + first decode
             let tm = time(2, 15, || {

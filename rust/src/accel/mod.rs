@@ -260,10 +260,44 @@ pub fn fig9_systems() -> Vec<Accel> {
     vec![Accel::npu_fp16(), Accel::hbm_pim(), Accel::ecco(), Accel::p3llm()]
 }
 
+/// Every named system (the `EngineBuilder --system` registry).
+pub fn all_systems() -> Vec<Accel> {
+    vec![
+        Accel::npu_fp16(),
+        Accel::hbm_pim(),
+        Accel::ecco(),
+        Accel::p3llm(),
+        Accel::p3llm_no_tep(),
+        Accel::pim_w4a8kv4(),
+        Accel::pim_w4a8kv4_tep(),
+        Accel::pimba_orig(),
+        Accel::pimba_enhanced(),
+        Accel::smoothquant(),
+        Accel::awq(),
+    ]
+}
+
+/// Case-insensitive lookup by system name (e.g. "P3-LLM", "hbm-pim").
+pub fn by_name(name: &str) -> Option<Accel> {
+    all_systems()
+        .into_iter()
+        .find(|a| a.name.eq_ignore_ascii_case(name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::llm::{LLAMA2_7B, LLAMA31_8B, MISTRAL_7B};
+
+    #[test]
+    fn system_registry_lookup() {
+        assert_eq!(by_name("p3-llm").unwrap().name, "P3-LLM");
+        assert_eq!(by_name("HBM-PIM").unwrap().name, "HBM-PIM");
+        assert!(by_name("warp-drive").is_none());
+        for a in all_systems() {
+            assert_eq!(by_name(a.name).unwrap().name, a.name);
+        }
+    }
 
     #[test]
     fn fig9_ordering_at_low_batch() {

@@ -2,8 +2,13 @@
 //! has no clap; see DESIGN.md environment substitutions).
 //!
 //! Supports `binary <subcommand> --flag value --switch positional`.
+//! Typed getters report malformed values as
+//! [`P3Error::InvalidFlag`](crate::error::P3Error::InvalidFlag) instead
+//! of silently falling back to the default.
 
 use std::collections::HashMap;
+
+use crate::error::{P3Error, Result};
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -53,12 +58,26 @@ impl Args {
         self.get(k).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, k: &str, default: usize) -> usize {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Integer flag: absent -> default; present-but-malformed -> error.
+    pub fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| P3Error::InvalidFlag {
+                flag: k.to_string(),
+                value: v.to_string(),
+            }),
+        }
     }
 
-    pub fn get_f64(&self, k: &str, default: f64) -> f64 {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Float flag: absent -> default; present-but-malformed -> error.
+    pub fn get_f64(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| P3Error::InvalidFlag {
+                flag: k.to_string(),
+                value: v.to_string(),
+            }),
+        }
     }
 
     pub fn has(&self, k: &str) -> bool {
@@ -79,7 +98,7 @@ mod tests {
         let a = parse("serve --model tiny-1M --batch=4 req1 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("serve"));
         assert_eq!(a.get("model"), Some("tiny-1M"));
-        assert_eq!(a.get_usize("batch", 1), 4);
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 4);
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["req1"]);
     }
@@ -88,7 +107,26 @@ mod tests {
     fn defaults() {
         let a = parse("eval");
         assert_eq!(a.get_or("corpus", "wiki"), "wiki");
-        assert_eq!(a.get_f64("kv_bits", 4.0), 4.0);
+        assert_eq!(a.get_f64("kv_bits", 4.0).unwrap(), 4.0);
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn malformed_values_are_errors_not_defaults() {
+        let a = parse("serve --batch eight --rate 1.5x");
+        match a.get_usize("batch", 8) {
+            Err(P3Error::InvalidFlag { flag, value }) => {
+                assert_eq!(flag, "batch");
+                assert_eq!(value, "eight");
+            }
+            other => panic!("expected InvalidFlag, got {other:?}"),
+        }
+        assert!(matches!(
+            a.get_f64("rate", 1.0),
+            Err(P3Error::InvalidFlag { .. })
+        ));
+        // well-formed values still parse; absent flags still default
+        assert_eq!(a.get_usize("absent", 3).unwrap(), 3);
+        assert_eq!(parse("x --batch 2").get_usize("batch", 8).unwrap(), 2);
     }
 }

@@ -115,9 +115,55 @@ impl QuantScheme {
     }
 }
 
+/// Every named scheme (the `EngineBuilder` scheme registry).
+pub fn all() -> Vec<QuantScheme> {
+    vec![
+        QuantScheme::fp16(),
+        QuantScheme::p3llm(),
+        QuantScheme::ecco(),
+        QuantScheme::pimba_orig(),
+        QuantScheme::pimba_enhanced(),
+        QuantScheme::smoothquant(),
+        QuantScheme::awq(),
+        QuantScheme::p3_no_p8(),
+    ]
+}
+
+/// Look a scheme up by its full name (case-insensitive) or a short
+/// alias: `fp16`, `p3llm`/`p3`, `ecco`, `pimba`, `pimba-w8a8`,
+/// `smoothquant`, `awq`, `w4a8kv4-p16`.
+pub fn by_name(name: &str) -> Option<QuantScheme> {
+    let n = name.to_ascii_lowercase();
+    let alias = match n.as_str() {
+        "p3" | "p3llm" | "p3-llm" => Some(QuantScheme::p3llm()),
+        "pimba" => Some(QuantScheme::pimba_orig()),
+        "pimba-w8a8" => Some(QuantScheme::pimba_enhanced()),
+        "ecco" => Some(QuantScheme::ecco()),
+        "smoothquant" => Some(QuantScheme::smoothquant()),
+        "awq" => Some(QuantScheme::awq()),
+        _ => None,
+    };
+    alias.or_else(|| {
+        all().into_iter().find(|s| s.name.eq_ignore_ascii_case(&n))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(by_name("fp16").unwrap().name, "FP16");
+        assert_eq!(by_name("p3").unwrap().name, "P3-LLM-W4A8KV4P8");
+        assert_eq!(by_name("P3-LLM-W4A8KV4P8").unwrap().name, "P3-LLM-W4A8KV4P8");
+        assert_eq!(by_name("pimba-w8a8").unwrap().name, "Pimba-W8A8KV8");
+        assert!(by_name("nope").is_none());
+        // every registry entry resolves through its own full name
+        for s in all() {
+            assert_eq!(by_name(s.name).unwrap(), s);
+        }
+    }
 
     #[test]
     fn compression_ratios_match_fig14() {

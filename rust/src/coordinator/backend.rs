@@ -1,0 +1,115 @@
+//! The execution-backend abstraction the serving engine drives.
+//!
+//! The paper's co-design claim is that one mapping/serving policy spans
+//! both the measured system and the modeled hardware; [`ExecBackend`]
+//! is that seam.  The engine owns the request lifecycle (router,
+//! continuous batcher, quantized KV pool); a backend owns only the
+//! numerics of one prefill or one batched decode step plus the clock
+//! those steps advance:
+//!
+//! * [`PjrtBackend`](super::pjrt::PjrtBackend) -- real numerics through
+//!   the AOT-compiled PJRT graphs of the tiny shipped model (wall
+//!   clock).
+//! * [`SimBackend`](super::simbackend::SimBackend) -- the `accel`
+//!   NPU-PIM cost model advancing simulated time, with synthetic
+//!   tokens/KV exercising the identical pool/batcher path.  This is
+//!   what makes batch-64 / long-context serving-loop experiments
+//!   possible without PJRT artifacts.
+
+use super::kvcache::KvPool;
+use crate::config::llm::LlmConfig;
+use crate::coordinator::mapper::MapSummary;
+use crate::error::{P3Error, Result};
+
+/// [`covering_batch`](super::batcher::covering_batch) that turns "no
+/// compiled size covers the active set" into a typed serve error.
+pub fn covering_or_err(sizes: &[usize], n: usize) -> Result<usize> {
+    super::batcher::covering_batch(sizes, n).ok_or_else(|| {
+        P3Error::Serve(format!("no compiled batch covers {n} active lanes"))
+    })
+}
+
+/// Which execution substrate an [`EngineBuilder`](super::serve::EngineBuilder)
+/// should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT PJRT graphs (real numerics, tiny model, wall clock).
+    Pjrt,
+    /// `accel` cost model (simulated time, any model/scheme/batch).
+    Sim,
+}
+
+impl BackendKind {
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "pjrt" => Some(BackendKind::Pjrt),
+            "sim" | "model" | "simulate" => Some(BackendKind::Sim),
+            _ => None,
+        }
+    }
+}
+
+/// One active request's view for a decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct Lane {
+    pub rid: u64,
+    /// token pending processing this step
+    pub last_token: i32,
+    /// absolute KV slot the pending token occupies
+    pub pos: usize,
+}
+
+/// Result of prefilling one prompt.
+pub struct PrefillOut {
+    /// first generated token (greedy over the prefill logits)
+    pub first_token: i32,
+    /// per-layer per-channel key smoothing factors for the KV entry
+    pub smooth: Vec<Vec<f32>>,
+    /// prompt-token K rows, layout `[layer][token][kv_dim]` with
+    /// `token < true_len` (compact, stride = true_len)
+    pub k: Vec<f32>,
+    /// prompt-token V rows, same layout as `k`
+    pub v: Vec<f32>,
+    pub true_len: usize,
+}
+
+/// Result of one batched decode step over `lanes`.
+pub struct DecodeOut {
+    /// next token per lane (greedy)
+    pub tokens: Vec<i32>,
+    /// K rows of the tokens just processed, `[layer][lane][kv_dim]`
+    pub new_k: Vec<f32>,
+    /// V rows, same layout as `new_k`
+    pub new_v: Vec<f32>,
+}
+
+/// An execution substrate for the serving engine: prefill + batched
+/// decode-step over request lanes, plus the engine clock.
+pub trait ExecBackend {
+    /// Short name for logs/metrics ("pjrt", "sim").
+    fn name(&self) -> &'static str;
+
+    fn model(&self) -> &LlmConfig;
+
+    /// Longest prompt (tokens) a single prefill can absorb; longer
+    /// prompts are rejected at `submit` with
+    /// [`P3Error::PromptTooLong`](crate::error::P3Error::PromptTooLong).
+    fn max_prefill(&self) -> usize;
+
+    /// Run prefill over one prompt.  Advances the backend clock.
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut>;
+
+    /// One decode step over the active lanes, reading cached KV from
+    /// `pool`.  Advances the backend clock.
+    fn decode_step(&mut self, lanes: &[Lane], pool: &KvPool) -> Result<DecodeOut>;
+
+    /// Engine clock in milliseconds: wall time since backend creation
+    /// for PJRT, accumulated simulated time for sim.
+    fn now_ms(&self) -> f64;
+
+    /// NPU/PIM operator-mapping summary of the most recent decode step
+    /// (cost-model backends only).
+    fn mapping_summary(&self) -> Option<MapSummary> {
+        None
+    }
+}

@@ -1,14 +1,26 @@
 //! Continuous batcher: admits queued requests into the active decode
-//! set at step boundaries and picks the AOT graph batch size.
+//! set at step boundaries.
 //!
-//! The decode graphs are compiled for batch sizes {1, 2, 4, 8}; the
-//! batcher selects the smallest compiled size that covers the active
-//! set and pads the rest (padding lanes attend to a zeroed slot-0 and
-//! their outputs are discarded).
+//! The batcher is execution-substrate agnostic: the *backend* decides
+//! how many lanes actually run (the PJRT backend pads the active set up
+//! to the smallest AOT-compiled batch via [`covering_batch`]; the sim
+//! backend runs the active set exactly).  Capacity-rejected requests go
+//! back to the *front* of the queue via [`Batcher::requeue_front`] so
+//! admission order is preserved.
 
 use super::request::RequestId;
 
+/// Batch sizes the AOT decode graphs are compiled for (PJRT backend).
 pub const COMPILED_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// Smallest size in `sizes` covering `n` active lanes (None when the
+/// active set is empty or nothing covers it).
+pub fn covering_batch(sizes: &[usize], n: usize) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    sizes.iter().copied().filter(|&b| b >= n).min()
+}
 
 #[derive(Debug, Clone)]
 pub struct Batcher {
@@ -19,7 +31,7 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Self {
-        assert!(COMPILED_BATCHES.contains(&max_batch));
+        assert!(max_batch >= 1, "max_batch must be >= 1");
         Batcher { max_batch, queue: Default::default(), active: vec![] }
     }
 
@@ -47,21 +59,20 @@ impl Batcher {
         self.active.retain(|&r| r != id);
     }
 
+    /// Bounce an admitted-but-unservable request (e.g. KV pool full)
+    /// back to the head of the queue: it stays first in line and is
+    /// re-admitted as soon as a lane's KV reservation frees.
+    pub fn requeue_front(&mut self, id: RequestId) {
+        self.active.retain(|&r| r != id);
+        self.queue.push_front(id);
+    }
+
     pub fn active(&self) -> &[RequestId] {
         &self.active
     }
 
     pub fn queued(&self) -> usize {
         self.queue.len()
-    }
-
-    /// Smallest compiled batch covering the active set.
-    pub fn graph_batch(&self) -> Option<usize> {
-        let n = self.active.len();
-        if n == 0 {
-            return None;
-        }
-        COMPILED_BATCHES.iter().copied().find(|&b| b >= n)
     }
 
     pub fn idle(&self) -> bool {
@@ -87,19 +98,20 @@ mod tests {
         let newly = b.admit();
         assert_eq!(newly.len(), 4);
         assert_eq!(b.queued(), 2);
-        assert_eq!(b.graph_batch(), Some(4));
+        assert_eq!(covering_batch(&COMPILED_BATCHES, b.active().len()), Some(4));
         b.retire(id(0));
-        assert_eq!(b.graph_batch(), Some(4)); // 3 active -> graph 4
+        // 3 active -> graph 4
+        assert_eq!(covering_batch(&COMPILED_BATCHES, b.active().len()), Some(4));
         b.retire(id(1));
         b.retire(id(2));
-        assert_eq!(b.graph_batch(), Some(1));
+        assert_eq!(covering_batch(&COMPILED_BATCHES, b.active().len()), Some(1));
         let newly = b.admit();
         assert_eq!(newly.len(), 2);
-        assert_eq!(b.graph_batch(), Some(4)); // 3 active again
+        assert_eq!(covering_batch(&COMPILED_BATCHES, b.active().len()), Some(4));
     }
 
     #[test]
-    fn graph_batch_covers_active() {
+    fn covering_batch_covers_active() {
         Runner::new(64).run(|r: &mut Rng| {
             let max = *r.pick(&COMPILED_BATCHES);
             let mut b = Batcher::new(max);
@@ -112,13 +124,25 @@ mod tests {
             // admitted + queued conserve the submitted count
             assert!(b.active().len() <= max);
             assert_eq!(b.active().len() + b.queued(), n);
-            if let Some(g) = b.graph_batch() {
+            if let Some(g) = covering_batch(&COMPILED_BATCHES, b.active().len()) {
                 assert!(g >= b.active().len());
                 assert!(COMPILED_BATCHES.contains(&g));
             } else {
                 assert!(b.active().is_empty());
             }
         });
+    }
+
+    #[test]
+    fn arbitrary_max_batch_for_sim() {
+        // the sim backend runs lanes exactly: no compiled-size rounding
+        let mut b = Batcher::new(64);
+        for i in 0..70 {
+            b.enqueue(id(i));
+        }
+        assert_eq!(b.admit().len(), 64);
+        assert_eq!(b.queued(), 6);
+        assert_eq!(covering_batch(&[], b.active().len()), None);
     }
 
     #[test]
@@ -132,5 +156,37 @@ mod tests {
         b.retire(id(0));
         b.admit();
         assert_eq!(b.active(), &[id(1), id(2)]);
+    }
+
+    #[test]
+    fn requeue_front_preserves_order() {
+        let mut b = Batcher::new(3);
+        for i in 0..5 {
+            b.enqueue(id(i));
+        }
+        b.admit();
+        assert_eq!(b.active(), &[id(0), id(1), id(2)]);
+        // request 2 bounced (e.g. KV pool full): it must come back
+        // BEFORE the untouched 3 and 4
+        b.requeue_front(id(2));
+        assert_eq!(b.active(), &[id(0), id(1)]);
+        let newly = b.admit();
+        assert_eq!(newly, vec![id(2)]);
+        b.retire(id(0));
+        b.retire(id(1));
+        assert_eq!(b.admit(), vec![id(3), id(4)]);
+    }
+
+    #[test]
+    fn retiring_last_active_lane_goes_idle() {
+        let mut b = Batcher::new(2);
+        b.enqueue(id(7));
+        b.admit();
+        assert!(!b.idle());
+        b.retire(id(7));
+        assert!(b.idle());
+        // retiring an unknown id is a no-op
+        b.retire(id(99));
+        assert!(b.idle());
     }
 }

@@ -12,8 +12,7 @@
 //! factors); the factors are multiplied back when building the f32
 //! view, numerically identical to the paper's query-side fusion.
 
-use anyhow::{bail, Result};
-
+use crate::error::{P3Error, Result};
 use crate::quant::int::{pack_nibbles, quant_group_int4};
 
 #[derive(Debug, Clone)]
@@ -32,6 +31,13 @@ impl KvLayout {
     /// packed bytes per token per layer per cache side
     fn token_bytes(&self) -> usize {
         self.kv_dim / 2
+    }
+
+    /// Worst-case packed bytes one full-context request reserves (the
+    /// unit of the pool's admission accounting -- callers sizing a
+    /// `kv_capacity` should use this rather than re-deriving it).
+    pub fn bytes_per_request(&self) -> usize {
+        2 * self.layers * self.max_ctx * self.token_bytes()
     }
 }
 
@@ -167,7 +173,7 @@ impl KvPool {
 
     /// Worst-case packed bytes for a full-context request.
     pub fn bytes_per_request(&self) -> usize {
-        2 * self.layout.layers * self.layout.max_ctx * self.layout.token_bytes()
+        self.layout.bytes_per_request()
     }
 
     pub fn used_bytes(&self) -> usize {
@@ -178,15 +184,27 @@ impl KvPool {
         self.entries.len() * self.bytes_per_request()
     }
 
+    /// Would an additional full-context request fit under the
+    /// worst-case reservation accounting?  The engine's admission
+    /// control asks this before prefilling a queued request.
+    pub fn can_admit(&self) -> bool {
+        self.reserved_bytes() + self.bytes_per_request() <= self.capacity_bytes
+    }
+
     pub fn alloc(&mut self, id: u64, smooth: Vec<Vec<f32>>) -> Result<&mut KvEntry> {
         if self.entries.contains_key(&id) {
-            bail!("request {id} already has a KV entry");
+            return Err(P3Error::DuplicateKvEntry(id));
         }
-        if self.reserved_bytes() + self.bytes_per_request() > self.capacity_bytes {
-            bail!("KV pool capacity exceeded");
+        if !self.can_admit() {
+            return Err(P3Error::KvCapacity {
+                needed: self.reserved_bytes() + self.bytes_per_request(),
+                capacity: self.capacity_bytes,
+            });
         }
         if smooth.len() != self.layout.layers {
-            bail!("smoothing factors: wrong layer count");
+            return Err(P3Error::Serve(
+                "smoothing factors: wrong layer count".into(),
+            ));
         }
         Ok(self
             .entries
@@ -283,9 +301,23 @@ mod tests {
         let lay = layout();
         let per = 2 * 2 * 8 * 16; // layers*2sides*ctx*token_bytes
         let mut pool = KvPool::new(lay.clone(), 2 * per);
+        assert!(pool.can_admit());
         pool.alloc(1, ones_smooth(&lay)).unwrap();
         pool.alloc(2, ones_smooth(&lay)).unwrap();
-        assert!(pool.alloc(3, ones_smooth(&lay)).is_err());
+        assert!(!pool.can_admit());
+        // exhaustion surfaces as the typed capacity error ...
+        match pool.alloc(3, ones_smooth(&lay)) {
+            Err(P3Error::KvCapacity { needed, capacity }) => {
+                assert_eq!(capacity, 2 * per);
+                assert!(needed > capacity);
+            }
+            other => panic!("expected KvCapacity, got {other:?}"),
+        }
+        // ... and double-alloc as the duplicate-entry error
+        assert!(matches!(
+            pool.alloc(2, ones_smooth(&lay)),
+            Err(P3Error::DuplicateKvEntry(2))
+        ));
         assert!(pool.free(1));
         pool.alloc(3, ones_smooth(&lay)).unwrap();
         assert_eq!(pool.len(), 2);

@@ -27,6 +27,32 @@ pub struct Assignment {
     pub commands: usize,
 }
 
+/// Aggregate view of one decode step's operator mapping, surfaced by
+/// the sim serving backend through `Engine::mapping_summary`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MapSummary {
+    pub npu_ops: usize,
+    pub pim_ops: usize,
+    pub pim_commands: usize,
+    /// summed per-op latency (serialized upper bound, ns)
+    pub total_ns: f64,
+}
+
+pub fn summarize(assignments: &[Assignment]) -> MapSummary {
+    let mut s = MapSummary::default();
+    for a in assignments {
+        match a.engine {
+            Engine::Npu => s.npu_ops += 1,
+            Engine::Pim => {
+                s.pim_ops += 1;
+                s.pim_commands += a.commands;
+            }
+        }
+        s.total_ns += a.ns;
+    }
+    s
+}
+
 /// Map one decode step's operators.
 pub fn map_decode_step(
     accel: &Accel,
@@ -134,6 +160,16 @@ mod tests {
                 assert_eq!(x.engine, Engine::Npu, "{}", x.op);
             }
         }
+    }
+
+    #[test]
+    fn summary_counts_match_assignments() {
+        let a = Accel::p3llm();
+        let asg = map_decode_step(&a, &LLAMA31_8B, 1, 4096);
+        let s = summarize(&asg);
+        assert_eq!(s.npu_ops + s.pim_ops, asg.len());
+        assert!(s.pim_ops > 0 && s.pim_commands > 0);
+        assert!(s.total_ns > 0.0);
     }
 
     #[test]

@@ -1,17 +1,27 @@
 //! L3 coordinator (the paper's system layer, Fig. 6): request router +
 //! continuous batcher, quantized KV-cache manager with smoothing-factor
-//! store, online NPU/PIM operator mapper, and the serving engine that
-//! drives the AOT-compiled PJRT graphs.
+//! store, online NPU/PIM operator mapper, and the serving engine.
+//!
+//! The engine drives an [`ExecBackend`]; two substrates implement it:
+//! [`PjrtBackend`] (real numerics over the AOT-compiled PJRT graphs)
+//! and [`SimBackend`] (the `accel` cost model advancing simulated
+//! time).  See DESIGN.md for the full layer map.
 
+pub mod backend;
 pub mod batcher;
 pub mod kvcache;
 pub mod mapper;
+pub mod pjrt;
 pub mod request;
 pub mod scheduler;
 pub mod serve;
+pub mod simbackend;
 
-pub use batcher::Batcher;
+pub use backend::{BackendKind, DecodeOut, ExecBackend, Lane, PrefillOut};
+pub use batcher::{covering_batch, Batcher, COMPILED_BATCHES};
 pub use kvcache::{KvEntry, KvLayout, KvPool};
-pub use mapper::{map_decode_step, Assignment, Engine as MapEngine};
-pub use request::{Request, RequestId, State};
-pub use serve::{Engine, EngineConfig, Stats};
+pub use mapper::{map_decode_step, Assignment, Engine as MapEngine, MapSummary};
+pub use pjrt::{PjrtBackend, PREFILL_T};
+pub use request::{Request, RequestId, RequestStatus, State};
+pub use serve::{Engine, EngineBuilder, Metrics, Percentiles};
+pub use simbackend::SimBackend;

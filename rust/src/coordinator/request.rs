@@ -1,6 +1,9 @@
-//! Request lifecycle for the edge serving loop.
-
-use std::time::Instant;
+//! Request lifecycle for the serving loop.
+//!
+//! Timestamps are engine-clock milliseconds supplied by the active
+//! [`ExecBackend`](super::backend::ExecBackend): wall time for the PJRT
+//! backend, simulated NPU-PIM time for the sim backend.  That keeps
+//! TTFT / per-token metrics meaningful on both substrates.
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum State {
@@ -13,6 +16,18 @@ pub enum State {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
 
+/// Snapshot returned by [`Engine::poll`](super::serve::Engine::poll).
+#[derive(Debug, Clone)]
+pub struct RequestStatus {
+    pub id: RequestId,
+    pub state: State,
+    /// tokens generated so far (including any already streamed out)
+    pub tokens_generated: usize,
+    pub ttft_ms: Option<f64>,
+    /// set once the request retired from the batch
+    pub finished: bool,
+}
+
 #[derive(Debug)]
 pub struct Request {
     pub id: RequestId,
@@ -23,13 +38,17 @@ pub struct Request {
     pub generated: Vec<i32>,
     /// absolute position of the next KV slot (= tokens so far)
     pub pos: usize,
-    pub submitted: Instant,
-    pub first_token: Option<Instant>,
-    pub finished: Option<Instant>,
+    /// engine-clock timestamps (ms)
+    pub submitted_ms: f64,
+    pub first_token_ms: Option<f64>,
+    pub finished_ms: Option<f64>,
+    /// streaming cursor: tokens before this index were already drained
+    /// by `Engine::take_tokens`
+    pub streamed: usize,
 }
 
 impl Request {
-    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize, now_ms: f64) -> Self {
         Request {
             id: RequestId(id),
             prompt,
@@ -37,9 +56,10 @@ impl Request {
             state: State::Queued,
             generated: vec![],
             pos: 0,
-            submitted: Instant::now(),
-            first_token: None,
-            finished: None,
+            submitted_ms: now_ms,
+            first_token_ms: None,
+            finished_ms: None,
+            streamed: 0,
         }
     }
 
@@ -57,8 +77,35 @@ impl Request {
     }
 
     pub fn ttft_ms(&self) -> Option<f64> {
-        self.first_token
-            .map(|t| t.duration_since(self.submitted).as_secs_f64() * 1e3)
+        self.first_token_ms.map(|t| t - self.submitted_ms)
+    }
+
+    /// Mean per-token decode latency (excludes the prefill-emitted
+    /// first token); `None` until finished or for 1-token requests.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.finished_ms) {
+            (Some(first), Some(fin)) if self.generated.len() > 1 => {
+                Some((fin - first) / (self.generated.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn status(&self) -> RequestStatus {
+        RequestStatus {
+            id: self.id,
+            state: self.state,
+            tokens_generated: self.generated.len(),
+            ttft_ms: self.ttft_ms(),
+            finished: self.state == State::Finished,
+        }
+    }
+
+    /// Drain tokens generated since the last drain (streaming).
+    pub fn take_new_tokens(&mut self) -> Vec<i32> {
+        let out = self.generated[self.streamed..].to_vec();
+        self.streamed = self.generated.len();
+        out
     }
 }
 
@@ -68,14 +115,37 @@ mod tests {
 
     #[test]
     fn lifecycle_helpers() {
-        let mut r = Request::new(1, vec![5, 6, 7], 4);
+        let mut r = Request::new(1, vec![5, 6, 7], 4, 0.0);
         assert_eq!(r.last_token(), 7);
         assert!(!r.done(100));
         r.generated.extend([1, 2, 3, 4]);
         assert_eq!(r.last_token(), 4);
         assert!(r.done(100));
-        let mut r2 = Request::new(2, vec![1], 100);
+        let mut r2 = Request::new(2, vec![1], 100, 0.0);
         r2.pos = 50;
         assert!(r2.done(50));
+    }
+
+    #[test]
+    fn timing_on_engine_clock() {
+        let mut r = Request::new(1, vec![9], 8, 10.0);
+        assert_eq!(r.ttft_ms(), None);
+        r.first_token_ms = Some(35.0);
+        assert_eq!(r.ttft_ms(), Some(25.0));
+        r.generated.extend([1, 2, 3, 4, 5]);
+        r.finished_ms = Some(135.0);
+        // 100 ms over 4 decode-emitted tokens
+        assert_eq!(r.tpot_ms(), Some(25.0));
+    }
+
+    #[test]
+    fn streaming_cursor_drains_incrementally() {
+        let mut r = Request::new(1, vec![9], 8, 0.0);
+        r.generated.extend([10, 11]);
+        assert_eq!(r.take_new_tokens(), vec![10, 11]);
+        assert!(r.take_new_tokens().is_empty());
+        r.generated.push(12);
+        assert_eq!(r.take_new_tokens(), vec![12]);
+        assert_eq!(r.status().tokens_generated, 3);
     }
 }

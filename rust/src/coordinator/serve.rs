@@ -1,347 +1,711 @@
-//! The serving engine: continuous-batched decode over the AOT-compiled
-//! PJRT graphs with quantized KV-cache management -- the L3 realization
-//! of the paper's Fig. 6 dataflow on the tiny shipped model.
+//! The serving engine: continuous-batched decode with quantized
+//! KV-cache management over a pluggable execution substrate -- the L3
+//! realization of the paper's Fig. 6 dataflow.
 //!
-//! Numerics run on the CPU PJRT client; the *modeled* NPU-PIM timing
-//! for the same step comes from the `accel` cost model, so the engine
-//! reports both wall-clock (this host) and simulated-hardware numbers.
+//! The engine owns the request lifecycle (submit -> prefill -> decode
+//! -> retire), the [`Batcher`], the INT4-packed [`KvPool`] and the
+//! latency metrics; the numerics and the clock come from an
+//! [`ExecBackend`]: real PJRT graphs (wall time) or the NPU-PIM cost
+//! model (simulated time).  Construct engines with [`EngineBuilder`]:
+//!
+//! ```ignore
+//! let mut eng = EngineBuilder::sim()
+//!     .model("Llama-3.2-3B")
+//!     .scheme("p3llm")
+//!     .max_batch(64)
+//!     .build()?;
+//! let id = eng.submit(prompt, 48)?;
+//! let metrics = eng.run_to_completion()?;
+//! println!("p95 TTFT {:.1} ms", metrics.ttft_ms.p95);
+//! ```
 
 use std::collections::HashMap;
-use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use super::batcher::Batcher;
+use super::backend::{BackendKind, ExecBackend, Lane};
+use super::batcher::{Batcher, COMPILED_BATCHES};
 use super::kvcache::{KvLayout, KvPool};
-use super::request::{Request, RequestId, State};
-use crate::config::llm::{LlmConfig, TINY};
-use crate::runtime::artifacts::{lit_f32, lit_i32, vec_f32, Runtime};
-use crate::runtime::weights::Weights;
+use super::pjrt::PjrtBackend;
+use super::request::{Request, RequestId, RequestStatus, State};
+use super::simbackend::SimBackend;
+use crate::config::llm::LlmConfig;
+use crate::config::scheme;
+use crate::coordinator::mapper::MapSummary;
+use crate::error::{P3Error, Result};
 
-pub const PREFILL_T: usize = 64;
-
-#[derive(Debug, Clone)]
-pub struct EngineConfig {
-    pub quantized: bool,
-    pub max_batch: usize,
-    /// KV pool capacity in packed bytes
-    pub kv_capacity: usize,
-    /// use persistent device buffers for weights (perf fast path)
-    pub device_weights: bool,
+/// Latency distribution summary (nearest-rank percentiles).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
 }
 
-impl Default for EngineConfig {
-    fn default() -> Self {
-        EngineConfig {
-            quantized: true,
-            max_batch: 8,
-            kv_capacity: 64 << 20,
-            // §Perf: persistent device-resident weight buffers cut the
-            // decode step ~2.8x vs re-uploading literals every call
-            device_weights: true,
+impl Percentiles {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        // nearest-rank in integer math: ceil(n * pct / 100), 1-indexed
+        let rank = |pct: usize| xs[(n * pct).div_ceil(100).max(1) - 1];
+        Percentiles {
+            count: n,
+            mean: xs.iter().sum::<f64>() / n as f64,
+            p50: rank(50),
+            p95: rank(95),
+            p99: rank(99),
+            max: xs[n - 1],
         }
     }
 }
 
-#[derive(Debug, Default, Clone)]
-pub struct Stats {
+/// End-of-run serving metrics.  Latency distributions replace the old
+/// flat sample vectors: TTFT and per-token (TPOT) percentiles are what
+/// the serving experiments compare across backends and systems.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// backend short name ("pjrt" wall-clock, "sim" modeled time)
+    pub backend: &'static str,
     pub completed: usize,
     pub decode_steps: usize,
+    /// decode-emitted tokens (the prefill-emitted first token of each
+    /// request is excluded, matching the original accounting)
     pub tokens_out: usize,
+    /// engine-clock age at measurement (simulated ms for sim)
     pub wall_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
-    pub ttft_ms: Vec<f64>,
-    pub per_token_ms: Vec<f64>,
+    pub ttft_ms: Percentiles,
+    pub per_token_ms: Percentiles,
 }
 
-impl Stats {
+impl Metrics {
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens_out as f64 / (self.decode_ms / 1e3).max(1e-9)
     }
+
     pub fn mean_ttft_ms(&self) -> f64 {
-        if self.ttft_ms.is_empty() {
-            return 0.0;
-        }
-        self.ttft_ms.iter().sum::<f64>() / self.ttft_ms.len() as f64
+        self.ttft_ms.mean
     }
 }
 
+/// Internal per-run accumulator the public [`Metrics`] is derived from.
+#[derive(Debug, Default, Clone)]
+struct StatsAcc {
+    completed: usize,
+    decode_steps: usize,
+    tokens_out: usize,
+    prefill_ms: f64,
+    decode_ms: f64,
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+}
+
 pub struct Engine {
-    pub rt: Runtime,
-    pub model: LlmConfig,
-    pub cfg: EngineConfig,
-    pub weights: Weights,
-    weight_lits: Vec<xla::Literal>,
-    weight_bufs: Vec<xla::PjRtBuffer>,
+    backend: Box<dyn ExecBackend>,
+    model: LlmConfig,
+    /// context cap for request completion (= KV pool layout max_ctx)
+    ctx_cap: usize,
     pool: KvPool,
     batcher: Batcher,
     requests: HashMap<u64, Request>,
     next_id: u64,
-    pub stats: Stats,
+    acc: StatsAcc,
 }
 
 impl Engine {
-    pub fn new(artifacts_dir: &str, cfg: EngineConfig) -> Result<Self> {
-        let rt = Runtime::new(artifacts_dir)?;
-        let model = TINY.clone();
-        let variant = if cfg.quantized { "bitmod" } else { "fp" };
-        let weights = Weights::load(
-            rt.artifacts.data_path(&format!("weights_{variant}"))?,
-            &rt.artifacts.dir.join("weights.tsv"),
-        )
-        .context("loading weights")?;
-        let mut weight_lits = vec![];
-        for t in &weights.tensors {
-            weight_lits.push(lit_f32(&t.dims, &t.f32_data)?);
+    /// Wrap an execution backend in the serving lifecycle.  `ctx_cap`
+    /// bounds the KV pool's per-request reservation (None = the
+    /// model's max context).  Prefer [`EngineBuilder`].
+    pub fn with_backend(
+        backend: Box<dyn ExecBackend>,
+        max_batch: usize,
+        kv_capacity: usize,
+        ctx_cap: Option<usize>,
+    ) -> Result<Self> {
+        let model = backend.model().clone();
+        let ctx_cap = ctx_cap.unwrap_or(model.max_ctx).min(model.max_ctx);
+        if ctx_cap < 2 {
+            return Err(P3Error::InvalidConfig(
+                "context cap must allow at least prompt + one token".into(),
+            ));
         }
-        let mut weight_bufs = vec![];
-        if cfg.device_weights {
-            for l in &weight_lits {
-                weight_bufs.push(rt.to_device(l)?);
-            }
+        if max_batch < 1 {
+            return Err(P3Error::InvalidConfig("max_batch must be >= 1".into()));
         }
         let layout = KvLayout {
             layers: model.layers,
             kv_dim: model.kv_dim(),
             head_dim: model.head_dim,
-            max_ctx: model.max_ctx,
+            max_ctx: ctx_cap,
         };
-        let pool = KvPool::new(layout, cfg.kv_capacity);
-        let batcher = Batcher::new(cfg.max_batch);
+        let pool = KvPool::new(layout, kv_capacity);
+        if pool.bytes_per_request() > kv_capacity {
+            return Err(P3Error::InvalidConfig(format!(
+                "kv_capacity {} bytes holds no request (one full-context \
+                 request reserves {} bytes; lower the ctx limit or raise \
+                 the capacity)",
+                kv_capacity,
+                pool.bytes_per_request()
+            )));
+        }
         Ok(Engine {
-            rt,
+            backend,
             model,
-            cfg,
-            weights,
-            weight_lits,
-            weight_bufs,
+            ctx_cap,
             pool,
-            batcher,
+            batcher: Batcher::new(max_batch),
             requests: HashMap::new(),
             next_id: 1,
-            stats: Stats::default(),
+            acc: StatsAcc::default(),
         })
     }
 
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> RequestId {
+    pub fn model(&self) -> &LlmConfig {
+        &self.model
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Longest admissible prompt for this engine.
+    pub fn max_prompt(&self) -> usize {
+        self.backend.max_prefill().min(self.ctx_cap - 1)
+    }
+
+    /// Submit a prompt; rejects empty and over-long prompts with typed
+    /// errors instead of the old silent truncation.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
+        if prompt.is_empty() {
+            return Err(P3Error::EmptyPrompt);
+        }
+        let max = self.max_prompt();
+        if prompt.len() > max {
+            // TODO(chunked prefill): absorb long prompts in PREFILL_T
+            // chunks instead of rejecting
+            return Err(P3Error::PromptTooLong { len: prompt.len(), max });
+        }
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request::new(id, prompt, max_new);
+        let req = Request::new(id, prompt, max_new, self.backend.now_ms());
         let rid = req.id;
         self.requests.insert(id, req);
         self.batcher.enqueue(rid);
-        rid
+        Ok(rid)
     }
 
     pub fn request(&self, id: RequestId) -> Option<&Request> {
         self.requests.get(&id.0)
     }
 
-    fn clone_weight_args(&self) -> Result<Vec<xla::Literal>> {
-        self.weight_lits
-            .iter()
-            .map(crate::runtime::eval::clone_literal)
-            .collect()
+    /// Lifecycle snapshot of one request.
+    pub fn poll(&self, id: RequestId) -> Result<RequestStatus> {
+        self.requests
+            .get(&id.0)
+            .map(|r| r.status())
+            .ok_or(P3Error::UnknownRequest(id.0))
     }
 
-    /// Prefill one request: run the prefill graph, quantize the prompt
-    /// KV into the pool, emit the first token.
+    /// Drain tokens generated since the last drain (streaming).
+    pub fn take_tokens(&mut self, id: RequestId) -> Result<Vec<i32>> {
+        self.requests
+            .get_mut(&id.0)
+            .map(|r| r.take_new_tokens())
+            .ok_or(P3Error::UnknownRequest(id.0))
+    }
+
+    /// Prefill one admitted request: run the backend prefill, install
+    /// the prompt KV in the pool, emit the first token.
     fn prefill(&mut self, rid: RequestId) -> Result<()> {
-        let t0 = Instant::now();
-        let graph = if self.cfg.quantized { "prefill_q" } else { "prefill_fp" };
-        let exe = self.rt.load(graph)?;
-        let model = self.model.clone();
-        let kvd = model.kv_dim();
-        let req = self.requests.get_mut(&rid.0).ok_or_else(|| anyhow!("no req"))?;
+        let t0 = self.backend.now_ms();
+        let req = self
+            .requests
+            .get_mut(&rid.0)
+            .ok_or(P3Error::UnknownRequest(rid.0))?;
         req.state = State::Prefilling;
-        let true_len = req.prompt.len().min(PREFILL_T);
-        let mut toks = vec![0i32; PREFILL_T];
-        toks[..true_len].copy_from_slice(&req.prompt[..true_len]);
-
-        let out = if self.cfg.device_weights {
-            let dyn_lits = [
-                lit_i32(&[1, PREFILL_T], &toks)?,
-                lit_i32(&[], &[true_len as i32])?,
-            ];
-            let dyn_bufs: Vec<xla::PjRtBuffer> = dyn_lits
-                .iter()
-                .map(|l| self.rt.to_device(l))
-                .collect::<Result<_>>()?;
-            let mut refs: Vec<&xla::PjRtBuffer> =
-                self.weight_bufs.iter().collect();
-            refs.extend(dyn_bufs.iter());
-            exe.run_b(&refs)?
-        } else {
-            let mut args = self.clone_weight_args()?;
-            args.push(lit_i32(&[1, PREFILL_T], &toks)?);
-            args.push(lit_i32(&[], &[true_len as i32])?);
-            exe.run(&args)?
-        };
-        let logits = vec_f32(&out[0])?;
-        let kc = vec_f32(&out[1])?; // [L,1,T,kvd]
-        let vc = vec_f32(&out[2])?;
-        let sf = vec_f32(&out[3])?; // [L,kvd]
-
-        let smooth: Vec<Vec<f32>> = (0..model.layers)
-            .map(|l| {
-                if self.cfg.quantized {
-                    sf[l * kvd..(l + 1) * kvd].to_vec()
-                } else {
-                    vec![1.0; kvd]
-                }
-            })
-            .collect();
-        let entry = self.pool.alloc(rid.0, smooth)?;
-        for t in 0..true_len {
-            for l in 0..model.layers {
-                let off = (l * PREFILL_T + t) * kvd;
-                entry.push_token(l, &kc[off..off + kvd], &vc[off..off + kvd]);
+        let prompt = req.prompt.clone();
+        let out = self.backend.prefill(&prompt)?;
+        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
+        let entry = self.pool.alloc(rid.0, out.smooth)?;
+        for t in 0..out.true_len {
+            for l in 0..layers {
+                let off = (l * out.true_len + t) * kvd;
+                entry.push_token(
+                    l,
+                    &out.k[off..off + kvd],
+                    &out.v[off..off + kvd],
+                );
             }
             entry.commit_token();
         }
+        let now = self.backend.now_ms();
         let req = self.requests.get_mut(&rid.0).unwrap();
-        req.pos = true_len;
-        let next = argmax(&logits);
-        req.generated.push(next);
-        req.pos += 1; // KV slot for `next` is written by the first decode
-        req.first_token = Some(Instant::now());
+        req.pos = out.true_len;
+        req.generated.push(out.first_token);
+        req.pos += 1; // KV slot for the first token is written by decode
+        req.first_token_ms = Some(now);
         req.state = State::Decoding;
-        self.stats.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.acc.prefill_ms += now - t0;
         Ok(())
     }
 
-    /// One decode step over the active batch.  Returns tokens emitted.
+    /// One engine step: admit (with KV admission control), prefill the
+    /// newcomers, run one batched decode step.  Returns tokens emitted.
     pub fn step(&mut self) -> Result<usize> {
-        for rid in self.batcher.admit() {
-            self.prefill(rid)?;
-        }
-        let Some(b) = self.batcher.graph_batch() else { return Ok(0) };
-        let t0 = Instant::now();
-        let model = self.model.clone();
-        let (l, ctx, kvd) = (model.layers, model.max_ctx, model.kv_dim());
-        let graph =
-            if self.cfg.quantized { format!("decode_q_b{b}") } else { format!("decode_fp_b{b}") };
-        let exe = self.rt.load(&graph)?;
-
-        let active: Vec<RequestId> = self.batcher.active().to_vec();
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut kc = vec![0.0f32; l * b * ctx * kvd];
-        let mut vc = vec![0.0f32; l * b * ctx * kvd];
-        let mut sfb = vec![1.0f32; l * b * kvd];
-        let mut kscratch = vec![0.0f32; ctx * kvd];
-        let mut vscratch = vec![0.0f32; ctx * kvd];
-        for (lane, rid) in active.iter().enumerate() {
-            let req = &self.requests[&rid.0];
-            tokens[lane] = req.last_token();
-            pos[lane] = (req.pos - 1) as i32; // slot for the pending token
-            let entry = self.pool.get(rid.0).ok_or_else(|| anyhow!("no kv"))?;
-            for layer in 0..l {
-                entry.dequant_layer(layer, &mut kscratch, &mut vscratch);
-                let off = (layer * b + lane) * ctx * kvd;
-                kc[off..off + ctx * kvd].copy_from_slice(&kscratch);
-                vc[off..off + ctx * kvd].copy_from_slice(&vscratch);
-                let soff = (layer * b + lane) * kvd;
-                sfb[soff..soff + kvd].copy_from_slice(&entry.smooth[layer]);
+        let newly = self.batcher.admit();
+        let mut bounced = vec![];
+        for rid in newly {
+            if !self.pool.can_admit() {
+                if self.pool.is_empty() {
+                    // capacity cannot hold even one request: no amount
+                    // of waiting will fix it
+                    return Err(P3Error::KvCapacity {
+                        needed: self.pool.bytes_per_request(),
+                        capacity: self.pool.capacity_bytes,
+                    });
+                }
+                bounced.push(rid);
+                continue;
+            }
+            if let Err(e) = self.prefill(rid) {
+                // keep the engine consistent on a failed prefill: the
+                // lane must not stay active with no KV entry / pos 0
+                self.batcher.retire(rid);
+                self.pool.free(rid.0);
+                if let Some(r) = self.requests.get_mut(&rid.0) {
+                    r.state = State::Finished;
+                }
+                return Err(e);
             }
         }
+        // re-queue rejected requests in their original order
+        for rid in bounced.into_iter().rev() {
+            self.batcher.requeue_front(rid);
+        }
 
-        let out = if self.cfg.device_weights {
-            let dyn_lits = [
-                lit_i32(&[b], &tokens)?,
-                lit_i32(&[b], &pos)?,
-                lit_f32(&[l, b, ctx, kvd], &kc)?,
-                lit_f32(&[l, b, ctx, kvd], &vc)?,
-                lit_f32(&[l, b, kvd], &sfb)?,
-            ];
-            let dyn_bufs: Vec<xla::PjRtBuffer> = dyn_lits
-                .iter()
-                .map(|lit| self.rt.to_device(lit))
-                .collect::<Result<_>>()?;
-            let mut refs: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-            refs.extend(dyn_bufs.iter());
-            exe.run_b(&refs)?
-        } else {
-            let mut args = self.clone_weight_args()?;
-            args.push(lit_i32(&[b], &tokens)?);
-            args.push(lit_i32(&[b], &pos)?);
-            args.push(lit_f32(&[l, b, ctx, kvd], &kc)?);
-            args.push(lit_f32(&[l, b, ctx, kvd], &vc)?);
-            args.push(lit_f32(&[l, b, kvd], &sfb)?);
-            exe.run(&args)?
-        };
-        let logits = vec_f32(&out[0])?; // [b, vocab]
-        let new_k = vec_f32(&out[1])?; // [l, b, kvd]
-        let new_v = vec_f32(&out[2])?;
-
+        let active: Vec<RequestId> = self.batcher.active().to_vec();
+        if active.is_empty() {
+            return Ok(0);
+        }
+        let t0 = self.backend.now_ms();
+        let lanes: Vec<Lane> = active
+            .iter()
+            .map(|rid| {
+                let req = &self.requests[&rid.0];
+                Lane {
+                    rid: rid.0,
+                    last_token: req.last_token(),
+                    // slot for the pending token
+                    pos: req.pos - 1,
+                }
+            })
+            .collect();
+        let out = self.backend.decode_step(&lanes, &self.pool)?;
+        if out.tokens.len() != lanes.len() {
+            return Err(P3Error::Serve(format!(
+                "backend returned {} tokens for {} lanes",
+                out.tokens.len(),
+                lanes.len()
+            )));
+        }
+        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
+        let n = lanes.len();
+        let now = self.backend.now_ms();
         let mut emitted = 0;
         for (lane, rid) in active.iter().enumerate() {
             // store the k/v of the token we just processed
-            let entry = self.pool.get_mut(rid.0).unwrap();
-            for layer in 0..l {
-                let off = (layer * b + lane) * kvd;
-                entry.push_token(layer, &new_k[off..off + kvd], &new_v[off..off + kvd]);
+            let entry = self
+                .pool
+                .get_mut(rid.0)
+                .ok_or_else(|| P3Error::Serve(format!("no KV for {}", rid.0)))?;
+            for layer in 0..layers {
+                let off = (layer * n + lane) * kvd;
+                entry.push_token(
+                    layer,
+                    &out.new_k[off..off + kvd],
+                    &out.new_v[off..off + kvd],
+                );
             }
             entry.commit_token();
             let req = self.requests.get_mut(&rid.0).unwrap();
-            let next = argmax(&logits[lane * model.vocab..(lane + 1) * model.vocab]);
-            req.generated.push(next);
+            req.generated.push(out.tokens[lane]);
             req.pos += 1;
             emitted += 1;
-            if req.done(model.max_ctx) {
+            if req.done(self.ctx_cap) {
                 req.state = State::Finished;
-                req.finished = Some(Instant::now());
+                req.finished_ms = Some(now);
                 if let Some(t) = req.ttft_ms() {
-                    self.stats.ttft_ms.push(t);
+                    self.acc.ttft.push(t);
                 }
-                self.stats.completed += 1;
+                if let Some(t) = req.tpot_ms() {
+                    self.acc.tpot.push(t);
+                }
+                self.acc.completed += 1;
                 self.batcher.retire(*rid);
                 self.pool.free(rid.0);
             }
         }
-        self.stats.decode_steps += 1;
-        self.stats.tokens_out += emitted;
-        self.stats.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.acc.decode_steps += 1;
+        self.acc.tokens_out += emitted;
+        // measured after the KV append loop so the host-side INT4
+        // pack work stays inside decode_ms (as in the original engine)
+        self.acc.decode_ms += self.backend.now_ms() - t0;
         Ok(emitted)
     }
 
     /// Run until every submitted request completes.
-    pub fn run_to_completion(&mut self) -> Result<Stats> {
-        let t0 = Instant::now();
+    pub fn run_to_completion(&mut self) -> Result<Metrics> {
         let mut guard = 0usize;
         while !self.batcher.idle() {
             self.step()?;
             guard += 1;
-            if guard > 100_000 {
-                bail!("serve loop did not converge");
+            if guard > 1_000_000 {
+                return Err(P3Error::Serve(
+                    "serve loop did not converge".into(),
+                ));
             }
         }
-        self.stats.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        Ok(self.stats.clone())
+        Ok(self.metrics())
+    }
+
+    /// Metrics snapshot (callable mid-run; distributions cover retired
+    /// requests only).
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            backend: self.backend.name(),
+            completed: self.acc.completed,
+            decode_steps: self.acc.decode_steps,
+            tokens_out: self.acc.tokens_out,
+            wall_ms: self.backend.now_ms(),
+            prefill_ms: self.acc.prefill_ms,
+            decode_ms: self.acc.decode_ms,
+            ttft_ms: Percentiles::from_samples(&self.acc.ttft),
+            per_token_ms: Percentiles::from_samples(&self.acc.tpot),
+        }
+    }
+
+    /// NPU/PIM operator mapping of the latest decode step (sim backend).
+    pub fn mapping_summary(&self) -> Option<MapSummary> {
+        self.backend.mapping_summary()
     }
 
     pub fn pool_used_bytes(&self) -> usize {
         self.pool.used_bytes()
     }
+
+    /// Live KV entries (== lanes holding a reservation).
+    pub fn kv_entries(&self) -> usize {
+        self.pool.len()
+    }
 }
 
-pub fn argmax(xs: &[f32]) -> i32 {
-    let mut bi = 0usize;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > bv {
-            bv = v;
-            bi = i;
+/// Typed builder for the serving engine: model + scheme by name from
+/// the registries, backend selection, batching and KV-capacity knobs,
+/// validation at `build()`.  Replaces the old pub-field `EngineConfig`
+/// struct-literal construction.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    kind: BackendKind,
+    artifacts_dir: String,
+    model: Option<String>,
+    scheme: Option<String>,
+    system: Option<String>,
+    device_weights: bool,
+    max_batch: usize,
+    kv_capacity: usize,
+    ctx_limit: Option<usize>,
+}
+
+impl EngineBuilder {
+    fn new(kind: BackendKind) -> Self {
+        EngineBuilder {
+            kind,
+            artifacts_dir: "artifacts".into(),
+            model: None,
+            scheme: None,
+            system: None,
+            device_weights: true,
+            max_batch: 8,
+            kv_capacity: 64 << 20,
+            ctx_limit: None,
         }
     }
-    bi as i32
+
+    /// Real-numerics backend over the AOT PJRT graphs in `artifacts_dir`.
+    pub fn pjrt(artifacts_dir: &str) -> Self {
+        let mut b = Self::new(BackendKind::Pjrt);
+        b.artifacts_dir = artifacts_dir.to_string();
+        b
+    }
+
+    /// Cost-model backend: any model/scheme/system, simulated time,
+    /// no artifacts needed.
+    pub fn sim() -> Self {
+        Self::new(BackendKind::Sim)
+    }
+
+    /// Backend by name ("pjrt" | "sim").
+    pub fn backend(name: &str) -> Result<Self> {
+        BackendKind::by_name(name)
+            .map(Self::new)
+            .ok_or_else(|| P3Error::InvalidConfig(format!(
+                "unknown backend {name:?} (pjrt | sim)"
+            )))
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = dir.to_string();
+        self
+    }
+
+    /// Model by `config::llm` name (sim backend; PJRT serves the tiny
+    /// shipped model only).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = Some(name.to_string());
+        self
+    }
+
+    /// Quantization scheme by `config::scheme` registry name.
+    pub fn scheme(mut self, name: &str) -> Self {
+        self.scheme = Some(name.to_string());
+        self
+    }
+
+    /// Modeled hardware system by `accel` registry name (sim backend).
+    pub fn system(mut self, name: &str) -> Self {
+        self.system = Some(name.to_string());
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// KV pool capacity in packed bytes.
+    pub fn kv_capacity(mut self, bytes: usize) -> Self {
+        self.kv_capacity = bytes;
+        self
+    }
+
+    /// Cap the per-request context (sim backend): bounds both the KV
+    /// reservation and the longest admissible prompt.
+    pub fn ctx_limit(mut self, ctx: usize) -> Self {
+        self.ctx_limit = Some(ctx);
+        self
+    }
+
+    /// Persistent device-resident weight buffers (PJRT perf fast path).
+    pub fn device_weights(mut self, on: bool) -> Self {
+        self.device_weights = on;
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let scheme_name = self.scheme.as_deref().unwrap_or("p3llm");
+        let scheme = scheme::by_name(scheme_name)
+            .ok_or_else(|| P3Error::UnknownScheme(scheme_name.into()))?;
+        match self.kind {
+            BackendKind::Pjrt => {
+                if let Some(m) = self.model.as_deref() {
+                    if !m.eq_ignore_ascii_case("tiny-1M") {
+                        return Err(P3Error::InvalidConfig(format!(
+                            "the PJRT backend serves the AOT-compiled \
+                             tiny-1M model only (got {m:?}); use the sim \
+                             backend for other models"
+                        )));
+                    }
+                }
+                if self.ctx_limit.is_some() {
+                    return Err(P3Error::InvalidConfig(
+                        "ctx_limit is a sim-backend knob (the PJRT decode \
+                         graphs are compiled for the model's full context)"
+                            .into(),
+                    ));
+                }
+                if self.system.is_some() {
+                    return Err(P3Error::InvalidConfig(
+                        "system selection is a sim-backend knob".into(),
+                    ));
+                }
+                if !COMPILED_BATCHES.contains(&self.max_batch) {
+                    return Err(P3Error::InvalidConfig(format!(
+                        "PJRT max_batch must be one of {COMPILED_BATCHES:?} \
+                         (AOT graph batch sizes), got {}",
+                        self.max_batch
+                    )));
+                }
+                // the AOT graph set covers FP16 and the P3 W4A8KV4P8
+                // pipeline; other schemes have no compiled variant
+                let quantized = match scheme.name {
+                    "FP16" => false,
+                    "P3-LLM-W4A8KV4P8" => true,
+                    other => {
+                        return Err(P3Error::InvalidConfig(format!(
+                            "PJRT backend has AOT graphs for schemes \
+                             fp16 | p3llm only (got {other})"
+                        )))
+                    }
+                };
+                let backend = PjrtBackend::new(
+                    &self.artifacts_dir,
+                    quantized,
+                    self.device_weights,
+                )?;
+                Engine::with_backend(
+                    Box::new(backend),
+                    self.max_batch,
+                    self.kv_capacity,
+                    None,
+                )
+            }
+            BackendKind::Sim => {
+                let model_name = self.model.as_deref().unwrap_or("tiny-1M");
+                let model = crate::config::llm::by_name(model_name)
+                    .ok_or_else(|| P3Error::UnknownModel(model_name.into()))?;
+                let system_name = self.system.as_deref().unwrap_or("P3-LLM");
+                let mut accel = crate::accel::by_name(system_name)
+                    .ok_or_else(|| P3Error::UnknownSystem(system_name.into()))?;
+                if self.scheme.is_some() {
+                    // explicit scheme overrides the system's default
+                    accel.scheme = scheme;
+                }
+                let ctx_cap = self
+                    .ctx_limit
+                    .unwrap_or_else(|| model.max_ctx.min(1024));
+                if ctx_cap > model.max_ctx {
+                    return Err(P3Error::InvalidConfig(format!(
+                        "ctx_limit {ctx_cap} exceeds {}'s max context {}",
+                        model.name, model.max_ctx
+                    )));
+                }
+                let backend = SimBackend::new(accel, model, ctx_cap);
+                Engine::with_backend(
+                    Box::new(backend),
+                    self.max_batch,
+                    self.kv_capacity,
+                    Some(ctx_cap),
+                )
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn argmax_basic() {
-        assert_eq!(super::argmax(&[0.1, -2.0, 5.0, 3.0]), 2);
+    fn percentiles_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&xs);
+        assert_eq!(p.count, 100);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+        let single = Percentiles::from_samples(&[7.0]);
+        assert_eq!(single.p50, 7.0);
+        assert_eq!(single.p99, 7.0);
+        assert_eq!(Percentiles::from_samples(&[]).count, 0);
+    }
+
+    #[test]
+    fn builder_validation_errors_are_typed() {
+        assert!(matches!(
+            EngineBuilder::sim().scheme("nope").build(),
+            Err(P3Error::UnknownScheme(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().model("gpt-17").build(),
+            Err(P3Error::UnknownModel(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().system("warp").build(),
+            Err(P3Error::UnknownSystem(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().max_batch(0).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        // capacity below one full-context reservation is rejected
+        assert!(matches!(
+            EngineBuilder::sim().kv_capacity(16).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        // PJRT-only constraints fail before touching artifacts
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").max_batch(3).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").model("Llama-2-7B").build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").ctx_limit(64).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").scheme("awq").build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::backend("cuda"),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(EngineBuilder::backend("sim").is_ok());
+    }
+
+    #[test]
+    fn sim_engine_serves_and_reports_metrics() {
+        let mut eng = EngineBuilder::sim()
+            .max_batch(4)
+            .ctx_limit(128)
+            .build()
+            .unwrap();
+        let mut ids = vec![];
+        for i in 0..6 {
+            ids.push(eng.submit(vec![10 + i, 20, 30], 5).unwrap());
+        }
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.backend, "sim");
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.tokens_out, 6 * (5 - 1));
+        assert_eq!(m.ttft_ms.count, 6);
+        assert!(m.ttft_ms.p50 > 0.0 && m.ttft_ms.p50 <= m.ttft_ms.p95);
+        assert!(m.ttft_ms.p95 <= m.ttft_ms.p99);
+        assert!(m.per_token_ms.count == 6 && m.per_token_ms.mean > 0.0);
+        assert!(m.wall_ms > 0.0);
+        for id in ids {
+            let st = eng.poll(id).unwrap();
+            assert!(st.finished);
+            assert_eq!(st.tokens_generated, 5);
+        }
+        // all KV reservations released
+        assert_eq!(eng.kv_entries(), 0);
+        assert_eq!(eng.pool_used_bytes(), 0);
+    }
+
+    #[test]
+    fn submit_rejects_bad_prompts() {
+        let mut eng = EngineBuilder::sim().ctx_limit(16).build().unwrap();
+        assert!(matches!(eng.submit(vec![], 4), Err(P3Error::EmptyPrompt)));
+        match eng.submit(vec![1; 16], 4) {
+            Err(P3Error::PromptTooLong { len, max }) => {
+                assert_eq!(len, 16);
+                assert_eq!(max, 15); // ctx_limit - 1: one decode slot
+            }
+            other => panic!("expected PromptTooLong, got {other:?}"),
+        }
+        assert!(eng.submit(vec![1; 15], 1).is_ok());
+        assert!(eng.run_to_completion().is_ok());
     }
 }

@@ -1,0 +1,137 @@
+//! Crate-level error type: every public API returns
+//! `Result<_, P3Error>` instead of leaking an `anyhow`-style opaque
+//! error.  Variants are typed where callers can act on them (prompt
+//! rejection, KV admission control, config validation); free-text
+//! variants carry the layer they came from so a message like
+//! `artifacts: graph decode_q_b4 not in manifest` is attributable.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum P3Error {
+    /// Filesystem problem while loading artifacts/weights/corpora.
+    Io { path: String, msg: String },
+    /// Artifact registry problem (manifest, graph or data lookup).
+    Artifacts(String),
+    /// PJRT / XLA layer failure (compile, transfer, execute).
+    Xla(String),
+    /// Prompt longer than the backend can absorb in one prefill.
+    PromptTooLong { len: usize, max: usize },
+    /// A request with no prompt tokens cannot be decoded.
+    EmptyPrompt,
+    /// KV pool cannot hold even one more request at full context.
+    KvCapacity { needed: usize, capacity: usize },
+    /// A request was allocated a KV entry twice.
+    DuplicateKvEntry(u64),
+    /// Builder/engine configuration rejected at `build()` time.
+    InvalidConfig(String),
+    /// Quantization scheme name not in `config::scheme` registry.
+    UnknownScheme(String),
+    /// Accelerator system name not in the `accel` registry.
+    UnknownSystem(String),
+    /// Model name not in `config::llm`.
+    UnknownModel(String),
+    /// Request id not known to the engine.
+    UnknownRequest(u64),
+    /// A `--flag value` pair that did not parse as the expected type.
+    InvalidFlag { flag: String, value: String },
+    /// Malformed number/field in a TSV or binary artifact.
+    Parse(String),
+    /// Serving-loop invariant violation.
+    Serve(String),
+    /// Evaluation-driver failure (corpus, aux blob, eval config).
+    Eval(String),
+}
+
+impl P3Error {
+    /// Attach a path to an I/O-ish failure.
+    pub fn io(path: impl fmt::Debug, err: impl fmt::Display) -> Self {
+        P3Error::Io { path: format!("{path:?}"), msg: err.to_string() }
+    }
+
+    /// Wrap an `xla` layer error (`{e:?}` like the old call sites).
+    pub fn xla(err: impl fmt::Debug) -> Self {
+        P3Error::Xla(format!("{err:?}"))
+    }
+}
+
+impl fmt::Display for P3Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            P3Error::Io { path, msg } => write!(f, "io: {path}: {msg}"),
+            P3Error::Artifacts(m) => write!(f, "artifacts: {m}"),
+            P3Error::Xla(m) => write!(f, "xla: {m}"),
+            P3Error::PromptTooLong { len, max } => write!(
+                f,
+                "prompt too long: {len} tokens exceeds the backend's \
+                 single-prefill limit of {max}"
+            ),
+            P3Error::EmptyPrompt => write!(f, "prompt has no tokens"),
+            P3Error::KvCapacity { needed, capacity } => write!(
+                f,
+                "KV pool capacity exceeded: need {needed} bytes reserved, \
+                 capacity {capacity}"
+            ),
+            P3Error::DuplicateKvEntry(id) => {
+                write!(f, "request {id} already has a KV entry")
+            }
+            P3Error::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            P3Error::UnknownScheme(n) => write!(
+                f,
+                "unknown quantization scheme {n:?} (see config::scheme::all)"
+            ),
+            P3Error::UnknownSystem(n) => write!(
+                f,
+                "unknown accelerator system {n:?} (see accel::all_systems)"
+            ),
+            P3Error::UnknownModel(n) => write!(f, "unknown model {n:?}"),
+            P3Error::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            P3Error::InvalidFlag { flag, value } => {
+                write!(f, "flag --{flag}: malformed value {value:?}")
+            }
+            P3Error::Parse(m) => write!(f, "parse: {m}"),
+            P3Error::Serve(m) => write!(f, "serve: {m}"),
+            P3Error::Eval(m) => write!(f, "eval: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for P3Error {}
+
+impl From<std::num::ParseIntError> for P3Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        P3Error::Parse(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for P3Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        P3Error::Parse(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = P3Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_actionable() {
+        let e = P3Error::PromptTooLong { len: 100, max: 64 };
+        let s = e.to_string();
+        assert!(s.contains("100") && s.contains("64"), "{s}");
+        let e = P3Error::InvalidFlag { flag: "batch".into(), value: "x".into() };
+        assert!(e.to_string().contains("--batch"));
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert!(matches!(parse("zz"), Err(P3Error::Parse(_))));
+        assert_eq!(parse("7").unwrap(), 7);
+    }
+}

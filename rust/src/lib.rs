@@ -1,15 +1,26 @@
 //! P3-LLM: an integrated NPU-PIM accelerator for edge LLM inference
 //! using hybrid numerical formats -- reproduction library.
 //!
-//! Layers (see DESIGN.md):
+//! Layers (see DESIGN.md for the full map):
 //! * `quant` -- bit-exact hybrid numerical formats (Section IV)
 //! * `pcu` -- functional model of the low-precision PIM compute unit
 //! * `config`/`workload`/`sim`/`accel`/`area` -- the cycle-level
 //!   evaluation substrate behind every table and figure (Section VI)
-//! * `coordinator`/`runtime` -- the serving system: request router,
-//!   KV-cache manager, NPU/PIM operator mapper, PJRT execution of the
-//!   AOT-compiled model graphs (python never runs at inference time)
-//! * `report`/`testutil`/`cli` -- harness utilities
+//! * `coordinator` -- the serving system: request router, continuous
+//!   batcher, quantized KV-cache pool, online NPU/PIM operator mapper,
+//!   and the [`Engine`] driving a pluggable [`ExecBackend`]:
+//!   `PjrtBackend` (real numerics over AOT-compiled graphs) or
+//!   `SimBackend` (the `accel` cost model advancing simulated time,
+//!   for batch-64 / long-context serving experiments with no
+//!   artifacts)
+//! * `runtime` -- artifact registry, weight loaders, PJRT execution
+//!   (python never runs at inference time)
+//! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
+//!
+//! Public entry points: build an engine with [`EngineBuilder`], submit
+//! prompts, poll/stream per request, and read [`Metrics`] (TTFT and
+//! per-token latency percentiles).  Every fallible public API returns
+//! [`Result`]`<_, `[`P3Error`]`>`.
 
 pub mod accel;
 pub mod area;
@@ -17,6 +28,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod pcu;
 pub mod quant;
 pub mod report;
@@ -24,6 +36,12 @@ pub mod runtime;
 pub mod sim;
 pub mod testutil;
 pub mod workload;
+
+pub use coordinator::{
+    BackendKind, Engine, EngineBuilder, ExecBackend, Metrics, Percentiles,
+    RequestId, RequestStatus,
+};
+pub use error::{P3Error, Result};
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

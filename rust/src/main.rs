@@ -1,14 +1,16 @@
 //! p3llm -- leader binary: serve / eval / simulate / report.
 //!
-//! Everything runs from AOT artifacts (see `make artifacts`); python is
-//! never on the request path.
-
-use anyhow::{anyhow, Result};
+//! `serve` runs the unified engine on either execution backend
+//! (`--backend pjrt` for real numerics from AOT artifacts, `--backend
+//! sim` for the NPU-PIM cost model: any model, any batch, no
+//! artifacts); `simulate` reuses the same engine under each modeled
+//! system.  Python is never on the request path.
 
 use p3llm::accel::Accel;
 use p3llm::cli::Args;
 use p3llm::config::llm;
-use p3llm::coordinator::{Engine, EngineConfig};
+use p3llm::coordinator::{Engine, EngineBuilder, Metrics};
+use p3llm::error::{P3Error, Result};
 use p3llm::report::{f2, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
 
@@ -16,13 +18,18 @@ const USAGE: &str = "\
 p3llm <command> [options]
 
 commands:
-  serve      run the edge serving demo on the tiny shipped model
-             --requests N --max-new N --batch {1,2,4,8} --fp16 --device-weights
+  serve      run the serving engine end-to-end
+             --backend {pjrt,sim}   execution substrate (default pjrt)
+             --requests N --max-new N --batch N
+             pjrt: --fp16 --device-weights  (tiny model, needs artifacts)
+             sim:  --model NAME --system NAME --scheme NAME
+                   --prompt-len N --ctx N --kv-cap BYTES
   eval       perplexity of a configured quantization variant
              --config NAME --corpus {wiki,c4} --blocks N  (see evalcfg.tsv)
   list-eval  list configured accuracy variants
-  simulate   decode latency on the modeled NPU-PIM systems
-             --model NAME --batch N --ctx N
+  simulate   decode latency on the modeled NPU-PIM systems, plus a
+             full serving-loop run of the chosen system
+             --model NAME --batch N --ctx N --system NAME
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -44,7 +51,7 @@ fn main() {
         }
     };
     if let Err(e) = r {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -53,20 +60,34 @@ fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts").to_string()
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = EngineConfig {
-        quantized: !args.has("fp16"),
-        max_batch: args.get_usize("batch", 8),
-        device_weights: args.has("device-weights"),
-        ..Default::default()
-    };
-    let n_requests = args.get_usize("requests", 8);
-    let max_new = args.get_usize("max-new", 48);
-    let mut engine = Engine::new(&artifacts_dir(args), cfg)?;
+fn print_metrics(m: &Metrics) {
     println!(
-        "serving {n_requests} requests on {} (quantized={})",
-        engine.model.name, engine.cfg.quantized
+        "completed={} steps={} tokens={} decode_tok/s={:.1} wall={:.1}ms \
+         (backend={}, {} clock)",
+        m.completed,
+        m.decode_steps,
+        m.tokens_out,
+        m.tokens_per_sec(),
+        m.wall_ms,
+        m.backend,
+        if m.backend == "sim" { "simulated" } else { "wall" },
     );
+    println!(
+        "TTFT ms:      mean={:.2} p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+        m.ttft_ms.mean, m.ttft_ms.p50, m.ttft_ms.p95, m.ttft_ms.p99, m.ttft_ms.max
+    );
+    println!(
+        "per-token ms: mean={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
+        m.per_token_ms.mean,
+        m.per_token_ms.p50,
+        m.per_token_ms.p95,
+        m.per_token_ms.p99,
+        m.per_token_ms.max
+    );
+}
+
+/// Drive a built engine through a batch of requests to completion.
+fn drive(engine: &mut Engine, n_requests: usize, max_new: usize, prompt_len: usize) -> Result<Metrics> {
     let prompts = [
         "in 980 , aldora",
         "the kettle works",
@@ -74,20 +95,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "celund is the capital of",
     ];
     for i in 0..n_requests {
-        let p = prompts[i % prompts.len()];
-        let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
-        engine.submit(toks, max_new);
+        let toks: Vec<i32> = if prompt_len > 0 {
+            // synthetic prompt of the requested length (sim workloads)
+            (0..prompt_len).map(|t| ((i * 31 + t * 7) % 251) as i32).collect()
+        } else {
+            prompts[i % prompts.len()].bytes().map(|b| b as i32).collect()
+        };
+        engine.submit(toks, max_new)?;
     }
-    let stats = engine.run_to_completion()?;
+    engine.run_to_completion()
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let backend = args.get_or("backend", "pjrt").to_ascii_lowercase();
+    let n_requests = args.get_usize("requests", 8)?;
+    let max_new = args.get_usize("max-new", 48)?;
+    let mut b = EngineBuilder::backend(&backend)?;
+    match backend.as_str() {
+        "pjrt" => {
+            b = b
+                .artifacts_dir(&artifacts_dir(args))
+                .max_batch(args.get_usize("batch", 8)?)
+                .scheme(if args.has("fp16") { "fp16" } else { "p3llm" })
+                .device_weights(args.has("device-weights"));
+        }
+        _ => {
+            b = b
+                .model(args.get_or("model", "tiny-1M"))
+                .system(args.get_or("system", "P3-LLM"))
+                .max_batch(args.get_usize("batch", 8)?)
+                .kv_capacity(args.get_usize("kv-cap", 64 << 20)?);
+            if let Some(s) = args.get("scheme") {
+                b = b.scheme(s);
+            }
+            if args.get("ctx").is_some() {
+                b = b.ctx_limit(args.get_usize("ctx", 1024)?);
+            }
+        }
+    }
+    let mut engine = b.build()?;
+    let prompt_len = match backend.as_str() {
+        "pjrt" => 0,
+        _ => args.get_usize("prompt-len", 16)?,
+    };
     println!(
-        "completed={} steps={} tokens={} decode_tok/s={:.1} mean_ttft={:.1}ms wall={:.0}ms",
-        stats.completed,
-        stats.decode_steps,
-        stats.tokens_out,
-        stats.tokens_per_sec(),
-        stats.mean_ttft_ms(),
-        stats.wall_ms
+        "serving {n_requests} requests on {} via {} backend",
+        engine.model().name,
+        engine.backend_name()
     );
+    let metrics = drive(&mut engine, n_requests, max_new, prompt_len)?;
+    print_metrics(&metrics);
+    if let Some(m) = engine.mapping_summary() {
+        println!(
+            "operator mapping (last step): {} NPU ops, {} PIM ops, {} PIM commands",
+            m.npu_ops, m.pim_ops, m.pim_commands
+        );
+    }
     Ok(())
 }
 
@@ -97,12 +160,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let ev = Evaluator::new(&rt)?;
     let cfgs = eval_configs(&rt.artifacts.dir)?;
     let name = args.get_or("config", "fp16");
-    let cfg = cfgs
-        .iter()
-        .find(|c| c.name == name)
-        .ok_or_else(|| anyhow!("unknown config {name}; try list-eval"))?;
+    let cfg = cfgs.iter().find(|c| c.name == name).ok_or_else(|| {
+        P3Error::Eval(format!("unknown config {name}; try list-eval"))
+    })?;
     let corpus = args.get_or("corpus", "wiki");
-    let blocks = args.get_usize("blocks", 8);
+    let blocks = args.get_usize("blocks", 8)?;
     // --set kv_bits=2,a_bits=8 style scalar overrides
     let overrides: Vec<(String, f32)> = args
         .get_or("set", "")
@@ -137,10 +199,11 @@ fn cmd_list_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let model = llm::by_name(args.get_or("model", "Llama-3.1-8B"))
-        .ok_or_else(|| anyhow!("unknown model"))?;
-    let bs = args.get_usize("batch", 1);
-    let ctx = args.get_usize("ctx", 4096);
+    let model_name = args.get_or("model", "Llama-3.1-8B");
+    let model = llm::by_name(model_name)
+        .ok_or_else(|| P3Error::UnknownModel(model_name.into()))?;
+    let bs = args.get_usize("batch", 1)?;
+    let ctx = args.get_usize("ctx", 4096)?;
     let mut t = Table::new(
         format!("{} decode step, bs={bs}, ctx={ctx}", model.name),
         &["system", "attn ms", "linear ms", "total ms", "tok/s", "energy mJ"],
@@ -163,5 +226,40 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+
+    // the per-step table above is open-loop; this closes the loop by
+    // running the *same serving engine* as `serve` on the sim backend
+    let system = args.get_or("system", "P3-LLM");
+    let n_requests = args.get_usize("requests", 4 * bs.max(1))?;
+    let max_new = args.get_usize("max-new", 32)?;
+    let ctx_limit = ctx.min(model.max_ctx).max(64);
+    // worst-case packed reservation for the chosen batch
+    let per_req = p3llm::coordinator::KvLayout {
+        layers: model.layers,
+        kv_dim: model.kv_dim(),
+        head_dim: model.head_dim,
+        max_ctx: ctx_limit,
+    }
+    .bytes_per_request();
+    let mut engine = EngineBuilder::sim()
+        .model(model_name)
+        .system(system)
+        .max_batch(bs.max(1))
+        .ctx_limit(ctx_limit)
+        .kv_capacity(per_req * (bs.max(1) + 1))
+        .build()?;
+    println!(
+        "serving-loop view ({} on {}, continuous batching):",
+        engine.model().name,
+        system
+    );
+    let metrics = drive(&mut engine, n_requests, max_new, 16)?;
+    print_metrics(&metrics);
+    if let Some(m) = engine.mapping_summary() {
+        println!(
+            "operator mapping (last step): {} NPU ops, {} PIM ops, {} PIM commands",
+            m.npu_ops, m.pim_ops, m.pim_commands
+        );
+    }
     Ok(())
 }

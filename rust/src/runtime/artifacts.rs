@@ -1,5 +1,6 @@
 //! Artifact registry + PJRT execution (the `xla` crate wrapping the
-//! PJRT C API; see /opt/xla-example for the reference wiring).
+//! PJRT C API; the offline build links the vendored stub in
+//! `rust/vendor/xla` -- see DESIGN.md).
 //!
 //! `manifest.tsv` (written by `python -m compile.aot`) lists every HLO
 //! graph with its input signature; graphs are compiled once per process
@@ -11,7 +12,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{P3Error, Result};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -26,7 +27,7 @@ impl DType {
             "f32" => DType::F32,
             "i32" => DType::I32,
             "u8" => DType::U8,
-            _ => bail!("unknown dtype {s}"),
+            _ => return Err(P3Error::Parse(format!("unknown dtype {s}"))),
         })
     }
 
@@ -76,8 +77,11 @@ impl Artifacts {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest).with_context(|| {
-            format!("reading {manifest:?} (run `make artifacts`)")
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            P3Error::Io {
+                path: format!("{manifest:?}"),
+                msg: format!("{e} (run `make artifacts`)"),
+            }
         })?;
         let mut graphs = HashMap::new();
         let mut data = HashMap::new();
@@ -95,7 +99,9 @@ impl Artifacts {
                         .map(|spec| {
                             let p: Vec<&str> = spec.split(':').collect();
                             if p.len() != 3 {
-                                bail!("bad arg spec {spec}");
+                                return Err(P3Error::Parse(format!(
+                                    "bad arg spec {spec}"
+                                )));
                             }
                             let dims = if p[1].is_empty() {
                                 vec![]
@@ -132,13 +138,13 @@ impl Artifacts {
     pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
         self.graphs
             .get(name)
-            .ok_or_else(|| anyhow!("graph {name} not in manifest"))
+            .ok_or_else(|| P3Error::Artifacts(format!("graph {name} not in manifest")))
     }
 
     pub fn data_path(&self, name: &str) -> Result<&PathBuf> {
         self.data
             .get(name)
-            .ok_or_else(|| anyhow!("data {name} not in manifest"))
+            .ok_or_else(|| P3Error::Artifacts(format!("data {name} not in manifest")))
     }
 }
 
@@ -153,7 +159,7 @@ pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
         dims,
         bytes,
     )
-    .map_err(|e| anyhow!("{e:?}"))
+    .map_err(P3Error::xla)
 }
 
 pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
@@ -165,7 +171,7 @@ pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
         dims,
         bytes,
     )
-    .map_err(|e| anyhow!("{e:?}"))
+    .map_err(P3Error::xla)
 }
 
 pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
@@ -174,7 +180,7 @@ pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
         dims,
         data,
     )
-    .map_err(|e| anyhow!("{e:?}"))
+    .map_err(P3Error::xla)
 }
 
 /// A compiled graph.
@@ -188,24 +194,24 @@ impl Executable {
     /// (aot.py lowers everything with return_tuple=True).
     pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         if args.len() != self.spec.args.len() {
-            bail!(
+            return Err(P3Error::Artifacts(format!(
                 "{}: expected {} args, got {}",
                 self.spec.name,
                 self.spec.args.len(),
                 args.len()
-            );
+            )));
         }
         let out =
-            self.exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("{e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+            self.exe.execute::<xla::Literal>(args).map_err(P3Error::xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(P3Error::xla)?;
+        lit.to_tuple().map_err(P3Error::xla)
     }
 
     /// Execute with device buffers (persistent-weights fast path).
     pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let out = self.exe.execute_b(args).map_err(|e| anyhow!("{e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("{e:?}"))
+        let out = self.exe.execute_b(args).map_err(P3Error::xla)?;
+        let lit = out[0][0].to_literal_sync().map_err(P3Error::xla)?;
+        lit.to_tuple().map_err(P3Error::xla)
     }
 }
 
@@ -219,7 +225,7 @@ pub struct Runtime {
 impl Runtime {
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let artifacts = Artifacts::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(P3Error::xla)?;
         Ok(Runtime { artifacts, client, cache: Mutex::new(HashMap::new()) })
     }
 
@@ -230,9 +236,9 @@ impl Runtime {
         let spec = self.artifacts.graph(name)?.clone();
         let proto =
             xla::HloModuleProto::from_text_file(spec.file.to_str().unwrap())
-                .map_err(|e| anyhow!("loading {name}: {e:?}"))?;
+                .map_err(|e| P3Error::Xla(format!("loading {name}: {e:?}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("{e:?}"))?;
+        let exe = self.client.compile(&comp).map_err(P3Error::xla)?;
         let arc = Arc::new(Executable { spec, exe });
         self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
         Ok(arc)
@@ -244,15 +250,15 @@ impl Runtime {
         let devices = self.client.addressable_devices();
         self.client
             .buffer_from_host_literal(Some(&devices[0]), lit)
-            .map_err(|e| anyhow!("{e:?}"))
+            .map_err(P3Error::xla)
     }
 }
 
 /// Read a scalar f32 out of a literal.
 pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    Ok(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0])
+    Ok(lit.to_vec::<f32>().map_err(P3Error::xla)?[0])
 }
 
 pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    lit.to_vec::<f32>().map_err(P3Error::xla)
 }

@@ -5,9 +5,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
-
 use super::artifacts::{lit_f32, lit_i32, vec_f32, Runtime};
+use crate::error::{P3Error, Result};
 use super::weights::{load_tokens, AuxBlob, EvalCfg, Weights};
 
 pub const EVAL_B: usize = 8;
@@ -46,7 +45,7 @@ impl<'a> Evaluator<'a> {
         if p.exists() {
             return Ok(p);
         }
-        Err(anyhow!("weights.tsv missing from artifacts"))
+        Err(P3Error::Artifacts("weights.tsv missing from artifacts".into()))
     }
 
     pub fn load_weights(&self, variant: &str) -> Result<Weights> {
@@ -120,7 +119,7 @@ impl<'a> Evaluator<'a> {
         let tokens = self.load_corpus(corpus, "eval")?;
         let blks = blocks(&tokens, max_blocks);
         if blks.is_empty() {
-            return Err(anyhow!("corpus {corpus} too small"));
+            return Err(P3Error::Eval(format!("corpus {corpus} too small")));
         }
 
         // graph signature: [params sorted...] block [aux...]
@@ -176,21 +175,21 @@ pub struct EvalResult {
 
 /// xla::Literal has no Clone; round-trip through raw bytes.
 pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
-    let shape = l.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let shape = l.array_shape().map_err(P3Error::xla)?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     match shape.ty() {
         xla::ElementType::F32 => {
-            lit_f32(&dims, &l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+            lit_f32(&dims, &l.to_vec::<f32>().map_err(P3Error::xla)?)
         }
         xla::ElementType::S32 => super::artifacts::lit_i32(
             &dims,
-            &l.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            &l.to_vec::<i32>().map_err(P3Error::xla)?,
         ),
         xla::ElementType::U8 => super::artifacts::lit_u8(
             &dims,
-            &l.to_vec::<u8>().map_err(|e| anyhow!("{e:?}"))?,
+            &l.to_vec::<u8>().map_err(P3Error::xla)?,
         ),
-        t => Err(anyhow!("clone_literal: unsupported {t:?}")),
+        t => Err(P3Error::Xla(format!("clone_literal: unsupported {t:?}"))),
     }
 }
 

@@ -4,9 +4,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use super::artifacts::DType;
+use crate::error::{P3Error, Result};
 
 /// One named tensor backed by a slice of the flat weight file.
 #[derive(Debug, Clone)]
@@ -29,15 +28,16 @@ fn parse_shape(s: &str) -> Result<Vec<usize>> {
         return Ok(vec![]);
     }
     s.split('x')
-        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+        .map(|d| d.parse::<usize>().map_err(P3Error::from))
         .collect()
 }
 
 fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
-    let bytes =
-        std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let bytes = std::fs::read(path).map_err(|e| P3Error::io(path, e))?;
     if bytes.len() % 4 != 0 {
-        bail!("{path:?} not a multiple of 4 bytes");
+        return Err(P3Error::Parse(format!(
+            "{path:?} not a multiple of 4 bytes"
+        )));
     }
     Ok(bytes
         .chunks_exact(4)
@@ -60,7 +60,7 @@ impl Weights {
     pub fn load(bin: &Path, layout_tsv: &Path) -> Result<Self> {
         let flat = read_f32_file(bin)?;
         let layout = std::fs::read_to_string(layout_tsv)
-            .with_context(|| format!("reading {layout_tsv:?}"))?;
+            .map_err(|e| P3Error::io(layout_tsv, e))?;
         let mut tensors = vec![];
         let mut by_name = HashMap::new();
         for line in layout.lines().skip(1) {
@@ -72,7 +72,10 @@ impl Weights {
             let off: usize = c[2].parse()?;
             let cnt: usize = c[3].parse()?;
             if off + cnt > flat.len() {
-                bail!("{}: out of range in {bin:?}", c[0]);
+                return Err(P3Error::Parse(format!(
+                    "{}: out of range in {bin:?}",
+                    c[0]
+                )));
             }
             by_name.insert(c[0].to_string(), tensors.len());
             tensors.push(Tensor {
@@ -84,7 +87,9 @@ impl Weights {
             });
         }
         if tensors.is_empty() {
-            bail!("empty layout {layout_tsv:?}");
+            return Err(P3Error::Parse(format!(
+                "empty layout {layout_tsv:?}"
+            )));
         }
         Ok(Weights { tensors, by_name })
     }
@@ -97,8 +102,9 @@ impl Weights {
 /// Packed BitMoD weights (codes/scales/specials) for the kernel decode
 /// graphs; layout in weights_packed.tsv with per-tensor dtypes.
 pub fn load_packed(bin: &Path, layout_tsv: &Path) -> Result<Vec<Tensor>> {
-    let bytes = std::fs::read(bin).with_context(|| format!("{bin:?}"))?;
-    let layout = std::fs::read_to_string(layout_tsv)?;
+    let bytes = std::fs::read(bin).map_err(|e| P3Error::io(bin, e))?;
+    let layout = std::fs::read_to_string(layout_tsv)
+        .map_err(|e| P3Error::io(layout_tsv, e))?;
     let mut out = vec![];
     for line in layout.lines().skip(1) {
         let c: Vec<&str> = line.split('\t').collect();
@@ -119,7 +125,11 @@ pub fn load_packed(bin: &Path, layout_tsv: &Path) -> Result<Vec<Tensor>> {
                 vec![],
             ),
             DType::U8 => (vec![], chunk.to_vec()),
-            DType::I32 => bail!("unexpected i32 packed tensor"),
+            DType::I32 => {
+                return Err(P3Error::Parse(
+                    "unexpected i32 packed tensor".into(),
+                ))
+            }
         };
         out.push(Tensor {
             name: c[0].to_string(),
@@ -143,7 +153,8 @@ pub struct AuxBlob {
 impl AuxBlob {
     pub fn load(bin: &Path, layout_tsv: &Path) -> Result<Self> {
         let data = read_f32_file(bin)?;
-        let text = std::fs::read_to_string(layout_tsv)?;
+        let text = std::fs::read_to_string(layout_tsv)
+            .map_err(|e| P3Error::io(layout_tsv, e))?;
         let mut layout = vec![];
         for line in text.lines().skip(1) {
             let c: Vec<&str> = line.split('\t').collect();
@@ -159,7 +170,11 @@ impl AuxBlob {
         }
         let total: usize = layout.iter().map(|l| l.3).sum();
         if total != data.len() {
-            bail!("aux blob size {} != layout {}", data.len(), total);
+            return Err(P3Error::Parse(format!(
+                "aux blob size {} != layout {}",
+                data.len(),
+                total
+            )));
         }
         Ok(AuxBlob { layout, data })
     }
@@ -169,13 +184,15 @@ impl AuxBlob {
         for (n, _, off, cnt) in &self.layout {
             if n == name {
                 if *cnt != 1 {
-                    bail!("{name} is not a scalar");
+                    return Err(P3Error::Eval(format!(
+                        "{name} is not a scalar"
+                    )));
                 }
                 self.data[*off] = value;
                 return Ok(());
             }
         }
-        bail!("aux field {name} not found")
+        Err(P3Error::Eval(format!("aux field {name} not found")))
     }
 
     pub fn view(&self, name: &str) -> Option<(&[usize], &[f32])> {
@@ -187,7 +204,7 @@ impl AuxBlob {
 
 /// Byte-level token stream (tokens_*.bin).
 pub fn load_tokens(path: &Path) -> Result<Vec<i32>> {
-    let bytes = std::fs::read(path).with_context(|| format!("{path:?}"))?;
+    let bytes = std::fs::read(path).map_err(|e| P3Error::io(path, e))?;
     Ok(bytes.into_iter().map(|b| b as i32).collect())
 }
 
@@ -204,7 +221,8 @@ pub struct EvalCfg {
 }
 
 pub fn load_evalcfg(path: &Path) -> Result<Vec<EvalCfg>> {
-    let text = std::fs::read_to_string(path)?;
+    let text =
+        std::fs::read_to_string(path).map_err(|e| P3Error::io(path, e))?;
     let mut out = vec![];
     for line in text.lines().skip(1) {
         let c: Vec<&str> = line.split('\t').collect();
@@ -215,7 +233,9 @@ pub fn load_evalcfg(path: &Path) -> Result<Vec<EvalCfg>> {
             .split(',')
             .filter(|s| !s.is_empty())
             .map(|kv| {
-                let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("{kv}"))?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| P3Error::Parse(format!("{kv}")))?;
                 Ok((k.to_string(), v.parse::<f32>()?))
             })
             .collect::<Result<Vec<_>>>()?;

@@ -3,8 +3,8 @@
 //! eval-driver consistency.  Skipped gracefully when artifacts are
 //! missing (run `make artifacts`).
 
-use p3llm::coordinator::{Engine, EngineConfig};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+use p3llm::EngineBuilder;
 
 fn artifacts() -> Option<String> {
     let dir =
@@ -73,21 +73,22 @@ fn kernel_gemv_artifact_matches_rust_reference() {
 #[test]
 fn serve_fp16_and_quantized_complete() {
     let Some(dir) = artifacts() else { return };
-    for quantized in [false, true] {
-        let mut eng = Engine::new(
-            &dir,
-            EngineConfig { quantized, max_batch: 4, ..Default::default() },
-        )
-        .unwrap();
+    for scheme in ["fp16", "p3llm"] {
+        let mut eng = EngineBuilder::pjrt(&dir)
+            .scheme(scheme)
+            .max_batch(4)
+            .build()
+            .unwrap();
         for i in 0..5 {
-            eng.submit(vec![104, 101, 108 + i], 6);
+            eng.submit(vec![104, 101, 108 + i], 6).unwrap();
         }
-        let stats = eng.run_to_completion().unwrap();
-        assert_eq!(stats.completed, 5);
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.completed, 5);
         // the first token of each request is emitted by prefill; the
         // remaining max_new-1 by decode steps
-        assert_eq!(stats.tokens_out, 5 * (6 - 1));
-        assert!(stats.ttft_ms.len() == 5);
+        assert_eq!(m.tokens_out, 5 * (6 - 1));
+        assert_eq!(m.ttft_ms.count, 5);
+        assert!(m.ttft_ms.p50 <= m.ttft_ms.p99);
     }
 }
 
@@ -101,19 +102,19 @@ fn serve_deterministic_and_valid() {
     // in examples/edge_serve.rs and the tab04 bench.)
     let Some(dir) = artifacts() else { return };
     let prompt: Vec<i32> = "the kettle works".bytes().map(|b| b as i32).collect();
-    for quantized in [false, true] {
+    for scheme in ["fp16", "p3llm"] {
         let mut outs = vec![];
         for _ in 0..2 {
-            let mut eng = Engine::new(
-                &dir,
-                EngineConfig { quantized, max_batch: 1, ..Default::default() },
-            )
-            .unwrap();
-            let id = eng.submit(prompt.clone(), 12);
+            let mut eng = EngineBuilder::pjrt(&dir)
+                .scheme(scheme)
+                .max_batch(1)
+                .build()
+                .unwrap();
+            let id = eng.submit(prompt.clone(), 12).unwrap();
             eng.run_to_completion().unwrap();
             outs.push(eng.request(id).unwrap().generated.clone());
         }
-        assert_eq!(outs[0], outs[1], "nondeterministic (quantized={quantized})");
+        assert_eq!(outs[0], outs[1], "nondeterministic (scheme={scheme})");
         assert!(outs[0].iter().all(|&t| (0..256).contains(&t)));
     }
 }
@@ -124,17 +125,13 @@ fn device_weights_path_matches_literal_path() {
     let prompt: Vec<i32> = "aldora".bytes().map(|b| b as i32).collect();
     let mut outs = vec![];
     for device_weights in [false, true] {
-        let mut eng = Engine::new(
-            &dir,
-            EngineConfig {
-                quantized: true,
-                max_batch: 1,
-                device_weights,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let id = eng.submit(prompt.clone(), 8);
+        let mut eng = EngineBuilder::pjrt(&dir)
+            .scheme("p3llm")
+            .max_batch(1)
+            .device_weights(device_weights)
+            .build()
+            .unwrap();
+        let id = eng.submit(prompt.clone(), 8).unwrap();
         eng.run_to_completion().unwrap();
         outs.push(eng.request(id).unwrap().generated.clone());
     }

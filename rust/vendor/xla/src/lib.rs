@@ -1,0 +1,276 @@
+//! Offline stub of the `xla` PJRT bindings used by `p3llm::runtime`.
+//!
+//! The build environment has no registry access and no PJRT shared
+//! library, so this crate provides the exact API surface the runtime
+//! layer consumes.  Host-side [`Literal`] construction and inspection
+//! are fully functional (they are plain byte buffers), while anything
+//! that needs a PJRT client -- compilation, device buffers, execution
+//! -- returns [`XlaError`] with a clear message.  On a machine with the
+//! real bindings, point the workspace member `rust/vendor/xla` at them
+//! (or use a `[patch]` section); no `p3llm` source changes are needed.
+//! The `SimBackend` serving path never touches this crate's runtime
+//! half, so the full engine lifecycle works against the stub.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error enum well enough for
+/// `{e:?}` formatting at the call sites.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn no_pjrt<T>() -> Result<T> {
+    Err(XlaError(
+        "PJRT runtime unavailable: p3llm was built against the offline \
+         xla stub (rust/vendor/xla). Swap in the real bindings to run \
+         AOT graphs; the sim backend works without them."
+            .to_string(),
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Element types a [`Literal`] can be viewed as from host code.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn from_le_slice(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_slice(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_slice(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le_slice(b: &[u8]) -> Self {
+        b[0]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side tensor: shape + little-endian bytes.  Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product::<usize>().max(1);
+        if elems * ty.byte_size() != data.len() {
+            return Err(XlaError(format!(
+                "literal shape {dims:?} x {ty:?} wants {} bytes, got {}",
+                elems * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(XlaError(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(self.ty.byte_size())
+            .map(T::from_le_slice)
+            .collect())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            ty: self.ty,
+            dims: self.dims.iter().map(|&d| d as i64).collect(),
+        })
+    }
+
+    /// Real literals returned by tupled executables decompose into
+    /// their leaves; stub literals are never tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        no_pjrt()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtDevice;
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_pjrt()
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        no_pjrt()
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_pjrt()
+    }
+
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_pjrt()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The stub cannot create a client: the serving engine's PJRT
+    /// backend fails fast here with an actionable message.
+    pub fn cpu() -> Result<PjRtClient> {
+        no_pjrt()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        no_pjrt()
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        vec![]
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        no_pjrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn runtime_surface_fails_fast() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
