@@ -34,4 +34,20 @@ echo "ci: tier-1 build"
 cargo build --release
 echo "ci: tier-1 tests"
 cargo test -q
+
+# Fast closed-loop serving gate: a tiny Poisson scenario through the
+# real engine must report nonzero goodput (the binary enforces that
+# under --smoke) and be bit-identical across runs under a fixed seed.
+echo "ci: loadtest smoke"
+S1=$(cargo run --release --quiet -- loadtest --smoke --seed 7)
+S2=$(cargo run --release --quiet -- loadtest --smoke --seed 7)
+if [ "$S1" != "$S2" ]; then
+    echo "ci: loadtest smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$S1" | grep -q "goodput"; then
+    echo "ci: loadtest smoke output missing goodput columns" >&2
+    exit 1
+fi
+echo "ci: loadtest smoke OK"
 echo "ci: PASS"

@@ -1,0 +1,54 @@
+//! Programmatic tour of the traffic subsystem: run every named
+//! scenario on P3-LLM and one custom trace-replay workload, printing
+//! goodput / SLO attainment per scenario.  Equivalent CLI:
+//! `cargo run --release -- loadtest --system P3-LLM --seed 7`.
+
+use p3llm::report::{f2, Table};
+use p3llm::traffic::{
+    all_scenarios, parse_trace_tsv, LoadRunner, RequestMix, SloSpec,
+};
+
+fn main() -> p3llm::Result<()> {
+    let seed = 7u64;
+    let mut t = Table::new(
+        "traffic scenarios on P3-LLM",
+        &["scenario", "done", "SLO %", "goodput tok/s", "p95 TTFT ms", "p95 queue ms"],
+    );
+    for sc in all_scenarios() {
+        let mut eng = sc.engine("P3-LLM", None)?;
+        let out = sc.runner(seed).run(&mut eng)?;
+        let r = out.report;
+        t.row(vec![
+            sc.name.into(),
+            format!("{}/{}", r.completed, r.offered),
+            f2(r.slo_attainment * 100.0),
+            f2(r.goodput_tok_s),
+            f2(r.ttft_ms.p95),
+            f2(r.queue_delay_ms.p95),
+        ]);
+    }
+
+    // trace replay: a hand-written arrival trace (ms offsets) through
+    // the smoke engine shape -- the `loadtest --trace FILE` path
+    let trace = parse_trace_tsv("# ms\n0\n5\n6\n7\n120\n125\n300\n")?;
+    let sc = p3llm::traffic::scenario_by_name("smoke").unwrap();
+    let mut eng = sc.engine("P3-LLM", None)?;
+    let runner = LoadRunner::new(
+        &trace,
+        &RequestMix::tiny(),
+        SloSpec::chatbot(),
+        7,
+        seed,
+    );
+    let out = runner.run(&mut eng)?;
+    t.row(vec![
+        "trace-replay".into(),
+        format!("{}/{}", out.report.completed, out.report.offered),
+        f2(out.report.slo_attainment * 100.0),
+        f2(out.report.goodput_tok_s),
+        f2(out.report.ttft_ms.p95),
+        f2(out.report.queue_delay_ms.p95),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -13,7 +13,7 @@ use crate::config::accel::{PcuConfig, PimConfig, SystemConfig};
 use crate::config::llm::{LlmConfig, RopeStage};
 use crate::config::scheme::QuantScheme;
 use crate::sim::{npu, pim::PimGemm, Cost};
-use crate::workload::{decode_trace, Op, OpClass, Operand};
+use crate::workload::{decode_trace, prefill_trace, Op, OpClass, Operand};
 
 /// Per-class cost of one decode step.
 #[derive(Debug, Clone, Copy, Default)]
@@ -252,6 +252,22 @@ impl Accel {
     pub fn decode_tokens_per_sec(&self, model: &LlmConfig, bs: usize, ctx: usize) -> f64 {
         let ns = self.decode_step(model, bs, ctx).total_ns();
         bs as f64 / (ns * 1e-9)
+    }
+
+    /// Prefill latency (ms) of one request over `n_tokens` prompt
+    /// tokens.  Prefill is always NPU territory -- compute-bound GEMM
+    /// (Section II) -- regardless of the PIM configuration.
+    pub fn prefill_ms(&self, model: &LlmConfig, n_tokens: usize) -> f64 {
+        let mut ns = 0.0;
+        for op in prefill_trace(model, 1, n_tokens) {
+            ns += match &op {
+                Op::Vector { elems, .. } => {
+                    npu::vector(&self.system.npu, *elems).ns
+                }
+                Op::Gemm { .. } => self.npu_cost(&op).ns,
+            };
+        }
+        ns / 1e6
     }
 }
 

@@ -69,6 +69,17 @@ impl Args {
         }
     }
 
+    /// u64 flag (seeds): absent -> default; malformed -> error.
+    pub fn get_u64(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| P3Error::InvalidFlag {
+                flag: k.to_string(),
+                value: v.to_string(),
+            }),
+        }
+    }
+
     /// Float flag: absent -> default; present-but-malformed -> error.
     pub fn get_f64(&self, k: &str, default: f64) -> Result<f64> {
         match self.get(k) {
@@ -108,7 +119,19 @@ mod tests {
         let a = parse("eval");
         assert_eq!(a.get_or("corpus", "wiki"), "wiki");
         assert_eq!(a.get_f64("kv_bits", 4.0).unwrap(), 4.0);
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn u64_seeds_parse_and_reject() {
+        let a = parse("loadtest --seed 18446744073709551615");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), u64::MAX);
+        let b = parse("loadtest --seed -1");
+        assert!(matches!(
+            b.get_u64("seed", 0),
+            Err(P3Error::InvalidFlag { .. })
+        ));
     }
 
     #[test]

@@ -107,6 +107,12 @@ pub trait ExecBackend {
     /// for PJRT, accumulated simulated time for sim.
     fn now_ms(&self) -> f64;
 
+    /// Fast-forward the clock to absolute `ms` (closed-loop load
+    /// generation jumps over idle gaps between arrivals).  Simulated
+    /// clocks advance; wall clocks cannot and default to a no-op --
+    /// callers must tolerate `now_ms()` staying behind `ms`.
+    fn advance_to(&mut self, _ms: f64) {}
+
     /// NPU/PIM operator-mapping summary of the most recent decode step
     /// (cost-model backends only).
     fn mapping_summary(&self) -> Option<MapSummary> {

@@ -13,7 +13,6 @@ pub mod kvcache;
 pub mod mapper;
 pub mod pjrt;
 pub mod request;
-pub mod scheduler;
 pub mod serve;
 pub mod simbackend;
 

@@ -40,6 +40,8 @@ pub struct Request {
     pub pos: usize,
     /// engine-clock timestamps (ms)
     pub submitted_ms: f64,
+    /// when prefill began (queueing delay = this - submitted)
+    pub prefill_start_ms: Option<f64>,
     pub first_token_ms: Option<f64>,
     pub finished_ms: Option<f64>,
     /// streaming cursor: tokens before this index were already drained
@@ -57,6 +59,7 @@ impl Request {
             generated: vec![],
             pos: 0,
             submitted_ms: now_ms,
+            prefill_start_ms: None,
             first_token_ms: None,
             finished_ms: None,
             streamed: 0,

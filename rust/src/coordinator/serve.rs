@@ -44,12 +44,18 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Nearest-rank percentiles over the finite samples.  Well-defined
+    /// for every input: non-finite samples are dropped, an empty (or
+    /// all-dropped) series yields the all-zero default with `count`
+    /// 0, a single sample is every percentile of itself -- no NaN
+    /// propagation, no panic.
     pub fn from_samples(samples: &[f64]) -> Self {
-        if samples.is_empty() {
+        let mut xs: Vec<f64> =
+            samples.iter().copied().filter(|x| x.is_finite()).collect();
+        if xs.is_empty() {
             return Percentiles::default();
         }
-        let mut xs = samples.to_vec();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         // nearest-rank in integer math: ceil(n * pct / 100), 1-indexed
         let rank = |pct: usize| xs[(n * pct).div_ceil(100).max(1) - 1];
@@ -174,6 +180,24 @@ impl Engine {
         self.backend.name()
     }
 
+    /// Engine clock (backend-defined: wall ms for PJRT, simulated ms
+    /// for sim).  Request timestamps live on this clock.
+    pub fn now_ms(&self) -> f64 {
+        self.backend.now_ms()
+    }
+
+    /// No queued and no active requests.
+    pub fn is_idle(&self) -> bool {
+        self.batcher.idle()
+    }
+
+    /// Fast-forward the engine clock to absolute `ms` (closed-loop
+    /// load generation jumps over idle gaps between arrivals).
+    /// Wall-clock backends cannot fast-forward and ignore this.
+    pub fn advance_clock_to(&mut self, ms: f64) {
+        self.backend.advance_to(ms);
+    }
+
     /// Longest admissible prompt for this engine.
     pub fn max_prompt(&self) -> usize {
         self.backend.max_prefill().min(self.ctx_cap - 1)
@@ -229,6 +253,7 @@ impl Engine {
             .get_mut(&rid.0)
             .ok_or(P3Error::UnknownRequest(rid.0))?;
         req.state = State::Prefilling;
+        req.prefill_start_ms = Some(t0);
         let prompt = req.prompt.clone();
         let out = self.backend.prefill(&prompt)?;
         let (layers, kvd) = (self.model.layers, self.model.kv_dim());
@@ -615,6 +640,63 @@ mod tests {
         assert_eq!(single.p50, 7.0);
         assert_eq!(single.p99, 7.0);
         assert_eq!(Percentiles::from_samples(&[]).count, 0);
+    }
+
+    #[test]
+    fn percentiles_count_0_1_2_are_well_defined() {
+        // empty: the all-zero default, every field finite
+        let e = Percentiles::from_samples(&[]);
+        assert_eq!(e, Percentiles::default());
+        for v in [e.mean, e.p50, e.p95, e.p99, e.max] {
+            assert!(v.is_finite());
+        }
+        // one sample: every percentile is that sample
+        let one = Percentiles::from_samples(&[3.5]);
+        assert_eq!(one.count, 1);
+        for v in [one.mean, one.p50, one.p95, one.p99, one.max] {
+            assert_eq!(v, 3.5);
+        }
+        // two samples: nearest-rank puts p50 on the lower, the tail
+        // percentiles on the upper
+        let two = Percentiles::from_samples(&[4.0, 2.0]);
+        assert_eq!(two.count, 2);
+        assert_eq!(two.mean, 3.0);
+        assert_eq!(two.p50, 2.0);
+        assert_eq!(two.p95, 4.0);
+        assert_eq!(two.p99, 4.0);
+        assert_eq!(two.max, 4.0);
+    }
+
+    #[test]
+    fn percentiles_exact_nearest_rank_boundaries() {
+        // n = 20: rank(p) = ceil(20p/100); p50 -> 10th, p95 -> 19th,
+        // p99 -> 20th (1-indexed)
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&xs);
+        assert_eq!(p.p50, 10.0);
+        assert_eq!(p.p95, 19.0);
+        assert_eq!(p.p99, 20.0);
+        // n = 200: p99 -> 198th element = 198.0
+        let xs: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&xs);
+        assert_eq!(p.p99, 198.0);
+    }
+
+    #[test]
+    fn percentiles_drop_non_finite_samples_without_panicking() {
+        let p = Percentiles::from_samples(&[
+            f64::NAN,
+            2.0,
+            f64::INFINITY,
+            1.0,
+            f64::NEG_INFINITY,
+        ]);
+        assert_eq!(p.count, 2);
+        assert_eq!(p.p50, 1.0);
+        assert_eq!(p.max, 2.0);
+        assert!(p.mean.is_finite());
+        // all-NaN collapses to the empty default
+        assert_eq!(Percentiles::from_samples(&[f64::NAN]).count, 0);
     }
 
     #[test]

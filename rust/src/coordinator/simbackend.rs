@@ -18,7 +18,6 @@ use super::mapper::{map_decode_step, summarize, MapSummary};
 use crate::accel::Accel;
 use crate::config::llm::LlmConfig;
 use crate::coordinator::kvcache::KvPool;
-use crate::coordinator::scheduler::prefill_ms;
 use crate::error::Result;
 
 fn mix(mut x: u64) -> u64 {
@@ -94,10 +93,14 @@ impl ExecBackend for SimBackend {
         self.clock_ms
     }
 
+    fn advance_to(&mut self, ms: f64) {
+        self.clock_ms = self.clock_ms.max(ms);
+    }
+
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
         let true_len = prompt.len().min(self.ctx_limit);
         // prefill is NPU territory (compute-bound GEMM, Section II)
-        self.clock_ms += prefill_ms(&self.accel, &self.model, true_len);
+        self.clock_ms += self.accel.prefill_ms(&self.model, true_len);
         let kvd = self.model.kv_dim();
         let layers = self.model.layers;
         let pseed = prompt

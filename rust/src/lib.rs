@@ -13,14 +13,23 @@
 //!   `SimBackend` (the `accel` cost model advancing simulated time,
 //!   for batch-64 / long-context serving experiments with no
 //!   artifacts)
+//! * `traffic` -- closed-loop load generation over the engine: seeded
+//!   arrival processes (Poisson / constant / bursty / trace replay),
+//!   named request mixes (chat, summarization, code-completion,
+//!   long-context RAG), [`SloSpec`] targets, and the [`LoadRunner`]
+//!   producing [`LoadReport`]s (goodput, SLO attainment, queueing
+//!   delay).  Scenario registry: `chat-poisson`, `chat-burst`,
+//!   `summarize-steady`, `code-complete`, `rag-long`, `smoke` -- see
+//!   `p3llm loadtest`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
 //!
 //! Public entry points: build an engine with [`EngineBuilder`], submit
 //! prompts, poll/stream per request, and read [`Metrics`] (TTFT and
-//! per-token latency percentiles).  Every fallible public API returns
-//! [`Result`]`<_, `[`P3Error`]`>`.
+//! per-token latency percentiles) -- or drive whole request streams
+//! with [`LoadRunner`] / `traffic::scenario_by_name`.  Every fallible
+//! public API returns [`Result`]`<_, `[`P3Error`]`>`.
 
 pub mod accel;
 pub mod area;
@@ -35,6 +44,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testutil;
+pub mod traffic;
 pub mod workload;
 
 pub use coordinator::{
@@ -42,6 +52,7 @@ pub use coordinator::{
     RequestId, RequestStatus,
 };
 pub use error::{P3Error, Result};
+pub use traffic::{LoadReport, LoadRunner, Scenario, SloSpec};
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

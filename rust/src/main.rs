@@ -1,10 +1,12 @@
-//! p3llm -- leader binary: serve / eval / simulate / report.
+//! p3llm -- leader binary: serve / eval / simulate / loadtest / report.
 //!
 //! `serve` runs the unified engine on either execution backend
 //! (`--backend pjrt` for real numerics from AOT artifacts, `--backend
 //! sim` for the NPU-PIM cost model: any model, any batch, no
 //! artifacts); `simulate` reuses the same engine under each modeled
-//! system.  Python is never on the request path.
+//! system; `loadtest` sweeps named traffic scenarios across systems
+//! through the closed-loop `traffic::LoadRunner`.  Python is never on
+//! the request path.
 
 use p3llm::accel::Accel;
 use p3llm::cli::Args;
@@ -13,6 +15,9 @@ use p3llm::coordinator::{Engine, EngineBuilder, Metrics};
 use p3llm::error::{P3Error, Result};
 use p3llm::report::{f2, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+use p3llm::traffic::{
+    self, ArrivalProcess, LoadReport, RequestMix, Scenario, SloSpec,
+};
 
 const USAGE: &str = "\
 p3llm <command> [options]
@@ -28,8 +33,19 @@ commands:
              --config NAME --corpus {wiki,c4} --blocks N  (see evalcfg.tsv)
   list-eval  list configured accuracy variants
   simulate   decode latency on the modeled NPU-PIM systems, plus a
-             full serving-loop run of the chosen system
-             --model NAME --batch N --ctx N --system NAME
+             closed-loop serving view of the chosen system
+             --model NAME --batch N --ctx N --system NAME --seed N
+             --requests N --max-new N --interarrival MS
+  loadtest   sweep traffic scenarios x systems through the closed-loop
+             load runner; reports goodput / SLO attainment (sim only,
+             no artifacts, bit-identical under a fixed --seed)
+             --scenario NAME[,NAME..]|all   (default all; see --list)
+             --system NAME[,NAME..]|all     (default NPU,HBM-PIM,Ecco,P3-LLM)
+             --scheme NAME --seed N (default 7)
+             --requests N --model NAME --batch N --ctx N --mix NAME
+             --trace FILE   replay arrival offsets (ms) from a TSV
+             --list   show scenarios + mixes     --save  write TSV
+             --smoke  CI gate: tiny scenario, fails on zero goodput
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -41,6 +57,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("list-eval") => cmd_list_eval(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("loadtest") => cmd_loadtest(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -97,13 +114,46 @@ fn drive(engine: &mut Engine, n_requests: usize, max_new: usize, prompt_len: usi
     for i in 0..n_requests {
         let toks: Vec<i32> = if prompt_len > 0 {
             // synthetic prompt of the requested length (sim workloads)
-            (0..prompt_len).map(|t| ((i * 31 + t * 7) % 251) as i32).collect()
+            let mut rng = p3llm::testutil::Rng::new(0xd21f ^ i as u64);
+            (0..prompt_len).map(|_| rng.usize(0, 251) as i32).collect()
         } else {
             prompts[i % prompts.len()].bytes().map(|b| b as i32).collect()
         };
         engine.submit(toks, max_new)?;
     }
     engine.run_to_completion()
+}
+
+fn print_load_report(r: &LoadReport) {
+    println!(
+        "offered={} completed={} SLO-met={} attainment={:.1}% \
+         makespan={:.1}ms",
+        r.offered,
+        r.completed,
+        r.slo_met,
+        r.slo_attainment * 100.0,
+        r.makespan_ms
+    );
+    let util = match r.utilization() {
+        Some(u) => format!("   utilization={:.1}%", u * 100.0),
+        None => String::new(),
+    };
+    println!(
+        "goodput: {:.2} req/s, {:.1} tok/s   throughput: {:.1} tok/s   \
+         decode-busy: {:.1} tok/s{util}",
+        r.goodput_req_s, r.goodput_tok_s, r.throughput_tok_s, r.busy_tok_s
+    );
+    println!(
+        "TTFT ms:  mean={:.2} p50={:.2} p95={:.2} p99={:.2}",
+        r.ttft_ms.mean, r.ttft_ms.p50, r.ttft_ms.p95, r.ttft_ms.p99
+    );
+    println!(
+        "queue ms: mean={:.2} p95={:.2}   TPOT ms: mean={:.3} p95={:.3}",
+        r.queue_delay_ms.mean,
+        r.queue_delay_ms.p95,
+        r.tpot_ms.mean,
+        r.tpot_ms.p95
+    );
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -227,39 +277,221 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     t.print();
 
-    // the per-step table above is open-loop; this closes the loop by
-    // running the *same serving engine* as `serve` on the sim backend
+    // the per-step table above is open-loop; the view below closes
+    // the loop through the one serving timeline implementation
+    // (traffic::LoadRunner driving the same engine as `serve`)
     let system = args.get_or("system", "P3-LLM");
-    let n_requests = args.get_usize("requests", 4 * bs.max(1))?;
-    let max_new = args.get_usize("max-new", 32)?;
-    let ctx_limit = ctx.min(model.max_ctx).max(64);
-    // worst-case packed reservation for the chosen batch
-    let per_req = p3llm::coordinator::KvLayout {
-        layers: model.layers,
-        kv_dim: model.kv_dim(),
-        head_dim: model.head_dim,
-        max_ctx: ctx_limit,
+    let seed = args.get_u64("seed", 7)?;
+    // --max-new pins the output length the chat mix would otherwise draw
+    let mut mix = RequestMix::chat();
+    if args.get("max-new").is_some() {
+        let n = args.get_usize("max-new", 32)?.max(1);
+        mix.min_output = n;
+        mix.max_output = n;
     }
-    .bytes_per_request();
-    let mut engine = EngineBuilder::sim()
-        .model(model_name)
-        .system(system)
-        .max_batch(bs.max(1))
-        .ctx_limit(ctx_limit)
-        .kv_capacity(per_req * (bs.max(1) + 1))
-        .build()?;
+    let sc = Scenario {
+        name: "simulate",
+        desc: "closed-loop serving view of the simulate subcommand",
+        model: model.name,
+        arrival: ArrivalProcess::Poisson {
+            mean_interarrival_ms: args.get_f64("interarrival", 150.0)?,
+        },
+        mix,
+        slo: SloSpec::chatbot(),
+        n_requests: args.get_usize("requests", 4 * bs.max(1))?,
+        max_batch: bs.max(1),
+        ctx_limit: ctx.min(model.max_ctx).max(64),
+        kv_slots: bs.max(1) + 2,
+    };
+    let mut engine = sc.engine(system, None)?;
     println!(
-        "serving-loop view ({} on {}, continuous batching):",
-        engine.model().name,
-        system
+        "closed-loop serving view ({} on {system}, chat mix, Poisson \
+         arrivals, seed {seed}):",
+        engine.model().name
     );
-    let metrics = drive(&mut engine, n_requests, max_new, 16)?;
-    print_metrics(&metrics);
+    let out = sc
+        .runner(seed)
+        .run_with_saturation(&mut engine, sc.saturation_tok_s(system))?;
+    print_load_report(&out.report);
     if let Some(m) = engine.mapping_summary() {
         println!(
             "operator mapping (last step): {} NPU ops, {} PIM ops, {} PIM commands",
             m.npu_ops, m.pim_ops, m.pim_commands
         );
+    }
+    Ok(())
+}
+
+/// Resolve `--scenario` / `--system` selections and per-flag scenario
+/// overrides, then sweep scenario x system through the closed-loop
+/// runner and print/save the comparison table.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    if args.has("list") {
+        let mut t = Table::new(
+            "traffic scenarios",
+            &["name", "model", "requests", "batch", "ctx", "mix", "description"],
+        );
+        for s in traffic::all_scenarios() {
+            t.row(vec![
+                s.name.into(),
+                s.model.into(),
+                s.n_requests.to_string(),
+                s.max_batch.to_string(),
+                s.ctx_limit.to_string(),
+                s.mix.name.into(),
+                s.desc.into(),
+            ]);
+        }
+        t.print();
+        let mut m = Table::new(
+            "request mixes (--mix)",
+            &["name", "prompt range", "output range"],
+        );
+        for mx in traffic::all_mixes() {
+            m.row(vec![
+                mx.name.into(),
+                format!("{}..={}", mx.min_prompt, mx.max_prompt),
+                format!("{}..={}", mx.min_output, mx.max_output),
+            ]);
+        }
+        m.print();
+        return Ok(());
+    }
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let sc_sel = args.get_or("scenario", if smoke { "smoke" } else { "all" });
+    let mut scenarios: Vec<Scenario> = if sc_sel.eq_ignore_ascii_case("all") {
+        traffic::all_scenarios()
+            .into_iter()
+            .filter(|s| s.name != "smoke")
+            .collect()
+    } else {
+        let mut v = vec![];
+        for name in sc_sel.split(',').filter(|s| !s.is_empty()) {
+            v.push(traffic::scenario_by_name(name).ok_or_else(|| {
+                P3Error::InvalidConfig(format!(
+                    "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+                ))
+            })?);
+        }
+        v
+    };
+    if let Some(m) = args.get("model") {
+        let model =
+            llm::by_name(m).ok_or_else(|| P3Error::UnknownModel(m.into()))?;
+        for s in &mut scenarios {
+            s.model = model.name;
+        }
+    }
+    if args.get("requests").is_some() {
+        let n = args.get_usize("requests", 1)?.max(1);
+        for s in &mut scenarios {
+            s.n_requests = n;
+        }
+    }
+    if args.get("batch").is_some() {
+        let b = args.get_usize("batch", 1)?.max(1);
+        for s in &mut scenarios {
+            s.max_batch = b;
+        }
+    }
+    if args.get("ctx").is_some() {
+        let c = args.get_usize("ctx", 1024)?.max(64);
+        for s in &mut scenarios {
+            s.ctx_limit = c;
+        }
+    }
+    if let Some(name) = args.get("mix") {
+        let mix = traffic::mix_by_name(name).ok_or_else(|| {
+            P3Error::InvalidConfig(format!(
+                "unknown request mix {name:?} (see `p3llm loadtest --list`)"
+            ))
+        })?;
+        for s in &mut scenarios {
+            s.mix = mix.clone();
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        let tr = traffic::load_trace_tsv(path)?;
+        for s in &mut scenarios {
+            s.arrival = tr.clone();
+        }
+    }
+    let default_systems =
+        if smoke { "NPU,P3-LLM" } else { "NPU,HBM-PIM,Ecco,P3-LLM" };
+    let sys_sel = args.get_or("system", default_systems);
+    let systems: Vec<String> = if sys_sel.eq_ignore_ascii_case("all") {
+        p3llm::accel::all_systems()
+            .iter()
+            .map(|a| a.name.to_string())
+            .collect()
+    } else {
+        sys_sel
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    };
+    let scheme = args.get("scheme");
+
+    let mut t = Table::new(
+        format!("loadtest: scenario x system, seed {seed}"),
+        &[
+            "scenario",
+            "system",
+            "scheme",
+            "done",
+            "SLO %",
+            "goodput req/s",
+            "goodput tok/s",
+            "tok/s",
+            "p95 TTFT ms",
+            "p95 queue ms",
+            "util %",
+        ],
+    );
+    for sc in &scenarios {
+        for sys in &systems {
+            let mut engine = sc.engine(sys, scheme)?;
+            let out = sc
+                .runner(seed)
+                .run_with_saturation(&mut engine, sc.saturation_tok_s(sys))?;
+            let r = &out.report;
+            if smoke && (r.goodput_tok_s <= 0.0 || r.completed < r.offered) {
+                return Err(P3Error::Serve(format!(
+                    "smoke gate: {} on {sys}: goodput {:.2} tok/s, \
+                     {}/{} completed",
+                    sc.name, r.goodput_tok_s, r.completed, r.offered
+                )));
+            }
+            let scheme_name = match scheme {
+                Some(s) => s.to_string(),
+                None => p3llm::accel::by_name(sys)
+                    .map(|a| a.scheme.name.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            };
+            t.row(vec![
+                sc.name.into(),
+                sys.clone(),
+                scheme_name,
+                format!("{}/{}", r.completed, r.offered),
+                f2(r.slo_attainment * 100.0),
+                f2(r.goodput_req_s),
+                f2(r.goodput_tok_s),
+                f2(r.throughput_tok_s),
+                f2(r.ttft_ms.p95),
+                f2(r.queue_delay_ms.p95),
+                r.utilization()
+                    .map(|u| f2(u * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t.print();
+    if args.has("save") {
+        let dir = p3llm::benchkit::reports_dir();
+        t.save(&dir, "loadtest").map_err(|e| P3Error::io(&dir, e))?;
+        println!("saved {}", dir.join("loadtest.tsv").display());
     }
     Ok(())
 }

@@ -115,13 +115,9 @@ mod tests {
         let xq: Vec<f32> = xs.iter().map(|&v| fp8_e4m3(v)).collect();
         let inputs: [PcuInput; 4] =
             std::array::from_fn(|i| decompose_fp8(xq[i]));
-        let mut s = 5u64;
-        let mut lcg = move || {
-            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
-            ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
-        };
+        let mut rng = crate::testutil::Rng::new(5);
         let groups: [Int4Group; 16] = std::array::from_fn(|_| {
-            let w: Vec<f32> = (0..4).map(|_| lcg()).collect();
+            let w = rng.vec_f32(4, -1.0, 1.0);
             quant_group_int4(&w)
         });
         let got = pcu_tile_int4(

@@ -98,16 +98,12 @@ pub fn fake_quant_weights(w: &mut [f32], k: usize, n: usize, group: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn lcg(seed: &mut u64) -> f32 {
-        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
-        ((*seed >> 33) as f32 / (1u64 << 31) as f32) - 1.0
-    }
+    use crate::testutil::Rng;
 
     #[test]
     fn encode_decode_within_grid_error() {
-        let mut s = 42u64;
-        let w: Vec<f32> = (0..128).map(|_| lcg(&mut s) * 0.5).collect();
+        let mut rng = Rng::new(42);
+        let w = rng.vec_f32(128, -0.5, 0.5);
         let g = bitmod_encode_group(&w);
         let mut y = vec![0.0; 128];
         bitmod_decode_group(&g, &mut y);
@@ -155,9 +151,9 @@ mod tests {
 
     #[test]
     fn fake_quant_weights_layout() {
-        let mut s = 3u64;
+        let mut rng = Rng::new(3);
         let (k, n) = (256, 8);
-        let mut w: Vec<f32> = (0..k * n).map(|_| lcg(&mut s)).collect();
+        let mut w = rng.vec_f32(k * n, -1.0, 1.0);
         let orig = w.clone();
         fake_quant_weights(&mut w, k, n, 128);
         assert_ne!(w, orig);

@@ -44,16 +44,13 @@ mod tests {
     #[test]
     fn smoothing_reduces_outlier_channel_quant_error() {
         // 8 tokens x 16 channels, channel 5 is a 20x outlier
-        let mut s = 9u64;
-        let mut lcg = move || {
-            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
-            ((s >> 33) as f32 / (1u64 << 31) as f32) - 1.0
-        };
+        let mut rng = crate::testutil::Rng::new(9);
         let t = 8;
         let c = 16;
         let mut k = vec![0.0f32; t * c];
         for (i, v) in k.iter_mut().enumerate() {
-            *v = lcg() * if i % c == 5 { 20.0 } else { 1.0 };
+            *v = rng.range_f32(-1.0, 1.0)
+                * if i % c == 5 { 20.0 } else { 1.0 };
         }
         let f = smoothing_factors(&k, c);
         let direct_err: f64 = {

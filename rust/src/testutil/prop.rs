@@ -27,6 +27,11 @@ impl Rng {
         (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
     }
 
+    /// uniform in [0, 1) with 53-bit resolution
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
     /// uniform in [lo, hi)
     pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.f32() * (hi - lo)
@@ -35,6 +40,23 @@ impl Rng {
     /// roughly standard normal (sum of 12 uniforms)
     pub fn normal(&mut self) -> f32 {
         (0..12).map(|_| self.f32()).sum::<f32>() - 6.0
+    }
+
+    /// roughly standard normal in f64 (sum of 12 uniforms)
+    pub fn normal_f64(&mut self) -> f64 {
+        (0..12).map(|_| self.f64()).sum::<f64>() - 6.0
+    }
+
+    /// exponential with the given mean (> 0): inter-arrival gaps of a
+    /// Poisson process
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// log-normal with ln-space location `mu` and scale `sigma`
+    /// (median = e^mu): request prompt/output length mixes
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal_f64()).exp()
     }
 
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
@@ -108,6 +130,27 @@ mod tests {
             let u = r.usize(5, 9);
             assert!((5..9).contains(&u));
         });
+    }
+
+    #[test]
+    fn exp_and_lognormal_have_the_right_shape() {
+        let mut r = Rng::new(11);
+        let n = 20000;
+        let mean = (0..n).map(|_| r.exp(40.0)).sum::<f64>() / n as f64;
+        assert!((mean / 40.0 - 1.0).abs() < 0.05, "{mean}");
+        // all draws positive and finite
+        for _ in 0..1000 {
+            let e = r.exp(2.0);
+            assert!(e.is_finite() && e >= 0.0, "{e}");
+            let l = r.lognormal(3.0, 0.5);
+            assert!(l.is_finite() && l > 0.0, "{l}");
+        }
+        // log-normal median ~ e^mu
+        let mut xs: Vec<f64> =
+            (0..4001).map(|_| r.lognormal(3.0, 0.8)).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let med = xs[2000];
+        assert!((med / 3.0f64.exp() - 1.0).abs() < 0.15, "{med}");
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Arrival processes: when requests reach the serving engine.
+//!
+//! Every process is deterministic in (parameters, seed) -- the same
+//! `--seed` replays the exact same timeline, which is what makes
+//! `loadtest` reports diffable across systems and schemes.  Times are
+//! milliseconds on the engine clock, offsets from the run start.
+
+use crate::error::{P3Error, Result};
+use crate::testutil::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps with the
+    /// given mean (the classic open-system chatbot model).
+    Poisson { mean_interarrival_ms: f64 },
+    /// Fixed inter-arrival gap (steady batch feeds, cron-style jobs).
+    Constant { interarrival_ms: f64 },
+    /// On/off bursty traffic: `burst_n` arrivals spaced `burst_gap_ms`
+    /// apart, then an idle gap of `idle_ms`, repeating.  Stresses KV
+    /// admission control and queue discipline.
+    OnOff { burst_n: usize, burst_gap_ms: f64, idle_ms: f64 },
+    /// Replay recorded arrival offsets (ms, sorted ascending), e.g.
+    /// from [`parse_trace_tsv`].  Requests beyond the trace length
+    /// repeat the trace shifted by its span.
+    Trace { arrivals_ms: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// The first `n` absolute arrival offsets (ms, non-decreasing,
+    /// first arrival at 0).  Deterministic in (self, seed); only
+    /// `Poisson` consumes randomness.
+    pub fn arrivals(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match self {
+            ArrivalProcess::Poisson { mean_interarrival_ms } => {
+                let mut rng = Rng::new(seed);
+                let mut t = 0.0f64;
+                for i in 0..n {
+                    if i > 0 {
+                        t += rng.exp(mean_interarrival_ms.max(1e-9));
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Constant { interarrival_ms } => {
+                for i in 0..n {
+                    out.push(i as f64 * interarrival_ms);
+                }
+            }
+            ArrivalProcess::OnOff { burst_n, burst_gap_ms, idle_ms } => {
+                let bn = (*burst_n).max(1);
+                let mut t = 0.0f64;
+                for i in 0..n {
+                    if i > 0 {
+                        t += if i % bn == 0 { *idle_ms } else { *burst_gap_ms };
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Trace { arrivals_ms } => {
+                if arrivals_ms.is_empty() {
+                    return vec![0.0; n];
+                }
+                let len = arrivals_ms.len();
+                let span = arrivals_ms[len - 1] - arrivals_ms[0];
+                // wrap period: trace span plus one mean gap, so the
+                // replayed copies do not collide at the seam
+                let period = span + (span / len as f64).max(1.0);
+                for i in 0..n {
+                    let lap = (i / len) as f64;
+                    out.push(
+                        arrivals_ms[i % len] - arrivals_ms[0] + lap * period,
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale every time constant by `factor` (> 1 thins the load,
+    /// < 1 intensifies it); the load-sweep knob of the SLO benches.
+    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
+        match self {
+            ArrivalProcess::Poisson { mean_interarrival_ms } => {
+                ArrivalProcess::Poisson {
+                    mean_interarrival_ms: mean_interarrival_ms * factor,
+                }
+            }
+            ArrivalProcess::Constant { interarrival_ms } => {
+                ArrivalProcess::Constant {
+                    interarrival_ms: interarrival_ms * factor,
+                }
+            }
+            ArrivalProcess::OnOff { burst_n, burst_gap_ms, idle_ms } => {
+                ArrivalProcess::OnOff {
+                    burst_n: *burst_n,
+                    burst_gap_ms: burst_gap_ms * factor,
+                    idle_ms: idle_ms * factor,
+                }
+            }
+            ArrivalProcess::Trace { arrivals_ms } => ArrivalProcess::Trace {
+                arrivals_ms: arrivals_ms.iter().map(|t| t * factor).collect(),
+            },
+        }
+    }
+}
+
+/// Parse a replay trace: one arrival offset (ms) per line, first
+/// whitespace/tab-separated field; `#` comments and blank lines are
+/// skipped.  Offsets are sorted; negative or non-finite values are
+/// typed [`P3Error::Parse`] errors.
+pub fn parse_trace_tsv(text: &str) -> Result<ArrivalProcess> {
+    let mut arrivals = vec![];
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let field = line.split_whitespace().next().unwrap_or("");
+        let v: f64 = field.parse().map_err(|_| {
+            P3Error::Parse(format!(
+                "trace line {}: malformed arrival {field:?}",
+                lineno + 1
+            ))
+        })?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(P3Error::Parse(format!(
+                "trace line {}: arrival must be finite and >= 0, got {v}",
+                lineno + 1
+            )));
+        }
+        arrivals.push(v);
+    }
+    if arrivals.is_empty() {
+        return Err(P3Error::Parse("trace has no arrivals".into()));
+    }
+    arrivals.sort_by(|a, b| a.total_cmp(b));
+    Ok(ArrivalProcess::Trace { arrivals_ms: arrivals })
+}
+
+/// [`parse_trace_tsv`] over a file on disk.
+pub fn load_trace_tsv(path: &str) -> Result<ArrivalProcess> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| P3Error::io(path, e))?;
+    parse_trace_tsv(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monotone(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn arrivals_start_at_zero_and_are_monotone() {
+        let procs = [
+            ArrivalProcess::Poisson { mean_interarrival_ms: 50.0 },
+            ArrivalProcess::Constant { interarrival_ms: 10.0 },
+            ArrivalProcess::OnOff {
+                burst_n: 4,
+                burst_gap_ms: 1.0,
+                idle_ms: 100.0,
+            },
+            ArrivalProcess::Trace { arrivals_ms: vec![0.0, 5.0, 9.0] },
+        ];
+        for p in &procs {
+            let a = p.arrivals(17, 3);
+            assert_eq!(a.len(), 17);
+            assert_eq!(a[0], 0.0, "{p:?}");
+            assert!(monotone(&a), "{p:?}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn poisson_is_seed_deterministic_with_the_right_mean() {
+        let p = ArrivalProcess::Poisson { mean_interarrival_ms: 80.0 };
+        let a = p.arrivals(400, 9);
+        let b = p.arrivals(400, 9);
+        assert_eq!(a, b);
+        let c = p.arrivals(400, 10);
+        assert_ne!(a, c);
+        // empirical mean gap within 15% of the nominal one
+        let mean = a[399] / 399.0;
+        assert!((mean / 80.0 - 1.0).abs() < 0.15, "{mean}");
+    }
+
+    #[test]
+    fn onoff_alternates_burst_and_idle() {
+        let p = ArrivalProcess::OnOff {
+            burst_n: 3,
+            burst_gap_ms: 1.0,
+            idle_ms: 50.0,
+        };
+        let a = p.arrivals(7, 0);
+        assert_eq!(a, vec![0.0, 1.0, 2.0, 52.0, 53.0, 54.0, 104.0]);
+    }
+
+    #[test]
+    fn trace_wraps_beyond_its_length() {
+        let p = ArrivalProcess::Trace { arrivals_ms: vec![10.0, 20.0, 40.0] };
+        let a = p.arrivals(6, 0);
+        // rebased to 0; wrap period = span 30 + mean gap 10 = 40
+        assert_eq!(a[..3], [0.0, 10.0, 30.0]);
+        assert_eq!(a[3..], [40.0, 50.0, 70.0]);
+    }
+
+    #[test]
+    fn parse_trace_skips_comments_sorts_and_type_errors() {
+        let p = parse_trace_tsv("# t_ms\n40\n10.5\t extra col\n\n20\n").unwrap();
+        assert_eq!(
+            p,
+            ArrivalProcess::Trace { arrivals_ms: vec![10.5, 20.0, 40.0] }
+        );
+        assert!(matches!(
+            parse_trace_tsv("abc"),
+            Err(P3Error::Parse(_))
+        ));
+        assert!(matches!(
+            parse_trace_tsv("-4"),
+            Err(P3Error::Parse(_))
+        ));
+        assert!(matches!(parse_trace_tsv("# only\n"), Err(P3Error::Parse(_))));
+    }
+
+    #[test]
+    fn scaled_stretches_time() {
+        let p = ArrivalProcess::Constant { interarrival_ms: 10.0 };
+        assert_eq!(p.scaled(2.0).arrivals(3, 0), vec![0.0, 20.0, 40.0]);
+        let t = ArrivalProcess::Trace { arrivals_ms: vec![1.0, 3.0] };
+        assert_eq!(
+            t.scaled(3.0),
+            ArrivalProcess::Trace { arrivals_ms: vec![3.0, 9.0] }
+        );
+    }
+}

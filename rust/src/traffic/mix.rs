@@ -1,0 +1,205 @@
+//! Request-mix models: how long prompts and outputs are.
+//!
+//! Serving behavior on NPU-PIM systems is dominated by length
+//! heterogeneity (prefill is compute-bound NPU work, decode is
+//! bandwidth-bound PIM work), so each named tenant class draws prompt
+//! and output token counts from a clamped log-normal -- the shape
+//! production traces consistently show.
+
+use crate::testutil::Rng;
+
+/// A named tenant class: log-normal prompt/output length model with
+/// hard clamps so samples always fit the scenario's context budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestMix {
+    pub name: &'static str,
+    /// ln-space location of the prompt length (ln of the median)
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub min_output: usize,
+    pub max_output: usize,
+}
+
+/// ln of a median token count, as an f64 literal-friendly helper.
+fn mu(median_tokens: usize) -> f64 {
+    (median_tokens as f64).ln()
+}
+
+impl RequestMix {
+    /// Interactive chat: short-to-medium prompts, medium answers.
+    pub fn chat() -> Self {
+        RequestMix {
+            name: "chat",
+            prompt_mu: mu(96),
+            prompt_sigma: 0.7,
+            output_mu: mu(64),
+            output_sigma: 0.6,
+            min_prompt: 8,
+            max_prompt: 512,
+            min_output: 4,
+            max_output: 256,
+        }
+    }
+
+    /// Summarization: long documents in, short summaries out.
+    pub fn summarization() -> Self {
+        RequestMix {
+            name: "summarization",
+            prompt_mu: mu(512),
+            prompt_sigma: 0.5,
+            output_mu: mu(48),
+            output_sigma: 0.5,
+            min_prompt: 64,
+            max_prompt: 1536,
+            min_output: 8,
+            max_output: 128,
+        }
+    }
+
+    /// Code completion: medium context, very short completions, high
+    /// arrival rates (every keystroke pause can fire one).
+    pub fn code_completion() -> Self {
+        RequestMix {
+            name: "code-completion",
+            prompt_mu: mu(192),
+            prompt_sigma: 0.8,
+            output_mu: mu(24),
+            output_sigma: 0.7,
+            min_prompt: 16,
+            max_prompt: 768,
+            min_output: 2,
+            max_output: 96,
+        }
+    }
+
+    /// Long-context RAG: retrieved passages dominate the prompt.
+    pub fn rag_long() -> Self {
+        RequestMix {
+            name: "rag-long",
+            prompt_mu: mu(1024),
+            prompt_sigma: 0.4,
+            output_mu: mu(96),
+            output_sigma: 0.5,
+            min_prompt: 256,
+            max_prompt: 1792,
+            min_output: 16,
+            max_output: 256,
+        }
+    }
+
+    /// Miniature mix for the tiny-1M model (CI smoke gate: everything
+    /// must fit a 128-token context and run in milliseconds).
+    pub fn tiny() -> Self {
+        RequestMix {
+            name: "tiny",
+            prompt_mu: mu(24),
+            prompt_sigma: 0.5,
+            output_mu: mu(12),
+            output_sigma: 0.5,
+            min_prompt: 4,
+            max_prompt: 96,
+            min_output: 2,
+            max_output: 24,
+        }
+    }
+
+    /// Draw one `(prompt_tokens, output_tokens)` pair.
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        let p = rng.lognormal(self.prompt_mu, self.prompt_sigma).round()
+            as usize;
+        let o = rng.lognormal(self.output_mu, self.output_sigma).round()
+            as usize;
+        (
+            p.clamp(self.min_prompt, self.max_prompt),
+            o.clamp(self.min_output, self.max_output),
+        )
+    }
+
+    /// Upper bound on `prompt + output` any sample can reach (the
+    /// context budget a scenario must provision).
+    pub fn max_total_tokens(&self) -> usize {
+        self.max_prompt + self.max_output
+    }
+}
+
+/// Every named mix (`loadtest --list` shows these).
+pub fn all_mixes() -> Vec<RequestMix> {
+    vec![
+        RequestMix::chat(),
+        RequestMix::summarization(),
+        RequestMix::code_completion(),
+        RequestMix::rag_long(),
+        RequestMix::tiny(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<RequestMix> {
+    all_mixes()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Runner;
+
+    #[test]
+    fn samples_respect_clamps_for_every_mix() {
+        Runner::new(16).run(|r| {
+            for m in all_mixes() {
+                let (p, o) = m.sample(r);
+                assert!(
+                    (m.min_prompt..=m.max_prompt).contains(&p),
+                    "{}: prompt {p}",
+                    m.name
+                );
+                assert!(
+                    (m.min_output..=m.max_output).contains(&o),
+                    "{}: output {o}",
+                    m.name
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mixes_are_seed_deterministic_and_heterogeneous() {
+        let m = RequestMix::chat();
+        let draw = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| m.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(1), draw(1));
+        assert_ne!(draw(1), draw(2));
+        // a log-normal mix is not constant-length
+        let a = draw(1);
+        assert!(a.iter().any(|&(p, _)| p != a[0].0));
+    }
+
+    #[test]
+    fn median_roughly_matches_mu() {
+        let m = RequestMix::summarization();
+        let mut rng = Rng::new(7);
+        let mut ps: Vec<usize> =
+            (0..801).map(|_| m.sample(&mut rng).0).collect();
+        ps.sort_unstable();
+        let med = ps[400] as f64;
+        assert!((med / 512.0 - 1.0).abs() < 0.25, "median {med}");
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(by_name("chat").unwrap().name, "chat");
+        assert_eq!(by_name("RAG-LONG").unwrap().name, "rag-long");
+        assert!(by_name("nope").is_none());
+        // names are unique
+        let names: std::collections::HashSet<_> =
+            all_mixes().iter().map(|m| m.name).collect();
+        assert_eq!(names.len(), all_mixes().len());
+    }
+}

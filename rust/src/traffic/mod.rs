@@ -1,0 +1,44 @@
+//! L3.5 traffic: closed-loop load generation and scenario evaluation
+//! over the serving engine.
+//!
+//! The paper's serving claims (Section I's chatbot TTFT SLO, the
+//! per-system speedups) need realistic request streams, not hand-fed
+//! batches.  This layer supplies them end to end:
+//!
+//! * [`ArrivalProcess`] -- seeded Poisson / constant-rate / on-off
+//!   bursty arrivals, plus TSV trace replay ([`parse_trace_tsv`]).
+//! * [`RequestMix`] -- named tenant classes (chat, summarization,
+//!   code-completion, long-context RAG) drawing prompt/output lengths
+//!   from clamped log-normals.
+//! * [`SloSpec`] / [`LoadReport`] -- TTFT + per-token targets, and the
+//!   goodput / SLO-attainment / queueing-delay / saturation report.
+//! * [`LoadRunner`] -- schedules arrivals on the backend clock and
+//!   drives the [`Engine`](crate::coordinator::Engine) closed-loop
+//!   (submit on arrival, step, retire): the one serving timeline.
+//! * [`Scenario`] -- the named registry behind `p3llm loadtest`
+//!   (`chat-poisson`, `chat-burst`, `summarize-steady`,
+//!   `code-complete`, `rag-long`, `smoke`).
+//!
+//! ```ignore
+//! let sc = traffic::scenario_by_name("chat-poisson").unwrap();
+//! let mut eng = sc.engine("P3-LLM", None)?;
+//! let out = sc.runner(7).run(&mut eng)?;
+//! println!("SLO attainment {:.1}%  goodput {:.1} tok/s",
+//!          out.report.slo_attainment * 100.0,
+//!          out.report.goodput_tok_s);
+//! ```
+//!
+//! Every run is bit-identical under a fixed `seed`: arrivals, lengths
+//! and prompt tokens all derive from `testutil::Rng` streams.
+
+pub mod arrival;
+pub mod mix;
+pub mod runner;
+pub mod scenario;
+pub mod slo;
+
+pub use arrival::{load_trace_tsv, parse_trace_tsv, ArrivalProcess};
+pub use mix::{all_mixes, by_name as mix_by_name, RequestMix};
+pub use runner::{LoadRunner, RunOutcome};
+pub use scenario::{all_scenarios, by_name as scenario_by_name, Scenario};
+pub use slo::{LoadReport, ReqRecord, SloSpec};

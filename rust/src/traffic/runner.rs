@@ -1,0 +1,261 @@
+//! The closed-loop load runner: schedules an arrival process on the
+//! backend clock and drives the *real* serving engine -- submit on
+//! arrival, step, retire -- so every latency number comes from the
+//! same batcher / KV pool / backend path production requests take.
+//!
+//! This replaces the old `coordinator::scheduler` open-loop model,
+//! which re-derived prefill/decode costs on the side and bypassed the
+//! engine entirely; there is exactly one serving timeline now.
+
+use crate::coordinator::{Engine, RequestId};
+use crate::error::{P3Error, Result};
+use crate::testutil::Rng;
+
+use super::arrival::ArrivalProcess;
+use super::mix::RequestMix;
+use super::slo::{LoadReport, ReqRecord, SloSpec};
+
+/// A fully materialized load plan: per-request arrival offsets and
+/// (prompt, output) shapes, deterministic in the construction seed.
+#[derive(Debug, Clone)]
+pub struct LoadRunner {
+    /// arrival offsets (ms, non-decreasing) relative to run start
+    pub arrivals_ms: Vec<f64>,
+    /// per-request (prompt_tokens, max_new_tokens)
+    pub shapes: Vec<(usize, usize)>,
+    pub slo: SloSpec,
+    seed: u64,
+}
+
+/// What a run produced: the aggregate [`LoadReport`] plus the raw
+/// per-request records (submission order) for tests and TSV dumps.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub report: LoadReport,
+    pub records: Vec<ReqRecord>,
+}
+
+impl LoadRunner {
+    /// Materialize `n` requests from an arrival process and a request
+    /// mix.  Arrival times and lengths draw from decoupled seed
+    /// streams so changing the mix never perturbs the timeline.
+    pub fn new(
+        arrival: &ArrivalProcess,
+        mix: &RequestMix,
+        slo: SloSpec,
+        n: usize,
+        seed: u64,
+    ) -> Self {
+        let arrivals_ms = arrival.arrivals(n, seed);
+        let mut rng = Rng::new(seed ^ 0x6d17_57a7_0123_beef);
+        let shapes = (0..n).map(|_| mix.sample(&mut rng)).collect();
+        LoadRunner { arrivals_ms, shapes, slo, seed }
+    }
+
+    /// A plan from explicit arrivals/shapes (trace-style tests).
+    pub fn from_plan(
+        arrivals_ms: Vec<f64>,
+        shapes: Vec<(usize, usize)>,
+        slo: SloSpec,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(arrivals_ms.len(), shapes.len());
+        LoadRunner { arrivals_ms, shapes, slo, seed }
+    }
+
+    fn submit_one(&self, eng: &mut Engine, i: usize) -> Result<RequestId> {
+        let (plen, max_new) = self.shapes[i];
+        // clamp to what this engine's backend/ctx can admit
+        let plen = plen.min(eng.max_prompt()).max(1);
+        let mut prng = Rng::new((self.seed ^ 0x9e37) ^ ((i as u64) << 17));
+        let vocab = eng.model().vocab.max(2);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| prng.usize(0, vocab) as i32).collect();
+        eng.submit(prompt, max_new.max(1))
+    }
+
+    /// Drive `eng` closed-loop until every offered request retires.
+    ///
+    /// Requests are submitted when the engine clock reaches their
+    /// arrival; while the engine is idle the clock fast-forwards to
+    /// the next arrival.  Simulated backends jump; wall-clock backends
+    /// cannot, so the idle engine accepts the next request early
+    /// rather than spinning (its effective arrival in the report is
+    /// then the submit instant -- latencies never go negative).
+    pub fn run(&self, eng: &mut Engine) -> Result<RunOutcome> {
+        let n = self.arrivals_ms.len();
+        let t0 = eng.now_ms();
+        let mut ids: Vec<Option<RequestId>> = vec![None; n];
+        let mut next = 0usize;
+        let mut guard = 0usize;
+        loop {
+            // admit everything due on the engine clock
+            while next < n
+                && t0 + self.arrivals_ms[next] <= eng.now_ms() + 1e-9
+            {
+                ids[next] = Some(self.submit_one(eng, next)?);
+                next += 1;
+            }
+            if !eng.is_idle() {
+                eng.step()?;
+                guard += 1;
+                if guard > 5_000_000 {
+                    return Err(P3Error::Serve(
+                        "load loop did not converge".into(),
+                    ));
+                }
+                continue;
+            }
+            if next >= n {
+                break;
+            }
+            let due = t0 + self.arrivals_ms[next];
+            eng.advance_clock_to(due);
+            if eng.now_ms() + 1e-9 < due {
+                // the clock cannot fast-forward (wall-clock backend):
+                // take the next request early rather than spinning
+                ids[next] = Some(self.submit_one(eng, next)?);
+                next += 1;
+            }
+        }
+
+        let mut records = Vec::with_capacity(n);
+        for (i, id) in ids.iter().enumerate() {
+            let id = (*id).ok_or_else(|| {
+                P3Error::Serve(format!("request {i} was never submitted"))
+            })?;
+            let req = eng
+                .request(id)
+                .ok_or(P3Error::UnknownRequest(id.0))?;
+            records.push(ReqRecord {
+                // a wall-clock backend can accept a request *before*
+                // its scheduled arrival (advance_to is a no-op there);
+                // the effective arrival is then the submit instant, so
+                // latencies never go negative
+                arrival_ms: (t0 + self.arrivals_ms[i])
+                    .min(req.submitted_ms),
+                submitted_ms: req.submitted_ms,
+                prefill_start_ms: req.prefill_start_ms,
+                first_token_ms: req.first_token_ms,
+                finished_ms: req.finished_ms,
+                prompt_len: req.prompt.len(),
+                tokens_generated: req.generated.len(),
+            });
+        }
+        let report = LoadReport::from_records(
+            &records,
+            &self.slo,
+            &eng.metrics(),
+            None,
+        );
+        Ok(RunOutcome { report, records })
+    }
+
+    /// [`run`](Self::run), attaching a modeled saturation throughput
+    /// to the report (for utilization columns).
+    pub fn run_with_saturation(
+        &self,
+        eng: &mut Engine,
+        saturation_tok_s: Option<f64>,
+    ) -> Result<RunOutcome> {
+        let mut out = self.run(eng)?;
+        out.report.saturation_tok_s = saturation_tok_s;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineBuilder;
+
+    fn tiny_engine(max_batch: usize) -> Engine {
+        EngineBuilder::sim()
+            .model("tiny-1M")
+            .max_batch(max_batch)
+            .ctx_limit(128)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn closed_loop_serves_all_and_respects_arrivals() {
+        let plan = LoadRunner::from_plan(
+            vec![0.0, 0.0, 40.0, 1000.0],
+            vec![(8, 4); 4],
+            SloSpec::chatbot(),
+            1,
+        );
+        let mut eng = tiny_engine(2);
+        let out = plan.run(&mut eng).unwrap();
+        assert_eq!(out.report.offered, 4);
+        assert_eq!(out.report.completed, 4);
+        for (r, &a) in out.records.iter().zip(&plan.arrivals_ms) {
+            // never submitted before its arrival
+            assert!(r.submitted_ms + 1e-9 >= a, "{r:?}");
+            assert!(r.finished());
+            assert!(r.ttft_ms().unwrap() > 0.0);
+            assert!(r.queue_delay_ms().unwrap() >= 0.0);
+        }
+        // the last arrival is far out: the clock fast-forwarded to it
+        assert!(out.records[3].submitted_ms >= 1000.0 - 1e-9);
+        assert!((out.records[3].submitted_ms - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn runs_are_bit_identical_under_a_seed() {
+        let mk = || {
+            LoadRunner::new(
+                &ArrivalProcess::Poisson { mean_interarrival_ms: 3.0 },
+                &RequestMix::tiny(),
+                SloSpec::chatbot(),
+                12,
+                7,
+            )
+        };
+        let a = mk().run(&mut tiny_engine(4)).unwrap();
+        let b = mk().run(&mut tiny_engine(4)).unwrap();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.report, b.report);
+        // a different seed produces a different timeline
+        let c = LoadRunner::new(
+            &ArrivalProcess::Poisson { mean_interarrival_ms: 3.0 },
+            &RequestMix::tiny(),
+            SloSpec::chatbot(),
+            12,
+            8,
+        )
+        .run(&mut tiny_engine(4))
+        .unwrap();
+        assert_ne!(a.records, c.records);
+    }
+
+    #[test]
+    fn saturating_load_raises_client_ttft() {
+        let slo = SloSpec::chatbot();
+        let mix = RequestMix::tiny();
+        let heavy = LoadRunner::new(
+            &ArrivalProcess::Poisson { mean_interarrival_ms: 0.05 },
+            &mix,
+            slo,
+            24,
+            3,
+        );
+        let calm = LoadRunner::new(
+            &ArrivalProcess::Poisson { mean_interarrival_ms: 500.0 },
+            &mix,
+            slo,
+            24,
+            3,
+        );
+        let h = heavy.run(&mut tiny_engine(2)).unwrap().report;
+        let c = calm.run(&mut tiny_engine(2)).unwrap().report;
+        assert!(
+            h.ttft_ms.mean > c.ttft_ms.mean,
+            "{} vs {}",
+            h.ttft_ms.mean,
+            c.ttft_ms.mean
+        );
+        assert!(h.queue_delay_ms.p95 > c.queue_delay_ms.p95);
+    }
+}

@@ -1,0 +1,242 @@
+//! Named serving scenarios: (arrival process, request mix, SLO,
+//! engine shape) bundles the `loadtest` CLI sweeps by name.
+//!
+//! Each scenario is sized so a full seed-deterministic run finishes in
+//! seconds on the sim backend while still exercising the regime it is
+//! named after (queueing under Poisson load, KV admission under
+//! bursts, long-context prefill pressure, ...).
+
+use crate::accel;
+use crate::config::llm;
+use crate::coordinator::{Engine, EngineBuilder, KvLayout};
+use crate::error::{P3Error, Result};
+
+use super::arrival::ArrivalProcess;
+use super::mix::RequestMix;
+use super::runner::LoadRunner;
+use super::slo::SloSpec;
+
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub desc: &'static str,
+    /// `config::llm` registry name
+    pub model: &'static str,
+    pub arrival: ArrivalProcess,
+    pub mix: RequestMix,
+    pub slo: SloSpec,
+    pub n_requests: usize,
+    pub max_batch: usize,
+    pub ctx_limit: usize,
+    /// full-context KV reservations the pool holds.  Live entries are
+    /// capped by `max_batch`, so a value above that is all headroom;
+    /// a value *below* `max_batch` makes bursts overcommit the pool
+    /// and exercises admission control (bounce + FIFO requeue).
+    pub kv_slots: usize,
+}
+
+impl Scenario {
+    /// Materialize this scenario's load plan for a seed.
+    pub fn runner(&self, seed: u64) -> LoadRunner {
+        LoadRunner::new(
+            &self.arrival,
+            &self.mix,
+            self.slo,
+            self.n_requests,
+            seed,
+        )
+    }
+
+    /// Build a sim-backend engine shaped for this scenario on the
+    /// named system, optionally overriding the quantization scheme.
+    pub fn engine(
+        &self,
+        system: &str,
+        scheme: Option<&str>,
+    ) -> Result<Engine> {
+        let model = llm::by_name(self.model)
+            .ok_or_else(|| P3Error::UnknownModel(self.model.into()))?;
+        let per_req = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: self.ctx_limit.min(model.max_ctx),
+        }
+        .bytes_per_request();
+        let mut b = EngineBuilder::sim()
+            .model(self.model)
+            .system(system)
+            .max_batch(self.max_batch)
+            .ctx_limit(self.ctx_limit.min(model.max_ctx))
+            .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)));
+        if let Some(s) = scheme {
+            b = b.scheme(s);
+        }
+        b.build()
+    }
+
+    /// Modeled peak decode throughput (tok/s) of `system` at this
+    /// scenario's batch/context -- the saturation roof `LoadReport`
+    /// utilization is measured against.
+    pub fn saturation_tok_s(&self, system: &str) -> Option<f64> {
+        let a = accel::by_name(system)?;
+        let m = llm::by_name(self.model)?;
+        let ctx = self.ctx_limit.min(m.max_ctx);
+        Some(a.decode_tokens_per_sec(&m, self.max_batch, ctx))
+    }
+}
+
+/// The named scenario registry (`loadtest --scenario NAME | all`).
+pub fn all_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "chat-poisson",
+            desc: "interactive chat, Poisson arrivals, 250 ms TTFT SLO",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 120.0 },
+            mix: RequestMix::chat(),
+            slo: SloSpec::chatbot(),
+            n_requests: 32,
+            max_batch: 8,
+            ctx_limit: 1024,
+            kv_slots: 10,
+        },
+        Scenario {
+            name: "chat-burst",
+            desc: "chat under on/off bursts (KV admission pressure)",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::OnOff {
+                burst_n: 8,
+                burst_gap_ms: 2.0,
+                idle_ms: 900.0,
+            },
+            mix: RequestMix::chat(),
+            slo: SloSpec::chatbot(),
+            n_requests: 32,
+            max_batch: 8,
+            ctx_limit: 1024,
+            // fewer KV slots than batch lanes: each 8-request burst
+            // overcommits the pool, exercising bounce + FIFO requeue
+            kv_slots: 5,
+        },
+        Scenario {
+            name: "summarize-steady",
+            desc: "document summarization at a constant feed rate",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Constant { interarrival_ms: 250.0 },
+            mix: RequestMix::summarization(),
+            slo: SloSpec::relaxed(),
+            n_requests: 24,
+            max_batch: 8,
+            ctx_limit: 2048,
+            kv_slots: 10,
+        },
+        Scenario {
+            name: "code-complete",
+            desc: "high-rate code completion, tight first-token budget",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 60.0 },
+            mix: RequestMix::code_completion(),
+            slo: SloSpec::interactive_tight(),
+            n_requests: 48,
+            max_batch: 16,
+            ctx_limit: 1024,
+            kv_slots: 18,
+        },
+        Scenario {
+            name: "rag-long",
+            desc: "long-context RAG: prefill-heavy retrieved prompts",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 400.0 },
+            mix: RequestMix::rag_long(),
+            slo: SloSpec::relaxed(),
+            n_requests: 12,
+            max_batch: 4,
+            ctx_limit: 2048,
+            kv_slots: 6,
+        },
+        Scenario {
+            name: "smoke",
+            desc: "CI gate: tiny model, Poisson load, milliseconds",
+            model: "tiny-1M",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 5.0 },
+            mix: RequestMix::tiny(),
+            slo: SloSpec::chatbot(),
+            n_requests: 12,
+            max_batch: 4,
+            ctx_limit: 128,
+            kv_slots: 6,
+        },
+    ]
+}
+
+/// Case-insensitive scenario lookup.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    all_scenarios()
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_the_advertised_matrix() {
+        let all = all_scenarios();
+        // >= 4 named non-smoke scenarios, unique names
+        assert!(all.iter().filter(|s| s.name != "smoke").count() >= 4);
+        let names: std::collections::HashSet<_> =
+            all.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), all.len());
+        assert_eq!(by_name("chat-poisson").unwrap().name, "chat-poisson");
+        assert_eq!(by_name("SMOKE").unwrap().model, "tiny-1M");
+        assert!(by_name("warp").is_none());
+        // the bursty scenario must actually overcommit the KV pool:
+        // fewer reservations than batch lanes, or admission control
+        // (the thing it is named for) never triggers
+        let burst = by_name("chat-burst").unwrap();
+        assert!(burst.kv_slots < burst.max_batch);
+    }
+
+    #[test]
+    fn scenarios_fit_their_context_budget_and_build() {
+        for s in all_scenarios() {
+            let m = llm::by_name(s.model).unwrap();
+            let ctx = s.ctx_limit.min(m.max_ctx);
+            // the mix's worst-case prompt must be admissible, and the
+            // worst-case prompt + output must fit the context budget
+            assert!(
+                s.mix.max_prompt < ctx,
+                "{}: prompt {} !< ctx {ctx}",
+                s.name,
+                s.mix.max_prompt
+            );
+            assert!(
+                s.mix.max_total_tokens() <= ctx,
+                "{}: prompt+output {} > ctx {ctx}",
+                s.name,
+                s.mix.max_total_tokens()
+            );
+            // engines build for every fig9 system
+            for sys in ["NPU", "HBM-PIM", "Ecco", "P3-LLM"] {
+                s.engine(sys, None).unwrap();
+                assert!(s.saturation_tok_s(sys).unwrap() > 0.0);
+            }
+            assert!(s.engine("no-such-system", None).is_err());
+        }
+    }
+
+    #[test]
+    fn smoke_scenario_runs_end_to_end() {
+        let s = by_name("smoke").unwrap();
+        let mut eng = s.engine("P3-LLM", None).unwrap();
+        let out = s.runner(7).run(&mut eng).unwrap();
+        assert_eq!(out.report.offered, s.n_requests);
+        assert_eq!(out.report.completed, s.n_requests);
+        assert!(out.report.goodput_tok_s > 0.0);
+        assert!(out.report.slo_attainment > 0.0);
+        // the decode-busy rate (observed saturation proxy) is live
+        assert!(out.report.busy_tok_s > 0.0);
+    }
+}

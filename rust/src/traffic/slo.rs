@@ -1,0 +1,315 @@
+//! SLO targets and the load report: what "fast enough" means and how
+//! much of the offered load met it.
+//!
+//! Goodput (SLO-meeting work per second) is the paper-comparison
+//! metric: a system that decodes fast but queues prefills past the
+//! TTFT budget gets throughput credit and zero goodput, which is
+//! exactly the distinction the Section I chatbot scenario draws.
+
+use crate::coordinator::{Metrics, Percentiles};
+
+/// Latency targets for one request class: time-to-first-token and
+/// mean per-output-token budgets, both in engine-clock milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl SloSpec {
+    /// Interactive chatbot: the 250 ms TTFT budget the paper adopts
+    /// from DistServe, plus 50 ms/token (~20 tok/s reading speed).
+    pub fn chatbot() -> Self {
+        SloSpec { ttft_ms: 250.0, tpot_ms: 50.0 }
+    }
+
+    /// Latency-tolerant batch work (summarization, RAG synthesis).
+    pub fn relaxed() -> Self {
+        SloSpec { ttft_ms: 2000.0, tpot_ms: 100.0 }
+    }
+
+    /// Keystroke-adjacent completion: tight first-token budget.
+    pub fn interactive_tight() -> Self {
+        SloSpec { ttft_ms: 150.0, tpot_ms: 30.0 }
+    }
+
+    /// Does a finished request meet this SLO?  `tpot_ms` is `None` for
+    /// single-token outputs, which only the TTFT target judges.
+    pub fn meets(&self, ttft_ms: f64, tpot_ms: Option<f64>) -> bool {
+        ttft_ms <= self.ttft_ms
+            && tpot_ms.map_or(true, |t| t <= self.tpot_ms)
+    }
+}
+
+/// Per-request timeline observed by the closed-loop runner.  All
+/// timestamps are absolute engine-clock ms; `arrival_ms` is the
+/// scheduled arrival, the origin every latency below is measured from
+/// (so time spent queued before the engine could even accept the
+/// request counts against the SLO, as it does for a real client).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReqRecord {
+    pub arrival_ms: f64,
+    pub submitted_ms: f64,
+    pub prefill_start_ms: Option<f64>,
+    pub first_token_ms: Option<f64>,
+    pub finished_ms: Option<f64>,
+    pub prompt_len: usize,
+    pub tokens_generated: usize,
+}
+
+impl ReqRecord {
+    /// Client-observed time to first token (from arrival).
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_ms.map(|t| t - self.arrival_ms)
+    }
+
+    /// Time from arrival until prefill began (queueing + admission).
+    pub fn queue_delay_ms(&self) -> Option<f64> {
+        self.prefill_start_ms.map(|t| t - self.arrival_ms)
+    }
+
+    /// Mean per-token decode latency (excludes the prefill-emitted
+    /// first token); `None` until finished or for 1-token outputs.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.finished_ms) {
+            (Some(first), Some(fin)) if self.tokens_generated > 1 => {
+                Some((fin - first) / (self.tokens_generated - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.finished_ms.is_some()
+    }
+}
+
+/// End-of-run load-generation report: goodput and SLO attainment on
+/// top of the engine's latency percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadReport {
+    /// requests the arrival process offered
+    pub offered: usize,
+    pub completed: usize,
+    /// completed requests meeting the [`SloSpec`]
+    pub slo_met: usize,
+    /// `slo_met / offered` (unfinished requests count as misses)
+    pub slo_attainment: f64,
+    /// first arrival -> last completion (ms)
+    pub makespan_ms: f64,
+    /// all generated tokens per second over the makespan
+    pub throughput_tok_s: f64,
+    /// SLO-meeting completions per second
+    pub goodput_req_s: f64,
+    /// tokens of SLO-meeting requests per second
+    pub goodput_tok_s: f64,
+    /// decode-only token rate while batching (observed saturation
+    /// proxy: what the engine sustains when it is not idle/prefilling)
+    pub busy_tok_s: f64,
+    /// modeled peak decode throughput at the run's batch/context
+    /// (from the `accel` cost model; `None` when not supplied)
+    pub saturation_tok_s: Option<f64>,
+    pub queue_delay_ms: Percentiles,
+    pub ttft_ms: Percentiles,
+    pub tpot_ms: Percentiles,
+}
+
+impl LoadReport {
+    /// Aggregate per-request records against an SLO.  `metrics` is the
+    /// engine's end-of-run snapshot (for the decode-busy rate);
+    /// `saturation_tok_s` is the modeled peak to report utilization
+    /// against, when the caller knows it.
+    pub fn from_records(
+        records: &[ReqRecord],
+        slo: &SloSpec,
+        metrics: &Metrics,
+        saturation_tok_s: Option<f64>,
+    ) -> Self {
+        let offered = records.len();
+        let completed = records.iter().filter(|r| r.finished()).count();
+        let mut slo_met = 0usize;
+        let mut met_tokens = 0usize;
+        let mut total_tokens = 0usize;
+        let mut ttfts = vec![];
+        let mut tpots = vec![];
+        let mut queues = vec![];
+        for r in records {
+            total_tokens += r.tokens_generated;
+            if let Some(t) = r.ttft_ms() {
+                ttfts.push(t);
+            }
+            if let Some(t) = r.tpot_ms() {
+                tpots.push(t);
+            }
+            if let Some(t) = r.queue_delay_ms() {
+                queues.push(t);
+            }
+            if r.finished() {
+                let ttft = r.ttft_ms().unwrap_or(f64::INFINITY);
+                if slo.meets(ttft, r.tpot_ms()) {
+                    slo_met += 1;
+                    met_tokens += r.tokens_generated;
+                }
+            }
+        }
+        let t0 = records
+            .iter()
+            .map(|r| r.arrival_ms)
+            .fold(f64::INFINITY, f64::min);
+        let t_end = records
+            .iter()
+            .filter_map(|r| r.finished_ms)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let makespan_ms = if t_end.is_finite() && t0.is_finite() {
+            (t_end - t0).max(0.0)
+        } else {
+            0.0
+        };
+        // a zero makespan (nothing finished, or everything at one
+        // instant) reports zero rates rather than dividing through an
+        // epsilon into absurd throughput
+        let rate = |count: f64| {
+            if makespan_ms > 0.0 {
+                count / (makespan_ms / 1e3)
+            } else {
+                0.0
+            }
+        };
+        LoadReport {
+            offered,
+            completed,
+            slo_met,
+            slo_attainment: if offered > 0 {
+                slo_met as f64 / offered as f64
+            } else {
+                0.0
+            },
+            makespan_ms,
+            throughput_tok_s: rate(total_tokens as f64),
+            goodput_req_s: rate(slo_met as f64),
+            goodput_tok_s: rate(met_tokens as f64),
+            busy_tok_s: metrics.tokens_per_sec(),
+            saturation_tok_s,
+            queue_delay_ms: Percentiles::from_samples(&queues),
+            ttft_ms: Percentiles::from_samples(&ttfts),
+            tpot_ms: Percentiles::from_samples(&tpots),
+        }
+    }
+
+    /// `throughput / modeled saturation`, when the latter is known.
+    pub fn utilization(&self) -> Option<f64> {
+        self.saturation_tok_s
+            .map(|s| self.throughput_tok_s / s.max(1e-9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        arrival: f64,
+        first: f64,
+        fin: f64,
+        tokens: usize,
+    ) -> ReqRecord {
+        ReqRecord {
+            arrival_ms: arrival,
+            submitted_ms: arrival,
+            prefill_start_ms: Some(arrival + 1.0),
+            first_token_ms: Some(first),
+            finished_ms: Some(fin),
+            prompt_len: 16,
+            tokens_generated: tokens,
+        }
+    }
+
+    #[test]
+    fn slo_meets_logic() {
+        let s = SloSpec::chatbot();
+        assert!(s.meets(250.0, Some(50.0)));
+        assert!(!s.meets(250.1, Some(10.0)));
+        assert!(!s.meets(10.0, Some(50.1)));
+        // single-token outputs: only TTFT judged
+        assert!(s.meets(100.0, None));
+    }
+
+    #[test]
+    fn report_splits_goodput_from_throughput() {
+        let slo = SloSpec { ttft_ms: 100.0, tpot_ms: 10.0 };
+        // r1 meets (ttft 50, tpot (561-61)/100 = 5); r2 misses on ttft
+        let records = vec![
+            rec(0.0, 50.0, 550.0, 101),
+            rec(0.0, 200.0, 700.0, 101),
+        ];
+        let m = Metrics::default();
+        let r = LoadReport::from_records(&records, &slo, &m, Some(1000.0));
+        assert_eq!(r.offered, 2);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.slo_met, 1);
+        assert!((r.slo_attainment - 0.5).abs() < 1e-12);
+        assert!((r.makespan_ms - 700.0).abs() < 1e-9);
+        // throughput counts both, goodput only the SLO-meeting one
+        assert!((r.throughput_tok_s - 202.0 / 0.7).abs() < 1e-6);
+        assert!((r.goodput_tok_s - 101.0 / 0.7).abs() < 1e-6);
+        assert!((r.goodput_req_s - 1.0 / 0.7).abs() < 1e-6);
+        assert_eq!(r.ttft_ms.count, 2);
+        assert_eq!(r.queue_delay_ms.p50, 1.0);
+        let u = r.utilization().unwrap();
+        assert!(u > 0.0 && u < 1.0);
+    }
+
+    #[test]
+    fn unfinished_requests_are_slo_misses() {
+        let slo = SloSpec::relaxed();
+        let mut unfinished = rec(0.0, 10.0, 0.0, 5);
+        unfinished.finished_ms = None;
+        let records = vec![rec(0.0, 10.0, 100.0, 5), unfinished];
+        let r = LoadReport::from_records(
+            &records,
+            &slo,
+            &Metrics::default(),
+            None,
+        );
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.slo_met, 1);
+        assert!((r.slo_attainment - 0.5).abs() < 1e-12);
+        assert!(r.utilization().is_none());
+    }
+
+    #[test]
+    fn zero_makespan_reports_zero_rates_not_infinity() {
+        // tokens generated but nothing finished: makespan is 0 and
+        // every rate must be 0, not total_tokens / epsilon
+        let mut r1 = rec(0.0, 10.0, 0.0, 5);
+        r1.finished_ms = None;
+        let mut r2 = rec(3.0, 12.0, 0.0, 7);
+        r2.finished_ms = None;
+        let r = LoadReport::from_records(
+            &[r1, r2],
+            &SloSpec::chatbot(),
+            &Metrics::default(),
+            None,
+        );
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.throughput_tok_s, 0.0);
+        assert_eq!(r.goodput_req_s, 0.0);
+        assert_eq!(r.goodput_tok_s, 0.0);
+    }
+
+    #[test]
+    fn empty_records_are_well_defined() {
+        let r = LoadReport::from_records(
+            &[],
+            &SloSpec::chatbot(),
+            &Metrics::default(),
+            None,
+        );
+        assert_eq!(r.offered, 0);
+        assert_eq!(r.slo_attainment, 0.0);
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.ttft_ms.count, 0);
+        assert!(r.throughput_tok_s == 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests for the traffic layer: closed-loop load
+//! generation over the public engine API -- scenario registry,
+//! seed-determinism of whole runs, KV admission under bursty
+//! overcommit (FIFO preserved through requeue), and the P3-vs-NPU
+//! serving comparison the old open-loop scheduler used to assert.
+
+use p3llm::coordinator::{EngineBuilder, KvLayout};
+use p3llm::testutil::Runner;
+use p3llm::traffic::{
+    all_scenarios, scenario_by_name, ArrivalProcess, LoadRunner,
+    RequestMix, SloSpec,
+};
+
+#[test]
+fn registry_exposes_at_least_four_named_scenarios() {
+    let named: Vec<_> = all_scenarios()
+        .into_iter()
+        .filter(|s| s.name != "smoke")
+        .collect();
+    assert!(named.len() >= 4, "only {} scenarios", named.len());
+    for want in
+        ["chat-poisson", "chat-burst", "summarize-steady", "code-complete"]
+    {
+        assert!(
+            scenario_by_name(want).is_some(),
+            "missing scenario {want}"
+        );
+    }
+}
+
+/// Whole-run determinism through the public path `loadtest` uses:
+/// same scenario + system + seed => identical reports and records.
+#[test]
+fn scenario_runs_are_bit_identical_under_a_seed() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let run = |seed| {
+        let mut eng = sc.engine("P3-LLM", None).unwrap();
+        sc.runner(seed).run(&mut eng).unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.records, b.records);
+    let c = run(8);
+    assert_ne!(a.records, c.records, "seed must steer the timeline");
+}
+
+/// Satellite: a burst that overcommits the KV pool must preserve FIFO
+/// order through the requeue path and eventually complete everything.
+#[test]
+fn bursty_overcommit_preserves_fifo_and_completes() {
+    // per-request packed reservation for tiny-1M at ctx 32
+    let ctx = 32usize;
+    let per_request = KvLayout {
+        layers: 4,
+        kv_dim: 32,
+        head_dim: 16,
+        max_ctx: ctx,
+    }
+    .bytes_per_request();
+    Runner::new(12).run(|r| {
+        let pool_slots = r.usize(1, 4); // 1..=3 concurrent KV entries
+        let n = r.usize(6, 14); // burst always overcommits the pool
+        let max_batch = r.usize(2, 7);
+        let mut eng = EngineBuilder::sim()
+            .model("tiny-1M")
+            .max_batch(max_batch)
+            .ctx_limit(ctx)
+            .kv_capacity(pool_slots * per_request)
+            .build()
+            .unwrap();
+        let arrival = ArrivalProcess::OnOff {
+            burst_n: n, // one solid burst at t=0
+            burst_gap_ms: 0.0,
+            idle_ms: 0.0,
+        };
+        let plan = LoadRunner::new(
+            &arrival,
+            &RequestMix::tiny(),
+            SloSpec::relaxed(),
+            n,
+            r.next_u64(),
+        );
+        let out = plan.run(&mut eng).unwrap();
+        assert_eq!(out.report.completed, n, "burst must fully drain");
+        // FIFO through requeue: prefill (= admission) order matches
+        // submission order even when requests bounce on a full pool
+        let starts: Vec<f64> = out
+            .records
+            .iter()
+            .map(|rec| rec.prefill_start_ms.expect("all prefilled"))
+            .collect();
+        for w in starts.windows(2) {
+            assert!(
+                w[0] <= w[1],
+                "admission reordered under overcommit: {starts:?}"
+            );
+        }
+        // all reservations released
+        assert_eq!(eng.kv_entries(), 0);
+        assert_eq!(eng.pool_used_bytes(), 0);
+    });
+}
+
+/// The comparison the deleted open-loop scheduler asserted, now
+/// through the real engine: P3-LLM out-serves the FP16 NPU baseline
+/// under saturating load on a 3B-class model.
+#[test]
+fn p3_beats_npu_on_closed_loop_throughput() {
+    let mut sc = scenario_by_name("chat-poisson").unwrap();
+    sc.n_requests = 8;
+    sc.max_batch = 4;
+    sc.ctx_limit = 256;
+    // saturating burst of decode-heavy requests: all arrive at t=0,
+    // short prompts, 48-token outputs (decode dominates the makespan,
+    // where the PIM offload pays off)
+    let plan = LoadRunner::from_plan(
+        vec![0.0; sc.n_requests],
+        vec![(16, 48); sc.n_requests],
+        sc.slo,
+        5,
+    );
+    let run = |sys: &str| {
+        let mut eng = sc.engine(sys, None).unwrap();
+        plan.run(&mut eng).unwrap().report
+    };
+    let npu = run("NPU");
+    let p3 = run("P3-LLM");
+    assert!(
+        p3.throughput_tok_s > npu.throughput_tok_s,
+        "P3 {} vs NPU {}",
+        p3.throughput_tok_s,
+        npu.throughput_tok_s
+    );
+    assert!(p3.makespan_ms < npu.makespan_ms);
+}
+
+/// Trace replay hits the engine at exactly the recorded offsets when
+/// the system is unloaded (the clock fast-forwards between arrivals).
+#[test]
+fn trace_replay_submits_on_the_recorded_clock() {
+    let arrivals = vec![0.0, 500.0, 1500.0];
+    let plan = LoadRunner::from_plan(
+        arrivals.clone(),
+        vec![(6, 2); 3],
+        SloSpec::chatbot(),
+        1,
+    );
+    let mut eng = EngineBuilder::sim()
+        .model("tiny-1M")
+        .max_batch(2)
+        .ctx_limit(64)
+        .build()
+        .unwrap();
+    let out = plan.run(&mut eng).unwrap();
+    // gaps are huge vs tiny-1M service times: each request finds an
+    // idle engine, so submit lands exactly on its arrival
+    for (rec, want) in out.records.iter().zip(&arrivals) {
+        assert!(
+            (rec.submitted_ms - want).abs() < 1e-6,
+            "submitted {} vs arrival {want}",
+            rec.submitted_ms
+        );
+        assert!(rec.finished());
+    }
+    assert_eq!(out.report.completed, 3);
+}
