@@ -50,4 +50,20 @@ if ! printf '%s\n' "$S1" | grep -q "goodput"; then
     exit 1
 fi
 echo "ci: loadtest smoke OK"
+
+# Multi-replica cluster gate: 2 replicas of the tiny model behind JSQ
+# routing must report nonzero fleet goodput (the binary enforces that
+# under --smoke) and be bit-identical across runs under a fixed seed.
+echo "ci: cluster smoke"
+C1=$(cargo run --release --quiet -- cluster --smoke --seed 7)
+C2=$(cargo run --release --quiet -- cluster --smoke --seed 7)
+if [ "$C1" != "$C2" ]; then
+    echo "ci: cluster smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$C1" | grep -q "goodput"; then
+    echo "ci: cluster smoke output missing goodput columns" >&2
+    exit 1
+fi
+echo "ci: cluster smoke OK"
 echo "ci: PASS"

@@ -27,7 +27,7 @@ fn main() {
     );
     // load multipliers: arrival gaps scaled by 1/load
     for load in [0.33, 1.0, 3.0] {
-        let arrival = sc.arrival.scaled(1.0 / load);
+        let arrival = sc.arrival.scaled(1.0 / load).expect("positive load");
         for sys in ["NPU", "HBM-PIM", "Ecco", "P3-LLM"] {
             let mut eng = sc.engine(sys, None).expect("sim engine");
             let runner = LoadRunner::new(

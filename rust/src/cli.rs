@@ -91,6 +91,19 @@ impl Args {
         }
     }
 
+    /// Comma-separated list flag (`--system NPU,P3-LLM`): absent falls
+    /// back to `default`; items are whitespace-trimmed and empty
+    /// segments dropped; spelling is otherwise kept (registries do
+    /// their own case-insensitive lookup).
+    pub fn get_list(&self, k: &str, default: &str) -> Vec<String> {
+        self.get_or(k, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+
     pub fn has(&self, k: &str) -> bool {
         self.switches.iter().any(|s| s == k)
     }
@@ -132,6 +145,24 @@ mod tests {
             b.get_u64("seed", 0),
             Err(P3Error::InvalidFlag { .. })
         ));
+    }
+
+    #[test]
+    fn list_flags_split_on_commas() {
+        let a = parse("cluster --policy rr,jsq, --replicas 2");
+        assert_eq!(a.get_list("policy", "jsq"), vec!["rr", "jsq"]);
+        // absent falls back to the default spelling
+        assert_eq!(a.get_list("scenario", "chat-poisson"), vec!["chat-poisson"]);
+        assert_eq!(
+            parse("x --sys a,b,c").get_list("sys", ""),
+            vec!["a", "b", "c"]
+        );
+        // all-empty selections collapse to nothing
+        assert!(parse("x --sys ,").get_list("sys", "z").is_empty());
+        // items are trimmed, so spaced spellings match unspaced ones
+        let mut spaced = Args::default();
+        spaced.flags.insert("policy".into(), " rr , jsq ".into());
+        assert_eq!(spaced.get_list("policy", ""), vec!["rr", "jsq"]);
     }
 
     #[test]

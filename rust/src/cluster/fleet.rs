@@ -1,0 +1,525 @@
+//! The replica fleet: N serving engines behind one router on a shared
+//! virtual timeline.
+//!
+//! Every replica is a full [`Engine`] (sim backend: batcher, KV pool,
+//! cost-model clock).  The cluster advances them lock-step -- each
+//! [`step`](LoadTarget::step) runs the busy replica whose local clock
+//! is furthest behind, and idle replicas fast-forward through
+//! [`ExecBackend::advance_to`](crate::coordinator::ExecBackend::advance_to)
+//! when the runner jumps over arrival gaps -- so the fleet shares one
+//! causal virtual clock and whole runs stay bit-identical under a
+//! seed.
+//!
+//! Routing is pluggable ([`RoutePolicy`]).  Colocated policies place
+//! each request on one replica; the prefill/decode-disaggregated
+//! policy runs the prompt on a prefill replica, then hands the
+//! finished KV to a decode replica, charging a transfer priced from
+//! the `sim::dram` event model and the HBM external bus bandwidth
+//! (the two stages pipeline, so the slower one prices the hop).
+
+use crate::accel;
+use crate::config::accel::HbmTiming;
+use crate::coordinator::{Engine, KvLayout, Metrics, Percentiles, RequestId};
+use crate::error::{P3Error, Result};
+use crate::sim::{dram, npu};
+use crate::traffic::{
+    LoadReport, LoadRunner, LoadTarget, ReqRecord, RunOutcome, Scenario,
+};
+
+use super::policy::{policy_by_name, ReplicaSnapshot, RoutePolicy};
+use super::report::ClusterReport;
+
+/// One routed request's lifecycle across the fleet.
+#[derive(Debug)]
+struct Ticket {
+    prefill_replica: usize,
+    prefill_id: RequestId,
+    /// total output budget across both phases
+    max_new: usize,
+    /// decode-side continuation, once handed off (disaggregated: the
+    /// prefill side ran with `max_new = 1` and the rest decodes here)
+    decode: Option<(usize, RequestId)>,
+}
+
+/// A cluster run's results: the exact fleet-level [`RunOutcome`]
+/// (merged per-request records) plus the merged per-replica
+/// [`ClusterReport`] view.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub run: RunOutcome,
+    pub report: ClusterReport,
+}
+
+pub struct Cluster {
+    replicas: Vec<Engine>,
+    policy: Box<dyn RoutePolicy>,
+    /// HBM timing of the modeled system: prices inter-replica KV
+    /// handoffs (disaggregated routing)
+    hbm: HbmTiming,
+    tickets: Vec<Ticket>,
+    /// ticket indices whose prefill side has not handed off yet
+    open_handoffs: Vec<usize>,
+    /// a cluster is single-use: replica metrics and tickets accumulate
+    /// across runs, so a second run would misattribute everything
+    ran: bool,
+}
+
+impl Cluster {
+    /// Wrap `engines` (all serving the same model) behind `policy`.
+    /// `hbm` prices KV handoffs for disaggregated policies.
+    pub fn new(
+        engines: Vec<Engine>,
+        policy: Box<dyn RoutePolicy>,
+        hbm: HbmTiming,
+    ) -> Result<Self> {
+        if engines.is_empty() {
+            return Err(P3Error::InvalidConfig(
+                "a cluster needs at least one replica".into(),
+            ));
+        }
+        let model = engines[0].model().name;
+        if engines.iter().any(|e| e.model().name != model) {
+            return Err(P3Error::InvalidConfig(
+                "all cluster replicas must serve the same model".into(),
+            ));
+        }
+        if engines.iter().any(|e| e.backend_name() == "pjrt") {
+            return Err(P3Error::InvalidConfig(
+                "cluster replicas must run the sim backend (a wall \
+                 clock cannot be lock-stepped across replicas)"
+                    .into(),
+            ));
+        }
+        Ok(Cluster {
+            replicas: engines,
+            policy,
+            hbm,
+            tickets: vec![],
+            open_handoffs: vec![],
+            ran: false,
+        })
+    }
+
+    /// `replicas` identically-shaped engines for `scenario` on the
+    /// named system, routed by `policy_name` (see
+    /// [`all_policy_names`](super::policy::all_policy_names)).
+    pub fn from_scenario(
+        scenario: &Scenario,
+        system: &str,
+        scheme: Option<&str>,
+        replicas: usize,
+        policy_name: &str,
+    ) -> Result<Self> {
+        let policy = policy_by_name(policy_name).ok_or_else(|| {
+            P3Error::InvalidConfig(format!(
+                "unknown routing policy {policy_name:?} (rr | jsq | kv | pd)"
+            ))
+        })?;
+        // replicas == 0 falls through to Cluster::new's typed
+        // at-least-one-replica rejection rather than a silent clamp
+        let mut engines = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            engines.push(scenario.engine(system, scheme)?);
+        }
+        let hbm = accel::by_name(system)
+            .ok_or_else(|| P3Error::UnknownSystem(system.into()))?
+            .system
+            .hbm;
+        Cluster::new(engines, policy, hbm)
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// End-of-run engine metrics of one replica.
+    pub fn replica_metrics(&self, i: usize) -> Metrics {
+        self.replicas[i].metrics()
+    }
+
+    /// Borrow one replica engine (tests / inspection).
+    pub fn replica(&self, i: usize) -> &Engine {
+        &self.replicas[i]
+    }
+
+    fn snapshots(&self, pool: &[usize]) -> Vec<ReplicaSnapshot> {
+        pool.iter()
+            .map(|&i| {
+                let r = &self.replicas[i];
+                ReplicaSnapshot {
+                    index: i,
+                    queued: r.queued(),
+                    active: r.active_lanes(),
+                    kv_used_bytes: r.pool_used_bytes(),
+                    now_ms: Engine::now_ms(r),
+                }
+            })
+            .collect()
+    }
+
+    /// Modeled inter-replica KV handoff time for `tokens` cached
+    /// tokens: the packed KV streams out of the source stack's DRAM
+    /// (event-level `sim::dram` read pass) and crosses the external
+    /// bus; the stages pipeline, so the slower one prices the hop.
+    pub fn kv_transfer_ms(&self, tokens: usize) -> f64 {
+        let m = self.replicas[0].model();
+        let bytes = KvLayout {
+            layers: m.layers,
+            kv_dim: m.kv_dim(),
+            head_dim: m.head_dim,
+            max_ctx: tokens.max(1),
+        }
+        .bytes_per_request() as f64;
+        let stream_ns = dram::gemv_pass_ns(&self.hbm, bytes);
+        let bus_ns = npu::transfer(&self.hbm, bytes).ns;
+        stream_ns.max(bus_ns) / 1e6
+    }
+
+    /// Hand off every finished prefill on `replica` to a decode
+    /// replica (disaggregated policies only).
+    fn drain_handoffs(&mut self, replica: usize) -> Result<()> {
+        let mut ready = vec![];
+        let tickets = &self.tickets;
+        let replicas = &self.replicas;
+        self.open_handoffs.retain(|&ti| {
+            let t = &tickets[ti];
+            if t.prefill_replica != replica {
+                return true;
+            }
+            match replicas[replica].request(t.prefill_id) {
+                Some(req) if req.finished_ms.is_some() => {
+                    ready.push(ti);
+                    false
+                }
+                _ => true,
+            }
+        });
+        for ti in ready {
+            let (pid, pre, total) = {
+                let t = &self.tickets[ti];
+                (t.prefill_id, t.prefill_replica, t.max_new)
+            };
+            let (handoff_at, cont_prompt) = {
+                let req = self.replicas[pre]
+                    .request(pid)
+                    .ok_or(P3Error::UnknownRequest(pid.0))?;
+                let mut p = req.prompt.clone();
+                p.extend_from_slice(&req.generated);
+                (req.finished_ms.unwrap_or(0.0), p)
+            };
+            let transfer_ms = self.kv_transfer_ms(cont_prompt.len());
+            let pool = self
+                .policy
+                .decode_pool(self.replicas.len())
+                .ok_or_else(|| {
+                    P3Error::Serve(
+                        "split ticket without a decode pool".into(),
+                    )
+                })?;
+            let snaps = self.snapshots(&pool);
+            let d = self.policy.route_decode(
+                cont_prompt.len(),
+                total - 1,
+                &snaps,
+            );
+            // causality: the KV cannot land before the prefill that
+            // produced it finished.  The decode replica synchronizes
+            // on the fabric barrier even if its local clock lags (its
+            // in-flight lanes are billed the sync gap); without this a
+            // lagging replica could finish the continuation before
+            // its own first token existed, inflating pd SLO numbers
+            // with acausal timelines.
+            self.replicas[d].advance_clock_to(handoff_at);
+            let id = self.replicas[d].submit_prefilled(
+                cont_prompt,
+                total - 1,
+                transfer_ms,
+            )?;
+            self.tickets[ti].decode = Some((d, id));
+        }
+        Ok(())
+    }
+}
+
+impl LoadTarget for Cluster {
+    /// The fleet's causal frontier: the earliest clock among busy
+    /// replicas (they can still do work at that time); when everything
+    /// is idle, the furthest clock any replica reached.
+    fn now_ms(&self) -> f64 {
+        let mut busy_min = f64::INFINITY;
+        let mut all_max = 0.0f64;
+        for r in &self.replicas {
+            let t = Engine::now_ms(r);
+            all_max = all_max.max(t);
+            if !Engine::is_idle(r) {
+                busy_min = busy_min.min(t);
+            }
+        }
+        if busy_min.is_finite() {
+            busy_min
+        } else {
+            all_max
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        self.replicas.iter().all(Engine::is_idle)
+            && self.open_handoffs.is_empty()
+    }
+
+    fn advance_clock_to(&mut self, ms: f64) {
+        for r in &mut self.replicas {
+            if Engine::is_idle(r) {
+                r.advance_clock_to(ms);
+            }
+        }
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.replicas
+            .iter()
+            .map(Engine::max_prompt)
+            .min()
+            .unwrap_or(1)
+    }
+
+    fn vocab(&self) -> usize {
+        self.replicas[0].model().vocab
+    }
+
+    fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        due_ms: f64,
+    ) -> Result<u64> {
+        let n = self.replicas.len();
+        let pool = self.policy.prefill_pool(n);
+        let snaps = self.snapshots(&pool);
+        let chosen = self.policy.route(prompt.len(), max_new, &snaps);
+        // disaggregate only when there is a decode pool, something
+        // left to decode, and the continuation (prompt + first token)
+        // still fits a decode replica's context
+        let split = self.policy.decode_pool(n).is_some()
+            && max_new > 1
+            && prompt.len() + 1 <= LoadTarget::max_prompt(self);
+        if self.replicas[chosen].is_idle() {
+            self.replicas[chosen].advance_clock_to(due_ms);
+        }
+        let pf_new = if split { 1 } else { max_new };
+        let id = self.replicas[chosen].submit(prompt, pf_new)?;
+        let ticket = self.tickets.len() as u64;
+        if split {
+            self.open_handoffs.push(self.tickets.len());
+        }
+        self.tickets.push(Ticket {
+            prefill_replica: chosen,
+            prefill_id: id,
+            max_new,
+            decode: None,
+        });
+        Ok(ticket)
+    }
+
+    /// Advance the laggard: step the busy replica whose clock is
+    /// furthest behind, then hand off any prefill it just finished.
+    fn step(&mut self) -> Result<()> {
+        let mut pick: Option<(usize, f64)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if !Engine::is_idle(r) {
+                let t = Engine::now_ms(r);
+                if pick.map_or(true, |(_, bt)| t < bt) {
+                    pick = Some((i, t));
+                }
+            }
+        }
+        match pick {
+            Some((i, _)) => {
+                self.replicas[i].step()?;
+                self.drain_handoffs(i)
+            }
+            None => {
+                // nothing busy: flush any straggler handoffs so the
+                // run loop cannot stall
+                for i in 0..self.replicas.len() {
+                    self.drain_handoffs(i)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn record(
+        &self,
+        ticket: u64,
+        scheduled_arrival_ms: f64,
+    ) -> Result<ReqRecord> {
+        let t = self
+            .tickets
+            .get(ticket as usize)
+            .ok_or(P3Error::UnknownRequest(ticket))?;
+        let pre = self.replicas[t.prefill_replica]
+            .request(t.prefill_id)
+            .ok_or(P3Error::UnknownRequest(t.prefill_id.0))?;
+        let mut rec = ReqRecord::from_request(pre, scheduled_arrival_ms);
+        if let Some((d, id)) = t.decode {
+            // client view of a disaggregated request: first token from
+            // the prefill side, completion (and the transfer gap) from
+            // the decode side
+            let dec = self.replicas[d]
+                .request(id)
+                .ok_or(P3Error::UnknownRequest(id.0))?;
+            rec.finished_ms = dec.finished_ms;
+            rec.tokens_generated =
+                pre.generated.len() + dec.generated.len();
+        }
+        Ok(rec)
+    }
+
+    /// Fleet-merged *engine-level* metrics: counters sum, the clock is
+    /// the furthest replica, distributions merge count-weighted
+    /// ([`Percentiles::merge`]).  Under a disaggregated policy each
+    /// client request is two engine requests (prefill stub + decode
+    /// continuation), so `completed` counts both and the latency
+    /// distributions are engine-side observations -- the client-level
+    /// view is the record-based [`LoadReport`] a run produces.
+    fn end_metrics(&self) -> Metrics {
+        let per: Vec<Metrics> =
+            self.replicas.iter().map(|r| r.metrics()).collect();
+        let ttfts: Vec<&Percentiles> =
+            per.iter().map(|m| &m.ttft_ms).collect();
+        let tpots: Vec<&Percentiles> =
+            per.iter().map(|m| &m.per_token_ms).collect();
+        Metrics {
+            backend: "cluster",
+            completed: per.iter().map(|m| m.completed).sum(),
+            decode_steps: per.iter().map(|m| m.decode_steps).sum(),
+            tokens_out: per.iter().map(|m| m.tokens_out).sum(),
+            wall_ms: per.iter().map(|m| m.wall_ms).fold(0.0, f64::max),
+            prefill_ms: per.iter().map(|m| m.prefill_ms).sum(),
+            decode_ms: per.iter().map(|m| m.decode_ms).sum(),
+            ttft_ms: Percentiles::merge(&ttfts),
+            per_token_ms: Percentiles::merge(&tpots),
+        }
+    }
+}
+
+impl Cluster {
+    /// Drive `plan` through the fleet to completion and report: the
+    /// exact fleet-level outcome plus the merged per-replica view.
+    /// `saturation_per_replica` is one replica's modeled peak decode
+    /// rate (the fleet roof is `replicas x` that).  One run per
+    /// cluster: replicas keep their retired requests for the records.
+    pub fn run(
+        &mut self,
+        plan: &LoadRunner,
+        saturation_per_replica: Option<f64>,
+    ) -> Result<ClusterOutcome> {
+        if self.ran {
+            return Err(P3Error::Serve(
+                "a Cluster is single-use: replica metrics and routing \
+                 tickets accumulate across runs, so a second run would \
+                 misattribute every record -- build a fresh cluster"
+                    .into(),
+            ));
+        }
+        self.ran = true;
+        let mut run = plan.run(self)?;
+        let n = self.replicas.len();
+        run.report.saturation_tok_s =
+            saturation_per_replica.map(|s| s * n as f64);
+        // snapshot each replica's metrics once (Percentiles sort the
+        // full sample vectors on every call)
+        let per_metrics: Vec<Metrics> =
+            self.replicas.iter().map(|r| r.metrics()).collect();
+        // fleet-aggregate decode service rate in use (sum of
+        // per-replica busy rates), matching ClusterReport::merge and
+        // the n-scaled saturation roof above -- the engines' summed
+        // Metrics would otherwise report the per-replica *average*
+        run.report.busy_tok_s =
+            per_metrics.iter().map(|m| m.tokens_per_sec()).sum::<f64>();
+        // partition the merged records by the replica that *finished*
+        // each request (decode side for disaggregated tickets)
+        let mut parts: Vec<Vec<ReqRecord>> = vec![vec![]; n];
+        for (i, rec) in run.records.iter().enumerate() {
+            let t = &self.tickets[i];
+            let owner = t.decode.map(|(d, _)| d).unwrap_or(t.prefill_replica);
+            parts[owner].push(*rec);
+        }
+        let per: Vec<LoadReport> = parts
+            .iter()
+            .zip(per_metrics.iter())
+            .map(|(recs, m)| {
+                LoadReport::from_records(
+                    recs,
+                    &plan.slo,
+                    m,
+                    saturation_per_replica,
+                )
+            })
+            .collect();
+        let busy_ms: Vec<f64> = per_metrics
+            .iter()
+            .map(|m| m.prefill_ms + m.decode_ms)
+            .collect();
+        // rates rebase onto the exact fleet span from the merged
+        // records, not the max per-replica window
+        let report = ClusterReport::merge(
+            self.policy.name(),
+            &per,
+            &busy_ms,
+            Some(run.report.makespan_ms),
+        );
+        Ok(ClusterOutcome { run, report })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::scenario_by_name;
+
+    #[test]
+    fn construction_validates_shape() {
+        let sc = scenario_by_name("smoke").unwrap();
+        assert!(Cluster::from_scenario(&sc, "P3-LLM", None, 2, "jsq").is_ok());
+        assert!(matches!(
+            Cluster::from_scenario(&sc, "P3-LLM", None, 2, "nope"),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cluster::from_scenario(&sc, "no-such-system", None, 2, "jsq"),
+            Err(P3Error::UnknownSystem(_))
+        ));
+        // zero replicas is a typed rejection, not a silent clamp
+        assert!(matches!(
+            Cluster::from_scenario(&sc, "P3-LLM", None, 0, "jsq"),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Cluster::new(
+                vec![],
+                policy_by_name("rr").unwrap(),
+                HbmTiming::default()
+            ),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        let c = Cluster::from_scenario(&sc, "P3-LLM", None, 3, "pd").unwrap();
+        assert_eq!(c.replicas(), 3);
+        assert_eq!(c.policy_name(), "pd");
+    }
+
+    #[test]
+    fn kv_transfer_cost_is_positive_and_monotone() {
+        let sc = scenario_by_name("smoke").unwrap();
+        let c = Cluster::from_scenario(&sc, "P3-LLM", None, 2, "pd").unwrap();
+        let short = c.kv_transfer_ms(16);
+        let long = c.kv_transfer_ms(1024);
+        assert!(short > 0.0);
+        assert!(long > short, "{long} vs {short}");
+    }
+}

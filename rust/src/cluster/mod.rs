@@ -1,0 +1,47 @@
+//! L3.75 cluster: multi-replica NPU-PIM serving behind a pluggable
+//! router.
+//!
+//! The paper's speedups are per accelerator; the production question
+//! is what a *fleet* of them sustains.  This layer scales the serving
+//! stack out: a [`Cluster`] owns N sim-backend
+//! [`Engine`](crate::coordinator::Engine) replicas on one lock-stepped
+//! virtual clock, a [`RoutePolicy`] decides where each arrival lands,
+//! and a [`ClusterReport`] merges the per-replica
+//! [`LoadReport`](crate::traffic::LoadReport)s into fleet goodput, SLO
+//! attainment, utilization skew, and scaling efficiency against a
+//! 1-replica baseline.
+//!
+//! Policies (see `p3llm cluster --list`):
+//!
+//! * `rr`  -- round-robin rotation (the load-blind baseline)
+//! * `jsq` -- join-shortest-queue over queued + active lanes
+//! * `kv`  -- least-KV-loaded (live pool bytes)
+//! * `pd`  -- prefill/decode disaggregation: prompts run on a prefill
+//!   pool, the finished KV migrates to a decode pool at a transfer
+//!   cost priced from the `sim::dram` event model / HBM external bus
+//!   (NeuPIMs' sub-batch split and IANUS' unified-memory scheduling
+//!   are the motivating designs)
+//!
+//! ```ignore
+//! let sc = traffic::scenario_by_name("chat-poisson").unwrap();
+//! let mut fleet = Cluster::from_scenario(&sc, "P3-LLM", None, 4, "jsq")?;
+//! let plan = sc.clone().for_fleet(4)?.runner(7);
+//! let out = fleet.run(&plan, sc.saturation_tok_s("P3-LLM"))?;
+//! println!("fleet goodput {:.1} tok/s, skew {:.2}",
+//!          out.report.fleet.goodput_tok_s, out.report.util_skew);
+//! ```
+//!
+//! Whole cluster runs are bit-identical under a fixed seed: routing is
+//! deterministic (ties break on replica index) and every replica clock
+//! derives from the same cost model.
+
+pub mod fleet;
+pub mod policy;
+pub mod report;
+
+pub use fleet::{Cluster, ClusterOutcome};
+pub use policy::{
+    all_policy_names, policy_by_name, policy_desc, JoinShortestQueue,
+    LeastKvLoaded, PrefillDecode, ReplicaSnapshot, RoundRobin, RoutePolicy,
+};
+pub use report::{ClusterReport, ReplicaLoad};

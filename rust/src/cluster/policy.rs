@@ -1,0 +1,315 @@
+//! Pluggable request-routing policies for a multi-replica fleet.
+//!
+//! A policy sees a cheap snapshot of every candidate replica (queue
+//! depth, live decode lanes, KV pool occupancy, local clock) and picks
+//! where the next request lands.  Colocated policies route every
+//! request to one replica that does both prefill and decode;
+//! the disaggregated policy splits the fleet into a prefill pool and a
+//! decode pool (NeuPIMs/DistServe-style), with the finished KV handed
+//! over at a modeled transfer cost (see
+//! [`Cluster`](super::fleet::Cluster)).
+//!
+//! All policies are deterministic: ties break on the lowest replica
+//! index, so a fixed seed replays the identical placement sequence.
+
+/// What a policy may observe about one replica at routing time.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSnapshot {
+    /// fleet index of this replica
+    pub index: usize,
+    /// requests waiting for admission
+    pub queued: usize,
+    /// requests holding a decode lane
+    pub active: usize,
+    /// packed bytes live in the KV pool
+    pub kv_used_bytes: usize,
+    /// replica-local clock (ms).  No shipped policy reads it yet; it
+    /// is part of the snapshot contract for clock/staleness-aware
+    /// policies (route away from replicas that have run far ahead).
+    pub now_ms: f64,
+}
+
+impl ReplicaSnapshot {
+    /// Outstanding requests on this replica (the JSQ metric).
+    pub fn depth(&self) -> usize {
+        self.queued + self.active
+    }
+}
+
+/// Where a fresh arrival (and, for disaggregated fleets, a decode
+/// continuation) should run.  `route*` receives non-empty candidate
+/// snapshots and returns the chosen replica's fleet `index`.
+pub trait RoutePolicy {
+    /// Registry name (`--policy`).
+    fn name(&self) -> &'static str;
+
+    /// Replicas that take fresh arrivals.  Identity for colocated
+    /// policies; the prefill pool for disaggregated ones.
+    fn prefill_pool(&self, replicas: usize) -> Vec<usize> {
+        (0..replicas).collect()
+    }
+
+    /// `Some(pool)` when finished prefills hand their KV to a separate
+    /// decode pool; `None` for colocated serving.
+    fn decode_pool(&self, replicas: usize) -> Option<Vec<usize>> {
+        let _ = replicas;
+        None
+    }
+
+    /// Pick a replica for a fresh arrival.
+    fn route(
+        &mut self,
+        prompt_len: usize,
+        max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize;
+
+    /// Pick a replica for a decode continuation (disaggregated
+    /// fleets); defaults to the fresh-arrival rule.
+    fn route_decode(
+        &mut self,
+        prompt_len: usize,
+        max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        self.route(prompt_len, max_new, candidates)
+    }
+}
+
+/// Index of the candidate minimizing `key` (first wins ties: snapshots
+/// are passed in ascending fleet order, so ties break low).
+fn argmin_by<K: PartialOrd>(
+    candidates: &[ReplicaSnapshot],
+    key: impl Fn(&ReplicaSnapshot) -> K,
+) -> usize {
+    let mut best = 0usize;
+    for (i, c) in candidates.iter().enumerate().skip(1) {
+        if key(c) < key(&candidates[best]) {
+            best = i;
+        }
+    }
+    candidates[best].index
+}
+
+/// Static rotation, blind to load: the baseline every adaptive policy
+/// is measured against.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(
+        &mut self,
+        _prompt_len: usize,
+        _max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        let pick = candidates[self.next % candidates.len()].index;
+        self.next = self.next.wrapping_add(1);
+        pick
+    }
+}
+
+/// Join-shortest-queue: route to the replica with the fewest
+/// outstanding requests (queued + active lanes).
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl RoutePolicy for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(
+        &mut self,
+        _prompt_len: usize,
+        _max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        argmin_by(candidates, |c| c.depth())
+    }
+}
+
+/// Least-KV-loaded: route to the replica holding the fewest live KV
+/// bytes (queue depth breaks ties).  Long-context mixes skew KV much
+/// harder than request counts, which is what this policy balances.
+#[derive(Debug, Default)]
+pub struct LeastKvLoaded;
+
+impl RoutePolicy for LeastKvLoaded {
+    fn name(&self) -> &'static str {
+        "kv"
+    }
+
+    fn route(
+        &mut self,
+        _prompt_len: usize,
+        _max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        argmin_by(candidates, |c| (c.kv_used_bytes, c.depth()))
+    }
+}
+
+/// Prefill/decode disaggregation: the first `ceil(n/4)` (min 1)
+/// replicas form the prefill pool, the rest the decode pool.  Fresh
+/// arrivals JSQ over the prefill pool; finished prefills hand their KV
+/// to the least-KV-loaded decode replica.  A 1-replica fleet has no
+/// second pool and degrades to colocated serving (no handoff).
+#[derive(Debug, Default)]
+pub struct PrefillDecode;
+
+impl PrefillDecode {
+    /// Prefill-side replica count for an `n`-replica fleet:
+    /// `ceil(n/4)`, always leaving at least one decode replica when
+    /// the fleet has two or more.
+    pub fn prefill_share(n: usize) -> usize {
+        if n <= 1 {
+            return 1;
+        }
+        n.div_ceil(4).min(n - 1)
+    }
+}
+
+impl RoutePolicy for PrefillDecode {
+    fn name(&self) -> &'static str {
+        "pd"
+    }
+
+    fn prefill_pool(&self, replicas: usize) -> Vec<usize> {
+        (0..Self::prefill_share(replicas)).collect()
+    }
+
+    fn decode_pool(&self, replicas: usize) -> Option<Vec<usize>> {
+        if replicas < 2 {
+            return None;
+        }
+        Some((Self::prefill_share(replicas)..replicas).collect())
+    }
+
+    fn route(
+        &mut self,
+        _prompt_len: usize,
+        _max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        argmin_by(candidates, |c| c.depth())
+    }
+
+    fn route_decode(
+        &mut self,
+        _prompt_len: usize,
+        _max_new: usize,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        argmin_by(candidates, |c| (c.kv_used_bytes, c.depth()))
+    }
+}
+
+/// Registry names (`cluster --policy all` / `--list`).
+pub fn all_policy_names() -> Vec<&'static str> {
+    vec!["rr", "jsq", "kv", "pd"]
+}
+
+/// One-line description per policy (CLI `--list`).
+pub fn policy_desc(name: &str) -> &'static str {
+    match name {
+        "rr" => "round-robin rotation, blind to load",
+        "jsq" => "join-shortest-queue (queued + active lanes)",
+        "kv" => "least-KV-loaded (live pool bytes, depth tiebreak)",
+        "pd" => "prefill/decode disaggregation with modeled KV handoff",
+        _ => "",
+    }
+}
+
+/// Case-insensitive policy lookup (accepts short and long spellings).
+pub fn policy_by_name(name: &str) -> Option<Box<dyn RoutePolicy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "rr" | "round-robin" | "roundrobin" => {
+            Some(Box::new(RoundRobin::default()))
+        }
+        "jsq" | "join-shortest-queue" => {
+            Some(Box::new(JoinShortestQueue))
+        }
+        "kv" | "least-kv" | "least-kv-loaded" => {
+            Some(Box::new(LeastKvLoaded))
+        }
+        "pd" | "prefill-decode" | "disagg" => {
+            Some(Box::new(PrefillDecode))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(index: usize, queued: usize, active: usize, kv: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot { index, queued, active, kv_used_bytes: kv, now_ms: 0.0 }
+    }
+
+    #[test]
+    fn registry_resolves_every_advertised_name() {
+        for n in all_policy_names() {
+            let p = policy_by_name(n).unwrap();
+            assert_eq!(p.name(), n);
+            assert!(!policy_desc(n).is_empty());
+        }
+        assert!(policy_by_name("JSQ").is_some());
+        assert!(policy_by_name("magic").is_none());
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut p = RoundRobin::default();
+        let c = [snap(0, 9, 9, 9), snap(1, 0, 0, 0), snap(2, 5, 5, 5)];
+        let picks: Vec<usize> =
+            (0..6).map(|_| p.route(8, 8, &c)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_the_shallowest_and_ties_break_low() {
+        let mut p = JoinShortestQueue;
+        let c = [snap(0, 2, 1, 0), snap(1, 0, 1, 0), snap(2, 1, 0, 0)];
+        assert_eq!(p.route(8, 8, &c), 1);
+        let tied = [snap(0, 1, 1, 0), snap(1, 0, 2, 0), snap(2, 2, 0, 0)];
+        assert_eq!(p.route(8, 8, &tied), 0);
+    }
+
+    #[test]
+    fn least_kv_prefers_empty_pools() {
+        let mut p = LeastKvLoaded;
+        let c = [snap(0, 0, 0, 4096), snap(1, 3, 3, 128), snap(2, 0, 0, 128)];
+        // 1 and 2 tie on bytes; depth breaks toward 2
+        assert_eq!(p.route(8, 8, &c), 2);
+    }
+
+    #[test]
+    fn pd_pools_partition_the_fleet() {
+        let p = PrefillDecode;
+        assert_eq!(p.prefill_pool(1), vec![0]);
+        assert!(p.decode_pool(1).is_none());
+        for n in [2usize, 3, 4, 8, 9] {
+            let pre = p.prefill_pool(n);
+            let dec = p.decode_pool(n).unwrap();
+            assert!(!pre.is_empty() && !dec.is_empty(), "n={n}");
+            // disjoint and covering
+            let mut all: Vec<usize> =
+                pre.iter().chain(dec.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+        // ceil(n/4), as documented
+        assert_eq!(PrefillDecode::prefill_share(4), 1);
+        assert_eq!(PrefillDecode::prefill_share(5), 2);
+        assert_eq!(PrefillDecode::prefill_share(8), 2);
+        assert_eq!(PrefillDecode::prefill_share(9), 3);
+    }
+}

@@ -1,0 +1,249 @@
+//! Fleet-level reporting: merge per-replica [`LoadReport`]s into one
+//! cluster view -- fleet goodput, SLO attainment, per-replica
+//! utilization skew, and scaling efficiency against a 1-replica
+//! baseline.
+//!
+//! Counts sum exactly; rates are re-based token-exactly onto the fleet
+//! makespan (the longest per-replica span); latency distributions
+//! merge count-weighted through
+//! [`Percentiles::merge`](crate::coordinator::Percentiles::merge).
+
+use crate::coordinator::Percentiles;
+use crate::traffic::LoadReport;
+
+/// One replica's share of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ReplicaLoad {
+    /// the requests this replica finished
+    pub report: LoadReport,
+    /// engine-busy milliseconds (prefill + decode): the utilization
+    /// signal, which also credits prefill-only replicas of a
+    /// disaggregated fleet
+    pub busy_ms: f64,
+}
+
+/// Merged view of one cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub policy: String,
+    pub replicas: usize,
+    /// fleet totals merged from the per-replica reports
+    pub fleet: LoadReport,
+    pub per_replica: Vec<ReplicaLoad>,
+    /// max / mean of per-replica busy time: 1.0 is a perfectly
+    /// balanced fleet, `replicas` is one replica doing all the work
+    pub util_skew: f64,
+    /// fleet goodput / (replicas x 1-replica-baseline goodput); set by
+    /// [`with_baseline`](Self::with_baseline) once a baseline is known
+    pub scaling_efficiency: Option<f64>,
+}
+
+impl ClusterReport {
+    /// Merge per-replica reports (`per[i]` holds the requests replica
+    /// `i` finished; `busy_ms[i]` its engine-busy time).
+    ///
+    /// `fleet_makespan_ms` is the true fleet span (global first
+    /// arrival to global last completion) when the caller knows it --
+    /// per-replica makespans are *relative* windows, so falling back
+    /// to their maximum (`None`) overstates fleet rates when replica
+    /// activity windows are disjoint in time.
+    pub fn merge(
+        policy: &str,
+        per: &[LoadReport],
+        busy_ms: &[f64],
+        fleet_makespan_ms: Option<f64>,
+    ) -> Self {
+        let n = per.len();
+        let offered: usize = per.iter().map(|r| r.offered).sum();
+        let completed: usize = per.iter().map(|r| r.completed).sum();
+        let slo_met: usize = per.iter().map(|r| r.slo_met).sum();
+        let makespan_ms = fleet_makespan_ms.unwrap_or_else(|| {
+            per.iter().map(|r| r.makespan_ms).fold(0.0, f64::max)
+        });
+        // token-exact rate rebase: rate_i * makespan_i recovers each
+        // replica's count, the fleet rate divides by the fleet span
+        let rebase = |count_x_ms: f64| {
+            if makespan_ms > 0.0 {
+                count_x_ms / makespan_ms
+            } else {
+                0.0
+            }
+        };
+        let queue_parts: Vec<&Percentiles> =
+            per.iter().map(|r| &r.queue_delay_ms).collect();
+        let ttft_parts: Vec<&Percentiles> =
+            per.iter().map(|r| &r.ttft_ms).collect();
+        let tpot_parts: Vec<&Percentiles> =
+            per.iter().map(|r| &r.tpot_ms).collect();
+        let saturation = if n > 0
+            && per.iter().all(|r| r.saturation_tok_s.is_some())
+        {
+            Some(per.iter().filter_map(|r| r.saturation_tok_s).sum::<f64>())
+        } else {
+            None
+        };
+        let fleet = LoadReport {
+            offered,
+            completed,
+            slo_met,
+            slo_attainment: if offered > 0 {
+                slo_met as f64 / offered as f64
+            } else {
+                0.0
+            },
+            makespan_ms,
+            throughput_tok_s: rebase(
+                per.iter()
+                    .map(|r| r.throughput_tok_s * r.makespan_ms)
+                    .sum::<f64>(),
+            ),
+            goodput_req_s: rebase(
+                per.iter()
+                    .map(|r| r.goodput_req_s * r.makespan_ms)
+                    .sum::<f64>(),
+            ),
+            goodput_tok_s: rebase(
+                per.iter()
+                    .map(|r| r.goodput_tok_s * r.makespan_ms)
+                    .sum::<f64>(),
+            ),
+            // aggregate decode service rate in use across the fleet
+            busy_tok_s: per.iter().map(|r| r.busy_tok_s).sum(),
+            saturation_tok_s: saturation,
+            queue_delay_ms: Percentiles::merge(&queue_parts),
+            ttft_ms: Percentiles::merge(&ttft_parts),
+            tpot_ms: Percentiles::merge(&tpot_parts),
+        };
+        let mean_busy = if busy_ms.is_empty() {
+            0.0
+        } else {
+            busy_ms.iter().sum::<f64>() / busy_ms.len() as f64
+        };
+        let util_skew = if mean_busy > 0.0 {
+            busy_ms.iter().fold(0.0, |a: f64, &b| a.max(b)) / mean_busy
+        } else {
+            1.0
+        };
+        ClusterReport {
+            policy: policy.to_string(),
+            replicas: n,
+            fleet,
+            per_replica: per
+                .iter()
+                .zip(busy_ms)
+                .map(|(r, &b)| ReplicaLoad { report: r.clone(), busy_ms: b })
+                .collect(),
+            util_skew,
+            scaling_efficiency: None,
+        }
+    }
+
+    /// Attach the 1-replica baseline goodput (tok/s, same scenario and
+    /// policy): scaling efficiency is fleet goodput over `replicas x`
+    /// that baseline -- 1.0 is perfectly linear scaling.
+    pub fn with_baseline(mut self, baseline_goodput_tok_s: f64) -> Self {
+        if baseline_goodput_tok_s > 0.0 {
+            self.scaling_efficiency = Some(
+                self.fleet.goodput_tok_s
+                    / (self.replicas as f64 * baseline_goodput_tok_s),
+            );
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::traffic::{ReqRecord, SloSpec};
+
+    fn rec(arrival: f64, first: f64, fin: f64, tokens: usize) -> ReqRecord {
+        ReqRecord {
+            arrival_ms: arrival,
+            submitted_ms: arrival,
+            prefill_start_ms: Some(arrival + 1.0),
+            first_token_ms: Some(first),
+            finished_ms: Some(fin),
+            prompt_len: 16,
+            tokens_generated: tokens,
+        }
+    }
+
+    fn report(records: &[ReqRecord]) -> LoadReport {
+        LoadReport::from_records(
+            records,
+            &SloSpec::relaxed(),
+            &Metrics::default(),
+            None,
+        )
+    }
+
+    #[test]
+    fn merge_sums_counts_and_rebases_rates() {
+        // replica 0: 2 requests over 1 s; replica 1: 1 request over 2 s
+        let a = report(&[rec(0.0, 10.0, 500.0, 50), rec(0.0, 20.0, 1000.0, 50)]);
+        let b = report(&[rec(0.0, 10.0, 2000.0, 80)]);
+        let m = ClusterReport::merge(
+            "jsq",
+            &[a.clone(), b.clone()],
+            &[800.0, 1200.0],
+            None,
+        );
+        assert_eq!(m.replicas, 2);
+        assert_eq!(m.fleet.offered, 3);
+        assert_eq!(m.fleet.completed, 3);
+        assert_eq!(m.fleet.slo_met, 3);
+        assert!((m.fleet.slo_attainment - 1.0).abs() < 1e-12);
+        assert!((m.fleet.makespan_ms - 2000.0).abs() < 1e-9);
+        // token-exact: (100 + 80) tokens over the 2 s fleet span
+        assert!((m.fleet.throughput_tok_s - 180.0 / 2.0).abs() < 1e-6);
+        assert_eq!(m.fleet.ttft_ms.count, 3);
+        // skew: max 1200 / mean 1000
+        assert!((m.util_skew - 1.2).abs() < 1e-9);
+        assert!(m.scaling_efficiency.is_none());
+        let with = m.with_baseline(45.0);
+        // 90 tok/s fleet goodput vs 2 x 45 baseline = 1.0
+        assert!((with.scaling_efficiency.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_of_idle_replicas_is_well_defined() {
+        let empty = report(&[]);
+        let m = ClusterReport::merge(
+            "rr",
+            &[empty.clone(), empty],
+            &[0.0, 0.0],
+            None,
+        );
+        assert_eq!(m.fleet.offered, 0);
+        assert_eq!(m.fleet.slo_attainment, 0.0);
+        assert_eq!(m.fleet.throughput_tok_s, 0.0);
+        assert_eq!(m.util_skew, 1.0);
+        let none = ClusterReport::merge("rr", &[], &[], None);
+        assert_eq!(none.fleet.offered, 0);
+        assert!(none.fleet.saturation_tok_s.is_none());
+    }
+
+    #[test]
+    fn explicit_fleet_span_prevents_offset_window_inflation() {
+        // two replicas each busy for ~100 ms, but 10 s apart on the
+        // global timeline: rebasing on max(per-replica window) would
+        // claim ~1000 tok/s; the true fleet span says ~10 tok/s
+        let a = report(&[rec(0.0, 10.0, 100.0, 50)]);
+        let b = report(&[rec(10_000.0, 10_010.0, 10_100.0, 50)]);
+        let m = ClusterReport::merge(
+            "rr",
+            &[a, b],
+            &[90.0, 90.0],
+            Some(10_100.0),
+        );
+        assert!((m.fleet.makespan_ms - 10_100.0).abs() < 1e-9);
+        let want = 100.0 * 1e3 / 10_100.0; // 100 tokens over 10.1 s
+        assert!(
+            (m.fleet.throughput_tok_s - want).abs() < 1e-6,
+            "{} vs {want}",
+            m.fleet.throughput_tok_s
+        );
+    }
+}

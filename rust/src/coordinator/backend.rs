@@ -91,10 +91,53 @@ pub trait ExecBackend {
 
     fn model(&self) -> &LlmConfig;
 
-    /// Longest prompt (tokens) a single prefill can absorb; longer
-    /// prompts are rejected at `submit` with
-    /// [`P3Error::PromptTooLong`](crate::error::P3Error::PromptTooLong).
+    /// Longest prompt (tokens) a single prefill call can absorb -- one
+    /// prefill *tile*.  Backends that cannot chunk reject longer
+    /// prompts at `submit` with
+    /// [`P3Error::PromptTooLong`](crate::error::P3Error::PromptTooLong);
+    /// backends reporting [`chunked_prefill`](Self::chunked_prefill)
+    /// have the engine absorb longer prompts in `ceil(len /
+    /// max_prefill())` successive tiles.
     fn max_prefill(&self) -> usize;
+
+    /// Can the engine split a long prompt across several prefill
+    /// tiles?  The sim backend models NPU tiled prefill and says yes;
+    /// the PJRT backend's AOT graph is a single fixed tile and keeps
+    /// the typed rejection.
+    fn chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// One prefill tile with `prefix_len` tokens of this prompt
+    /// already installed (chunked prefill).  Cost-model backends
+    /// charge the *incremental* cost of extending the prefix -- the
+    /// later tiles attend against everything before them, so the
+    /// telescoping sum over tiles reproduces the full-prompt cost --
+    /// while the default ignores the prefix (single-tile backends only
+    /// ever see prefix 0).
+    fn prefill_continue(
+        &mut self,
+        chunk: &[i32],
+        prefix_len: usize,
+    ) -> Result<PrefillOut> {
+        let _ = prefix_len;
+        self.prefill(chunk)
+    }
+
+    /// Install prefill state for a prompt whose KV was computed
+    /// elsewhere (prefill/decode disaggregation: a decode replica
+    /// receives a migrated KV cache), charging `charge_ms` of clock --
+    /// the modeled transfer time -- instead of prefill compute.
+    /// Backends that cannot absorb foreign KV fall back to a real
+    /// prefill.
+    fn install_prefill(
+        &mut self,
+        prompt: &[i32],
+        charge_ms: f64,
+    ) -> Result<PrefillOut> {
+        let _ = charge_ms;
+        self.prefill(prompt)
+    }
 
     /// Run prefill over one prompt.  Advances the backend clock.
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut>;

@@ -47,6 +47,10 @@ pub struct Request {
     /// streaming cursor: tokens before this index were already drained
     /// by `Engine::take_tokens`
     pub streamed: usize,
+    /// Some(ms): the prompt's KV was computed elsewhere and migrates in
+    /// (prefill/decode disaggregation) -- install it at this modeled
+    /// transfer charge instead of running prefill compute
+    pub prefill_charge_ms: Option<f64>,
 }
 
 impl Request {
@@ -63,6 +67,7 @@ impl Request {
             first_token_ms: None,
             finished_ms: None,
             streamed: 0,
+            prefill_charge_ms: None,
         }
     }
 

@@ -68,6 +68,55 @@ impl Percentiles {
             max: xs[n - 1],
         }
     }
+
+    /// Count-weighted merge of several summaries (fleet reporting:
+    /// per-replica distributions into one).  The raw samples are gone,
+    /// so each input is re-expanded into a weighted sample set at its
+    /// own quantile points (50% of its samples at p50, the next 45% at
+    /// p95, 4% at p99, 1% at max) and the merged percentiles are
+    /// nearest-rank over that set.  Exact for a single input; for many
+    /// inputs it is the standard summary-merge approximation.  Means
+    /// merge exactly; `max` is the max of maxes.
+    pub fn merge(parts: &[&Percentiles]) -> Percentiles {
+        let total: usize = parts.iter().map(|p| p.count).sum();
+        if total == 0 {
+            return Percentiles::default();
+        }
+        let mut atoms: Vec<(f64, f64)> = Vec::with_capacity(4 * parts.len());
+        let mut mean_sum = 0.0;
+        for p in parts {
+            if p.count == 0 {
+                continue;
+            }
+            let n = p.count as f64;
+            mean_sum += p.mean * n;
+            atoms.push((p.p50, 0.50 * n));
+            atoms.push((p.p95, 0.45 * n));
+            atoms.push((p.p99, 0.04 * n));
+            atoms.push((p.max, 0.01 * n));
+        }
+        atoms.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let total_w: f64 = atoms.iter().map(|a| a.1).sum();
+        let rank = |pct: f64| {
+            let target = total_w * pct / 100.0;
+            let mut acc = 0.0;
+            for &(v, w) in &atoms {
+                acc += w;
+                if acc + 1e-9 >= target {
+                    return v;
+                }
+            }
+            atoms[atoms.len() - 1].0
+        };
+        Percentiles {
+            count: total,
+            mean: mean_sum / total as f64,
+            p50: rank(50.0),
+            p95: rank(95.0),
+            p99: rank(99.0),
+            max: atoms[atoms.len() - 1].0,
+        }
+    }
 }
 
 /// End-of-run serving metrics.  Latency distributions replace the old
@@ -198,30 +247,77 @@ impl Engine {
         self.backend.advance_to(ms);
     }
 
-    /// Longest admissible prompt for this engine.
+    /// Longest admissible prompt for this engine.  Backends that
+    /// support chunked prefill (sim) absorb any prompt the context can
+    /// hold in `ceil(len / tile)` tiles; single-tile backends (PJRT)
+    /// are limited to one prefill graph invocation.
     pub fn max_prompt(&self) -> usize {
-        self.backend.max_prefill().min(self.ctx_cap - 1)
+        if self.backend.chunked_prefill() {
+            self.ctx_cap - 1
+        } else {
+            self.backend.max_prefill().min(self.ctx_cap - 1)
+        }
     }
 
     /// Submit a prompt; rejects empty and over-long prompts with typed
-    /// errors instead of the old silent truncation.
+    /// errors instead of the old silent truncation.  On chunking
+    /// backends, prompts longer than one prefill tile are absorbed in
+    /// `ceil(len / tile)` chunks at prefill time.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
+        self.submit_inner(prompt, max_new, None)
+    }
+
+    /// Submit a request whose prompt KV was prefilled on another
+    /// engine and migrates in (prefill/decode disaggregation):
+    /// installing the KV charges `install_ms` of modeled transfer time
+    /// instead of prefill compute.  Wall-clock backends cannot absorb
+    /// foreign KV and fall back to a real prefill.
+    pub fn submit_prefilled(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        install_ms: f64,
+    ) -> Result<RequestId> {
+        if !install_ms.is_finite() || install_ms < 0.0 {
+            return Err(P3Error::InvalidConfig(format!(
+                "KV install charge must be finite and >= 0 ms, got \
+                 {install_ms}"
+            )));
+        }
+        self.submit_inner(prompt, max_new, Some(install_ms))
+    }
+
+    fn submit_inner(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        install_ms: Option<f64>,
+    ) -> Result<RequestId> {
         if prompt.is_empty() {
             return Err(P3Error::EmptyPrompt);
         }
         let max = self.max_prompt();
         if prompt.len() > max {
-            // TODO(chunked prefill): absorb long prompts in PREFILL_T
-            // chunks instead of rejecting
             return Err(P3Error::PromptTooLong { len: prompt.len(), max });
         }
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request::new(id, prompt, max_new, self.backend.now_ms());
+        let mut req = Request::new(id, prompt, max_new, self.backend.now_ms());
+        req.prefill_charge_ms = install_ms;
         let rid = req.id;
         self.requests.insert(id, req);
         self.batcher.enqueue(rid);
         Ok(rid)
+    }
+
+    /// Requests waiting for admission (not yet prefilling/decoding).
+    pub fn queued(&self) -> usize {
+        self.batcher.queued()
+    }
+
+    /// Requests currently holding a decode lane.
+    pub fn active_lanes(&self) -> usize {
+        self.batcher.active().len()
     }
 
     pub fn request(&self, id: RequestId) -> Option<&Request> {
@@ -244,8 +340,11 @@ impl Engine {
             .ok_or(P3Error::UnknownRequest(id.0))
     }
 
-    /// Prefill one admitted request: run the backend prefill, install
-    /// the prompt KV in the pool, emit the first token.
+    /// Prefill one admitted request: run the backend prefill (in
+    /// `ceil(len / tile)` chunks on chunking backends), install the
+    /// prompt KV in the pool, emit the first token.  Requests arriving
+    /// with a migrated KV (`submit_prefilled`) install it at the
+    /// recorded transfer charge instead.
     fn prefill(&mut self, rid: RequestId) -> Result<()> {
         let t0 = self.backend.now_ms();
         let req = self
@@ -255,24 +354,46 @@ impl Engine {
         req.state = State::Prefilling;
         req.prefill_start_ms = Some(t0);
         let prompt = req.prompt.clone();
-        let out = self.backend.prefill(&prompt)?;
-        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
-        let entry = self.pool.alloc(rid.0, out.smooth)?;
-        for t in 0..out.true_len {
-            for l in 0..layers {
-                let off = (l * out.true_len + t) * kvd;
-                entry.push_token(
-                    l,
-                    &out.k[off..off + kvd],
-                    &out.v[off..off + kvd],
-                );
+        let charge = req.prefill_charge_ms;
+        let mut outs = match charge {
+            Some(ms) => vec![self.backend.install_prefill(&prompt, ms)?],
+            None => {
+                let tile = self.backend.max_prefill().max(1);
+                let mut v = Vec::with_capacity(prompt.len().div_ceil(tile));
+                let mut offset = 0usize;
+                for chunk in prompt.chunks(tile) {
+                    v.push(self.backend.prefill_continue(chunk, offset)?);
+                    offset += chunk.len();
+                }
+                v
             }
-            entry.commit_token();
+        };
+        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
+        // the entry's smoothing factors come from the first tile (the
+        // real prefill graph emits them once per prompt)
+        let smooth = std::mem::take(&mut outs[0].smooth);
+        let entry = self.pool.alloc(rid.0, smooth)?;
+        let mut total_len = 0usize;
+        let mut first_token = 0i32;
+        for out in &outs {
+            for t in 0..out.true_len {
+                for l in 0..layers {
+                    let off = (l * out.true_len + t) * kvd;
+                    entry.push_token(
+                        l,
+                        &out.k[off..off + kvd],
+                        &out.v[off..off + kvd],
+                    );
+                }
+                entry.commit_token();
+            }
+            total_len += out.true_len;
+            first_token = out.first_token;
         }
         let now = self.backend.now_ms();
         let req = self.requests.get_mut(&rid.0).unwrap();
-        req.pos = out.true_len;
-        req.generated.push(out.first_token);
+        req.pos = total_len;
+        req.generated.push(first_token);
         req.pos += 1; // KV slot for the first token is written by decode
         req.first_token_ms = Some(now);
         req.state = State::Decoding;
@@ -280,11 +401,29 @@ impl Engine {
         Ok(())
     }
 
+    /// Retire a finished request at `now`: stamp completion, record
+    /// its latency samples, free the lane and the KV reservation.
+    fn retire_finished(&mut self, rid: RequestId, now: f64) {
+        let req = self.requests.get_mut(&rid.0).unwrap();
+        req.state = State::Finished;
+        req.finished_ms = Some(now);
+        if let Some(t) = req.ttft_ms() {
+            self.acc.ttft.push(t);
+        }
+        if let Some(t) = req.tpot_ms() {
+            self.acc.tpot.push(t);
+        }
+        self.acc.completed += 1;
+        self.batcher.retire(rid);
+        self.pool.free(rid.0);
+    }
+
     /// One engine step: admit (with KV admission control), prefill the
     /// newcomers, run one batched decode step.  Returns tokens emitted.
     pub fn step(&mut self) -> Result<usize> {
         let newly = self.batcher.admit();
         let mut bounced = vec![];
+        let mut prefilled = vec![];
         for rid in newly {
             if !self.pool.can_admit() {
                 if self.pool.is_empty() {
@@ -308,10 +447,24 @@ impl Engine {
                 }
                 return Err(e);
             }
+            prefilled.push(rid);
         }
         // re-queue rejected requests in their original order
         for rid in bounced.into_iter().rev() {
             self.batcher.requeue_front(rid);
+        }
+        // a request satisfied by prefill alone (max_new == 1, or the
+        // prompt filled its context) retires without burning a decode
+        // step on a lane that would overshoot its token budget
+        for rid in prefilled {
+            let now = self.backend.now_ms();
+            let done = self
+                .requests
+                .get(&rid.0)
+                .is_some_and(|r| r.done(self.ctx_cap));
+            if done {
+                self.retire_finished(rid, now);
+            }
         }
 
         let active: Vec<RequestId> = self.batcher.active().to_vec();
@@ -363,17 +516,7 @@ impl Engine {
             req.pos += 1;
             emitted += 1;
             if req.done(self.ctx_cap) {
-                req.state = State::Finished;
-                req.finished_ms = Some(now);
-                if let Some(t) = req.ttft_ms() {
-                    self.acc.ttft.push(t);
-                }
-                if let Some(t) = req.tpot_ms() {
-                    self.acc.tpot.push(t);
-                }
-                self.acc.completed += 1;
-                self.batcher.retire(*rid);
-                self.pool.free(rid.0);
+                self.retire_finished(*rid, now);
             }
         }
         self.acc.decode_steps += 1;
@@ -697,6 +840,122 @@ mod tests {
         assert!(p.mean.is_finite());
         // all-NaN collapses to the empty default
         assert_eq!(Percentiles::from_samples(&[f64::NAN]).count, 0);
+    }
+
+    #[test]
+    fn percentiles_merge_empty_singleton_unequal() {
+        // empty input set and all-empty parts collapse to the default
+        assert_eq!(Percentiles::merge(&[]), Percentiles::default());
+        let zero = Percentiles::default();
+        assert_eq!(Percentiles::merge(&[&zero, &zero]).count, 0);
+        // singleton merge is the identity
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::from_samples(&xs);
+        assert_eq!(Percentiles::merge(&[&p]), p);
+        // empty parts do not perturb a merge
+        assert_eq!(Percentiles::merge(&[&zero, &p, &zero]), p);
+        // unequal counts: 100 low samples vs 1 high sample -- the big
+        // part brackets the median (the straggler cannot drag it to
+        // 1e6), the high straggler owns the max, means merge exactly
+        let one = Percentiles::from_samples(&[1e6]);
+        let m = Percentiles::merge(&[&p, &one]);
+        assert_eq!(m.count, 101);
+        assert!(m.p50 >= p.p50 && m.p50 <= p.p95, "{m:?}");
+        assert!(m.p50 <= m.p95 && m.p95 <= m.p99 && m.p99 <= m.max);
+        assert_eq!(m.max, 1e6);
+        let want_mean = (p.mean * 100.0 + 1e6) / 101.0;
+        assert!((m.mean - want_mean).abs() < 1e-9);
+        // two equal-count parts: percentiles land between the parts'
+        let q = Percentiles::from_samples(
+            &(101..=200).map(|i| i as f64).collect::<Vec<_>>(),
+        );
+        let mq = Percentiles::merge(&[&p, &q]);
+        assert_eq!(mq.count, 200);
+        assert!(mq.p50 >= p.p50 && mq.p50 <= q.p50, "{mq:?}");
+        assert!(mq.p95 >= p.p95 && mq.p95 <= q.p99, "{mq:?}");
+        assert_eq!(mq.max, 200.0);
+        assert!((mq.mean - (p.mean + q.mean) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_prefill_absorbs_long_prompts_on_sim() {
+        // a prompt far beyond one 64-token prefill tile is admitted
+        // and served (ceil(len / tile) chunks), not rejected
+        let mut eng = EngineBuilder::sim()
+            .model("tiny-1M")
+            .ctx_limit(512)
+            .max_batch(2)
+            .build()
+            .unwrap();
+        assert_eq!(eng.max_prompt(), 511);
+        let id = eng.submit(vec![3; 300], 4).unwrap();
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.completed, 1);
+        let st = eng.poll(id).unwrap();
+        assert!(st.finished);
+        assert_eq!(st.tokens_generated, 4);
+        // chunked prefill costs more modeled time than a single tile
+        let mut short = EngineBuilder::sim()
+            .model("tiny-1M")
+            .ctx_limit(512)
+            .max_batch(2)
+            .build()
+            .unwrap();
+        short.submit(vec![3; 32], 4).unwrap();
+        let ms = short.run_to_completion().unwrap();
+        assert!(m.prefill_ms > ms.prefill_ms);
+    }
+
+    #[test]
+    fn submit_prefilled_charges_transfer_not_compute() {
+        let mk = || {
+            EngineBuilder::sim()
+                .model("tiny-1M")
+                .ctx_limit(256)
+                .max_batch(2)
+                .build()
+                .unwrap()
+        };
+        let prompt = vec![7; 100];
+        // real prefill serves the same shape
+        let mut a = mk();
+        a.submit(prompt.clone(), 3).unwrap();
+        let ma = a.run_to_completion().unwrap();
+        assert_eq!(ma.completed, 1);
+        // migrated KV installs at exactly the given transfer charge
+        let mut b = mk();
+        let id = b.submit_prefilled(prompt.clone(), 3, 0.25).unwrap();
+        let mb = b.run_to_completion().unwrap();
+        assert_eq!(mb.completed, 1);
+        assert_eq!(b.poll(id).unwrap().tokens_generated, 3);
+        assert!((mb.prefill_ms - 0.25).abs() < 1e-9, "{}", mb.prefill_ms);
+        let mut b2 = mk();
+        b2.submit_prefilled(prompt, 3, 0.5).unwrap();
+        let mb2 = b2.run_to_completion().unwrap();
+        assert!((mb2.prefill_ms - 0.5).abs() < 1e-9, "{}", mb2.prefill_ms);
+        // bad charges are typed errors
+        let mut c = mk();
+        assert!(matches!(
+            c.submit_prefilled(vec![1, 2], 3, f64::NAN),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            c.submit_prefilled(vec![1, 2], 3, -1.0),
+            Err(P3Error::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn single_token_requests_retire_at_prefill() {
+        let mut eng = EngineBuilder::sim().ctx_limit(64).build().unwrap();
+        let id = eng.submit(vec![1, 2, 3], 1).unwrap();
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.completed, 1);
+        // exactly the one prefill-emitted token, no decode overshoot
+        assert_eq!(eng.poll(id).unwrap().tokens_generated, 1);
+        assert_eq!(m.tokens_out, 0);
+        assert_eq!(m.ttft_ms.count, 1);
+        assert_eq!(eng.kv_entries(), 0);
     }
 
     #[test]

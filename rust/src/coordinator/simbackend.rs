@@ -15,6 +15,7 @@
 
 use super::backend::{DecodeOut, ExecBackend, Lane, PrefillOut};
 use super::mapper::{map_decode_step, summarize, MapSummary};
+use super::pjrt::PREFILL_T;
 use crate::accel::Accel;
 use crate::config::llm::LlmConfig;
 use crate::coordinator::kvcache::KvPool;
@@ -74,33 +75,13 @@ impl SimBackend {
     fn synth_token(&self, seed: u64) -> i32 {
         (mix(seed) % self.model.vocab as u64) as i32
     }
-}
 
-impl ExecBackend for SimBackend {
-    fn name(&self) -> &'static str {
-        "sim"
-    }
-
-    fn model(&self) -> &LlmConfig {
-        &self.model
-    }
-
-    fn max_prefill(&self) -> usize {
-        self.ctx_limit
-    }
-
-    fn now_ms(&self) -> f64 {
-        self.clock_ms
-    }
-
-    fn advance_to(&mut self, ms: f64) {
-        self.clock_ms = self.clock_ms.max(ms);
-    }
-
-    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+    /// Deterministic prefill outputs (tokens, smoothing, KV rows) for a
+    /// prompt -- shared by the modeled prefill and by
+    /// `install_prefill`, which charges transfer time instead of
+    /// compute but must produce the identical KV state.
+    fn synth_prefill(&self, prompt: &[i32]) -> PrefillOut {
         let true_len = prompt.len().min(self.ctx_limit);
-        // prefill is NPU territory (compute-bound GEMM, Section II)
-        self.clock_ms += self.accel.prefill_ms(&self.model, true_len);
         let kvd = self.model.kv_dim();
         let layers = self.model.layers;
         let pseed = prompt
@@ -129,13 +110,85 @@ impl ExecBackend for SimBackend {
                 self.synth_row(seed ^ 0xDEAD, &mut v[off..off + kvd]);
             }
         }
-        Ok(PrefillOut {
+        PrefillOut {
             first_token: self.synth_token(pseed ^ 0xF1257),
             smooth,
             k,
             v,
             true_len,
-        })
+        }
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn model(&self) -> &LlmConfig {
+        &self.model
+    }
+
+    fn max_prefill(&self) -> usize {
+        // one modeled prefill tile; the engine absorbs longer prompts
+        // in successive tiles (chunked_prefill below)
+        PREFILL_T.min(self.ctx_limit)
+    }
+
+    fn chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.clock_ms
+    }
+
+    fn advance_to(&mut self, ms: f64) {
+        self.clock_ms = self.clock_ms.max(ms);
+    }
+
+    fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
+        let out = self.synth_prefill(prompt);
+        // prefill is NPU territory (compute-bound GEMM, Section II)
+        self.clock_ms += self.accel.prefill_ms(&self.model, out.true_len);
+        Ok(out)
+    }
+
+    fn prefill_continue(
+        &mut self,
+        chunk: &[i32],
+        prefix_len: usize,
+    ) -> Result<PrefillOut> {
+        let out = self.synth_prefill(chunk);
+        // incremental causal-attention cost of extending `prefix_len`
+        // installed tokens by this tile: prefill_ms(prefix + tile) -
+        // prefill_ms(prefix), so the telescoping sum over a prompt's
+        // tiles charges exactly prefill_ms(total) -- tile-local
+        // costing would silently drop the quadratic attention term
+        let end = (prefix_len + out.true_len).min(self.model.max_ctx);
+        let base = if prefix_len == 0 {
+            0.0
+        } else {
+            self.accel.prefill_ms(&self.model, prefix_len)
+        };
+        let inc = self.accel.prefill_ms(&self.model, end) - base;
+        self.clock_ms += inc.max(0.0);
+        Ok(out)
+    }
+
+    fn install_prefill(
+        &mut self,
+        prompt: &[i32],
+        charge_ms: f64,
+    ) -> Result<PrefillOut> {
+        // KV arrives over the fabric, not from compute: deterministic
+        // synthetic state (seeded by the whole prompt, so it differs
+        // bitwise from a *tiled* local prefill of the same prompt --
+        // the sim decode path never reads KV contents, only its
+        // occupancy), transfer-priced clock advance
+        let out = self.synth_prefill(prompt);
+        self.clock_ms += charge_ms.max(0.0);
+        Ok(out)
     }
 
     fn decode_step(&mut self, lanes: &[Lane], _pool: &KvPool) -> Result<DecodeOut> {

@@ -21,6 +21,12 @@
 //!   delay).  Scenario registry: `chat-poisson`, `chat-burst`,
 //!   `summarize-steady`, `code-complete`, `rag-long`, `smoke` -- see
 //!   `p3llm loadtest`.
+//! * `cluster` -- multi-replica serving: a [`Cluster`] of N engine
+//!   replicas on one lock-stepped virtual clock behind a pluggable
+//!   [`RoutePolicy`] (round-robin, join-shortest-queue,
+//!   least-KV-loaded, prefill/decode disaggregation with modeled KV
+//!   handoff), reporting fleet goodput / utilization skew / scaling
+//!   efficiency ([`ClusterReport`]) -- see `p3llm cluster`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
@@ -35,6 +41,7 @@ pub mod accel;
 pub mod area;
 pub mod benchkit;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -47,12 +54,13 @@ pub mod testutil;
 pub mod traffic;
 pub mod workload;
 
+pub use cluster::{Cluster, ClusterReport, RoutePolicy};
 pub use coordinator::{
     BackendKind, Engine, EngineBuilder, ExecBackend, Metrics, Percentiles,
     RequestId, RequestStatus,
 };
 pub use error::{P3Error, Result};
-pub use traffic::{LoadReport, LoadRunner, Scenario, SloSpec};
+pub use traffic::{LoadReport, LoadRunner, LoadTarget, Scenario, SloSpec};
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")

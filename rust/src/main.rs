@@ -1,15 +1,21 @@
-//! p3llm -- leader binary: serve / eval / simulate / loadtest / report.
+//! p3llm -- leader binary: serve / eval / simulate / loadtest /
+//! cluster / report.
 //!
 //! `serve` runs the unified engine on either execution backend
 //! (`--backend pjrt` for real numerics from AOT artifacts, `--backend
 //! sim` for the NPU-PIM cost model: any model, any batch, no
 //! artifacts); `simulate` reuses the same engine under each modeled
 //! system; `loadtest` sweeps named traffic scenarios across systems
-//! through the closed-loop `traffic::LoadRunner`.  Python is never on
-//! the request path.
+//! through the closed-loop `traffic::LoadRunner`; `cluster` routes
+//! the same scenarios across N engine replicas (`cluster::Cluster`)
+//! and reports fleet goodput and scaling.  Python is never on the
+//! request path.
 
 use p3llm::accel::Accel;
 use p3llm::cli::Args;
+use p3llm::cluster::{
+    all_policy_names, policy_by_name, policy_desc, Cluster, ClusterOutcome,
+};
 use p3llm::config::llm;
 use p3llm::coordinator::{Engine, EngineBuilder, Metrics};
 use p3llm::error::{P3Error, Result};
@@ -43,9 +49,22 @@ commands:
              --system NAME[,NAME..]|all     (default NPU,HBM-PIM,Ecco,P3-LLM)
              --scheme NAME --seed N (default 7)
              --requests N --model NAME --batch N --ctx N --mix NAME
+             --scale F      stretch (>1) / intensify (<1) arrival gaps
              --trace FILE   replay arrival offsets (ms) from a TSV
              --list   show scenarios + mixes     --save  write TSV
              --smoke  CI gate: tiny scenario, fails on zero goodput
+  cluster    multi-replica serving: route a scenario's arrivals across
+             N engine replicas (sim backend, weak-scaled load) and
+             report fleet goodput / utilization skew / scaling
+             efficiency vs 1 replica
+             --replicas N[,N..] (default 1,2,4)
+             --policy NAME[,NAME..]|all     (default jsq; see --list)
+             --scenario NAME[,NAME..]|all   (default chat-poisson)
+             --system NAME --scheme NAME --seed N --requests N
+             --scale F --save
+             --list   show routing policies
+             --smoke  CI gate: 2 replicas, tiny model, JSQ; fails on
+                      zero fleet goodput
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -58,6 +77,7 @@ fn main() {
         Some("list-eval") => cmd_list_eval(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("loadtest") => cmd_loadtest(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -322,6 +342,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a `--scenario` selection (`NAME[,NAME..]` or `all`, which
+/// excludes the CI smoke scenario) and apply the shared `--requests`
+/// override -- common to `loadtest` and `cluster`.
+fn select_scenarios(args: &Args, default_sel: &str) -> Result<Vec<Scenario>> {
+    let sel = args.get_or("scenario", default_sel);
+    let mut scenarios: Vec<Scenario> = if sel.eq_ignore_ascii_case("all") {
+        traffic::all_scenarios()
+            .into_iter()
+            .filter(|s| s.name != "smoke")
+            .collect()
+    } else {
+        let mut v = vec![];
+        for name in args.get_list("scenario", default_sel) {
+            v.push(traffic::scenario_by_name(&name).ok_or_else(|| {
+                P3Error::InvalidConfig(format!(
+                    "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+                ))
+            })?);
+        }
+        v
+    };
+    if args.get("requests").is_some() {
+        let n = args.get_usize("requests", 1)?.max(1);
+        for s in &mut scenarios {
+            s.n_requests = n;
+        }
+    }
+    Ok(scenarios)
+}
+
 /// Resolve `--scenario` / `--system` selections and per-flag scenario
 /// overrides, then sweep scenario x system through the closed-loop
 /// runner and print/save the comparison table.
@@ -359,34 +409,13 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     }
     let smoke = args.has("smoke");
     let seed = args.get_u64("seed", 7)?;
-    let sc_sel = args.get_or("scenario", if smoke { "smoke" } else { "all" });
-    let mut scenarios: Vec<Scenario> = if sc_sel.eq_ignore_ascii_case("all") {
-        traffic::all_scenarios()
-            .into_iter()
-            .filter(|s| s.name != "smoke")
-            .collect()
-    } else {
-        let mut v = vec![];
-        for name in sc_sel.split(',').filter(|s| !s.is_empty()) {
-            v.push(traffic::scenario_by_name(name).ok_or_else(|| {
-                P3Error::InvalidConfig(format!(
-                    "unknown scenario {name:?} (see `p3llm loadtest --list`)"
-                ))
-            })?);
-        }
-        v
-    };
+    let mut scenarios =
+        select_scenarios(args, if smoke { "smoke" } else { "all" })?;
     if let Some(m) = args.get("model") {
         let model =
             llm::by_name(m).ok_or_else(|| P3Error::UnknownModel(m.into()))?;
         for s in &mut scenarios {
             s.model = model.name;
-        }
-    }
-    if args.get("requests").is_some() {
-        let n = args.get_usize("requests", 1)?.max(1);
-        for s in &mut scenarios {
-            s.n_requests = n;
         }
     }
     if args.get("batch").is_some() {
@@ -417,6 +446,12 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             s.arrival = tr.clone();
         }
     }
+    // --scale stretches/intensifies every arrival gap; degenerate
+    // factors surface as the typed InvalidFlag from ArrivalProcess
+    let scale = args.get_f64("scale", 1.0)?;
+    for s in &mut scenarios {
+        s.arrival = s.arrival.scaled(scale)?;
+    }
     let default_systems =
         if smoke { "NPU,P3-LLM" } else { "NPU,HBM-PIM,Ecco,P3-LLM" };
     let sys_sel = args.get_or("system", default_systems);
@@ -426,11 +461,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             .map(|a| a.name.to_string())
             .collect()
     } else {
-        sys_sel
-            .split(',')
-            .filter(|s| !s.is_empty())
-            .map(String::from)
-            .collect()
+        args.get_list("system", default_systems)
     };
     let scheme = args.get("scheme");
 
@@ -492,6 +523,129 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         let dir = p3llm::benchkit::reports_dir();
         t.save(&dir, "loadtest").map_err(|e| P3Error::io(&dir, e))?;
         println!("saved {}", dir.join("loadtest.tsv").display());
+    }
+    Ok(())
+}
+
+/// Sweep replica-count x routing-policy x scenario through the
+/// multi-replica cluster.  Load is weak-scaled (`Scenario::for_fleet`:
+/// n x requests at n x the arrival rate) so the goodput column reads
+/// as a scaling curve; every (scenario, policy) pair also runs a
+/// 1-replica baseline to anchor the scaling-efficiency column.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    if args.has("list") {
+        let mut t =
+            Table::new("routing policies (--policy)", &["name", "description"]);
+        for p in all_policy_names() {
+            t.row(vec![p.into(), policy_desc(p).into()]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM");
+    let scheme = args.get("scheme");
+    let scale = args.get_f64("scale", 1.0)?;
+
+    let scenarios: Vec<Scenario> =
+        select_scenarios(args, if smoke { "smoke" } else { "chat-poisson" })?
+            .into_iter()
+            .map(|s| s.with_scale(scale))
+            .collect::<Result<_>>()?;
+
+    let mut replica_counts = vec![];
+    for tok in args.get_list("replicas", if smoke { "2" } else { "1,2,4" }) {
+        // malformed or zero counts are typed errors, not silent clamps
+        let n = tok.parse().ok().filter(|&n: &usize| n >= 1).ok_or(
+            P3Error::InvalidFlag {
+                flag: "replicas".into(),
+                value: tok.clone(),
+            },
+        )?;
+        replica_counts.push(n);
+    }
+    if replica_counts.is_empty() {
+        replica_counts.push(1);
+    }
+
+    let policies: Vec<String> =
+        if args.get_or("policy", "jsq").eq_ignore_ascii_case("all") {
+            all_policy_names().iter().map(|s| s.to_string()).collect()
+        } else {
+            args.get_list("policy", "jsq")
+        };
+    for p in &policies {
+        if policy_by_name(p).is_none() {
+            return Err(P3Error::InvalidConfig(format!(
+                "unknown routing policy {p:?} (see `p3llm cluster --list`)"
+            )));
+        }
+    }
+
+    let mut t = Table::new(
+        format!("cluster: scenario x policy x replicas on {system}, seed {seed}"),
+        &[
+            "scenario",
+            "policy",
+            "replicas",
+            "done",
+            "SLO %",
+            "goodput req/s",
+            "goodput tok/s",
+            "tok/s",
+            "p95 TTFT ms",
+            "skew",
+            "scale-eff %",
+        ],
+    );
+    for sc in &scenarios {
+        let sat = sc.saturation_tok_s(system);
+        for pol in &policies {
+            let run_n = |n: usize| -> Result<ClusterOutcome> {
+                let fleet_sc = sc.clone().for_fleet(n)?;
+                let mut cl =
+                    Cluster::from_scenario(sc, system, scheme, n, pol)?;
+                cl.run(&fleet_sc.runner(seed), sat)
+            };
+            // a 1-replica run anchors the scaling-efficiency column
+            let base = run_n(1)?;
+            let base_goodput = base.report.fleet.goodput_tok_s;
+            for &n in &replica_counts {
+                let out = if n == 1 { base.clone() } else { run_n(n)? };
+                let rep = out.report.with_baseline(base_goodput);
+                let r = &rep.fleet;
+                if smoke && (r.goodput_tok_s <= 0.0 || r.completed < r.offered)
+                {
+                    return Err(P3Error::Serve(format!(
+                        "cluster smoke gate: {} x{n} via {pol}: goodput \
+                         {:.2} tok/s, {}/{} completed",
+                        sc.name, r.goodput_tok_s, r.completed, r.offered
+                    )));
+                }
+                t.row(vec![
+                    sc.name.into(),
+                    pol.clone(),
+                    n.to_string(),
+                    format!("{}/{}", r.completed, r.offered),
+                    f2(r.slo_attainment * 100.0),
+                    f2(r.goodput_req_s),
+                    f2(r.goodput_tok_s),
+                    f2(r.throughput_tok_s),
+                    f2(r.ttft_ms.p95),
+                    f2(rep.util_skew),
+                    rep.scaling_efficiency
+                        .map(|e| f2(e * 100.0))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+            }
+        }
+    }
+    t.print();
+    if args.has("save") {
+        let dir = p3llm::benchkit::reports_dir();
+        t.save(&dir, "cluster").map_err(|e| P3Error::io(&dir, e))?;
+        println!("saved {}", dir.join("cluster.tsv").display());
     }
     Ok(())
 }

@@ -78,9 +78,18 @@ impl ArrivalProcess {
     }
 
     /// Scale every time constant by `factor` (> 1 thins the load,
-    /// < 1 intensifies it); the load-sweep knob of the SLO benches.
-    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
-        match self {
+    /// < 1 intensifies it); the load-sweep knob of the SLO benches and
+    /// the `loadtest` / `cluster` `--scale` flag.  A non-positive or
+    /// non-finite factor would silently degenerate the process (zero
+    /// or reversed gaps), so it is a typed error instead.
+    pub fn scaled(&self, factor: f64) -> Result<ArrivalProcess> {
+        if !factor.is_finite() || factor <= 0.0 {
+            return Err(P3Error::InvalidFlag {
+                flag: "scale".into(),
+                value: format!("{factor}"),
+            });
+        }
+        Ok(match self {
             ArrivalProcess::Poisson { mean_interarrival_ms } => {
                 ArrivalProcess::Poisson {
                     mean_interarrival_ms: mean_interarrival_ms * factor,
@@ -101,7 +110,7 @@ impl ArrivalProcess {
             ArrivalProcess::Trace { arrivals_ms } => ArrivalProcess::Trace {
                 arrivals_ms: arrivals_ms.iter().map(|t| t * factor).collect(),
             },
-        }
+        })
     }
 }
 
@@ -227,11 +236,28 @@ mod tests {
     #[test]
     fn scaled_stretches_time() {
         let p = ArrivalProcess::Constant { interarrival_ms: 10.0 };
-        assert_eq!(p.scaled(2.0).arrivals(3, 0), vec![0.0, 20.0, 40.0]);
+        assert_eq!(
+            p.scaled(2.0).unwrap().arrivals(3, 0),
+            vec![0.0, 20.0, 40.0]
+        );
         let t = ArrivalProcess::Trace { arrivals_ms: vec![1.0, 3.0] };
         assert_eq!(
-            t.scaled(3.0),
+            t.scaled(3.0).unwrap(),
             ArrivalProcess::Trace { arrivals_ms: vec![3.0, 9.0] }
         );
+    }
+
+    #[test]
+    fn scaled_rejects_degenerate_factors_typed() {
+        let p = ArrivalProcess::Poisson { mean_interarrival_ms: 10.0 };
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            match p.scaled(bad) {
+                Err(P3Error::InvalidFlag { flag, .. }) => {
+                    assert_eq!(flag, "scale")
+                }
+                other => panic!("factor {bad}: expected InvalidFlag, got {other:?}"),
+            }
+        }
+        assert!(p.scaled(0.5).is_ok());
     }
 }

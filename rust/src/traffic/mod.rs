@@ -39,6 +39,6 @@ pub mod slo;
 
 pub use arrival::{load_trace_tsv, parse_trace_tsv, ArrivalProcess};
 pub use mix::{all_mixes, by_name as mix_by_name, RequestMix};
-pub use runner::{LoadRunner, RunOutcome};
+pub use runner::{LoadRunner, LoadTarget, RunOutcome};
 pub use scenario::{all_scenarios, by_name as scenario_by_name, Scenario};
 pub use slo::{LoadReport, ReqRecord, SloSpec};

@@ -7,13 +7,103 @@
 //! which re-derived prefill/decode costs on the side and bypassed the
 //! engine entirely; there is exactly one serving timeline now.
 
-use crate::coordinator::{Engine, RequestId};
+use crate::coordinator::{Engine, Metrics};
 use crate::error::{P3Error, Result};
 use crate::testutil::Rng;
 
 use super::arrival::ArrivalProcess;
 use super::mix::RequestMix;
 use super::slo::{LoadReport, ReqRecord, SloSpec};
+
+/// Anything the closed-loop runner can drive: a single [`Engine`], or
+/// a whole replica fleet behind a router
+/// (`cluster::Cluster`).  The runner owns the arrival
+/// schedule; the target owns the clock, admission and stepping.
+pub trait LoadTarget {
+    /// Clock the arrival schedule is interpreted on (ms).  For a fleet
+    /// this is the causal frontier: the earliest clock among busy
+    /// replicas (idle replicas can always fast-forward).
+    fn now_ms(&self) -> f64;
+
+    /// Nothing queued and nothing active anywhere.
+    fn is_idle(&self) -> bool;
+
+    /// Fast-forward idle capacity to absolute `ms` (jump over gaps
+    /// between arrivals).  Wall-clock targets may ignore this; callers
+    /// must tolerate `now_ms()` staying behind `ms`.
+    fn advance_clock_to(&mut self, ms: f64);
+
+    /// Longest admissible prompt (the runner clamps its samples).
+    fn max_prompt(&self) -> usize;
+
+    /// Vocabulary size for synthetic prompt tokens.
+    fn vocab(&self) -> usize;
+
+    /// Accept one request due at `due_ms`; returns an opaque ticket
+    /// the runner hands back to [`record`](Self::record).  A routed
+    /// fleet uses `due_ms` to stamp the chosen replica's clock.
+    fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        due_ms: f64,
+    ) -> Result<u64>;
+
+    /// One unit of serving progress.
+    fn step(&mut self) -> Result<()>;
+
+    /// Per-request timeline after the run finished.
+    fn record(&self, ticket: u64, scheduled_arrival_ms: f64) -> Result<ReqRecord>;
+
+    /// End-of-run engine metrics (merged across replicas for a fleet).
+    fn end_metrics(&self) -> Metrics;
+}
+
+impl LoadTarget for Engine {
+    fn now_ms(&self) -> f64 {
+        Engine::now_ms(self)
+    }
+
+    fn is_idle(&self) -> bool {
+        Engine::is_idle(self)
+    }
+
+    fn advance_clock_to(&mut self, ms: f64) {
+        Engine::advance_clock_to(self, ms);
+    }
+
+    fn max_prompt(&self) -> usize {
+        Engine::max_prompt(self)
+    }
+
+    fn vocab(&self) -> usize {
+        self.model().vocab
+    }
+
+    fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        _due_ms: f64,
+    ) -> Result<u64> {
+        Engine::submit(self, prompt, max_new).map(|id| id.0)
+    }
+
+    fn step(&mut self) -> Result<()> {
+        Engine::step(self).map(|_| ())
+    }
+
+    fn record(&self, ticket: u64, scheduled_arrival_ms: f64) -> Result<ReqRecord> {
+        let req = self
+            .request(crate::coordinator::RequestId(ticket))
+            .ok_or(P3Error::UnknownRequest(ticket))?;
+        Ok(ReqRecord::from_request(req, scheduled_arrival_ms))
+    }
+
+    fn end_metrics(&self) -> Metrics {
+        self.metrics()
+    }
+}
 
 /// A fully materialized load plan: per-request arrival offsets and
 /// (prompt, output) shapes, deterministic in the construction seed.
@@ -63,41 +153,48 @@ impl LoadRunner {
         LoadRunner { arrivals_ms, shapes, slo, seed }
     }
 
-    fn submit_one(&self, eng: &mut Engine, i: usize) -> Result<RequestId> {
+    fn submit_one<T: LoadTarget>(
+        &self,
+        target: &mut T,
+        i: usize,
+        due: f64,
+    ) -> Result<u64> {
         let (plen, max_new) = self.shapes[i];
-        // clamp to what this engine's backend/ctx can admit
-        let plen = plen.min(eng.max_prompt()).max(1);
+        // clamp to what this target's backend/ctx can admit
+        let plen = plen.min(target.max_prompt()).max(1);
         let mut prng = Rng::new((self.seed ^ 0x9e37) ^ ((i as u64) << 17));
-        let vocab = eng.model().vocab.max(2);
+        let vocab = target.vocab().max(2);
         let prompt: Vec<i32> =
             (0..plen).map(|_| prng.usize(0, vocab) as i32).collect();
-        eng.submit(prompt, max_new.max(1))
+        target.submit(prompt, max_new.max(1), due)
     }
 
-    /// Drive `eng` closed-loop until every offered request retires.
+    /// Drive a [`LoadTarget`] (one engine, or a routed fleet)
+    /// closed-loop until every offered request retires.
     ///
-    /// Requests are submitted when the engine clock reaches their
-    /// arrival; while the engine is idle the clock fast-forwards to
+    /// Requests are submitted when the target clock reaches their
+    /// arrival; while the target is idle the clock fast-forwards to
     /// the next arrival.  Simulated backends jump; wall-clock backends
     /// cannot, so the idle engine accepts the next request early
     /// rather than spinning (its effective arrival in the report is
     /// then the submit instant -- latencies never go negative).
-    pub fn run(&self, eng: &mut Engine) -> Result<RunOutcome> {
+    pub fn run<T: LoadTarget>(&self, target: &mut T) -> Result<RunOutcome> {
         let n = self.arrivals_ms.len();
-        let t0 = eng.now_ms();
-        let mut ids: Vec<Option<RequestId>> = vec![None; n];
+        let t0 = target.now_ms();
+        let mut ids: Vec<Option<u64>> = vec![None; n];
         let mut next = 0usize;
         let mut guard = 0usize;
         loop {
-            // admit everything due on the engine clock
+            // admit everything due on the target clock
             while next < n
-                && t0 + self.arrivals_ms[next] <= eng.now_ms() + 1e-9
+                && t0 + self.arrivals_ms[next] <= target.now_ms() + 1e-9
             {
-                ids[next] = Some(self.submit_one(eng, next)?);
+                let due = t0 + self.arrivals_ms[next];
+                ids[next] = Some(self.submit_one(target, next, due)?);
                 next += 1;
             }
-            if !eng.is_idle() {
-                eng.step()?;
+            if !target.is_idle() {
+                target.step()?;
                 guard += 1;
                 if guard > 5_000_000 {
                     return Err(P3Error::Serve(
@@ -110,11 +207,11 @@ impl LoadRunner {
                 break;
             }
             let due = t0 + self.arrivals_ms[next];
-            eng.advance_clock_to(due);
-            if eng.now_ms() + 1e-9 < due {
+            target.advance_clock_to(due);
+            if target.now_ms() + 1e-9 < due {
                 // the clock cannot fast-forward (wall-clock backend):
                 // take the next request early rather than spinning
-                ids[next] = Some(self.submit_one(eng, next)?);
+                ids[next] = Some(self.submit_one(target, next, due)?);
                 next += 1;
             }
         }
@@ -124,28 +221,12 @@ impl LoadRunner {
             let id = (*id).ok_or_else(|| {
                 P3Error::Serve(format!("request {i} was never submitted"))
             })?;
-            let req = eng
-                .request(id)
-                .ok_or(P3Error::UnknownRequest(id.0))?;
-            records.push(ReqRecord {
-                // a wall-clock backend can accept a request *before*
-                // its scheduled arrival (advance_to is a no-op there);
-                // the effective arrival is then the submit instant, so
-                // latencies never go negative
-                arrival_ms: (t0 + self.arrivals_ms[i])
-                    .min(req.submitted_ms),
-                submitted_ms: req.submitted_ms,
-                prefill_start_ms: req.prefill_start_ms,
-                first_token_ms: req.first_token_ms,
-                finished_ms: req.finished_ms,
-                prompt_len: req.prompt.len(),
-                tokens_generated: req.generated.len(),
-            });
+            records.push(target.record(id, t0 + self.arrivals_ms[i])?);
         }
         let report = LoadReport::from_records(
             &records,
             &self.slo,
-            &eng.metrics(),
+            &target.end_metrics(),
             None,
         );
         Ok(RunOutcome { report, records })
@@ -153,12 +234,12 @@ impl LoadRunner {
 
     /// [`run`](Self::run), attaching a modeled saturation throughput
     /// to the report (for utilization columns).
-    pub fn run_with_saturation(
+    pub fn run_with_saturation<T: LoadTarget>(
         &self,
-        eng: &mut Engine,
+        target: &mut T,
         saturation_tok_s: Option<f64>,
     ) -> Result<RunOutcome> {
-        let mut out = self.run(eng)?;
+        let mut out = self.run(target)?;
         out.report.saturation_tok_s = saturation_tok_s;
         Ok(out)
     }

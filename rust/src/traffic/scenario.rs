@@ -75,6 +75,24 @@ impl Scenario {
         b.build()
     }
 
+    /// Scale the arrival process (`--scale`: > 1 thins the load, < 1
+    /// intensifies it); degenerate factors are typed errors.
+    pub fn with_scale(mut self, factor: f64) -> Result<Self> {
+        self.arrival = self.arrival.scaled(factor)?;
+        Ok(self)
+    }
+
+    /// Weak-scaling transform for an `n`-replica fleet: `n` times the
+    /// request volume at `n` times the arrival rate, so per-replica
+    /// offered load matches the single-engine scenario and fleet
+    /// goodput can be read as a scaling curve.
+    pub fn for_fleet(mut self, replicas: usize) -> Result<Self> {
+        let r = replicas.max(1);
+        self.n_requests *= r;
+        self.arrival = self.arrival.scaled(1.0 / r as f64)?;
+        Ok(self)
+    }
+
     /// Modeled peak decode throughput (tok/s) of `system` at this
     /// scenario's batch/context -- the saturation roof `LoadReport`
     /// utilization is measured against.

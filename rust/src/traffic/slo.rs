@@ -6,7 +6,7 @@
 //! TTFT budget gets throughput credit and zero goodput, which is
 //! exactly the distinction the Section I chatbot scenario draws.
 
-use crate::coordinator::{Metrics, Percentiles};
+use crate::coordinator::{Metrics, Percentiles, Request};
 
 /// Latency targets for one request class: time-to-first-token and
 /// mean per-output-token budgets, both in engine-clock milliseconds.
@@ -58,6 +58,23 @@ pub struct ReqRecord {
 }
 
 impl ReqRecord {
+    /// Snapshot one engine request against its scheduled arrival --
+    /// the one place the timeline-extraction rule lives.  A wall-clock
+    /// backend can accept a request *before* its scheduled arrival
+    /// (`advance_to` is a no-op there); the effective arrival is then
+    /// the submit instant, so latencies never go negative.
+    pub fn from_request(req: &Request, scheduled_arrival_ms: f64) -> Self {
+        ReqRecord {
+            arrival_ms: scheduled_arrival_ms.min(req.submitted_ms),
+            submitted_ms: req.submitted_ms,
+            prefill_start_ms: req.prefill_start_ms,
+            first_token_ms: req.first_token_ms,
+            finished_ms: req.finished_ms,
+            prompt_len: req.prompt.len(),
+            tokens_generated: req.generated.len(),
+        }
+    }
+
     /// Client-observed time to first token (from arrival).
     pub fn ttft_ms(&self) -> Option<f64> {
         self.first_token_ms.map(|t| t - self.arrival_ms)

@@ -1,0 +1,189 @@
+//! Integration tests for the multi-replica cluster layer: request
+//! conservation under every routing policy (including KV-admission
+//! bounce), whole-run seed determinism, weak-scaling goodput growth,
+//! and the prefill/decode-disaggregated handoff's client-visible
+//! accounting.
+
+use p3llm::cluster::{all_policy_names, Cluster};
+use p3llm::testutil::Runner;
+use p3llm::traffic::{scenario_by_name, ArrivalProcess, RequestMix, Scenario, SloSpec};
+
+/// A small bursty tiny-model scenario whose KV pool overcommits, so
+/// routing interacts with admission control (bounce + requeue).
+fn bursty_tiny(n_requests: usize, kv_slots: usize) -> Scenario {
+    Scenario {
+        name: "cluster-test",
+        desc: "bursty tiny scenario for cluster property tests",
+        model: "tiny-1M",
+        arrival: ArrivalProcess::OnOff {
+            burst_n: 6,
+            burst_gap_ms: 0.1,
+            idle_ms: 30.0,
+        },
+        mix: RequestMix::tiny(),
+        slo: SloSpec::relaxed(),
+        n_requests,
+        max_batch: 4,
+        ctx_limit: 128,
+        kv_slots,
+    }
+}
+
+/// Satellite: request conservation.  For every policy, arrivals ==
+/// completed + still-queued (zero after a full run) across all
+/// replicas -- no request lost or duplicated by routing, including
+/// when bursts overcommit the KV pool and requests bounce.
+#[test]
+fn every_policy_conserves_requests_under_bounce() {
+    for policy in all_policy_names() {
+        Runner::new(6).run(|r| {
+            let replicas = r.usize(1, 5); // 1..=4
+            let n = r.usize(8, 25); // 8..=24 requests
+            // 2..=3 KV slots vs batch 4: bursts bounce
+            let sc = bursty_tiny(n, r.usize(2, 4));
+            let mut fleet =
+                Cluster::from_scenario(&sc, "P3-LLM", None, replicas, policy)
+                    .unwrap();
+            let plan = sc.runner(r.next_u64());
+            let out = fleet.run(&plan, None).unwrap();
+            // fleet view: every arrival accounted for exactly once
+            assert_eq!(out.run.records.len(), n, "{policy}");
+            assert_eq!(out.run.report.offered, n, "{policy}");
+            assert_eq!(
+                out.run.report.completed, n,
+                "{policy} x{replicas} lost requests"
+            );
+            assert!(
+                out.run.records.iter().all(|rec| rec.finished()),
+                "{policy}"
+            );
+            // per-replica partition sums back to the offered count
+            let per: usize = out
+                .report
+                .per_replica
+                .iter()
+                .map(|p| p.report.completed)
+                .sum();
+            assert_eq!(per, n, "{policy} partition double-counts");
+            // every reservation released everywhere
+            for i in 0..fleet.replicas() {
+                assert_eq!(fleet.replica(i).kv_entries(), 0, "{policy}");
+                assert_eq!(fleet.replica(i).pool_used_bytes(), 0, "{policy}");
+            }
+        });
+    }
+}
+
+/// Whole cluster runs are bit-identical under a seed, and the seed
+/// steers the timeline.
+#[test]
+fn cluster_runs_are_bit_identical_under_a_seed() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let run = |seed: u64| {
+        let mut fleet =
+            Cluster::from_scenario(&sc, "P3-LLM", None, 3, "jsq").unwrap();
+        let plan = sc.clone().for_fleet(3).unwrap().runner(seed);
+        fleet.run(&plan, sc.saturation_tok_s("P3-LLM")).unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a.run.records, b.run.records);
+    assert_eq!(a.run.report, b.run.report);
+    assert_eq!(a.report.fleet, b.report.fleet);
+    assert_eq!(a.report.util_skew, b.report.util_skew);
+    let c = run(8);
+    assert_ne!(a.run.records, c.run.records, "seed must steer routing");
+}
+
+/// Weak scaling: 4 JSQ replicas offered 4x the load deliver well over
+/// 2.5x the 1-replica goodput (the bench asserts the same floor on
+/// the full chat-poisson scenario in release mode).
+#[test]
+fn jsq_goodput_scales_with_replicas() {
+    let mut sc = scenario_by_name("smoke").unwrap();
+    sc.n_requests = 24;
+    let run = |n: usize| {
+        let mut fleet =
+            Cluster::from_scenario(&sc, "P3-LLM", None, n, "jsq").unwrap();
+        let plan = sc.clone().for_fleet(n).unwrap().runner(7);
+        fleet
+            .run(&plan, sc.saturation_tok_s("P3-LLM"))
+            .unwrap()
+            .report
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    let (g1, g4) = (r1.fleet.goodput_tok_s, r4.fleet.goodput_tok_s);
+    assert!(g1 > 0.0);
+    assert!(
+        g4 >= 2.5 * g1,
+        "fleet goodput flat: {g1} tok/s at 1 replica, {g4} at 4"
+    );
+    // adaptive routing keeps the fleet reasonably balanced
+    let skew = r4.util_skew;
+    assert!(skew < 3.0, "skew {skew}");
+    let eff = r4.with_baseline(g1).scaling_efficiency.unwrap();
+    assert!(eff > 0.6 && eff <= 1.5, "efficiency {eff}");
+}
+
+/// Disaggregated routing: prompts prefill on the prefill pool, decode
+/// continuations land on the decode pool, and the client-visible
+/// token/latency accounting stays exact across the handoff.
+#[test]
+fn prefill_decode_handoff_accounts_exactly() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let mut fleet =
+        Cluster::from_scenario(&sc, "P3-LLM", None, 4, "pd").unwrap();
+    let plan = sc.clone().for_fleet(4).unwrap().runner(11);
+    let out = fleet.run(&plan, None).unwrap();
+    assert_eq!(out.run.report.completed, out.run.report.offered);
+    for rec in &out.run.records {
+        assert!(rec.finished());
+        // first token from the prefill side never after completion
+        let first = rec.first_token_ms.unwrap();
+        let fin = rec.finished_ms.unwrap();
+        assert!(first <= fin + 1e-9, "{rec:?}");
+        assert!(rec.ttft_ms().unwrap() >= 0.0);
+        assert!(rec.tokens_generated >= 1);
+    }
+    // smoke's tiny mix draws >= 2 output tokens, so every request
+    // splits: the prefill replica (index 0 of a 4-fleet) completes one
+    // stub per request, and every continuation finishes on the decode
+    // pool (replicas 1..4)
+    let offered = out.run.report.offered;
+    let pre = fleet.replica_metrics(0);
+    assert_eq!(pre.completed, offered, "prefill stubs");
+    let decode_completed: usize =
+        (1..4).map(|i| fleet.replica_metrics(i).completed).sum();
+    assert_eq!(decode_completed, offered, "handoffs lost");
+    // prefill replica did real prefill work
+    assert!(pre.prefill_ms > 0.0);
+}
+
+/// The fleet-merged report stays consistent with the exact
+/// record-level fleet report (counts identical, rates close).
+#[test]
+fn merged_report_matches_exact_fleet_view() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let mut fleet =
+        Cluster::from_scenario(&sc, "P3-LLM", None, 2, "rr").unwrap();
+    let plan = sc.clone().for_fleet(2).unwrap().runner(5);
+    let out = fleet.run(&plan, sc.saturation_tok_s("P3-LLM")).unwrap();
+    let exact = &out.run.report;
+    let merged = &out.report.fleet;
+    assert_eq!(exact.offered, merged.offered);
+    assert_eq!(exact.completed, merged.completed);
+    assert_eq!(exact.slo_met, merged.slo_met);
+    // same token mass over (possibly) slightly different spans
+    let exact_tokens = exact.throughput_tok_s * exact.makespan_ms;
+    let merged_tokens = merged.throughput_tok_s * merged.makespan_ms;
+    assert!(
+        (exact_tokens - merged_tokens).abs() <= 1e-6 * exact_tokens.max(1.0),
+        "{exact_tokens} vs {merged_tokens}"
+    );
+    // the fleet views agree on the aggregate decode-busy rate
+    assert!((exact.busy_tok_s - merged.busy_tok_s).abs() < 1e-9);
+    // a cluster is single-use: a second run is a typed error, not a
+    // silently corrupt report
+    assert!(fleet.run(&plan, None).is_err());
+}
