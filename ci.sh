@@ -35,9 +35,19 @@ cargo build --release
 echo "ci: tier-1 tests"
 cargo test -q
 
-# Fast closed-loop serving gate: a tiny Poisson scenario through the
-# real engine must report nonzero goodput (the binary enforces that
-# under --smoke) and be bit-identical across runs under a fixed seed.
+# Rustdoc gate: crate docs (incl. the compiling doc-examples in
+# lib.rs / serve.rs / traffic / cluster) must build warning-free --
+# broken intra-doc links and malformed doc markup fail the build.
+echo "ci: rustdoc"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+echo "ci: rustdoc OK"
+
+# Fast closed-loop serving gate: the tiny Poisson scenario AND the
+# tiny shared-prefix scenario run through the real engine under
+# --smoke.  The binary enforces nonzero goodput, a nonzero prefix-
+# cache hit rate, and a strictly lower mean TTFT than the identical
+# cache-disabled run; the diff below enforces bit-identical output
+# across runs under a fixed seed (hit/saved columns included).
 echo "ci: loadtest smoke"
 S1=$(cargo run --release --quiet -- loadtest --smoke --seed 7)
 S2=$(cargo run --release --quiet -- loadtest --smoke --seed 7)

@@ -5,7 +5,7 @@
 use p3llm::accel::Accel;
 use p3llm::benchkit::{time, Timing};
 use p3llm::config::llm::LLAMA31_8B;
-use p3llm::coordinator::{KvEntry, KvLayout, KvPool};
+use p3llm::coordinator::{KvLayout, KvPool};
 use p3llm::EngineBuilder;
 use p3llm::quant::bitmod::bitmod_encode_group;
 use p3llm::report::{f2, Table};
@@ -28,25 +28,24 @@ fn main() {
     );
     let mut rng = Rng::new(1);
 
-    // KV pack + dequant of one full tiny-model cache
+    // KV pack + dequant of one full tiny-model cache (page-pooled)
     let layout = KvLayout { layers: 4, kv_dim: 32, head_dim: 16, max_ctx: 160 };
     let mut pool = KvPool::new(layout.clone(), 64 << 20);
     let smooth = vec![vec![1.0f32; 32]; 4];
-    let entry = pool.alloc(1, smooth).unwrap();
+    pool.alloc_seq(1, smooth, 160, None).unwrap();
     let k: Vec<f32> = rng.vec_f32(32, -1.0, 1.0);
     let v: Vec<f32> = rng.vec_f32(32, -1.0, 1.0);
     for _ in 0..128 {
         for l in 0..4 {
-            entry.push_token(l, &k, &v);
+            pool.push_token(1, l, &k, &v).unwrap();
         }
-        entry.commit_token();
+        pool.commit_token(1).unwrap();
     }
     let tm = time(3, 20, || {
-        let e: &KvEntry = pool.get(1).unwrap();
         let mut ko = vec![0.0f32; 160 * 32];
         let mut vo = vec![0.0f32; 160 * 32];
         for l in 0..4 {
-            e.dequant_layer(l, &mut ko, &mut vo);
+            pool.dequant_layer(1, l, &mut ko, &mut vo).unwrap();
             std::hint::black_box((&ko, &vo));
         }
     });
@@ -54,12 +53,12 @@ fn main() {
 
     let tm = time(3, 20, || {
         let mut p = KvPool::new(layout.clone(), 64 << 20);
-        let e = p.alloc(2, vec![vec![1.0f32; 32]; 4]).unwrap();
+        p.alloc_seq(2, vec![vec![1.0f32; 32]; 4], 160, None).unwrap();
         for _ in 0..128 {
             for l in 0..4 {
-                e.push_token(l, &k, &v);
+                p.push_token(2, l, &k, &v).unwrap();
             }
-            e.commit_token();
+            p.commit_token(2).unwrap();
         }
         std::hint::black_box(p.used_bytes());
     });

@@ -19,14 +19,16 @@
 
 use crate::accel;
 use crate::config::accel::HbmTiming;
-use crate::coordinator::{Engine, KvLayout, Metrics, Percentiles, RequestId};
+use crate::coordinator::{
+    prefix_page_hash, Engine, Metrics, Percentiles, RequestId,
+};
 use crate::error::{P3Error, Result};
 use crate::sim::{dram, npu};
 use crate::traffic::{
     LoadReport, LoadRunner, LoadTarget, ReqRecord, RunOutcome, Scenario,
 };
 
-use super::policy::{policy_by_name, ReplicaSnapshot, RoutePolicy};
+use super::policy::{policy_by_name, ReplicaSnapshot, RoutePolicy, RouteQuery};
 use super::report::ClusterReport;
 
 /// One routed request's lifecycle across the fleet.
@@ -112,7 +114,8 @@ impl Cluster {
     ) -> Result<Self> {
         let policy = policy_by_name(policy_name).ok_or_else(|| {
             P3Error::InvalidConfig(format!(
-                "unknown routing policy {policy_name:?} (rr | jsq | kv | pd)"
+                "unknown routing policy {policy_name:?} \
+                 (rr | jsq | kv | pa | pd)"
             ))
         })?;
         // replicas == 0 falls through to Cluster::new's typed
@@ -165,15 +168,14 @@ impl Cluster {
     /// tokens: the packed KV streams out of the source stack's DRAM
     /// (event-level `sim::dram` read pass) and crosses the external
     /// bus; the stages pipeline, so the slower one prices the hop.
+    ///
+    /// Priced on the *exact* packed bytes (2 sides x layers x tokens x
+    /// kv_dim/2), not the page-rounded `bytes_per_request` sizing
+    /// helper -- only occupied token slots cross the fabric.
     pub fn kv_transfer_ms(&self, tokens: usize) -> f64 {
         let m = self.replicas[0].model();
-        let bytes = KvLayout {
-            layers: m.layers,
-            kv_dim: m.kv_dim(),
-            head_dim: m.head_dim,
-            max_ctx: tokens.max(1),
-        }
-        .bytes_per_request() as f64;
+        let bytes =
+            (2 * m.layers * tokens.max(1) * (m.kv_dim() / 2)) as f64;
         let stream_ns = dram::gemv_pass_ns(&self.hbm, bytes);
         let bus_ns = npu::transfer(&self.hbm, bytes).ns;
         stream_ns.max(bus_ns) / 1e6
@@ -221,11 +223,12 @@ impl Cluster {
                     )
                 })?;
             let snaps = self.snapshots(&pool);
-            let d = self.policy.route_decode(
-                cont_prompt.len(),
-                total - 1,
-                &snaps,
-            );
+            let dq = RouteQuery {
+                prompt_len: cont_prompt.len(),
+                max_new: total - 1,
+                affinity: prefix_page_hash(&cont_prompt),
+            };
+            let d = self.policy.route_decode(&dq, &snaps);
             // causality: the KV cannot land before the prefill that
             // produced it finished.  The decode replica synchronizes
             // on the fabric barrier even if its local clock lags (its
@@ -300,7 +303,12 @@ impl LoadTarget for Cluster {
         let n = self.replicas.len();
         let pool = self.policy.prefill_pool(n);
         let snaps = self.snapshots(&pool);
-        let chosen = self.policy.route(prompt.len(), max_new, &snaps);
+        let query = RouteQuery {
+            prompt_len: prompt.len(),
+            max_new,
+            affinity: prefix_page_hash(&prompt),
+        };
+        let chosen = self.policy.route(&query, &snaps);
         // disaggregate only when there is a decode pool, something
         // left to decode, and the continuation (prompt + first token)
         // still fits a decode replica's context
@@ -402,6 +410,11 @@ impl LoadTarget for Cluster {
             wall_ms: per.iter().map(|m| m.wall_ms).fold(0.0, f64::max),
             prefill_ms: per.iter().map(|m| m.prefill_ms).sum(),
             decode_ms: per.iter().map(|m| m.decode_ms).sum(),
+            prefix_hits: per.iter().map(|m| m.prefix_hits).sum(),
+            prefix_tokens_saved: per
+                .iter()
+                .map(|m| m.prefix_tokens_saved)
+                .sum(),
             ttft_ms: Percentiles::merge(&ttfts),
             per_token_ms: Percentiles::merge(&tpots),
         }

@@ -16,19 +16,30 @@
 //! * `rr`  -- round-robin rotation (the load-blind baseline)
 //! * `jsq` -- join-shortest-queue over queued + active lanes
 //! * `kv`  -- least-KV-loaded (live pool bytes)
+//! * `pa`  -- prefix-affinity: route by the prompt's first-page
+//!   content hash ([`prefix_page_hash`](crate::coordinator::prefix_page_hash)),
+//!   so requests sharing a system prompt land on the same replica and
+//!   its shared-prefix KV cache stays hot (replica-local caches
+//!   instead of every replica cold-missing every tenant)
 //! * `pd`  -- prefill/decode disaggregation: prompts run on a prefill
 //!   pool, the finished KV migrates to a decode pool at a transfer
 //!   cost priced from the `sim::dram` event model / HBM external bus
 //!   (NeuPIMs' sub-batch split and IANUS' unified-memory scheduling
 //!   are the motivating designs)
 //!
-//! ```ignore
-//! let sc = traffic::scenario_by_name("chat-poisson").unwrap();
-//! let mut fleet = Cluster::from_scenario(&sc, "P3-LLM", None, 4, "jsq")?;
-//! let plan = sc.clone().for_fleet(4)?.runner(7);
+//! ```
+//! use p3llm::cluster::Cluster;
+//! use p3llm::traffic;
+//! # fn main() -> p3llm::Result<()> {
+//! let sc = traffic::scenario_by_name("smoke").unwrap();
+//! let mut fleet = Cluster::from_scenario(&sc, "P3-LLM", None, 2, "jsq")?;
+//! let plan = sc.clone().for_fleet(2)?.runner(7);
 //! let out = fleet.run(&plan, sc.saturation_tok_s("P3-LLM"))?;
+//! assert!(out.report.fleet.goodput_tok_s > 0.0);
 //! println!("fleet goodput {:.1} tok/s, skew {:.2}",
 //!          out.report.fleet.goodput_tok_s, out.report.util_skew);
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! Whole cluster runs are bit-identical under a fixed seed: routing is
@@ -42,6 +53,7 @@ pub mod report;
 pub use fleet::{Cluster, ClusterOutcome};
 pub use policy::{
     all_policy_names, policy_by_name, policy_desc, JoinShortestQueue,
-    LeastKvLoaded, PrefillDecode, ReplicaSnapshot, RoundRobin, RoutePolicy,
+    LeastKvLoaded, PrefillDecode, PrefixAffinity, ReplicaSnapshot,
+    RoundRobin, RoutePolicy, RouteQuery,
 };
 pub use report::{ClusterReport, ReplicaLoad};

@@ -1,16 +1,30 @@
 //! Pluggable request-routing policies for a multi-replica fleet.
 //!
-//! A policy sees a cheap snapshot of every candidate replica (queue
-//! depth, live decode lanes, KV pool occupancy, local clock) and picks
-//! where the next request lands.  Colocated policies route every
-//! request to one replica that does both prefill and decode;
-//! the disaggregated policy splits the fleet into a prefill pool and a
-//! decode pool (NeuPIMs/DistServe-style), with the finished KV handed
-//! over at a modeled transfer cost (see
+//! A policy sees a cheap [`RouteQuery`] describing the request (length
+//! shape plus its prefix-affinity hash) and a snapshot of every
+//! candidate replica (queue depth, live decode lanes, KV pool
+//! occupancy, local clock), and picks where the next request lands.
+//! Colocated policies route every request to one replica that does
+//! both prefill and decode; the disaggregated policy splits the fleet
+//! into a prefill pool and a decode pool (NeuPIMs/DistServe-style),
+//! with the finished KV handed over at a modeled transfer cost (see
 //! [`Cluster`](super::fleet::Cluster)).
 //!
 //! All policies are deterministic: ties break on the lowest replica
 //! index, so a fixed seed replays the identical placement sequence.
+
+/// What a policy may observe about the request being placed.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteQuery {
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// content hash of the prompt's first KV page
+    /// ([`prefix_page_hash`](crate::coordinator::prefix_page_hash));
+    /// `None` when the prompt is shorter than one page.  Requests
+    /// sharing a system prompt share this value -- the signal the
+    /// `pa` policy routes on to keep prefix caches replica-local.
+    pub affinity: Option<u64>,
+}
 
 /// What a policy may observe about one replica at routing time.
 #[derive(Debug, Clone, Copy)]
@@ -59,8 +73,7 @@ pub trait RoutePolicy {
     /// Pick a replica for a fresh arrival.
     fn route(
         &mut self,
-        prompt_len: usize,
-        max_new: usize,
+        query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize;
 
@@ -68,11 +81,10 @@ pub trait RoutePolicy {
     /// fleets); defaults to the fresh-arrival rule.
     fn route_decode(
         &mut self,
-        prompt_len: usize,
-        max_new: usize,
+        query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
-        self.route(prompt_len, max_new, candidates)
+        self.route(query, candidates)
     }
 }
 
@@ -105,8 +117,7 @@ impl RoutePolicy for RoundRobin {
 
     fn route(
         &mut self,
-        _prompt_len: usize,
-        _max_new: usize,
+        _query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
         let pick = candidates[self.next % candidates.len()].index;
@@ -127,8 +138,7 @@ impl RoutePolicy for JoinShortestQueue {
 
     fn route(
         &mut self,
-        _prompt_len: usize,
-        _max_new: usize,
+        _query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
         argmin_by(candidates, |c| c.depth())
@@ -148,11 +158,39 @@ impl RoutePolicy for LeastKvLoaded {
 
     fn route(
         &mut self,
-        _prompt_len: usize,
-        _max_new: usize,
+        _query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
         argmin_by(candidates, |c| (c.kv_used_bytes, c.depth()))
+    }
+}
+
+/// Prefix-affinity: requests sharing a first-page prefix hash land on
+/// the same replica (`hash % candidates`), so each replica's
+/// shared-prefix KV cache serves its own tenant slice instead of every
+/// replica cold-missing every system prompt.  Prefix-less prompts
+/// (shorter than one KV page) fall back to join-shortest-queue.
+///
+/// Deterministic and stateless; the trade is load balance for cache
+/// locality, which pays off exactly when the workload carries popular
+/// shared prefixes (`agent`, `rag-cached` mixes).
+#[derive(Debug, Default)]
+pub struct PrefixAffinity;
+
+impl RoutePolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "pa"
+    }
+
+    fn route(
+        &mut self,
+        query: &RouteQuery,
+        candidates: &[ReplicaSnapshot],
+    ) -> usize {
+        match query.affinity {
+            Some(h) => candidates[(h % candidates.len() as u64) as usize].index,
+            None => argmin_by(candidates, |c| c.depth()),
+        }
     }
 }
 
@@ -194,8 +232,7 @@ impl RoutePolicy for PrefillDecode {
 
     fn route(
         &mut self,
-        _prompt_len: usize,
-        _max_new: usize,
+        _query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
         argmin_by(candidates, |c| c.depth())
@@ -203,8 +240,7 @@ impl RoutePolicy for PrefillDecode {
 
     fn route_decode(
         &mut self,
-        _prompt_len: usize,
-        _max_new: usize,
+        _query: &RouteQuery,
         candidates: &[ReplicaSnapshot],
     ) -> usize {
         argmin_by(candidates, |c| (c.kv_used_bytes, c.depth()))
@@ -213,7 +249,7 @@ impl RoutePolicy for PrefillDecode {
 
 /// Registry names (`cluster --policy all` / `--list`).
 pub fn all_policy_names() -> Vec<&'static str> {
-    vec!["rr", "jsq", "kv", "pd"]
+    vec!["rr", "jsq", "kv", "pa", "pd"]
 }
 
 /// One-line description per policy (CLI `--list`).
@@ -222,6 +258,7 @@ pub fn policy_desc(name: &str) -> &'static str {
         "rr" => "round-robin rotation, blind to load",
         "jsq" => "join-shortest-queue (queued + active lanes)",
         "kv" => "least-KV-loaded (live pool bytes, depth tiebreak)",
+        "pa" => "prefix-affinity (route by shared-prefix hash; JSQ fallback)",
         "pd" => "prefill/decode disaggregation with modeled KV handoff",
         _ => "",
     }
@@ -239,6 +276,9 @@ pub fn policy_by_name(name: &str) -> Option<Box<dyn RoutePolicy>> {
         "kv" | "least-kv" | "least-kv-loaded" => {
             Some(Box::new(LeastKvLoaded))
         }
+        "pa" | "prefix-affinity" | "affinity" => {
+            Some(Box::new(PrefixAffinity))
+        }
         "pd" | "prefill-decode" | "disagg" => {
             Some(Box::new(PrefillDecode))
         }
@@ -254,6 +294,10 @@ mod tests {
         ReplicaSnapshot { index, queued, active, kv_used_bytes: kv, now_ms: 0.0 }
     }
 
+    fn q(prompt_len: usize, max_new: usize) -> RouteQuery {
+        RouteQuery { prompt_len, max_new, affinity: None }
+    }
+
     #[test]
     fn registry_resolves_every_advertised_name() {
         for n in all_policy_names() {
@@ -262,6 +306,7 @@ mod tests {
             assert!(!policy_desc(n).is_empty());
         }
         assert!(policy_by_name("JSQ").is_some());
+        assert!(policy_by_name("prefix-affinity").is_some());
         assert!(policy_by_name("magic").is_none());
     }
 
@@ -270,7 +315,7 @@ mod tests {
         let mut p = RoundRobin::default();
         let c = [snap(0, 9, 9, 9), snap(1, 0, 0, 0), snap(2, 5, 5, 5)];
         let picks: Vec<usize> =
-            (0..6).map(|_| p.route(8, 8, &c)).collect();
+            (0..6).map(|_| p.route(&q(8, 8), &c)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -278,9 +323,9 @@ mod tests {
     fn jsq_picks_the_shallowest_and_ties_break_low() {
         let mut p = JoinShortestQueue;
         let c = [snap(0, 2, 1, 0), snap(1, 0, 1, 0), snap(2, 1, 0, 0)];
-        assert_eq!(p.route(8, 8, &c), 1);
+        assert_eq!(p.route(&q(8, 8), &c), 1);
         let tied = [snap(0, 1, 1, 0), snap(1, 0, 2, 0), snap(2, 2, 0, 0)];
-        assert_eq!(p.route(8, 8, &tied), 0);
+        assert_eq!(p.route(&q(8, 8), &tied), 0);
     }
 
     #[test]
@@ -288,7 +333,31 @@ mod tests {
         let mut p = LeastKvLoaded;
         let c = [snap(0, 0, 0, 4096), snap(1, 3, 3, 128), snap(2, 0, 0, 128)];
         // 1 and 2 tie on bytes; depth breaks toward 2
-        assert_eq!(p.route(8, 8, &c), 2);
+        assert_eq!(p.route(&q(8, 8), &c), 2);
+    }
+
+    #[test]
+    fn prefix_affinity_is_sticky_and_falls_back_to_jsq() {
+        let mut p = PrefixAffinity;
+        let c = [snap(0, 5, 5, 0), snap(1, 0, 0, 0), snap(2, 1, 1, 0)];
+        let with = |h: u64| RouteQuery {
+            prompt_len: 64,
+            max_new: 8,
+            affinity: Some(h),
+        };
+        // same affinity hash -> same replica, regardless of load
+        let a = p.route(&with(0xABCD), &c);
+        for _ in 0..4 {
+            assert_eq!(p.route(&with(0xABCD), &c), a);
+        }
+        // hashes spread across the fleet
+        let spread: std::collections::HashSet<usize> =
+            (0..32u64).map(|h| p.route(&with(h), &c)).collect();
+        assert_eq!(spread.len(), 3);
+        // the placement is hash % candidates on fleet indices
+        assert_eq!(p.route(&with(4), &c), (4 % 3) as usize);
+        // prefix-less prompts JSQ to the shallowest replica
+        assert_eq!(p.route(&q(8, 8), &c), 1);
     }
 
     #[test]

@@ -57,6 +57,9 @@ impl ClusterReport {
         let offered: usize = per.iter().map(|r| r.offered).sum();
         let completed: usize = per.iter().map(|r| r.completed).sum();
         let slo_met: usize = per.iter().map(|r| r.slo_met).sum();
+        let prefix_hits: usize = per.iter().map(|r| r.prefix_hits).sum();
+        let prefill_tokens_saved: usize =
+            per.iter().map(|r| r.prefill_tokens_saved).sum();
         let makespan_ms = fleet_makespan_ms.unwrap_or_else(|| {
             per.iter().map(|r| r.makespan_ms).fold(0.0, f64::max)
         });
@@ -110,6 +113,13 @@ impl ClusterReport {
             // aggregate decode service rate in use across the fleet
             busy_tok_s: per.iter().map(|r| r.busy_tok_s).sum(),
             saturation_tok_s: saturation,
+            prefix_hits,
+            prefix_hit_rate: if offered > 0 {
+                prefix_hits as f64 / offered as f64
+            } else {
+                0.0
+            },
+            prefill_tokens_saved,
             queue_delay_ms: Percentiles::merge(&queue_parts),
             ttft_ms: Percentiles::merge(&ttft_parts),
             tpot_ms: Percentiles::merge(&tpot_parts),
@@ -167,6 +177,7 @@ mod tests {
             finished_ms: Some(fin),
             prompt_len: 16,
             tokens_generated: tokens,
+            cached_prefix_tokens: 0,
         }
     }
 

@@ -109,12 +109,15 @@ pub trait ExecBackend {
     }
 
     /// One prefill tile with `prefix_len` tokens of this prompt
-    /// already installed (chunked prefill).  Cost-model backends
-    /// charge the *incremental* cost of extending the prefix -- the
-    /// later tiles attend against everything before them, so the
-    /// telescoping sum over tiles reproduces the full-prompt cost --
-    /// while the default ignores the prefix (single-tile backends only
-    /// ever see prefix 0).
+    /// already installed -- earlier chunks of a chunked prefill, or a
+    /// shared-prefix cache hit whose pages the engine adopted (then
+    /// the first tile already starts at `prefix_len > 0` and the
+    /// cached span's compute is skipped entirely).  Cost-model
+    /// backends charge the *incremental* cost of extending the prefix
+    /// -- the later tiles attend against everything before them, so
+    /// the telescoping sum over tiles reproduces the full-prompt cost
+    /// -- while the default ignores the prefix (single-tile backends
+    /// run the chunk as-is).
     fn prefill_continue(
         &mut self,
         chunk: &[i32],

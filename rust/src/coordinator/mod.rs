@@ -1,6 +1,7 @@
 //! L3 coordinator (the paper's system layer, Fig. 6): request router +
-//! continuous batcher, quantized KV-cache manager with smoothing-factor
-//! store, online NPU/PIM operator mapper, and the serving engine.
+//! continuous batcher, page-granular quantized KV-cache manager with
+//! shared-prefix caching and smoothing-factor store, online NPU/PIM
+//! operator mapper, and the serving engine.
 //!
 //! The engine drives an [`ExecBackend`]; two substrates implement it:
 //! [`PjrtBackend`] (real numerics over the AOT-compiled PJRT graphs)
@@ -18,7 +19,9 @@ pub mod simbackend;
 
 pub use backend::{BackendKind, DecodeOut, ExecBackend, Lane, PrefillOut};
 pub use batcher::{covering_batch, Batcher, COMPILED_BATCHES};
-pub use kvcache::{KvEntry, KvLayout, KvPool};
+pub use kvcache::{
+    prefix_page_hash, KvLayout, KvPool, PrefixHit, PAGE_TOKENS,
+};
 pub use mapper::{map_decode_step, Assignment, Engine as MapEngine, MapSummary};
 pub use pjrt::{PjrtBackend, PREFILL_T};
 pub use request::{Request, RequestId, RequestStatus, State};

@@ -91,6 +91,28 @@ impl ExecBackend for PjrtBackend {
         PREFILL_T
     }
 
+    /// Suffix tile of a prompt whose first `prefix_len` tokens were
+    /// adopted from the shared-prefix KV cache.  The AOT prefill graph
+    /// has a fixed single-tile `[1, 64]` signature and cannot attend
+    /// into cached KV, so the suffix prefills as its own tile: its
+    /// tile-internal attention and positions restart at 0 -- a
+    /// documented approximation of the true prefix-conditioned
+    /// prefill.  The *decode* steps that follow read the full
+    /// dequantized cache (adopted prefix pages + suffix KV) at true
+    /// positions, so generation attends over the real prefix from the
+    /// first decoded token on.  Because of this approximation the
+    /// prefix cache is **opt-in** on this backend
+    /// (`EngineBuilder::prefix_cache(true)`); the default keeps exact
+    /// numerics.
+    fn prefill_continue(
+        &mut self,
+        chunk: &[i32],
+        prefix_len: usize,
+    ) -> Result<PrefillOut> {
+        let _ = prefix_len;
+        self.prefill(chunk)
+    }
+
     fn now_ms(&self) -> f64 {
         self.t0.elapsed().as_secs_f64() * 1e3
     }
@@ -184,16 +206,16 @@ impl ExecBackend for PjrtBackend {
         for (lane, li) in lanes.iter().enumerate() {
             tokens[lane] = li.last_token;
             pos[lane] = li.pos as i32;
-            let entry = pool
-                .get(li.rid)
+            let smooth = pool
+                .seq_smooth(li.rid)
                 .ok_or_else(|| P3Error::Serve(format!("no KV for {}", li.rid)))?;
             for layer in 0..l {
-                entry.dequant_layer(layer, &mut kscratch, &mut vscratch);
+                pool.dequant_layer(li.rid, layer, &mut kscratch, &mut vscratch)?;
                 let off = (layer * b + lane) * ctx * kvd;
                 kc[off..off + ctx * kvd].copy_from_slice(&kscratch);
                 vc[off..off + ctx * kvd].copy_from_slice(&vscratch);
                 let soff = (layer * b + lane) * kvd;
-                sfb[soff..soff + kvd].copy_from_slice(&entry.smooth[layer]);
+                sfb[soff..soff + kvd].copy_from_slice(&smooth[layer]);
             }
         }
 

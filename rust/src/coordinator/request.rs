@@ -51,6 +51,10 @@ pub struct Request {
     /// (prefill/decode disaggregation) -- install it at this modeled
     /// transfer charge instead of running prefill compute
     pub prefill_charge_ms: Option<f64>,
+    /// prompt tokens served from the shared-prefix cache at prefill
+    /// (0 = miss, or the cache was disabled): their prefill compute
+    /// was skipped and their KV pages are shared
+    pub cached_prefix_tokens: usize,
 }
 
 impl Request {
@@ -68,6 +72,7 @@ impl Request {
             finished_ms: None,
             streamed: 0,
             prefill_charge_ms: None,
+            cached_prefix_tokens: 0,
         }
     }
 

@@ -3,20 +3,29 @@
 //! realization of the paper's Fig. 6 dataflow.
 //!
 //! The engine owns the request lifecycle (submit -> prefill -> decode
-//! -> retire), the [`Batcher`], the INT4-packed [`KvPool`] and the
-//! latency metrics; the numerics and the clock come from an
-//! [`ExecBackend`]: real PJRT graphs (wall time) or the NPU-PIM cost
-//! model (simulated time).  Construct engines with [`EngineBuilder`]:
+//! -> retire), the [`Batcher`], the page-granular INT4-packed
+//! [`KvPool`] (with shared-prefix caching: a prompt starting with an
+//! already-served prefix adopts its cached pages and prefills only the
+//! suffix) and the latency metrics; the numerics and the clock come
+//! from an [`ExecBackend`]: real PJRT graphs (wall time) or the
+//! NPU-PIM cost model (simulated time).  Construct engines with
+//! [`EngineBuilder`]:
 //!
-//! ```ignore
+//! ```
+//! use p3llm::coordinator::EngineBuilder;
+//! # fn main() -> p3llm::Result<()> {
 //! let mut eng = EngineBuilder::sim()
-//!     .model("Llama-3.2-3B")
+//!     .model("tiny-1M")
 //!     .scheme("p3llm")
-//!     .max_batch(64)
+//!     .max_batch(4)
+//!     .ctx_limit(128)
 //!     .build()?;
-//! let id = eng.submit(prompt, 48)?;
+//! let id = eng.submit(vec![1, 2, 3], 8)?;
 //! let metrics = eng.run_to_completion()?;
+//! assert_eq!(metrics.completed, 1);
 //! println!("p95 TTFT {:.1} ms", metrics.ttft_ms.p95);
+//! # Ok(())
+//! # }
 //! ```
 
 use std::collections::HashMap;
@@ -135,6 +144,10 @@ pub struct Metrics {
     pub wall_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
+    /// requests whose prefill hit the shared-prefix KV cache
+    pub prefix_hits: usize,
+    /// prompt tokens whose prefill compute the cache skipped
+    pub prefix_tokens_saved: usize,
     pub ttft_ms: Percentiles,
     pub per_token_ms: Percentiles,
 }
@@ -157,6 +170,8 @@ struct StatsAcc {
     tokens_out: usize,
     prefill_ms: f64,
     decode_ms: f64,
+    prefix_hits: usize,
+    prefix_tokens_saved: usize,
     ttft: Vec<f64>,
     tpot: Vec<f64>,
 }
@@ -167,6 +182,8 @@ pub struct Engine {
     /// context cap for request completion (= KV pool layout max_ctx)
     ctx_cap: usize,
     pool: KvPool,
+    /// shared-prefix KV caching (lookup at prefill, register after)
+    prefix_cache: bool,
     batcher: Batcher,
     requests: HashMap<u64, Request>,
     next_id: u64,
@@ -175,13 +192,15 @@ pub struct Engine {
 
 impl Engine {
     /// Wrap an execution backend in the serving lifecycle.  `ctx_cap`
-    /// bounds the KV pool's per-request reservation (None = the
-    /// model's max context).  Prefer [`EngineBuilder`].
+    /// bounds the longest admissible request (None = the model's max
+    /// context); `prefix_cache` enables shared-prefix KV caching.
+    /// Prefer [`EngineBuilder`].
     pub fn with_backend(
         backend: Box<dyn ExecBackend>,
         max_batch: usize,
         kv_capacity: usize,
         ctx_cap: Option<usize>,
+        prefix_cache: bool,
     ) -> Result<Self> {
         let model = backend.model().clone();
         let ctx_cap = ctx_cap.unwrap_or(model.max_ctx).min(model.max_ctx);
@@ -200,13 +219,14 @@ impl Engine {
             max_ctx: ctx_cap,
         };
         let pool = KvPool::new(layout, kv_capacity);
-        if pool.bytes_per_request() > kv_capacity {
+        if pool.total_pages() < pool.layout.pages_per_request() {
             return Err(P3Error::InvalidConfig(format!(
-                "kv_capacity {} bytes holds no request (one full-context \
-                 request reserves {} bytes; lower the ctx limit or raise \
-                 the capacity)",
+                "kv_capacity {} bytes holds no full-context request (one \
+                 can touch {} bytes = {} pages; lower the ctx limit or \
+                 raise the capacity)",
                 kv_capacity,
-                pool.bytes_per_request()
+                pool.bytes_per_request(),
+                pool.layout.pages_per_request()
             )));
         }
         Ok(Engine {
@@ -214,6 +234,7 @@ impl Engine {
             model,
             ctx_cap,
             pool,
+            prefix_cache,
             batcher: Batcher::new(max_batch),
             requests: HashMap::new(),
             next_id: 1,
@@ -340,11 +361,16 @@ impl Engine {
             .ok_or(P3Error::UnknownRequest(id.0))
     }
 
-    /// Prefill one admitted request: run the backend prefill (in
-    /// `ceil(len / tile)` chunks on chunking backends), install the
-    /// prompt KV in the pool, emit the first token.  Requests arriving
-    /// with a migrated KV (`submit_prefilled`) install it at the
-    /// recorded transfer charge instead.
+    /// Prefill one admitted request: look up the shared-prefix cache,
+    /// run the backend prefill over the *suffix* (in `ceil(len /
+    /// tile)` chunks on chunking backends -- a hit skips the cached
+    /// span's compute entirely; the sim backend's incremental tile
+    /// costing charges only `prefill_ms(total) - prefill_ms(cached)`),
+    /// install the prompt KV in the pool, register the prompt's full
+    /// pages for future hits, and emit the first token.  Requests
+    /// arriving with a migrated KV (`submit_prefilled`) install it at
+    /// the recorded transfer charge instead and bypass the cache (the
+    /// charge already prices the whole prompt).
     fn prefill(&mut self, rid: RequestId) -> Result<()> {
         let t0 = self.backend.now_ms();
         let req = self
@@ -354,44 +380,90 @@ impl Engine {
         req.state = State::Prefilling;
         req.prefill_start_ms = Some(t0);
         let prompt = req.prompt.clone();
+        let max_new = req.max_new_tokens;
         let charge = req.prefill_charge_ms;
-        let mut outs = match charge {
-            Some(ms) => vec![self.backend.install_prefill(&prompt, ms)?],
+        let use_cache = self.prefix_cache && charge.is_none();
+        // the lookup pins the matched pages (they cannot be evicted
+        // while the backend runs); the hit is resolved below -- by
+        // alloc_seq on success, or released on a backend error
+        let hit = if use_cache {
+            self.pool.lookup_prefix(&prompt)
+        } else {
+            None
+        };
+        let cached = hit.as_ref().map(|h| h.tokens).unwrap_or(0);
+        let total_max = (prompt.len() + max_new).min(self.ctx_cap);
+        let mut outs = Vec::new();
+        let mut backend_err: Option<P3Error> = None;
+        match charge {
+            Some(ms) => match self.backend.install_prefill(&prompt, ms) {
+                Ok(o) => outs.push(o),
+                Err(e) => backend_err = Some(e),
+            },
             None => {
                 let tile = self.backend.max_prefill().max(1);
-                let mut v = Vec::with_capacity(prompt.len().div_ceil(tile));
-                let mut offset = 0usize;
-                for chunk in prompt.chunks(tile) {
-                    v.push(self.backend.prefill_continue(chunk, offset)?);
-                    offset += chunk.len();
+                let mut offset = cached;
+                for chunk in prompt[cached..].chunks(tile) {
+                    match self.backend.prefill_continue(chunk, offset) {
+                        Ok(o) => {
+                            offset += chunk.len();
+                            outs.push(o);
+                        }
+                        Err(e) => {
+                            backend_err = Some(e);
+                            break;
+                        }
+                    }
                 }
-                v
             }
-        };
+        }
+        if let Some(e) = backend_err {
+            if let Some(h) = hit {
+                self.pool.release_hit(h);
+            }
+            return Err(e);
+        }
         let (layers, kvd) = (self.model.layers, self.model.kv_dim());
-        // the entry's smoothing factors come from the first tile (the
-        // real prefill graph emits them once per prompt)
-        let smooth = std::mem::take(&mut outs[0].smooth);
-        let entry = self.pool.alloc(rid.0, smooth)?;
-        let mut total_len = 0usize;
+        // keys quantize in the smoothed domain: a prefix hit must keep
+        // the cached pages' factors (they were packed under them; the
+        // hit gives its copy up -- alloc_seq only reads the pages); a
+        // fresh prefill takes them from the first tile
+        let (smooth, hit) = match hit {
+            Some(mut h) => {
+                let s = std::mem::take(&mut h.smooth);
+                (s, Some(h))
+            }
+            None => (std::mem::take(&mut outs[0].smooth), None),
+        };
+        self.pool.alloc_seq(rid.0, smooth, total_max, hit)?;
+        let mut total_len = cached;
         let mut first_token = 0i32;
         for out in &outs {
             for t in 0..out.true_len {
                 for l in 0..layers {
                     let off = (l * out.true_len + t) * kvd;
-                    entry.push_token(
+                    self.pool.push_token(
+                        rid.0,
                         l,
                         &out.k[off..off + kvd],
                         &out.v[off..off + kvd],
-                    );
+                    )?;
                 }
-                entry.commit_token();
+                self.pool.commit_token(rid.0)?;
             }
             total_len += out.true_len;
             first_token = out.first_token;
         }
+        if use_cache {
+            self.pool.register_prefix(rid.0, &prompt);
+        }
+        if cached > 0 {
+            self.acc.prefix_hits += 1;
+            self.acc.prefix_tokens_saved += cached;
+        }
         let now = self.backend.now_ms();
         let req = self.requests.get_mut(&rid.0).unwrap();
+        req.cached_prefix_tokens = cached;
         req.pos = total_len;
         req.generated.push(first_token);
         req.pos += 1; // KV slot for the first token is written by decode
@@ -418,22 +490,36 @@ impl Engine {
         self.pool.free(rid.0);
     }
 
-    /// One engine step: admit (with KV admission control), prefill the
-    /// newcomers, run one batched decode step.  Returns tokens emitted.
+    /// One engine step: admit (with page-granular KV admission
+    /// control), prefill the newcomers, run one batched decode step.
+    /// Returns tokens emitted.
+    ///
+    /// Admission reserves each request's worst-case page need
+    /// (`ceil((prompt + max_new) / PAGE_TOKENS)`, context-capped) and
+    /// is head-of-line blocking: once one newcomer bounces on the
+    /// pool, everything behind it bounces too, so FIFO order survives
+    /// heterogeneous request sizes.
     pub fn step(&mut self) -> Result<usize> {
         let newly = self.batcher.admit();
         let mut bounced = vec![];
         let mut prefilled = vec![];
+        let mut blocked = false;
         for rid in newly {
-            if !self.pool.can_admit() {
-                if self.pool.is_empty() {
-                    // capacity cannot hold even one request: no amount
-                    // of waiting will fix it
-                    return Err(P3Error::KvCapacity {
-                        needed: self.pool.bytes_per_request(),
-                        capacity: self.pool.capacity_bytes,
-                    });
-                }
+            let total_max = {
+                let req = &self.requests[&rid.0];
+                (req.prompt.len() + req.max_new_tokens).min(self.ctx_cap)
+            };
+            if blocked || !self.pool.can_admit(total_max) {
+                // a bounce always has something to wait for: with no
+                // live sequences every page is obtainable (cached
+                // pages are reclaimable) and build() guaranteed one
+                // full-context request fits, so an empty pool admits
+                // any request
+                debug_assert!(
+                    blocked || !self.pool.is_empty(),
+                    "empty pool refused a request build() sized for"
+                );
+                blocked = true;
                 bounced.push(rid);
                 continue;
             }
@@ -497,20 +583,19 @@ impl Engine {
         let now = self.backend.now_ms();
         let mut emitted = 0;
         for (lane, rid) in active.iter().enumerate() {
-            // store the k/v of the token we just processed
-            let entry = self
-                .pool
-                .get_mut(rid.0)
-                .ok_or_else(|| P3Error::Serve(format!("no KV for {}", rid.0)))?;
+            // store the k/v of the token we just processed (the pool
+            // allocates pages at boundaries from the request's
+            // admission-time reservation)
             for layer in 0..layers {
                 let off = (layer * n + lane) * kvd;
-                entry.push_token(
+                self.pool.push_token(
+                    rid.0,
                     layer,
                     &out.new_k[off..off + kvd],
                     &out.new_v[off..off + kvd],
-                );
+                )?;
             }
-            entry.commit_token();
+            self.pool.commit_token(rid.0)?;
             let req = self.requests.get_mut(&rid.0).unwrap();
             req.generated.push(out.tokens[lane]);
             req.pos += 1;
@@ -553,6 +638,8 @@ impl Engine {
             wall_ms: self.backend.now_ms(),
             prefill_ms: self.acc.prefill_ms,
             decode_ms: self.acc.decode_ms,
+            prefix_hits: self.acc.prefix_hits,
+            prefix_tokens_saved: self.acc.prefix_tokens_saved,
             ttft_ms: Percentiles::from_samples(&self.acc.ttft),
             per_token_ms: Percentiles::from_samples(&self.acc.tpot),
         }
@@ -563,13 +650,26 @@ impl Engine {
         self.backend.mapping_summary()
     }
 
+    /// Packed bytes live sequences hold in the KV pool (shared pages
+    /// counted once; reclaimable cache-only pages excluded).
     pub fn pool_used_bytes(&self) -> usize {
         self.pool.used_bytes()
     }
 
-    /// Live KV entries (== lanes holding a reservation).
+    /// Packed bytes held by cache-only prefix pages (reclaimed by LRU
+    /// eviction under pool pressure).
+    pub fn pool_cached_bytes(&self) -> usize {
+        self.pool.cached_bytes()
+    }
+
+    /// Live KV sequences (== lanes holding pool pages).
     pub fn kv_entries(&self) -> usize {
         self.pool.len()
+    }
+
+    /// Is shared-prefix KV caching enabled on this engine?
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
     }
 }
 
@@ -588,6 +688,9 @@ pub struct EngineBuilder {
     max_batch: usize,
     kv_capacity: usize,
     ctx_limit: Option<usize>,
+    /// None = backend default: on for sim, off for PJRT (whose
+    /// suffix-only prefill is a documented approximation)
+    prefix_cache: Option<bool>,
 }
 
 impl EngineBuilder {
@@ -602,6 +705,7 @@ impl EngineBuilder {
             max_batch: 8,
             kv_capacity: 64 << 20,
             ctx_limit: None,
+            prefix_cache: None,
         }
     }
 
@@ -675,6 +779,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Shared-prefix KV caching: prompts starting with an
+    /// already-served prefix adopt its cached quantized pages and
+    /// prefill only the suffix.  Default **on for the sim backend**
+    /// and **off for PJRT** -- the single-tile AOT prefill graph makes
+    /// a PJRT cache hit a documented approximation (see
+    /// `PjrtBackend::prefill_continue`), so the real-numerics backend
+    /// never degrades silently; opt in explicitly to trade exactness
+    /// for the skipped prefill.  Disable for A/B comparisons
+    /// (`loadtest --no-prefix-cache`, `benches/prefix_cache.rs`).
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = Some(on);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let scheme_name = self.scheme.as_deref().unwrap_or("p3llm");
         let scheme = scheme::by_name(scheme_name)
@@ -731,6 +849,9 @@ impl EngineBuilder {
                     self.max_batch,
                     self.kv_capacity,
                     None,
+                    // exact numerics by default; caching is explicit
+                    // opt-in on the real-numerics backend
+                    self.prefix_cache.unwrap_or(false),
                 )
             }
             BackendKind::Sim => {
@@ -759,6 +880,7 @@ impl EngineBuilder {
                     self.max_batch,
                     self.kv_capacity,
                     Some(ctx_cap),
+                    self.prefix_cache.unwrap_or(true),
                 )
             }
         }
@@ -1033,6 +1155,75 @@ mod tests {
         // all KV reservations released
         assert_eq!(eng.kv_entries(), 0);
         assert_eq!(eng.pool_used_bytes(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_hits_skip_prefill_compute() {
+        let mk = |cache: bool| {
+            EngineBuilder::sim()
+                .model("tiny-1M")
+                .ctx_limit(128)
+                .max_batch(2)
+                .prefix_cache(cache)
+                .build()
+                .unwrap()
+        };
+        let prompt: Vec<i32> = (0..40).map(|i| (i % 200) as i32).collect();
+        // cache on: the second identical prompt adopts the first one's
+        // full prompt pages (2 pages = 32 tokens) and prefills only
+        // the 8-token suffix
+        let mut on = mk(true);
+        let a = on.submit(prompt.clone(), 4).unwrap();
+        let b = on.submit(prompt.clone(), 4).unwrap();
+        let mon = on.run_to_completion().unwrap();
+        assert_eq!(mon.completed, 2);
+        assert_eq!(mon.prefix_hits, 1);
+        assert_eq!(mon.prefix_tokens_saved, 32);
+        assert_eq!(on.request(a).unwrap().cached_prefix_tokens, 0);
+        assert_eq!(on.request(b).unwrap().cached_prefix_tokens, 32);
+        // live reservations released; the cached prefix pages remain
+        // reclaimable for the next hit
+        assert_eq!(on.kv_entries(), 0);
+        assert_eq!(on.pool_used_bytes(), 0);
+        assert!(on.pool_cached_bytes() > 0);
+        // cache off: same load, every prompt pays full prefill
+        let mut off = mk(false);
+        off.submit(prompt.clone(), 4).unwrap();
+        off.submit(prompt, 4).unwrap();
+        let moff = off.run_to_completion().unwrap();
+        assert_eq!(moff.completed, 2);
+        assert_eq!(moff.prefix_hits, 0);
+        assert_eq!(moff.prefix_tokens_saved, 0);
+        assert_eq!(off.pool_cached_bytes(), 0);
+        assert!(
+            mon.prefill_ms < moff.prefill_ms,
+            "cached prefill {} !< cold prefill {}",
+            mon.prefill_ms,
+            moff.prefill_ms
+        );
+    }
+
+    #[test]
+    fn prefix_cache_survives_request_retirement() {
+        let mut eng = EngineBuilder::sim()
+            .model("tiny-1M")
+            .ctx_limit(128)
+            .max_batch(1)
+            .build()
+            .unwrap();
+        let prompt: Vec<i32> = (0..33).map(|i| i as i32).collect();
+        // serve to completion, then resubmit the same prompt: the hit
+        // comes from pages that outlived the first request
+        eng.submit(prompt.clone(), 3).unwrap();
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.kv_entries(), 0);
+        let id = eng.submit(prompt, 3).unwrap();
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefix_tokens_saved, 32);
+        let st = eng.poll(id).unwrap();
+        assert!(st.finished);
+        assert_eq!(st.tokens_generated, 3);
     }
 
     #[test]

@@ -14,19 +14,13 @@
 //! and still exercise the real INT4 pack/dequant pool path.
 
 use super::backend::{DecodeOut, ExecBackend, Lane, PrefillOut};
+use super::kvcache::mix64 as mix;
 use super::mapper::{map_decode_step, summarize, MapSummary};
 use super::pjrt::PREFILL_T;
 use crate::accel::Accel;
 use crate::config::llm::LlmConfig;
 use crate::coordinator::kvcache::KvPool;
 use crate::error::Result;
-
-fn mix(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9E3779B97F4A7C15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
-    x ^ (x >> 31)
-}
 
 /// value in [-1, 1) from a hash
 fn unit(h: u64) -> f32 {

@@ -19,8 +19,10 @@ pub enum P3Error {
     PromptTooLong { len: usize, max: usize },
     /// A request with no prompt tokens cannot be decoded.
     EmptyPrompt,
-    /// KV pool cannot hold even one more request at full context.
-    KvCapacity { needed: usize, capacity: usize },
+    /// Page-granular KV admission signal: the pool cannot cover a
+    /// request's worst-case page need even after reclaiming every
+    /// unreferenced cached prefix page.
+    KvExhausted { needed_pages: usize, free_pages: usize },
     /// A request was allocated a KV entry twice.
     DuplicateKvEntry(u64),
     /// Builder/engine configuration rejected at `build()` time.
@@ -67,10 +69,10 @@ impl fmt::Display for P3Error {
                  single-prefill limit of {max}"
             ),
             P3Error::EmptyPrompt => write!(f, "prompt has no tokens"),
-            P3Error::KvCapacity { needed, capacity } => write!(
+            P3Error::KvExhausted { needed_pages, free_pages } => write!(
                 f,
-                "KV pool capacity exceeded: need {needed} bytes reserved, \
-                 capacity {capacity}"
+                "KV pool exhausted: need {needed_pages} pages, \
+                 {free_pages} reclaimable"
             ),
             P3Error::DuplicateKvEntry(id) => {
                 write!(f, "request {id} already has a KV entry")

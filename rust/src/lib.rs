@@ -1,14 +1,16 @@
 //! P3-LLM: an integrated NPU-PIM accelerator for edge LLM inference
 //! using hybrid numerical formats -- reproduction library.
 //!
-//! Layers (see DESIGN.md for the full map):
+//! Layers (see DESIGN.md for the full map, README.md for the CLI):
 //! * `quant` -- bit-exact hybrid numerical formats (Section IV)
 //! * `pcu` -- functional model of the low-precision PIM compute unit
 //! * `config`/`workload`/`sim`/`accel`/`area` -- the cycle-level
 //!   evaluation substrate behind every table and figure (Section VI)
 //! * `coordinator` -- the serving system: request router, continuous
-//!   batcher, quantized KV-cache pool, online NPU/PIM operator mapper,
-//!   and the [`Engine`] driving a pluggable [`ExecBackend`]:
+//!   batcher, page-granular quantized KV pool with shared-prefix
+//!   caching (content-hashed, refcounted, copy-on-write pages; see
+//!   [`coordinator::KvPool`]), online NPU/PIM operator mapper, and
+//!   the [`Engine`] driving a pluggable [`ExecBackend`]:
 //!   `PjrtBackend` (real numerics over AOT-compiled graphs) or
 //!   `SimBackend` (the `accel` cost model advancing simulated time,
 //!   for batch-64 / long-context serving experiments with no
@@ -16,26 +18,48 @@
 //! * `traffic` -- closed-loop load generation over the engine: seeded
 //!   arrival processes (Poisson / constant / bursty / trace replay),
 //!   named request mixes (chat, summarization, code-completion,
-//!   long-context RAG), [`SloSpec`] targets, and the [`LoadRunner`]
-//!   producing [`LoadReport`]s (goodput, SLO attainment, queueing
-//!   delay).  Scenario registry: `chat-poisson`, `chat-burst`,
-//!   `summarize-steady`, `code-complete`, `rag-long`, `smoke` -- see
-//!   `p3llm loadtest`.
+//!   long-context RAG, plus prefix-bearing `agent` and `rag-cached`
+//!   with Zipf-popular system prompts), [`SloSpec`] targets, and the
+//!   [`LoadRunner`] producing [`LoadReport`]s (goodput, SLO
+//!   attainment, queueing delay, prefix-cache hit rate).  Scenario
+//!   registry behind `p3llm loadtest`.
 //! * `cluster` -- multi-replica serving: a [`Cluster`] of N engine
 //!   replicas on one lock-stepped virtual clock behind a pluggable
 //!   [`RoutePolicy`] (round-robin, join-shortest-queue,
-//!   least-KV-loaded, prefill/decode disaggregation with modeled KV
-//!   handoff), reporting fleet goodput / utilization skew / scaling
-//!   efficiency ([`ClusterReport`]) -- see `p3llm cluster`.
+//!   least-KV-loaded, prefix-affinity, prefill/decode disaggregation
+//!   with modeled KV handoff), reporting fleet goodput / utilization
+//!   skew / scaling efficiency ([`ClusterReport`]) -- see
+//!   `p3llm cluster`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
 //!
-//! Public entry points: build an engine with [`EngineBuilder`], submit
-//! prompts, poll/stream per request, and read [`Metrics`] (TTFT and
-//! per-token latency percentiles) -- or drive whole request streams
-//! with [`LoadRunner`] / `traffic::scenario_by_name`.  Every fallible
-//! public API returns [`Result`]`<_, `[`P3Error`]`>`.
+//! Build an engine with [`EngineBuilder`], submit prompts, poll or
+//! stream per request, and read [`Metrics`] (TTFT and per-token
+//! latency percentiles) -- or drive whole request streams with
+//! [`LoadRunner`] / `traffic::scenario_by_name`.  Every fallible
+//! public API returns [`Result`]`<_, `[`P3Error`]`>`, and the sim
+//! backend needs no artifacts:
+//!
+//! ```
+//! use p3llm::{EngineBuilder, Result};
+//!
+//! fn main() -> Result<()> {
+//!     let mut eng = EngineBuilder::sim()
+//!         .model("tiny-1M")       // config::llm registry
+//!         .scheme("p3llm")        // config::scheme registry
+//!         .system("P3-LLM")       // accel registry (sim only)
+//!         .max_batch(4)
+//!         .ctx_limit(128)
+//!         .build()?;
+//!     let id = eng.submit(vec![1, 2, 3], 8)?;
+//!     let metrics = eng.run_to_completion()?;
+//!     assert_eq!(metrics.completed, 1);
+//!     assert!(eng.poll(id)?.finished);
+//!     println!("p95 TTFT {:.2} ms", metrics.ttft_ms.p95);
+//!     Ok(())
+//! }
+//! ```
 
 pub mod accel;
 pub mod area;

@@ -31,7 +31,7 @@ p3llm <command> [options]
 commands:
   serve      run the serving engine end-to-end
              --backend {pjrt,sim}   execution substrate (default pjrt)
-             --requests N --max-new N --batch N
+             --requests N --max-new N --batch N --no-prefix-cache
              pjrt: --fp16 --device-weights  (tiny model, needs artifacts)
              sim:  --model NAME --system NAME --scheme NAME
                    --prompt-len N --ctx N --kv-cap BYTES
@@ -51,17 +51,21 @@ commands:
              --requests N --model NAME --batch N --ctx N --mix NAME
              --scale F      stretch (>1) / intensify (<1) arrival gaps
              --trace FILE   replay arrival offsets (ms) from a TSV
+             --no-prefix-cache   disable shared-prefix KV caching (A/B)
              --list   show scenarios + mixes     --save  write TSV
-             --smoke  CI gate: tiny scenario, fails on zero goodput
+             --smoke  CI gate: tiny scenarios incl. the prefix cache;
+                      fails on zero goodput, zero hit rate, or a cache
+                      that does not lower mean TTFT
   cluster    multi-replica serving: route a scenario's arrivals across
              N engine replicas (sim backend, weak-scaled load) and
              report fleet goodput / utilization skew / scaling
              efficiency vs 1 replica
              --replicas N[,N..] (default 1,2,4)
-             --policy NAME[,NAME..]|all     (default jsq; see --list)
+             --policy NAME[,NAME..]|all     (default jsq; see --list;
+                      pa = prefix-affinity for replica-local caches)
              --scenario NAME[,NAME..]|all   (default chat-poisson)
              --system NAME --scheme NAME --seed N --requests N
-             --scale F --save
+             --scale F --save --no-prefix-cache
              --list   show routing policies
              --smoke  CI gate: 2 replicas, tiny model, JSQ; fails on
                       zero fleet goodput
@@ -174,6 +178,14 @@ fn print_load_report(r: &LoadReport) {
         r.tpot_ms.mean,
         r.tpot_ms.p95
     );
+    if r.prefix_hits > 0 {
+        println!(
+            "prefix cache: {} hits ({:.1}%), {} prefill tokens saved",
+            r.prefix_hits,
+            r.prefix_hit_rate * 100.0,
+            r.prefill_tokens_saved
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -202,6 +214,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 b = b.ctx_limit(args.get_usize("ctx", 1024)?);
             }
         }
+    }
+    if args.has("no-prefix-cache") {
+        b = b.prefix_cache(false);
     }
     let mut engine = b.build()?;
     let prompt_len = match backend.as_str() {
@@ -322,6 +337,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         max_batch: bs.max(1),
         ctx_limit: ctx.min(model.max_ctx).max(64),
         kv_slots: bs.max(1) + 2,
+        prefix_cache: !args.has("no-prefix-cache"),
     };
     let mut engine = sc.engine(system, None)?;
     println!(
@@ -350,7 +366,7 @@ fn select_scenarios(args: &Args, default_sel: &str) -> Result<Vec<Scenario>> {
     let mut scenarios: Vec<Scenario> = if sel.eq_ignore_ascii_case("all") {
         traffic::all_scenarios()
             .into_iter()
-            .filter(|s| s.name != "smoke")
+            .filter(|s| !s.name.starts_with("smoke"))
             .collect()
     } else {
         let mut v = vec![];
@@ -367,6 +383,11 @@ fn select_scenarios(args: &Args, default_sel: &str) -> Result<Vec<Scenario>> {
         let n = args.get_usize("requests", 1)?.max(1);
         for s in &mut scenarios {
             s.n_requests = n;
+        }
+    }
+    if args.has("no-prefix-cache") {
+        for s in &mut scenarios {
+            s.prefix_cache = false;
         }
     }
     Ok(scenarios)
@@ -410,7 +431,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let smoke = args.has("smoke");
     let seed = args.get_u64("seed", 7)?;
     let mut scenarios =
-        select_scenarios(args, if smoke { "smoke" } else { "all" })?;
+        select_scenarios(args, if smoke { "smoke,smoke-prefix" } else { "all" })?;
     if let Some(m) = args.get("model") {
         let model =
             llm::by_name(m).ok_or_else(|| P3Error::UnknownModel(m.into()))?;
@@ -479,6 +500,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             "p95 TTFT ms",
             "p95 queue ms",
             "util %",
+            "hit %",
+            "saved tok",
         ],
     );
     for sc in &scenarios {
@@ -494,6 +517,30 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                      {}/{} completed",
                     sc.name, r.goodput_tok_s, r.completed, r.offered
                 )));
+            }
+            // prefix-bearing smoke scenarios also gate the cache: a
+            // nonzero hit rate, and a strictly lower mean TTFT than
+            // the identical run with the cache disabled
+            if smoke && sc.mix.prefixes.is_some() && sc.prefix_cache {
+                if r.prefix_hits == 0 {
+                    return Err(P3Error::Serve(format!(
+                        "smoke gate: {} on {sys}: prefix-bearing \
+                         scenario reported zero cache hits",
+                        sc.name
+                    )));
+                }
+                let mut cold = sc.clone();
+                cold.prefix_cache = false;
+                let mut cold_engine = cold.engine(sys, scheme)?;
+                let off = cold.runner(seed).run(&mut cold_engine)?.report;
+                if r.ttft_ms.mean >= off.ttft_ms.mean {
+                    return Err(P3Error::Serve(format!(
+                        "smoke gate: {} on {sys}: prefix cache did not \
+                         lower mean TTFT ({:.3} ms cached vs {:.3} ms \
+                         cold)",
+                        sc.name, r.ttft_ms.mean, off.ttft_ms.mean
+                    )));
+                }
             }
             let scheme_name = match scheme {
                 Some(s) => s.to_string(),
@@ -515,6 +562,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 r.utilization()
                     .map(|u| f2(u * 100.0))
                     .unwrap_or_else(|| "-".into()),
+                f2(r.prefix_hit_rate * 100.0),
+                r.prefill_tokens_saved.to_string(),
             ]);
         }
     }
@@ -595,6 +644,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             "goodput tok/s",
             "tok/s",
             "p95 TTFT ms",
+            "hit %",
             "skew",
             "scale-eff %",
         ],
@@ -633,6 +683,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                     f2(r.goodput_tok_s),
                     f2(r.throughput_tok_s),
                     f2(r.ttft_ms.p95),
+                    f2(r.prefix_hit_rate * 100.0),
                     f2(rep.util_skew),
                     rep.scaling_efficiency
                         .map(|e| f2(e * 100.0))

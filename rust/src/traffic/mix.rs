@@ -8,8 +8,44 @@
 
 use crate::testutil::Rng;
 
+/// A pool of shared prompt prefixes (system prompts, cached RAG
+/// contexts) with Zipf-distributed popularity: a few prefixes take
+/// most of the traffic, the tail is cold -- the shape that makes
+/// shared-prefix KV caching pay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixPool {
+    /// distinct shared prefixes in the pool
+    pub n: usize,
+    /// tokens per shared prefix (the cacheable span)
+    pub len: usize,
+    /// Zipf popularity exponent (weight of rank k is `1/(k+1)^zipf`;
+    /// larger = more skewed toward the hottest prefix)
+    pub zipf: f64,
+    /// fraction of requests carrying no shared prefix at all
+    pub p_none: f64,
+}
+
+impl PrefixPool {
+    /// Draw a prefix rank by Zipf popularity (rank 0 hottest).
+    pub fn sample_id(&self, rng: &mut Rng) -> usize {
+        let n = self.n.max(1);
+        let weights: Vec<f64> =
+            (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(self.zipf)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = rng.f64() * total;
+        for (k, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return k;
+            }
+        }
+        n - 1
+    }
+}
+
 /// A named tenant class: log-normal prompt/output length model with
-/// hard clamps so samples always fit the scenario's context budget.
+/// hard clamps so samples always fit the scenario's context budget,
+/// plus an optional [`PrefixPool`] of shared prompt prefixes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestMix {
     pub name: &'static str,
@@ -22,6 +58,9 @@ pub struct RequestMix {
     pub max_prompt: usize,
     pub min_output: usize,
     pub max_output: usize,
+    /// shared prompt prefixes this tenant class draws from (`None` =
+    /// every prompt is unique)
+    pub prefixes: Option<PrefixPool>,
 }
 
 /// ln of a median token count, as an f64 literal-friendly helper.
@@ -42,6 +81,7 @@ impl RequestMix {
             max_prompt: 512,
             min_output: 4,
             max_output: 256,
+            prefixes: None,
         }
     }
 
@@ -57,6 +97,7 @@ impl RequestMix {
             max_prompt: 1536,
             min_output: 8,
             max_output: 128,
+            prefixes: None,
         }
     }
 
@@ -73,6 +114,7 @@ impl RequestMix {
             max_prompt: 768,
             min_output: 2,
             max_output: 96,
+            prefixes: None,
         }
     }
 
@@ -88,6 +130,7 @@ impl RequestMix {
             max_prompt: 1792,
             min_output: 16,
             max_output: 256,
+            prefixes: None,
         }
     }
 
@@ -104,6 +147,76 @@ impl RequestMix {
             max_prompt: 96,
             min_output: 2,
             max_output: 24,
+            prefixes: None,
+        }
+    }
+
+    /// Agentic tool loop: every request re-sends one of a few long
+    /// system prompts (tool schemas, instructions) ahead of a
+    /// conversation-state suffix -- the canonical shared-prefix
+    /// workload.
+    pub fn agent() -> Self {
+        RequestMix {
+            name: "agent",
+            prompt_mu: mu(320),
+            prompt_sigma: 0.4,
+            output_mu: mu(48),
+            output_sigma: 0.6,
+            min_prompt: 224,
+            max_prompt: 768,
+            min_output: 8,
+            max_output: 192,
+            prefixes: Some(PrefixPool {
+                n: 4,
+                len: 192,
+                zipf: 1.0,
+                p_none: 0.1,
+            }),
+        }
+    }
+
+    /// RAG over a popular document set: hot retrieved contexts repeat
+    /// across many queries, so their prefill is cacheable.
+    pub fn rag_cached() -> Self {
+        RequestMix {
+            name: "rag-cached",
+            prompt_mu: mu(800),
+            prompt_sigma: 0.3,
+            output_mu: mu(64),
+            output_sigma: 0.5,
+            min_prompt: 576,
+            max_prompt: 1408,
+            min_output: 16,
+            max_output: 128,
+            prefixes: Some(PrefixPool {
+                n: 8,
+                len: 512,
+                zipf: 1.2,
+                p_none: 0.15,
+            }),
+        }
+    }
+
+    /// Prefix-bearing miniature mix for the tiny-1M model (CI smoke
+    /// gate for the shared-prefix cache: two 32-token system prompts,
+    /// everything fits a 128-token context).
+    pub fn tiny_prefix() -> Self {
+        RequestMix {
+            name: "tiny-prefix",
+            prompt_mu: mu(64),
+            prompt_sigma: 0.3,
+            output_mu: mu(8),
+            output_sigma: 0.4,
+            min_prompt: 48,
+            max_prompt: 96,
+            min_output: 2,
+            max_output: 16,
+            prefixes: Some(PrefixPool {
+                n: 2,
+                len: 32,
+                zipf: 1.0,
+                p_none: 0.1,
+            }),
         }
     }
 
@@ -133,7 +246,10 @@ pub fn all_mixes() -> Vec<RequestMix> {
         RequestMix::summarization(),
         RequestMix::code_completion(),
         RequestMix::rag_long(),
+        RequestMix::agent(),
+        RequestMix::rag_cached(),
         RequestMix::tiny(),
+        RequestMix::tiny_prefix(),
     ]
 }
 
@@ -190,6 +306,35 @@ mod tests {
         ps.sort_unstable();
         let med = ps[400] as f64;
         assert!((med / 512.0 - 1.0).abs() < 0.25, "median {med}");
+    }
+
+    #[test]
+    fn prefix_pools_are_zipf_skewed_and_fit_their_mix() {
+        // every prefix-bearing mix leaves room for a unique suffix and
+        // spans at least one full KV page
+        for m in all_mixes() {
+            if let Some(pp) = &m.prefixes {
+                assert!(pp.len < m.min_prompt, "{}: prefix >= min prompt", m.name);
+                assert!(pp.n >= 2, "{}", m.name);
+                assert!(pp.len >= 16, "{}: prefix below one KV page", m.name);
+                assert!((0.0..1.0).contains(&pp.p_none), "{}", m.name);
+            }
+        }
+        // Zipf skew: rank 0 is drawn most often, every rank reachable
+        let pp = RequestMix::rag_cached().prefixes.unwrap();
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; pp.n];
+        for _ in 0..4000 {
+            counts[pp.sample_id(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[pp.n - 1] * 2, "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        // deterministic under a seed
+        let draw = |seed| {
+            let mut r = Rng::new(seed);
+            (0..64).map(|_| pp.sample_id(&mut r)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(9), draw(9));
     }
 
     #[test]

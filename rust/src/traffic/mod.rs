@@ -9,27 +9,39 @@
 //!   bursty arrivals, plus TSV trace replay ([`parse_trace_tsv`]).
 //! * [`RequestMix`] -- named tenant classes (chat, summarization,
 //!   code-completion, long-context RAG) drawing prompt/output lengths
-//!   from clamped log-normals.
+//!   from clamped log-normals.  Prefix-bearing classes (`agent`,
+//!   `rag-cached`, `tiny-prefix`) additionally draw a shared system
+//!   prompt from a Zipf-popular [`PrefixPool`], so the engine's
+//!   shared-prefix KV cache has something to hit.
 //! * [`SloSpec`] / [`LoadReport`] -- TTFT + per-token targets, and the
-//!   goodput / SLO-attainment / queueing-delay / saturation report.
+//!   goodput / SLO-attainment / queueing-delay / saturation report,
+//!   plus prefix-cache hit-rate and prefill-tokens-saved columns.
 //! * [`LoadRunner`] -- schedules arrivals on the backend clock and
 //!   drives the [`Engine`](crate::coordinator::Engine) closed-loop
 //!   (submit on arrival, step, retire): the one serving timeline.
 //! * [`Scenario`] -- the named registry behind `p3llm loadtest`
 //!   (`chat-poisson`, `chat-burst`, `summarize-steady`,
-//!   `code-complete`, `rag-long`, `smoke`).
+//!   `code-complete`, `rag-long`, `agent-pool`, `rag-cached`,
+//!   `smoke`, `smoke-prefix`).
 //!
-//! ```ignore
-//! let sc = traffic::scenario_by_name("chat-poisson").unwrap();
+//! ```
+//! use p3llm::traffic;
+//! # fn main() -> p3llm::Result<()> {
+//! let sc = traffic::scenario_by_name("smoke-prefix").unwrap();
 //! let mut eng = sc.engine("P3-LLM", None)?;
 //! let out = sc.runner(7).run(&mut eng)?;
-//! println!("SLO attainment {:.1}%  goodput {:.1} tok/s",
+//! assert!(out.report.prefix_hit_rate > 0.0);
+//! println!("SLO attainment {:.1}%  goodput {:.1} tok/s  hit {:.0}%",
 //!          out.report.slo_attainment * 100.0,
-//!          out.report.goodput_tok_s);
+//!          out.report.goodput_tok_s,
+//!          out.report.prefix_hit_rate * 100.0);
+//! # Ok(())
+//! # }
 //! ```
 //!
-//! Every run is bit-identical under a fixed `seed`: arrivals, lengths
-//! and prompt tokens all derive from `testutil::Rng` streams.
+//! Every run is bit-identical under a fixed `seed`: arrivals, lengths,
+//! prompt tokens and shared-prefix assignments all derive from
+//! `testutil::Rng` streams.
 
 pub mod arrival;
 pub mod mix;
@@ -38,7 +50,7 @@ pub mod scenario;
 pub mod slo;
 
 pub use arrival::{load_trace_tsv, parse_trace_tsv, ArrivalProcess};
-pub use mix::{all_mixes, by_name as mix_by_name, RequestMix};
+pub use mix::{all_mixes, by_name as mix_by_name, PrefixPool, RequestMix};
 pub use runner::{LoadRunner, LoadTarget, RunOutcome};
 pub use scenario::{all_scenarios, by_name as scenario_by_name, Scenario};
 pub use slo::{LoadReport, ReqRecord, SloSpec};

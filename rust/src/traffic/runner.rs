@@ -105,14 +105,20 @@ impl LoadTarget for Engine {
     }
 }
 
-/// A fully materialized load plan: per-request arrival offsets and
-/// (prompt, output) shapes, deterministic in the construction seed.
+/// A fully materialized load plan: per-request arrival offsets,
+/// (prompt, output) shapes and shared-prefix assignments, all
+/// deterministic in the construction seed.
 #[derive(Debug, Clone)]
 pub struct LoadRunner {
     /// arrival offsets (ms, non-decreasing) relative to run start
     pub arrivals_ms: Vec<f64>,
     /// per-request (prompt_tokens, max_new_tokens)
     pub shapes: Vec<(usize, usize)>,
+    /// per-request shared-prefix rank from the mix's
+    /// [`PrefixPool`](super::mix::PrefixPool) (None = unique prompt)
+    pub prefix_ids: Vec<Option<usize>>,
+    /// tokens per shared prefix (0 = the mix has no prefix pool)
+    pub prefix_len: usize,
     pub slo: SloSpec,
     seed: u64,
 }
@@ -127,8 +133,9 @@ pub struct RunOutcome {
 
 impl LoadRunner {
     /// Materialize `n` requests from an arrival process and a request
-    /// mix.  Arrival times and lengths draw from decoupled seed
-    /// streams so changing the mix never perturbs the timeline.
+    /// mix.  Arrival times, lengths and shared-prefix assignments draw
+    /// from decoupled seed streams so changing the mix never perturbs
+    /// the timeline.
     pub fn new(
         arrival: &ArrivalProcess,
         mix: &RequestMix,
@@ -139,7 +146,23 @@ impl LoadRunner {
         let arrivals_ms = arrival.arrivals(n, seed);
         let mut rng = Rng::new(seed ^ 0x6d17_57a7_0123_beef);
         let shapes = (0..n).map(|_| mix.sample(&mut rng)).collect();
-        LoadRunner { arrivals_ms, shapes, slo, seed }
+        let mut prng = Rng::new(seed ^ 0x5ca1_ab1e_0f00_0001);
+        let (prefix_ids, prefix_len) = match &mix.prefixes {
+            Some(pp) if pp.n > 0 && pp.len > 0 => {
+                let ids = (0..n)
+                    .map(|_| {
+                        if prng.f64() < pp.p_none {
+                            None
+                        } else {
+                            Some(pp.sample_id(&mut prng))
+                        }
+                    })
+                    .collect();
+                (ids, pp.len)
+            }
+            _ => (vec![None; n], 0),
+        };
+        LoadRunner { arrivals_ms, shapes, prefix_ids, prefix_len, slo, seed }
     }
 
     /// A plan from explicit arrivals/shapes (trace-style tests).
@@ -150,7 +173,15 @@ impl LoadRunner {
         seed: u64,
     ) -> Self {
         assert_eq!(arrivals_ms.len(), shapes.len());
-        LoadRunner { arrivals_ms, shapes, slo, seed }
+        let n = arrivals_ms.len();
+        LoadRunner {
+            arrivals_ms,
+            shapes,
+            prefix_ids: vec![None; n],
+            prefix_len: 0,
+            slo,
+            seed,
+        }
     }
 
     fn submit_one<T: LoadTarget>(
@@ -164,8 +195,28 @@ impl LoadRunner {
         let plen = plen.min(target.max_prompt()).max(1);
         let mut prng = Rng::new((self.seed ^ 0x9e37) ^ ((i as u64) << 17));
         let vocab = target.vocab().max(2);
-        let prompt: Vec<i32> =
-            (0..plen).map(|_| prng.usize(0, vocab) as i32).collect();
+        let prompt: Vec<i32> = match self.prefix_ids[i] {
+            Some(pid) if self.prefix_len > 0 => {
+                // shared system prompt: deterministic in (seed, rank)
+                // so every request with this rank byte-matches -- the
+                // content the engine's prefix cache hashes.  A sampled
+                // length at or below the prefix length just sends a
+                // truncated prefix (still page-shareable).
+                let mut pfx = Rng::new(
+                    (self.seed ^ 0x0bad_cafe_d00d_0000)
+                        ^ (pid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                let shared = self.prefix_len.min(plen);
+                let mut v: Vec<i32> = (0..shared)
+                    .map(|_| pfx.usize(0, vocab) as i32)
+                    .collect();
+                v.extend(
+                    (shared..plen).map(|_| prng.usize(0, vocab) as i32),
+                );
+                v
+            }
+            _ => (0..plen).map(|_| prng.usize(0, vocab) as i32).collect(),
+        };
         target.submit(prompt, max_new.max(1), due)
     }
 
@@ -309,6 +360,43 @@ mod tests {
         .run(&mut tiny_engine(4))
         .unwrap();
         assert_ne!(a.records, c.records);
+    }
+
+    #[test]
+    fn prefix_bearing_plans_produce_cache_hits() {
+        let plan = LoadRunner::new(
+            &ArrivalProcess::Constant { interarrival_ms: 1.0 },
+            &RequestMix::tiny_prefix(),
+            SloSpec::chatbot(),
+            12,
+            7,
+        );
+        // the plan itself carries the shared-prefix assignments
+        assert_eq!(plan.prefix_len, 32);
+        assert!(plan.prefix_ids.iter().any(|p| p.is_some()));
+        let out = plan.run(&mut tiny_engine(4)).unwrap();
+        assert_eq!(out.report.completed, 12);
+        assert!(out.report.prefix_hits > 0, "{:?}", out.report.prefix_hits);
+        assert!(out.report.prefix_hit_rate > 0.0);
+        assert!(out.report.prefill_tokens_saved >= 32);
+        // the same plan with the cache disabled: zero hits, and the
+        // skipped prefill compute shows up as strictly higher TTFT
+        let mut cold = EngineBuilder::sim()
+            .model("tiny-1M")
+            .max_batch(4)
+            .ctx_limit(128)
+            .prefix_cache(false)
+            .build()
+            .unwrap();
+        let coff = plan.run(&mut cold).unwrap();
+        assert_eq!(coff.report.prefix_hits, 0);
+        assert_eq!(coff.report.prefill_tokens_saved, 0);
+        assert!(
+            out.report.ttft_ms.mean < coff.report.ttft_ms.mean,
+            "cached {} !< cold {}",
+            out.report.ttft_ms.mean,
+            coff.report.ttft_ms.mean
+        );
     }
 
     #[test]

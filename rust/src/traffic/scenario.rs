@@ -28,11 +28,16 @@ pub struct Scenario {
     pub n_requests: usize,
     pub max_batch: usize,
     pub ctx_limit: usize,
-    /// full-context KV reservations the pool holds.  Live entries are
-    /// capped by `max_batch`, so a value above that is all headroom;
-    /// a value *below* `max_batch` makes bursts overcommit the pool
-    /// and exercises admission control (bounce + FIFO requeue).
+    /// full-context KV footprints the pool capacity is provisioned
+    /// for (`kv_slots x KvLayout::bytes_per_request`).  Admission is
+    /// page-granular, so short requests pack denser than this bound;
+    /// a value *below* `max_batch` still makes bursts overcommit the
+    /// pool and exercises admission control (bounce + FIFO requeue).
     pub kv_slots: usize,
+    /// shared-prefix KV caching on the scenario's engines (default
+    /// on; `loadtest --no-prefix-cache` and `benches/prefix_cache.rs`
+    /// flip it for A/B runs)
+    pub prefix_cache: bool,
 }
 
 impl Scenario {
@@ -68,7 +73,8 @@ impl Scenario {
             .system(system)
             .max_batch(self.max_batch)
             .ctx_limit(self.ctx_limit.min(model.max_ctx))
-            .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)));
+            .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)))
+            .prefix_cache(self.prefix_cache);
         if let Some(s) = scheme {
             b = b.scheme(s);
         }
@@ -118,6 +124,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             max_batch: 8,
             ctx_limit: 1024,
             kv_slots: 10,
+            prefix_cache: true,
         },
         Scenario {
             name: "chat-burst",
@@ -136,6 +143,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             // fewer KV slots than batch lanes: each 8-request burst
             // overcommits the pool, exercising bounce + FIFO requeue
             kv_slots: 5,
+            prefix_cache: true,
         },
         Scenario {
             name: "summarize-steady",
@@ -148,6 +156,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             max_batch: 8,
             ctx_limit: 2048,
             kv_slots: 10,
+            prefix_cache: true,
         },
         Scenario {
             name: "code-complete",
@@ -160,6 +169,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             max_batch: 16,
             ctx_limit: 1024,
             kv_slots: 18,
+            prefix_cache: true,
         },
         Scenario {
             name: "rag-long",
@@ -172,6 +182,33 @@ pub fn all_scenarios() -> Vec<Scenario> {
             max_batch: 4,
             ctx_limit: 2048,
             kv_slots: 6,
+            prefix_cache: true,
+        },
+        Scenario {
+            name: "agent-pool",
+            desc: "agent loops re-sending Zipf-popular system prompts",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 100.0 },
+            mix: RequestMix::agent(),
+            slo: SloSpec::chatbot(),
+            n_requests: 32,
+            max_batch: 8,
+            ctx_limit: 1024,
+            kv_slots: 10,
+            prefix_cache: true,
+        },
+        Scenario {
+            name: "rag-cached",
+            desc: "RAG over hot documents: cacheable retrieved contexts",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 300.0 },
+            mix: RequestMix::rag_cached(),
+            slo: SloSpec::relaxed(),
+            n_requests: 16,
+            max_batch: 4,
+            ctx_limit: 2048,
+            kv_slots: 6,
+            prefix_cache: true,
         },
         Scenario {
             name: "smoke",
@@ -184,6 +221,20 @@ pub fn all_scenarios() -> Vec<Scenario> {
             max_batch: 4,
             ctx_limit: 128,
             kv_slots: 6,
+            prefix_cache: true,
+        },
+        Scenario {
+            name: "smoke-prefix",
+            desc: "CI gate: shared-prefix cache on the tiny model",
+            model: "tiny-1M",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 5.0 },
+            mix: RequestMix::tiny_prefix(),
+            slo: SloSpec::chatbot(),
+            n_requests: 12,
+            max_batch: 4,
+            ctx_limit: 128,
+            kv_slots: 6,
+            prefix_cache: true,
         },
     ]
 }
@@ -243,6 +294,32 @@ mod tests {
             }
             assert!(s.engine("no-such-system", None).is_err());
         }
+    }
+
+    #[test]
+    fn smoke_prefix_scenario_hits_the_cache() {
+        let sc = by_name("smoke-prefix").unwrap();
+        assert!(sc.mix.prefixes.is_some());
+        let mut eng = sc.engine("P3-LLM", None).unwrap();
+        assert!(eng.prefix_cache_enabled());
+        let on = sc.runner(7).run(&mut eng).unwrap().report;
+        assert_eq!(on.completed, sc.n_requests);
+        assert!(on.prefix_hit_rate > 0.0, "{:?}", on.prefix_hits);
+        assert!(on.prefill_tokens_saved > 0);
+        // the same scenario with the cache disabled: zero hits and a
+        // strictly higher mean TTFT (the CI smoke gate's assertion)
+        let mut cold = sc.clone();
+        cold.prefix_cache = false;
+        let mut ceng = cold.engine("P3-LLM", None).unwrap();
+        assert!(!ceng.prefix_cache_enabled());
+        let off = cold.runner(7).run(&mut ceng).unwrap().report;
+        assert_eq!(off.prefix_hits, 0);
+        assert!(
+            on.ttft_ms.mean < off.ttft_ms.mean,
+            "cached {} !< cold {}",
+            on.ttft_ms.mean,
+            off.ttft_ms.mean
+        );
     }
 
     #[test]

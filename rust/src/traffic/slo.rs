@@ -55,6 +55,9 @@ pub struct ReqRecord {
     pub finished_ms: Option<f64>,
     pub prompt_len: usize,
     pub tokens_generated: usize,
+    /// prompt tokens served from the shared-prefix KV cache (0 = miss
+    /// or cache disabled): their prefill compute was skipped
+    pub cached_prefix_tokens: usize,
 }
 
 impl ReqRecord {
@@ -72,6 +75,7 @@ impl ReqRecord {
             finished_ms: req.finished_ms,
             prompt_len: req.prompt.len(),
             tokens_generated: req.generated.len(),
+            cached_prefix_tokens: req.cached_prefix_tokens,
         }
     }
 
@@ -126,6 +130,12 @@ pub struct LoadReport {
     /// modeled peak decode throughput at the run's batch/context
     /// (from the `accel` cost model; `None` when not supplied)
     pub saturation_tok_s: Option<f64>,
+    /// requests whose prefill hit the shared-prefix KV cache
+    pub prefix_hits: usize,
+    /// `prefix_hits / offered`
+    pub prefix_hit_rate: f64,
+    /// prompt tokens whose prefill compute the cache skipped
+    pub prefill_tokens_saved: usize,
     pub queue_delay_ms: Percentiles,
     pub ttft_ms: Percentiles,
     pub tpot_ms: Percentiles,
@@ -144,6 +154,10 @@ impl LoadReport {
     ) -> Self {
         let offered = records.len();
         let completed = records.iter().filter(|r| r.finished()).count();
+        let prefix_hits =
+            records.iter().filter(|r| r.cached_prefix_tokens > 0).count();
+        let prefill_tokens_saved: usize =
+            records.iter().map(|r| r.cached_prefix_tokens).sum();
         let mut slo_met = 0usize;
         let mut met_tokens = 0usize;
         let mut total_tokens = 0usize;
@@ -207,6 +221,13 @@ impl LoadReport {
             goodput_tok_s: rate(met_tokens as f64),
             busy_tok_s: metrics.tokens_per_sec(),
             saturation_tok_s,
+            prefix_hits,
+            prefix_hit_rate: if offered > 0 {
+                prefix_hits as f64 / offered as f64
+            } else {
+                0.0
+            },
+            prefill_tokens_saved,
             queue_delay_ms: Percentiles::from_samples(&queues),
             ttft_ms: Percentiles::from_samples(&ttfts),
             tpot_ms: Percentiles::from_samples(&tpots),
@@ -238,7 +259,37 @@ mod tests {
             finished_ms: Some(fin),
             prompt_len: 16,
             tokens_generated: tokens,
+            cached_prefix_tokens: 0,
         }
+    }
+
+    #[test]
+    fn prefix_hit_columns_aggregate_from_records() {
+        let mut r1 = rec(0.0, 10.0, 100.0, 5);
+        r1.cached_prefix_tokens = 32;
+        let mut r2 = rec(0.0, 12.0, 110.0, 5);
+        r2.cached_prefix_tokens = 16;
+        let r3 = rec(0.0, 14.0, 120.0, 5); // miss
+        let r4 = rec(0.0, 16.0, 130.0, 5); // miss
+        let r = LoadReport::from_records(
+            &[r1, r2, r3, r4],
+            &SloSpec::relaxed(),
+            &Metrics::default(),
+            None,
+        );
+        assert_eq!(r.prefix_hits, 2);
+        assert!((r.prefix_hit_rate - 0.5).abs() < 1e-12);
+        assert_eq!(r.prefill_tokens_saved, 48);
+        // no prefixes at all reports clean zeros
+        let none = LoadReport::from_records(
+            &[],
+            &SloSpec::relaxed(),
+            &Metrics::default(),
+            None,
+        );
+        assert_eq!(none.prefix_hits, 0);
+        assert_eq!(none.prefix_hit_rate, 0.0);
+        assert_eq!(none.prefill_tokens_saved, 0);
     }
 
     #[test]

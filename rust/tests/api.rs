@@ -101,20 +101,23 @@ fn sim_runs_are_deterministic() {
     assert_eq!(t1, t2);
 }
 
-/// KV capacity for only 2 of 5 requests: the engine bounces the rest
+/// KV pages for only 2 of 5 requests: the engine bounces the rest
 /// back to the queue head (admission control) instead of erroring, and
-/// still completes everything as reservations free.
+/// still completes everything as pages free.  Admission is
+/// page-granular: each request here reserves ceil((3 prompt + 4 new) /
+/// 16) = 1 page, so a 2-page pool holds exactly 2 concurrent requests
+/// -- the old whole-request accounting would have reserved the full
+/// 32-token context (2 pages) each and halved the batch depth.
 #[test]
 fn kv_exhaustion_mid_stream_is_admission_controlled() {
     let ctx = 32usize;
-    // per-request packed reservation for tiny-1M at ctx 32:
-    // 2 sides * 4 layers * 32 tokens * (32 kv_dim / 2) bytes
-    let per_request = 2 * 4 * ctx * (32 / 2);
+    // one page: 2 sides * 4 layers * 16 tokens * (32 kv_dim / 2) bytes
+    let page_bytes = 2 * 4 * 16 * (32 / 2);
     let mut eng = EngineBuilder::sim()
         .model("tiny-1M")
         .max_batch(4)
         .ctx_limit(ctx)
-        .kv_capacity(2 * per_request)
+        .kv_capacity(2 * page_bytes)
         .build()
         .unwrap();
     let mut ids = vec![];

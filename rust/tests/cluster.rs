@@ -26,6 +26,7 @@ fn bursty_tiny(n_requests: usize, kv_slots: usize) -> Scenario {
         max_batch: 4,
         ctx_limit: 128,
         kv_slots,
+        prefix_cache: true,
     }
 }
 
@@ -158,6 +159,33 @@ fn prefill_decode_handoff_accounts_exactly() {
     assert_eq!(decode_completed, offered, "handoffs lost");
     // prefill replica did real prefill work
     assert!(pre.prefill_ms > 0.0);
+}
+
+/// Prefix-affinity routing keeps shared-prefix caches replica-local:
+/// on a prefix-bearing scenario every popular system prompt cold-
+/// misses once per *fleet* under `pa`, but once per *replica* under
+/// round-robin, so `pa` ends with a strictly higher fleet hit rate.
+#[test]
+fn prefix_affinity_keeps_caches_replica_local() {
+    let mut sc = scenario_by_name("smoke-prefix").unwrap();
+    sc.n_requests = 24;
+    let run = |policy: &str| {
+        let mut fleet =
+            Cluster::from_scenario(&sc, "P3-LLM", None, 4, policy).unwrap();
+        let plan = sc.clone().for_fleet(4).unwrap().runner(7);
+        fleet.run(&plan, None).unwrap().report.fleet.clone()
+    };
+    let pa = run("pa");
+    let rr = run("rr");
+    assert_eq!(pa.completed, pa.offered);
+    assert!(pa.prefix_hit_rate > 0.0, "{:?}", pa.prefix_hits);
+    assert!(
+        pa.prefix_hit_rate > rr.prefix_hit_rate,
+        "pa hit rate {:.3} !> rr hit rate {:.3}",
+        pa.prefix_hit_rate,
+        rr.prefix_hit_rate
+    );
+    assert!(pa.prefill_tokens_saved > rr.prefill_tokens_saved);
 }
 
 /// The fleet-merged report stays consistent with the exact
