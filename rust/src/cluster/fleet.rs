@@ -23,6 +23,7 @@ use crate::coordinator::{
     prefix_page_hash, Engine, Metrics, Percentiles, RequestId,
 };
 use crate::error::{P3Error, Result};
+use crate::sched::SloClass;
 use crate::sim::{dram, npu};
 use crate::traffic::{
     LoadReport, LoadRunner, LoadTarget, ReqRecord, RunOutcome, Scenario,
@@ -38,6 +39,8 @@ struct Ticket {
     prefill_id: RequestId,
     /// total output budget across both phases
     max_new: usize,
+    /// SLO tier the client submitted under (carried to both phases)
+    class: SloClass,
     /// decode-side continuation, once handed off (disaggregated: the
     /// prefill side ran with `max_new = 1` and the rest decodes here)
     decode: Option<(usize, RequestId)>,
@@ -201,9 +204,9 @@ impl Cluster {
             }
         });
         for ti in ready {
-            let (pid, pre, total) = {
+            let (pid, pre, total, class) = {
                 let t = &self.tickets[ti];
-                (t.prefill_id, t.prefill_replica, t.max_new)
+                (t.prefill_id, t.prefill_replica, t.max_new, t.class)
             };
             let (handoff_at, cont_prompt) = {
                 let req = self.replicas[pre]
@@ -227,6 +230,7 @@ impl Cluster {
                 prompt_len: cont_prompt.len(),
                 max_new: total - 1,
                 affinity: prefix_page_hash(&cont_prompt),
+                class,
             };
             let d = self.policy.route_decode(&dq, &snaps);
             // causality: the KV cannot land before the prefill that
@@ -237,10 +241,11 @@ impl Cluster {
             // its own first token existed, inflating pd SLO numbers
             // with acausal timelines.
             self.replicas[d].advance_clock_to(handoff_at);
-            let id = self.replicas[d].submit_prefilled(
+            let id = self.replicas[d].submit_prefilled_class(
                 cont_prompt,
                 total - 1,
                 transfer_ms,
+                class,
             )?;
             self.tickets[ti].decode = Some((d, id));
         }
@@ -299,6 +304,7 @@ impl LoadTarget for Cluster {
         prompt: Vec<i32>,
         max_new: usize,
         due_ms: f64,
+        class: SloClass,
     ) -> Result<u64> {
         let n = self.replicas.len();
         let pool = self.policy.prefill_pool(n);
@@ -307,6 +313,7 @@ impl LoadTarget for Cluster {
             prompt_len: prompt.len(),
             max_new,
             affinity: prefix_page_hash(&prompt),
+            class,
         };
         let chosen = self.policy.route(&query, &snaps);
         // disaggregate only when there is a decode pool, something
@@ -319,7 +326,8 @@ impl LoadTarget for Cluster {
             self.replicas[chosen].advance_clock_to(due_ms);
         }
         let pf_new = if split { 1 } else { max_new };
-        let id = self.replicas[chosen].submit(prompt, pf_new)?;
+        let id =
+            self.replicas[chosen].submit_class(prompt, pf_new, class)?;
         let ticket = self.tickets.len() as u64;
         if split {
             self.open_handoffs.push(self.tickets.len());
@@ -328,6 +336,7 @@ impl LoadTarget for Cluster {
             prefill_replica: chosen,
             prefill_id: id,
             max_new,
+            class,
             decode: None,
         });
         Ok(ticket)
@@ -384,6 +393,10 @@ impl LoadTarget for Cluster {
             rec.finished_ms = dec.finished_ms;
             rec.tokens_generated =
                 pre.generated.len() + dec.generated.len();
+            // preemption churn can hit either phase
+            rec.preemptions += dec.preemptions;
+            rec.pages_swapped += dec.pages_swapped;
+            rec.pages_recomputed += dec.pages_recomputed;
         }
         Ok(rec)
     }
@@ -414,6 +427,12 @@ impl LoadTarget for Cluster {
             prefix_tokens_saved: per
                 .iter()
                 .map(|m| m.prefix_tokens_saved)
+                .sum(),
+            preemptions: per.iter().map(|m| m.preemptions).sum(),
+            pages_swapped: per.iter().map(|m| m.pages_swapped).sum(),
+            pages_recomputed: per
+                .iter()
+                .map(|m| m.pages_recomputed)
                 .sum(),
             ttft_ms: Percentiles::merge(&ttfts),
             per_token_ms: Percentiles::merge(&tpots),

@@ -45,6 +45,13 @@
 //! Whole cluster runs are bit-identical under a fixed seed: routing is
 //! deterministic (ties break on replica index) and every replica clock
 //! derives from the same cost model.
+//!
+//! Requests carry their [`SloClass`](crate::sched::SloClass) through
+//! the [`RouteQuery`] (tier-aware policies need no signature change)
+//! and into each replica, so a fleet of preemptively-scheduled engines
+//! (scenarios with a victim policy, e.g. `flash-crowd`) reports
+//! per-tier fleet rows and preemption counters in its merged
+//! [`ClusterReport`].
 
 pub mod fleet;
 pub mod policy;

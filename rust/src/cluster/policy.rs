@@ -24,6 +24,11 @@ pub struct RouteQuery {
     /// sharing a system prompt share this value -- the signal the
     /// `pa` policy routes on to keep prefix caches replica-local.
     pub affinity: Option<u64>,
+    /// SLO priority tier the request was submitted under.  No shipped
+    /// policy reads it yet; it is part of the query contract so
+    /// tier-aware placement (e.g. reserving replicas for interactive
+    /// traffic) needs no signature change.
+    pub class: crate::sched::SloClass,
 }
 
 /// What a policy may observe about one replica at routing time.
@@ -295,7 +300,12 @@ mod tests {
     }
 
     fn q(prompt_len: usize, max_new: usize) -> RouteQuery {
-        RouteQuery { prompt_len, max_new, affinity: None }
+        RouteQuery {
+            prompt_len,
+            max_new,
+            affinity: None,
+            class: crate::sched::SloClass::Interactive,
+        }
     }
 
     #[test]
@@ -344,6 +354,7 @@ mod tests {
             prompt_len: 64,
             max_new: 8,
             affinity: Some(h),
+            class: crate::sched::SloClass::Interactive,
         };
         // same affinity hash -> same replica, regardless of load
         let a = p.route(&with(0xABCD), &c);

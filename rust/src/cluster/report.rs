@@ -9,6 +9,7 @@
 //! [`Percentiles::merge`](crate::coordinator::Percentiles::merge).
 
 use crate::coordinator::Percentiles;
+use crate::sched::SloClass;
 use crate::traffic::LoadReport;
 
 /// One replica's share of a cluster run.
@@ -85,6 +86,33 @@ impl ClusterReport {
         } else {
             None
         };
+        // fleet per-tier rows: merge each tier's per-replica
+        // sub-reports with the same rebase rules.  Sub-reports carry
+        // empty `per_class` themselves, so the recursion is one level
+        // deep.
+        let mut per_class = vec![];
+        for class in SloClass::all() {
+            let parts: Vec<LoadReport> = per
+                .iter()
+                .flat_map(|r| {
+                    r.per_class
+                        .iter()
+                        .filter(|(c, _)| *c == class)
+                        .map(|(_, sub)| sub.clone())
+                })
+                .collect();
+            if parts.is_empty() {
+                continue;
+            }
+            let zeros = vec![0.0; parts.len()];
+            let sub = ClusterReport::merge(
+                policy,
+                &parts,
+                &zeros,
+                Some(makespan_ms),
+            );
+            per_class.push((class, sub.fleet));
+        }
         let fleet = LoadReport {
             offered,
             completed,
@@ -120,6 +148,13 @@ impl ClusterReport {
                 0.0
             },
             prefill_tokens_saved,
+            preemptions: per.iter().map(|r| r.preemptions).sum(),
+            pages_swapped: per.iter().map(|r| r.pages_swapped).sum(),
+            pages_recomputed: per
+                .iter()
+                .map(|r| r.pages_recomputed)
+                .sum(),
+            per_class,
             queue_delay_ms: Percentiles::merge(&queue_parts),
             ttft_ms: Percentiles::merge(&ttft_parts),
             tpot_ms: Percentiles::merge(&tpot_parts),
@@ -178,6 +213,10 @@ mod tests {
             prompt_len: 16,
             tokens_generated: tokens,
             cached_prefix_tokens: 0,
+            class: SloClass::Interactive,
+            preemptions: 0,
+            pages_swapped: 0,
+            pages_recomputed: 0,
         }
     }
 
@@ -216,6 +255,33 @@ mod tests {
         let with = m.with_baseline(45.0);
         // 90 tok/s fleet goodput vs 2 x 45 baseline = 1.0
         assert!((with.scaling_efficiency.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_carries_tier_rows_and_preemption_counters() {
+        let mut int = rec(0.0, 10.0, 500.0, 50);
+        int.class = SloClass::Interactive;
+        let mut be = rec(0.0, 20.0, 1000.0, 50);
+        be.class = SloClass::BestEffort;
+        be.preemptions = 1;
+        be.pages_recomputed = 7;
+        let a = report(&[int, be]); // mixed tiers -> per_class set
+        let b = report(&[rec(0.0, 10.0, 800.0, 30)]); // all-interactive
+        let m = ClusterReport::merge("jsq", &[a, b], &[10.0, 10.0], None);
+        assert_eq!(m.fleet.preemptions, 1);
+        assert_eq!(m.fleet.pages_recomputed, 7);
+        assert_eq!(m.fleet.pages_swapped, 0);
+        // tier rows merge across replicas (replica b contributed no
+        // rows of its own: single-class runs keep per_class empty)
+        assert_eq!(m.fleet.per_class.len(), 2);
+        let (c0, fi) = &m.fleet.per_class[0];
+        assert_eq!(*c0, SloClass::Interactive);
+        assert_eq!(fi.offered, 1);
+        let (c1, fb) = &m.fleet.per_class[1];
+        assert_eq!(*c1, SloClass::BestEffort);
+        assert_eq!(fb.offered, 1);
+        assert_eq!(fb.preemptions, 1);
+        assert!(fb.per_class.is_empty());
     }
 
     #[test]

@@ -55,6 +55,27 @@ impl Batcher {
         newly
     }
 
+    /// Admit by priority key instead of FIFO: repeatedly takes the
+    /// queued request minimizing `key` until the batch is full.  The
+    /// scan is stable (first-queued wins a tie), so a key of unit type
+    /// degenerates to plain FIFO [`Batcher::admit`] and a key of
+    /// `(rank, submit_time)` is FIFO within each priority tier.
+    pub fn admit_by<K: Ord>(
+        &mut self,
+        mut key: impl FnMut(RequestId) -> K,
+    ) -> Vec<RequestId> {
+        let mut newly = vec![];
+        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let qi = (0..self.queue.len())
+                .min_by_key(|&i| key(self.queue[i]))
+                .expect("non-empty queue");
+            let id = self.queue.remove(qi).expect("index in bounds");
+            self.active.push(id);
+            newly.push(id);
+        }
+        newly
+    }
+
     pub fn retire(&mut self, id: RequestId) {
         self.active.retain(|&r| r != id);
     }
@@ -175,6 +196,25 @@ mod tests {
         b.retire(id(0));
         b.retire(id(1));
         assert_eq!(b.admit(), vec![id(3), id(4)]);
+    }
+
+    #[test]
+    fn admit_by_orders_by_key_and_is_fifo_on_ties() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.enqueue(id(i));
+        }
+        // rank: 1 and 3 are high priority (key 0), rest low (key 1)
+        let rank = |r: RequestId| u8::from(r.0 != 1 && r.0 != 3);
+        assert_eq!(b.admit_by(rank), vec![id(1), id(3)]);
+        b.retire(id(1));
+        b.retire(id(3));
+        // remaining all tie on key -> plain FIFO order
+        assert_eq!(b.admit_by(rank), vec![id(0), id(2)]);
+        assert_eq!(b.queued(), 1);
+        // unit key == admit(): pure FIFO
+        b.retire(id(0));
+        assert_eq!(b.admit_by(|_| ()), vec![id(4)]);
     }
 
     #[test]

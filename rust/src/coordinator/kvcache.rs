@@ -1227,6 +1227,118 @@ mod tests {
     }
 
     #[test]
+    fn page_conservation_under_preempt_resume_churn() {
+        // property: the sched layer's eviction paths -- preempt (free
+        // the victim's pages), park, resume (re-install the full
+        // context via re-prefill: the pool-level shape of both the
+        // recompute and swap restore modes) -- interleaved with
+        // shared-prefix adoption never leak a page, never double-free,
+        // and keep refcounts / pins / free list exactly recomputable
+        Runner::new(24).run(|r: &mut Rng| {
+            let lay = layout();
+            let mut pool = pool_of(8);
+            // live/parked: (id, context length, admitted budget)
+            let mut live: Vec<(u64, usize, usize)> = vec![];
+            let mut parked: Vec<(u64, usize, usize)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..120 {
+                match r.usize(0, 5) {
+                    // fresh admission with prefix lookup + publication
+                    // (page-aligned prompts over a 3-letter alphabet
+                    // keep shared-prefix collisions frequent)
+                    0 => {
+                        let tag = r.usize(0, 3) as i32;
+                        let plen = r.usize(1, 3) * PAGE_TOKENS;
+                        let prompt = vec![tag; plen];
+                        let total = (plen + r.usize(1, 8)).min(lay.max_ctx);
+                        if pool.can_admit(total) {
+                            next_id += 1;
+                            let hit = pool.lookup_prefix(&prompt);
+                            let cached =
+                                hit.as_ref().map_or(0, |h| h.tokens);
+                            let smooth = hit
+                                .as_ref()
+                                .map(|h| h.smooth.clone())
+                                .unwrap_or_else(|| ones_smooth(&lay));
+                            pool.alloc_seq(next_id, smooth, total, hit)
+                                .unwrap();
+                            push_n(&mut pool, next_id, plen - cached, 0.5, 0.5);
+                            pool.register_prefix(next_id, &prompt);
+                            live.push((next_id, plen, total));
+                        }
+                    }
+                    // decode-append within the admitted budget
+                    1 => {
+                        if !live.is_empty() {
+                            let idx = r.usize(0, live.len());
+                            if live[idx].1 < live[idx].2 {
+                                push_n(&mut pool, live[idx].0, 1, 0.25, 0.25);
+                                live[idx].1 += 1;
+                            }
+                        }
+                    }
+                    // preempt: the victim's pages release immediately
+                    // (shared ones stay cached for other adopters)
+                    2 => {
+                        if !live.is_empty() {
+                            let idx = r.usize(0, live.len());
+                            let v = live.swap_remove(idx);
+                            assert!(pool.free(v.0));
+                            parked.push(v);
+                        }
+                    }
+                    // resume: re-admit and re-install the parked
+                    // context (the engine's resume prefill skips
+                    // prefix lookup/registration); under pressure the
+                    // request stays parked and retries later
+                    3 => {
+                        if !parked.is_empty() {
+                            let idx = r.usize(0, parked.len());
+                            let (id, ctx, total) = parked.swap_remove(idx);
+                            if pool.can_admit(total) {
+                                pool.alloc_seq(
+                                    id,
+                                    ones_smooth(&lay),
+                                    total,
+                                    None,
+                                )
+                                .unwrap();
+                                push_n(&mut pool, id, ctx, 0.5, 0.5);
+                                live.push((id, ctx, total));
+                            } else {
+                                parked.push((id, ctx, total));
+                            }
+                        }
+                    }
+                    // retire for good
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = r.usize(0, live.len());
+                            let (id, ..) = live.swap_remove(idx);
+                            assert!(pool.free(id));
+                            assert!(!pool.free(id), "double-free accepted");
+                        }
+                    }
+                }
+                pool.check_invariants();
+                assert_eq!(pool.len(), live.len());
+                assert!(
+                    pool.outstanding_pages() <= pool.available_pages(),
+                    "reservations overcommitted"
+                );
+            }
+            for (id, ..) in live.drain(..) {
+                assert!(pool.free(id));
+            }
+            pool.check_invariants();
+            assert!(pool.is_empty());
+            assert_eq!(pool.used_bytes(), 0);
+            // everything left is reclaimable cache
+            assert_eq!(pool.available_pages(), pool.total_pages());
+        });
+    }
+
+    #[test]
     fn effective_bits_reasonable() {
         let lay =
             KvLayout { layers: 1, kv_dim: 128, head_dim: 128, max_ctx: 16 };

@@ -55,6 +55,15 @@ pub struct Request {
     /// (0 = miss, or the cache was disabled): their prefill compute
     /// was skipped and their KV pages are shared
     pub cached_prefix_tokens: usize,
+    /// SLO priority tier (attached at submit; drives preemptive
+    /// admission ordering and victim selection)
+    pub class: crate::sched::SloClass,
+    /// times this request was evicted mid-decode by a higher tier
+    pub preemptions: usize,
+    /// KV pages migrated to the slow tier across all swap preemptions
+    pub pages_swapped: usize,
+    /// KV pages dropped and re-prefilled across recompute preemptions
+    pub pages_recomputed: usize,
 }
 
 impl Request {
@@ -73,6 +82,10 @@ impl Request {
             streamed: 0,
             prefill_charge_ms: None,
             cached_prefix_tokens: 0,
+            class: crate::sched::SloClass::Interactive,
+            preemptions: 0,
+            pages_swapped: 0,
+            pages_recomputed: 0,
         }
     }
 

@@ -32,14 +32,16 @@ use std::collections::HashMap;
 
 use super::backend::{BackendKind, ExecBackend, Lane};
 use super::batcher::{Batcher, COMPILED_BATCHES};
-use super::kvcache::{KvLayout, KvPool};
+use super::kvcache::{KvLayout, KvPool, PAGE_TOKENS};
 use super::pjrt::PjrtBackend;
 use super::request::{Request, RequestId, RequestStatus, State};
 use super::simbackend::SimBackend;
+use crate::config::accel::HbmTiming;
 use crate::config::llm::LlmConfig;
 use crate::config::scheme;
 use crate::coordinator::mapper::MapSummary;
 use crate::error::{P3Error, Result};
+use crate::sched::{SloClass, VictimCandidate, VictimMode, VictimPolicy};
 
 /// Latency distribution summary (nearest-rank percentiles).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -148,6 +150,13 @@ pub struct Metrics {
     pub prefix_hits: usize,
     /// prompt tokens whose prefill compute the cache skipped
     pub prefix_tokens_saved: usize,
+    /// mid-decode evictions by the preemptive scheduler (0 without a
+    /// victim policy)
+    pub preemptions: usize,
+    /// KV pages migrated to the modeled slow tier (swap victims)
+    pub pages_swapped: usize,
+    /// KV pages dropped for re-prefill (recompute victims)
+    pub pages_recomputed: usize,
     pub ttft_ms: Percentiles,
     pub per_token_ms: Percentiles,
 }
@@ -172,8 +181,33 @@ struct StatsAcc {
     decode_ms: f64,
     prefix_hits: usize,
     prefix_tokens_saved: usize,
+    preemptions: usize,
+    pages_swapped: usize,
+    pages_recomputed: usize,
     ttft: Vec<f64>,
     tpot: Vec<f64>,
+}
+
+/// Preemptive-scheduling state (present only when the builder selected
+/// a victim policy; `None` keeps the engine strictly FIFO).
+struct SchedState {
+    victim: Box<dyn VictimPolicy>,
+    /// anti-starvation floor: a request queued longer than this is
+    /// promoted to top effective rank -- first in line for admission
+    /// and no longer preemptible
+    aging_ms: f64,
+    /// HBM timing the swap transfer model prices against
+    hbm: HbmTiming,
+}
+
+/// Nominal class rank, promoted to 0 once the request has waited past
+/// the aging floor (measured from submission on the engine clock).
+fn effective_rank(req: &Request, now_ms: f64, aging_ms: f64) -> u8 {
+    if now_ms - req.submitted_ms >= aging_ms {
+        0
+    } else {
+        req.class.rank()
+    }
 }
 
 pub struct Engine {
@@ -188,6 +222,8 @@ pub struct Engine {
     requests: HashMap<u64, Request>,
     next_id: u64,
     acc: StatsAcc,
+    /// SLO-tiered preemptive scheduling (None = FIFO)
+    sched: Option<SchedState>,
 }
 
 impl Engine {
@@ -239,6 +275,7 @@ impl Engine {
             requests: HashMap::new(),
             next_id: 1,
             acc: StatsAcc::default(),
+            sched: None,
         })
     }
 
@@ -285,7 +322,20 @@ impl Engine {
     /// backends, prompts longer than one prefill tile are absorbed in
     /// `ceil(len / tile)` chunks at prefill time.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<RequestId> {
-        self.submit_inner(prompt, max_new, None)
+        self.submit_inner(prompt, max_new, None, SloClass::Interactive)
+    }
+
+    /// [`Engine::submit`] with an explicit SLO priority tier.  The
+    /// class drives admission ordering and victim selection when the
+    /// engine has a preemptive scheduler; a FIFO engine carries it
+    /// through to reporting unchanged.
+    pub fn submit_class(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        class: SloClass,
+    ) -> Result<RequestId> {
+        self.submit_inner(prompt, max_new, None, class)
     }
 
     /// Submit a request whose prompt KV was prefilled on another
@@ -299,13 +349,30 @@ impl Engine {
         max_new: usize,
         install_ms: f64,
     ) -> Result<RequestId> {
+        self.submit_prefilled_class(
+            prompt,
+            max_new,
+            install_ms,
+            SloClass::Interactive,
+        )
+    }
+
+    /// [`Engine::submit_prefilled`] with an explicit SLO priority tier
+    /// (disaggregated clusters carry the class across the handoff).
+    pub fn submit_prefilled_class(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        install_ms: f64,
+        class: SloClass,
+    ) -> Result<RequestId> {
         if !install_ms.is_finite() || install_ms < 0.0 {
             return Err(P3Error::InvalidConfig(format!(
                 "KV install charge must be finite and >= 0 ms, got \
                  {install_ms}"
             )));
         }
-        self.submit_inner(prompt, max_new, Some(install_ms))
+        self.submit_inner(prompt, max_new, Some(install_ms), class)
     }
 
     fn submit_inner(
@@ -313,6 +380,7 @@ impl Engine {
         prompt: Vec<i32>,
         max_new: usize,
         install_ms: Option<f64>,
+        class: SloClass,
     ) -> Result<RequestId> {
         if prompt.is_empty() {
             return Err(P3Error::EmptyPrompt);
@@ -325,6 +393,7 @@ impl Engine {
         self.next_id += 1;
         let mut req = Request::new(id, prompt, max_new, self.backend.now_ms());
         req.prefill_charge_ms = install_ms;
+        req.class = class;
         let rid = req.id;
         self.requests.insert(id, req);
         self.batcher.enqueue(rid);
@@ -378,32 +447,53 @@ impl Engine {
             .get_mut(&rid.0)
             .ok_or(P3Error::UnknownRequest(rid.0))?;
         req.state = State::Prefilling;
-        req.prefill_start_ms = Some(t0);
-        let prompt = req.prompt.clone();
+        // queueing delay measures time to FIRST service: a preempted
+        // request coming back keeps its original prefill start
+        if req.prefill_start_ms.is_none() {
+            req.prefill_start_ms = Some(t0);
+        }
+        // a resuming victim (preempted mid-decode) re-installs its
+        // whole context -- prompt plus every generated token except
+        // the pending one (whose KV the next decode step writes)
+        let resume = !req.generated.is_empty();
+        let ctx: Vec<i32> = if resume {
+            let g = req.generated.len();
+            req.prompt
+                .iter()
+                .chain(req.generated[..g - 1].iter())
+                .copied()
+                .collect()
+        } else {
+            req.prompt.clone()
+        };
+        let prompt_len = req.prompt.len();
         let max_new = req.max_new_tokens;
         let charge = req.prefill_charge_ms;
         let use_cache = self.prefix_cache && charge.is_none();
         // the lookup pins the matched pages (they cannot be evicted
         // while the backend runs); the hit is resolved below -- by
-        // alloc_seq on success, or released on a backend error
+        // alloc_seq on success, or released on a backend error.  On a
+        // recompute resume this is what makes eviction cheap: the
+        // victim's own registered prompt pages are still cached, so
+        // only the generated suffix re-prefills.
         let hit = if use_cache {
-            self.pool.lookup_prefix(&prompt)
+            self.pool.lookup_prefix(&ctx)
         } else {
             None
         };
         let cached = hit.as_ref().map(|h| h.tokens).unwrap_or(0);
-        let total_max = (prompt.len() + max_new).min(self.ctx_cap);
+        let total_max = (prompt_len + max_new).min(self.ctx_cap);
         let mut outs = Vec::new();
         let mut backend_err: Option<P3Error> = None;
         match charge {
-            Some(ms) => match self.backend.install_prefill(&prompt, ms) {
+            Some(ms) => match self.backend.install_prefill(&ctx, ms) {
                 Ok(o) => outs.push(o),
                 Err(e) => backend_err = Some(e),
             },
             None => {
                 let tile = self.backend.max_prefill().max(1);
                 let mut offset = cached;
-                for chunk in prompt[cached..].chunks(tile) {
+                for chunk in ctx[cached..].chunks(tile) {
                     match self.backend.prefill_continue(chunk, offset) {
                         Ok(o) => {
                             offset += chunk.len();
@@ -454,20 +544,30 @@ impl Engine {
             total_len += out.true_len;
             first_token = out.first_token;
         }
-        if use_cache {
-            self.pool.register_prefix(rid.0, &prompt);
+        if use_cache && !resume {
+            // ctx == prompt on the non-resume path
+            self.pool.register_prefix(rid.0, &ctx);
         }
-        if cached > 0 {
+        if cached > 0 && !resume {
             self.acc.prefix_hits += 1;
             self.acc.prefix_tokens_saved += cached;
         }
         let now = self.backend.now_ms();
         let req = self.requests.get_mut(&rid.0).unwrap();
-        req.cached_prefix_tokens = cached;
         req.pos = total_len;
-        req.generated.push(first_token);
-        req.pos += 1; // KV slot for the first token is written by decode
-        req.first_token_ms = Some(now);
+        // the installed context ends one slot short of the pending
+        // token on both paths; a fresh prefill additionally emits the
+        // first token here, a resume already holds its tokens
+        if !resume {
+            req.cached_prefix_tokens = cached;
+            req.generated.push(first_token);
+            req.first_token_ms = Some(now);
+        }
+        req.pos += 1; // KV slot for the pending token is written by decode
+        // a migrated-KV charge is consumed by the install: if this
+        // request is later preempted under a recompute policy it must
+        // re-prefill, not re-install at a stale charge
+        req.prefill_charge_ms = None;
         req.state = State::Decoding;
         self.acc.prefill_ms += now - t0;
         Ok(())
@@ -490,6 +590,89 @@ impl Engine {
         self.pool.free(rid.0);
     }
 
+    /// Pick a preemption victim for a newcomer of `newcomer_rank`:
+    /// active decodes of *strictly* lower priority (an aged request is
+    /// promoted to rank 0 and becomes unpreemptible -- the
+    /// anti-starvation floor), excluding requests already done (they
+    /// retire this step and release their pages anyway).
+    fn select_victim(&self, newcomer_rank: u8) -> Option<RequestId> {
+        let s = self.sched.as_ref()?;
+        let now = self.backend.now_ms();
+        let cands: Vec<VictimCandidate> = self
+            .batcher
+            .active()
+            .iter()
+            .filter_map(|rid| {
+                let r = self.requests.get(&rid.0)?;
+                if r.state != State::Decoding || r.done(self.ctx_cap) {
+                    return None;
+                }
+                let rank = effective_rank(r, now, s.aging_ms);
+                if rank <= newcomer_rank {
+                    return None;
+                }
+                let kv_tokens = self.pool.seq_len(rid.0).unwrap_or(0);
+                Some(VictimCandidate {
+                    rid: rid.0,
+                    class: r.class,
+                    rank,
+                    generated: r.generated.len(),
+                    kv_pages: kv_tokens.div_ceil(PAGE_TOKENS).max(1),
+                })
+            })
+            .collect();
+        let i = s.victim.select(&cands)?;
+        Some(RequestId(cands[i].rid))
+    }
+
+    /// Evict one in-flight decode: release its pool pages (its cached
+    /// prompt pages survive as reclaimable prefix-cache pages), bounce
+    /// it to the queue head, and record how its context comes back --
+    /// recompute re-prefills it, swap re-installs it at a modeled
+    /// slow-tier transfer charge.
+    fn preempt(&mut self, rid: RequestId) -> Result<()> {
+        let kv_tokens = self.pool.seq_len(rid.0).unwrap_or(0);
+        let pages = kv_tokens.div_ceil(PAGE_TOKENS).max(1);
+        let (mode, swap_ms) = {
+            let s = self.sched.as_ref().expect("preempt without scheduler");
+            let mode = s.victim.mode();
+            let ms = match mode {
+                // the restore hop is the charged, admission-blocking
+                // leg; swap-out streams out asynchronously behind the
+                // ongoing decode
+                VictimMode::Swap => Some(crate::sched::swap_restore_ms(
+                    &s.hbm,
+                    &self.model,
+                    kv_tokens,
+                )),
+                VictimMode::Recompute => None,
+            };
+            (mode, ms)
+        };
+        self.pool.free(rid.0);
+        self.batcher.requeue_front(rid);
+        let req = self
+            .requests
+            .get_mut(&rid.0)
+            .ok_or(P3Error::UnknownRequest(rid.0))?;
+        req.state = State::Queued;
+        req.preemptions += 1;
+        self.acc.preemptions += 1;
+        match mode {
+            VictimMode::Recompute => {
+                req.pages_recomputed += pages;
+                self.acc.pages_recomputed += pages;
+                req.prefill_charge_ms = None;
+            }
+            VictimMode::Swap => {
+                req.pages_swapped += pages;
+                self.acc.pages_swapped += pages;
+                req.prefill_charge_ms = swap_ms;
+            }
+        }
+        Ok(())
+    }
+
     /// One engine step: admit (with page-granular KV admission
     /// control), prefill the newcomers, run one batched decode step.
     /// Returns tokens emitted.
@@ -500,15 +683,51 @@ impl Engine {
     /// pool, everything behind it bounces too, so FIFO order survives
     /// heterogeneous request sizes.
     pub fn step(&mut self) -> Result<usize> {
-        let newly = self.batcher.admit();
+        let newly = match &self.sched {
+            Some(s) => {
+                // priority admission: effective rank (class, promoted
+                // by aging), then submit time -- FIFO within a tier
+                let now = self.backend.now_ms();
+                let aging = s.aging_ms;
+                let reqs = &self.requests;
+                self.batcher.admit_by(|rid| {
+                    let r = &reqs[&rid.0];
+                    (
+                        effective_rank(r, now, aging),
+                        r.submitted_ms.to_bits(),
+                        rid.0,
+                    )
+                })
+            }
+            None => self.batcher.admit(),
+        };
         let mut bounced = vec![];
         let mut prefilled = vec![];
         let mut blocked = false;
         for rid in newly {
-            let total_max = {
+            let (total_max, rank) = {
                 let req = &self.requests[&rid.0];
-                (req.prompt.len() + req.max_new_tokens).min(self.ctx_cap)
+                let now = self.backend.now_ms();
+                let rank = match &self.sched {
+                    Some(s) => effective_rank(req, now, s.aging_ms),
+                    None => u8::MAX,
+                };
+                (
+                    (req.prompt.len() + req.max_new_tokens).min(self.ctx_cap),
+                    rank,
+                )
             };
+            // under KV pressure from a higher tier, evict low-priority
+            // in-flight decodes until the newcomer fits (each round
+            // shrinks the active set, so this terminates)
+            if self.sched.is_some() && !blocked {
+                while !self.pool.can_admit(total_max) {
+                    match self.select_victim(rank) {
+                        Some(vid) => self.preempt(vid)?,
+                        None => break,
+                    }
+                }
+            }
             if blocked || !self.pool.can_admit(total_max) {
                 // a bounce always has something to wait for: with no
                 // live sequences every page is obtainable (cached
@@ -640,6 +859,9 @@ impl Engine {
             decode_ms: self.acc.decode_ms,
             prefix_hits: self.acc.prefix_hits,
             prefix_tokens_saved: self.acc.prefix_tokens_saved,
+            preemptions: self.acc.preemptions,
+            pages_swapped: self.acc.pages_swapped,
+            pages_recomputed: self.acc.pages_recomputed,
             ttft_ms: Percentiles::from_samples(&self.acc.ttft),
             per_token_ms: Percentiles::from_samples(&self.acc.tpot),
         }
@@ -671,6 +893,11 @@ impl Engine {
     pub fn prefix_cache_enabled(&self) -> bool {
         self.prefix_cache
     }
+
+    /// Name of the active victim policy (None = FIFO, no preemption).
+    pub fn victim_policy(&self) -> Option<&'static str> {
+        self.sched.as_ref().map(|s| s.victim.name())
+    }
 }
 
 /// Typed builder for the serving engine: model + scheme by name from
@@ -691,6 +918,10 @@ pub struct EngineBuilder {
     /// None = backend default: on for sim, off for PJRT (whose
     /// suffix-only prefill is a documented approximation)
     prefix_cache: Option<bool>,
+    /// victim-policy registry name (None = FIFO, no preemption)
+    victim: Option<String>,
+    /// anti-starvation floor override (ms on the engine clock)
+    aging_ms: Option<f64>,
 }
 
 impl EngineBuilder {
@@ -706,6 +937,8 @@ impl EngineBuilder {
             kv_capacity: 64 << 20,
             ctx_limit: None,
             prefix_cache: None,
+            victim: None,
+            aging_ms: None,
         }
     }
 
@@ -793,12 +1026,44 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable SLO-tiered preemptive scheduling (sim backend) with a
+    /// victim policy from the `sched` registry (`"recompute"` |
+    /// `"swap"`).  Admission then orders the queue by effective
+    /// priority rank, and KV pressure from a higher tier evicts
+    /// low-priority in-flight decodes.
+    pub fn preempt(mut self, victim: &str) -> Self {
+        self.victim = Some(victim.to_string());
+        self
+    }
+
+    /// Anti-starvation floor for preemptive scheduling: a request
+    /// queued longer than this many engine-clock ms is promoted to top
+    /// effective rank (first in line, unpreemptible).  Default 1000
+    /// ms; `f64::INFINITY` disables aging.
+    pub fn aging_ms(mut self, ms: f64) -> Self {
+        self.aging_ms = Some(ms);
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let scheme_name = self.scheme.as_deref().unwrap_or("p3llm");
         let scheme = scheme::by_name(scheme_name)
             .ok_or_else(|| P3Error::UnknownScheme(scheme_name.into()))?;
+        if self.aging_ms.is_some() && self.victim.is_none() {
+            return Err(P3Error::InvalidConfig(
+                "aging_ms requires a victim policy (preempt(..))".into(),
+            ));
+        }
         match self.kind {
             BackendKind::Pjrt => {
+                if self.victim.is_some() {
+                    return Err(P3Error::InvalidConfig(
+                        "preemptive scheduling is a sim-backend knob \
+                         (the PJRT decode graphs cannot drop and \
+                         restore lanes mid-flight)"
+                            .into(),
+                    ));
+                }
                 if let Some(m) = self.model.as_deref() {
                     if !m.eq_ignore_ascii_case("tiny-1M") {
                         return Err(P3Error::InvalidConfig(format!(
@@ -874,14 +1139,40 @@ impl EngineBuilder {
                         model.name, model.max_ctx
                     )));
                 }
+                let sched = match &self.victim {
+                    Some(v) => {
+                        let victim = crate::sched::victim_by_name(v)
+                            .ok_or_else(|| {
+                                P3Error::InvalidConfig(format!(
+                                    "unknown victim policy {v:?} \
+                                     (recompute | swap)"
+                                ))
+                            })?;
+                        let aging_ms = self.aging_ms.unwrap_or(1_000.0);
+                        if !(aging_ms > 0.0) {
+                            return Err(P3Error::InvalidConfig(format!(
+                                "aging_ms must be > 0 (INFINITY disables \
+                                 aging), got {aging_ms}"
+                            )));
+                        }
+                        Some(SchedState {
+                            victim,
+                            aging_ms,
+                            hbm: accel.system.hbm.clone(),
+                        })
+                    }
+                    None => None,
+                };
                 let backend = SimBackend::new(accel, model, ctx_cap);
-                Engine::with_backend(
+                let mut eng = Engine::with_backend(
                     Box::new(backend),
                     self.max_batch,
                     self.kv_capacity,
                     Some(ctx_cap),
                     self.prefix_cache.unwrap_or(true),
-                )
+                )?;
+                eng.sched = sched;
+                Ok(eng)
             }
         }
     }
@@ -1125,6 +1416,168 @@ mod tests {
             Err(P3Error::InvalidConfig(_))
         ));
         assert!(EngineBuilder::backend("sim").is_ok());
+        // preemptive-scheduling knobs: sim-only, typed rejections
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").preempt("recompute").build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().preempt("lru").build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().aging_ms(50.0).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().preempt("swap").aging_ms(0.0).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().preempt("swap").aging_ms(f64::NAN).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        let eng = EngineBuilder::sim()
+            .preempt("swap")
+            .aging_ms(f64::INFINITY)
+            .build()
+            .unwrap();
+        assert_eq!(eng.victim_policy(), Some("swap"));
+        assert_eq!(
+            EngineBuilder::sim().build().unwrap().victim_policy(),
+            None
+        );
+    }
+
+    /// Engine sized for exactly two in-flight requests of the test
+    /// shape, with the given victim policy and an infinite aging floor
+    /// (so promotion never interferes with the preemption under test).
+    fn preempt_engine(victim: &str) -> Engine {
+        let model = crate::config::llm::TINY;
+        let layout = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: 128,
+        };
+        let per_req = layout.bytes_per_request();
+        EngineBuilder::sim()
+            .model("tiny-1M")
+            .ctx_limit(128)
+            .max_batch(4)
+            .kv_capacity(per_req * 2)
+            .preempt(victim)
+            .aging_ms(f64::INFINITY)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn interactive_kv_pressure_preempts_best_effort() {
+        for victim in ["recompute", "swap"] {
+            let mut eng = preempt_engine(victim);
+            // two best-effort requests fill the pool (each reserves
+            // ceil(110/16) = 7 of the 16 pages)
+            let p1: Vec<i32> = (0..80).map(|i| i % 97).collect();
+            let p2: Vec<i32> = (0..80).map(|i| (i + 40) % 89).collect();
+            let b1 = eng
+                .submit_class(p1, 30, crate::sched::SloClass::BestEffort)
+                .unwrap();
+            let b2 = eng
+                .submit_class(p2, 30, crate::sched::SloClass::BestEffort)
+                .unwrap();
+            for _ in 0..4 {
+                eng.step().unwrap();
+            }
+            assert_eq!(eng.active_lanes(), 2, "{victim}");
+            // an interactive arrival does not fit -> one victim pays
+            let p3: Vec<i32> = (0..80).map(|i| (i + 7) % 83).collect();
+            let i1 = eng
+                .submit_class(p3, 30, crate::sched::SloClass::Interactive)
+                .unwrap();
+            eng.step().unwrap();
+            let m_mid = eng.metrics();
+            assert_eq!(m_mid.preemptions, 1, "{victim}");
+            assert_eq!(
+                eng.request(i1).unwrap().state,
+                State::Decoding,
+                "{victim}: interactive admitted by eviction"
+            );
+            let m = eng.run_to_completion().unwrap();
+            // conservation: every request finishes with its full
+            // budget, nothing lost or duplicated across the eviction
+            assert_eq!(m.completed, 3, "{victim}");
+            for id in [b1, b2, i1] {
+                let st = eng.poll(id).unwrap();
+                assert!(st.finished, "{victim}");
+                assert_eq!(st.tokens_generated, 30, "{victim}");
+            }
+            assert_eq!(eng.request(i1).unwrap().preemptions, 0);
+            let victim_req = [b1, b2]
+                .iter()
+                .map(|id| eng.request(*id).unwrap())
+                .find(|r| r.preemptions > 0)
+                .expect("one best-effort request was evicted");
+            match victim {
+                "recompute" => {
+                    assert!(victim_req.pages_recomputed > 0);
+                    assert_eq!(m.pages_swapped, 0);
+                    assert_eq!(m.pages_recomputed, victim_req.pages_recomputed);
+                }
+                _ => {
+                    assert!(victim_req.pages_swapped > 0);
+                    assert_eq!(m.pages_recomputed, 0);
+                    assert_eq!(m.pages_swapped, victim_req.pages_swapped);
+                }
+            }
+            // pool fully released
+            assert_eq!(eng.kv_entries(), 0, "{victim}");
+            assert_eq!(eng.pool_used_bytes(), 0, "{victim}");
+        }
+    }
+
+    #[test]
+    fn aged_requests_are_unpreemptible() {
+        // tiny aging floor: by the time the interactive request
+        // arrives, the decoding best-effort requests have aged to
+        // rank 0 and cannot be evicted -- the newcomer waits (FIFO
+        // degradation) instead
+        let model = crate::config::llm::TINY;
+        let layout = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: 128,
+        };
+        let per_req = layout.bytes_per_request();
+        let mut eng = EngineBuilder::sim()
+            .model("tiny-1M")
+            .ctx_limit(128)
+            .max_batch(4)
+            .kv_capacity(per_req * 2)
+            .preempt("recompute")
+            .aging_ms(1e-6)
+            .build()
+            .unwrap();
+        let p1: Vec<i32> = (0..80).map(|i| i % 97).collect();
+        let p2: Vec<i32> = (0..80).map(|i| (i + 40) % 89).collect();
+        eng.submit_class(p1, 30, crate::sched::SloClass::BestEffort)
+            .unwrap();
+        eng.submit_class(p2, 30, crate::sched::SloClass::BestEffort)
+            .unwrap();
+        for _ in 0..4 {
+            eng.step().unwrap();
+        }
+        let p3: Vec<i32> = (0..80).map(|i| (i + 7) % 83).collect();
+        let i1 = eng
+            .submit_class(p3, 30, crate::sched::SloClass::Interactive)
+            .unwrap();
+        eng.step().unwrap();
+        assert_eq!(eng.metrics().preemptions, 0);
+        assert_eq!(eng.request(i1).unwrap().state, State::Queued);
+        let m = eng.run_to_completion().unwrap();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.preemptions, 0);
     }
 
     #[test]

@@ -30,6 +30,11 @@
 //!   with modeled KV handoff), reporting fleet goodput / utilization
 //!   skew / scaling efficiency ([`ClusterReport`]) -- see
 //!   `p3llm cluster`.
+//! * `sched` -- SLO-tiered preemptive scheduling: [`SloClass`]
+//!   priority tiers carried from the traffic layer into per-class
+//!   reports, and a pluggable [`VictimPolicy`] registry (recompute
+//!   vs priced KV swap) the engine uses to protect interactive
+//!   traffic under KV exhaustion -- see `p3llm overload`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
@@ -73,6 +78,7 @@ pub mod pcu;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod testutil;
 pub mod traffic;
@@ -84,6 +90,7 @@ pub use coordinator::{
     RequestId, RequestStatus,
 };
 pub use error::{P3Error, Result};
+pub use sched::{SloClass, TierMix, VictimPolicy};
 pub use traffic::{LoadReport, LoadRunner, LoadTarget, Scenario, SloSpec};
 
 pub fn version() -> &'static str {

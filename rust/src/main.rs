@@ -19,8 +19,9 @@ use p3llm::cluster::{
 use p3llm::config::llm;
 use p3llm::coordinator::{Engine, EngineBuilder, Metrics};
 use p3llm::error::{P3Error, Result};
-use p3llm::report::{f2, Table};
+use p3llm::report::{f2, f3, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
+use p3llm::sched::{victim_by_name, SloClass, TierMix};
 use p3llm::traffic::{
     self, ArrivalProcess, LoadReport, RequestMix, Scenario, SloSpec,
 };
@@ -52,6 +53,10 @@ commands:
              --scale F      stretch (>1) / intensify (<1) arrival gaps
              --trace FILE   replay arrival offsets (ms) from a TSV
              --no-prefix-cache   disable shared-prefix KV caching (A/B)
+             --tiers I/B/E   SLO-class shares (interactive/batch/
+                      best-effort, e.g. 50/30/20) sampled per request
+             --victim NAME   preemptive scheduling victim policy
+                      (recompute | swap); omits = FIFO, no preemption
              --list   show scenarios + mixes     --save  write TSV
              --smoke  CI gate: tiny scenarios incl. the prefix cache;
                       fails on zero goodput, zero hit rate, or a cache
@@ -66,9 +71,29 @@ commands:
              --scenario NAME[,NAME..]|all   (default chat-poisson)
              --system NAME --scheme NAME --seed N --requests N
              --scale F --save --no-prefix-cache
+             --tiers I/B/E --victim NAME    (as in loadtest: tiered
+                      arrivals + preemptive replicas)
              --list   show routing policies
              --smoke  CI gate: 2 replicas, tiny model, JSQ; fails on
                       zero fleet goodput
+  overload   tiered overload degradation: pin offered load to a
+             multiple of the modeled saturation throughput and sweep
+             it past 1.0 with SLO classes + preemptive scheduling;
+             reports per-tier goodput / attainment / TTFT curves
+             against a FIFO baseline
+             --scenario NAME (default flash-crowd; --smoke uses
+                      smoke-overload)   --system NAME --scheme NAME
+             --seed N --requests N
+             --victim NAME[,NAME..]  (default recompute)
+             --load F[,F..]   offered/saturation factors (default 1,2)
+             --tiers I/B/E    override the scenario's tier mix
+             --save   write overload.tsv + BENCH_overload.json
+             --smoke  CI gate: bit-identical two-run diff; at 2x
+                      saturation the preemptive engines lose zero
+                      requests, preempt at least once, and hold
+                      interactive attainment >= 0.9 against a
+                      calibrated TTFT budget the FIFO baseline
+                      strictly misses
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -82,6 +107,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("loadtest") => cmd_loadtest(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("overload") => cmd_overload(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -186,6 +212,75 @@ fn print_load_report(r: &LoadReport) {
             r.prefill_tokens_saved
         );
     }
+    if r.preemptions > 0 {
+        println!(
+            "preemptions: {} ({} pages swapped, {} recomputed)",
+            r.preemptions, r.pages_swapped, r.pages_recomputed
+        );
+    }
+}
+
+/// Headers for the per-SLO-class breakdown tables (`loadtest`,
+/// `cluster`, `overload`): one row per tier present in a run.
+const TIER_HEADERS: [&str; 13] = [
+    "scenario",
+    "config",
+    "tier",
+    "done",
+    "SLO %",
+    "goodput req/s",
+    "TTFT p50",
+    "TTFT p99",
+    "TPOT p50",
+    "TPOT p99",
+    "preempt",
+    "swapped",
+    "recomputed",
+];
+
+/// Append one row per SLO class of `r` (no-op for single-tier runs,
+/// whose `per_class` is empty).  Each tier is judged against the base
+/// SLO scaled by its `slo_factor`.
+fn tier_rows(t: &mut Table, scenario: &str, config: &str, r: &LoadReport) {
+    for (class, cr) in &r.per_class {
+        t.row(vec![
+            scenario.into(),
+            config.into(),
+            class.name().into(),
+            format!("{}/{}", cr.completed, cr.offered),
+            f2(cr.slo_attainment * 100.0),
+            f2(cr.goodput_req_s),
+            f2(cr.ttft_ms.p50),
+            f2(cr.ttft_ms.p99),
+            f3(cr.tpot_ms.p50),
+            f3(cr.tpot_ms.p99),
+            cr.preemptions.to_string(),
+            cr.pages_swapped.to_string(),
+            cr.pages_recomputed.to_string(),
+        ]);
+    }
+}
+
+/// Apply the shared `--tiers I/B/E` and `--victim NAME` overrides.
+/// Both parse strictly into typed [`P3Error::InvalidFlag`] errors.
+fn apply_tier_flags(args: &Args, scenarios: &mut [Scenario]) -> Result<()> {
+    if let Some(spec) = args.get("tiers") {
+        let mix = TierMix::parse(spec)?;
+        for s in scenarios.iter_mut() {
+            s.tiers = Some(mix);
+        }
+    }
+    if let Some(v) = args.get("victim") {
+        let policy =
+            victim_by_name(v).ok_or_else(|| P3Error::InvalidFlag {
+                flag: "victim".into(),
+                value: v.into(),
+            })?;
+        for s in scenarios.iter_mut() {
+            s.victim = Some(policy.name());
+        }
+    }
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -338,6 +433,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ctx_limit: ctx.min(model.max_ctx).max(64),
         kv_slots: bs.max(1) + 2,
         prefix_cache: !args.has("no-prefix-cache"),
+        tiers: None,
+        victim: None,
     };
     let mut engine = sc.engine(system, None)?;
     println!(
@@ -473,6 +570,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     for s in &mut scenarios {
         s.arrival = s.arrival.scaled(scale)?;
     }
+    apply_tier_flags(args, &mut scenarios)?;
     let default_systems =
         if smoke { "NPU,P3-LLM" } else { "NPU,HBM-PIM,Ecco,P3-LLM" };
     let sys_sel = args.get_or("system", default_systems);
@@ -503,6 +601,10 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             "hit %",
             "saved tok",
         ],
+    );
+    let mut tiers_t = Table::new(
+        "per-tier breakdown (SLO budget x tier slo_factor)",
+        &TIER_HEADERS,
     );
     for sc in &scenarios {
         for sys in &systems {
@@ -565,13 +667,23 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 f2(r.prefix_hit_rate * 100.0),
                 r.prefill_tokens_saved.to_string(),
             ]);
+            tier_rows(&mut tiers_t, sc.name, sys, r);
         }
     }
     t.print();
+    if !tiers_t.rows.is_empty() {
+        tiers_t.print();
+    }
     if args.has("save") {
         let dir = p3llm::benchkit::reports_dir();
         t.save(&dir, "loadtest").map_err(|e| P3Error::io(&dir, e))?;
         println!("saved {}", dir.join("loadtest.tsv").display());
+        if !tiers_t.rows.is_empty() {
+            tiers_t
+                .save(&dir, "loadtest_tiers")
+                .map_err(|e| P3Error::io(&dir, e))?;
+            println!("saved {}", dir.join("loadtest_tiers.tsv").display());
+        }
     }
     Ok(())
 }
@@ -597,11 +709,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let scheme = args.get("scheme");
     let scale = args.get_f64("scale", 1.0)?;
 
-    let scenarios: Vec<Scenario> =
+    let mut scenarios: Vec<Scenario> =
         select_scenarios(args, if smoke { "smoke" } else { "chat-poisson" })?
             .into_iter()
             .map(|s| s.with_scale(scale))
             .collect::<Result<_>>()?;
+    apply_tier_flags(args, &mut scenarios)?;
 
     let mut replica_counts = vec![];
     for tok in args.get_list("replicas", if smoke { "2" } else { "1,2,4" }) {
@@ -649,6 +762,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             "scale-eff %",
         ],
     );
+    let mut tiers_t = Table::new(
+        "per-tier fleet breakdown (SLO budget x tier slo_factor)",
+        &TIER_HEADERS,
+    );
     for sc in &scenarios {
         let sat = sc.saturation_tok_s(system);
         for pol in &policies {
@@ -689,14 +806,310 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                         .map(|e| f2(e * 100.0))
                         .unwrap_or_else(|| "-".into()),
                 ]);
+                tier_rows(
+                    &mut tiers_t,
+                    sc.name,
+                    &format!("{pol} x{n}"),
+                    &rep.fleet,
+                );
             }
         }
     }
     t.print();
+    if !tiers_t.rows.is_empty() {
+        tiers_t.print();
+    }
     if args.has("save") {
         let dir = p3llm::benchkit::reports_dir();
         t.save(&dir, "cluster").map_err(|e| P3Error::io(&dir, e))?;
         println!("saved {}", dir.join("cluster.tsv").display());
+        if !tiers_t.rows.is_empty() {
+            tiers_t
+                .save(&dir, "cluster_tiers")
+                .map_err(|e| P3Error::io(&dir, e))?;
+            println!("saved {}", dir.join("cluster_tiers.tsv").display());
+        }
+    }
+    Ok(())
+}
+
+/// One curve point of the overload sweep as a hand-rolled JSON object
+/// (`BENCH_overload.json` carries no serde dependency).
+fn curve_json(victim: &str, load: f64, r: &LoadReport) -> String {
+    let mut tiers = String::new();
+    for (i, (class, cr)) in r.per_class.iter().enumerate() {
+        if i > 0 {
+            tiers.push(',');
+        }
+        tiers.push_str(&format!(
+            "{{\"tier\":\"{}\",\"goodput_req_s\":{:.6},\
+             \"attainment\":{:.6},\"ttft_p99_ms\":{:.6}}}",
+            class.name(),
+            cr.goodput_req_s,
+            cr.slo_attainment,
+            cr.ttft_ms.p99
+        ));
+    }
+    format!(
+        "{{\"victim\":\"{victim}\",\"load\":{load},\"offered\":{},\
+         \"completed\":{},\"preemptions\":{},\"pages_swapped\":{},\
+         \"pages_recomputed\":{},\"goodput_tok_s\":{:.6},\
+         \"attainment\":{:.6},\"tiers\":[{tiers}]}}",
+        r.offered,
+        r.completed,
+        r.preemptions,
+        r.pages_swapped,
+        r.pages_recomputed,
+        r.goodput_tok_s,
+        r.slo_attainment
+    )
+}
+
+/// The interactive-tier sub-report of a tiered run, if present.
+fn interactive_report(r: &LoadReport) -> Option<&LoadReport> {
+    r.per_class
+        .iter()
+        .find(|(c, _)| *c == SloClass::Interactive)
+        .map(|(_, cr)| cr)
+}
+
+/// Sweep offered load past the modeled saturation point with SLO
+/// classes and preemptive scheduling.  Load factors are
+/// offered/saturation ratios (`Scenario::with_load_factor`), so "2x"
+/// means the same thing on every system; each victim policy is swept
+/// next to a FIFO baseline (same tiers, no preemption).
+fn cmd_overload(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM").to_string();
+    let scheme = args.get("scheme");
+    let default_sc = if smoke { "smoke-overload" } else { "flash-crowd" };
+    let name = args.get_or("scenario", default_sc);
+    let mut sc = traffic::scenario_by_name(name).ok_or_else(|| {
+        P3Error::InvalidConfig(format!(
+            "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+        ))
+    })?;
+    if args.get("requests").is_some() {
+        sc.n_requests = args.get_usize("requests", 1)?.max(1);
+    }
+    if let Some(spec) = args.get("tiers") {
+        sc.tiers = Some(TierMix::parse(spec)?);
+    }
+    if sc.tiers.is_none() {
+        // overload degradation is only meaningful with mixed tiers
+        sc.tiers = Some(TierMix::mixed());
+    }
+    let mut victims: Vec<&'static str> = vec![];
+    for v in args.get_list("victim", "recompute") {
+        let p = victim_by_name(&v).ok_or_else(|| P3Error::InvalidFlag {
+            flag: "victim".into(),
+            value: v.clone(),
+        })?;
+        if !victims.contains(&p.name()) {
+            victims.push(p.name());
+        }
+    }
+    if victims.is_empty() {
+        victims.push("recompute");
+    }
+    let mut loads: Vec<f64> = vec![];
+    for tok in args.get_list("load", if smoke { "2" } else { "1,2" }) {
+        let f = tok
+            .parse::<f64>()
+            .ok()
+            .filter(|f| f.is_finite() && *f > 0.0)
+            .ok_or_else(|| P3Error::InvalidFlag {
+                flag: "load".into(),
+                value: tok.clone(),
+            })?;
+        loads.push(f);
+    }
+    if loads.is_empty() {
+        loads = if smoke { vec![2.0] } else { vec![1.0, 2.0] };
+    }
+
+    // one point: pin offered load to `load` x saturation, set the
+    // victim policy (None = FIFO baseline), optionally re-judge the
+    // records against an override SLO (the smoke gate's calibrated
+    // budget)
+    let run_one = |victim: Option<&'static str>,
+                   load: f64,
+                   slo: Option<SloSpec>|
+     -> Result<LoadReport> {
+        let mut s = sc.clone().with_load_factor(&system, load, seed)?;
+        s.victim = victim;
+        let mut engine = s.engine(&system, scheme)?;
+        let mut plan = s.runner(seed);
+        if let Some(slo) = slo {
+            plan.slo = slo;
+        }
+        let out = plan
+            .run_with_saturation(&mut engine, s.saturation_tok_s(&system))?;
+        Ok(out.report)
+    };
+
+    let mut t = Table::new(
+        format!(
+            "overload: {} on {system}, seed {seed} \
+             (load = offered/saturation)",
+            sc.name
+        ),
+        &[
+            "victim",
+            "load",
+            "done",
+            "SLO %",
+            "goodput tok/s",
+            "p99 TTFT ms",
+            "preempt",
+            "swapped",
+            "recomputed",
+        ],
+    );
+    let mut tiers_t = Table::new(
+        "per-tier breakdown (SLO budget x tier slo_factor)",
+        &TIER_HEADERS,
+    );
+    let mut curves = String::new();
+    for &load in &loads {
+        for victim in victims.iter().map(|v| Some(*v)).chain([None]) {
+            let label = victim.unwrap_or("fifo");
+            let r = run_one(victim, load, None)?;
+            if smoke && r.completed < r.offered {
+                return Err(P3Error::Serve(format!(
+                    "overload smoke gate: {label} at {load}x lost \
+                     requests ({}/{} completed)",
+                    r.completed, r.offered
+                )));
+            }
+            t.row(vec![
+                label.into(),
+                format!("{load}x"),
+                format!("{}/{}", r.completed, r.offered),
+                f2(r.slo_attainment * 100.0),
+                f2(r.goodput_tok_s),
+                f2(r.ttft_ms.p99),
+                r.preemptions.to_string(),
+                r.pages_swapped.to_string(),
+                r.pages_recomputed.to_string(),
+            ]);
+            tier_rows(&mut tiers_t, sc.name, &format!("{label}@{load}x"), &r);
+            if !curves.is_empty() {
+                curves.push(',');
+            }
+            curves.push_str(&curve_json(label, load, &r));
+        }
+    }
+    t.print();
+    if !tiers_t.rows.is_empty() {
+        tiers_t.print();
+    }
+
+    if smoke {
+        // (a) determinism: an identical in-process re-sweep must agree
+        // bit-for-bit (ci.sh additionally diffs two full process runs)
+        let mut curves2 = String::new();
+        for &load in &loads {
+            for victim in victims.iter().map(|v| Some(*v)).chain([None]) {
+                let r = run_one(victim, load, None)?;
+                if !curves2.is_empty() {
+                    curves2.push(',');
+                }
+                curves2.push_str(&curve_json(victim.unwrap_or("fifo"), load, &r));
+            }
+        }
+        if curves2 != curves {
+            return Err(P3Error::Serve(
+                "overload smoke gate: two identical sweeps disagreed \
+                 (nondeterminism)"
+                    .into(),
+            ));
+        }
+        // (b) the absolute SLO budget is meaningless for the tiny CI
+        // model, so calibrate one: interactive p95 TTFT at 0.1x
+        // saturation under FIFO, with 8x headroom
+        let calib = run_one(None, 0.1, None)?;
+        let t_base = interactive_report(&calib)
+            .map(|c| c.ttft_ms.p95)
+            .unwrap_or(calib.ttft_ms.p95);
+        if !(t_base > 0.0) {
+            return Err(P3Error::Serve(
+                "overload smoke gate: calibration run produced no \
+                 interactive TTFT"
+                    .into(),
+            ));
+        }
+        let budget =
+            SloSpec { ttft_ms: 8.0 * t_base, tpot_ms: f64::INFINITY };
+        // (c) at the heaviest load (2x saturation by default) every
+        // preemptive engine must lose nothing, preempt at least once,
+        // and hold interactive attainment >= 0.9 under the calibrated
+        // budget; the FIFO baseline must lose nothing either but
+        // strictly miss every preemptive engine's attainment
+        let heavy = loads.iter().cloned().fold(f64::MIN, f64::max);
+        let att_of = |r: &LoadReport, label: &str| -> Result<f64> {
+            if r.completed < r.offered {
+                return Err(P3Error::Serve(format!(
+                    "overload smoke gate: {label} at {heavy}x lost \
+                     requests ({}/{} completed)",
+                    r.completed, r.offered
+                )));
+            }
+            interactive_report(r).map(|c| c.slo_attainment).ok_or_else(
+                || {
+                    P3Error::Serve(format!(
+                        "overload smoke gate: {label} run carried no \
+                         interactive tier"
+                    ))
+                },
+            )
+        };
+        let fifo = run_one(None, heavy, Some(budget))?;
+        let fifo_att = att_of(&fifo, "fifo")?;
+        for &v in &victims {
+            let r = run_one(Some(v), heavy, Some(budget))?;
+            let att = att_of(&r, v)?;
+            if r.preemptions == 0 {
+                return Err(P3Error::Serve(format!(
+                    "overload smoke gate: {v} at {heavy}x never \
+                     preempted"
+                )));
+            }
+            if att < 0.9 || att <= fifo_att {
+                return Err(P3Error::Serve(format!(
+                    "overload smoke gate: {v} at {heavy}x interactive \
+                     attainment {:.3} (need >= 0.9 and > FIFO's {:.3})",
+                    att, fifo_att
+                )));
+            }
+            println!(
+                "smoke gate: {v} at {heavy}x: interactive attainment \
+                 {:.3} vs FIFO {:.3} (budget {:.3} ms), {} preemptions",
+                att, fifo_att, budget.ttft_ms, r.preemptions
+            );
+        }
+    }
+
+    if args.has("save") {
+        let dir = p3llm::benchkit::reports_dir();
+        t.save(&dir, "overload").map_err(|e| P3Error::io(&dir, e))?;
+        println!("saved {}", dir.join("overload.tsv").display());
+        if !tiers_t.rows.is_empty() {
+            tiers_t
+                .save(&dir, "overload_tiers")
+                .map_err(|e| P3Error::io(&dir, e))?;
+            println!("saved {}", dir.join("overload_tiers.tsv").display());
+        }
+        let json = format!(
+            "{{\"bench\":\"overload\",\"scenario\":\"{}\",\
+             \"system\":\"{system}\",\"seed\":{seed},\
+             \"curves\":[{curves}]}}\n",
+            sc.name
+        );
+        let path = dir.join("BENCH_overload.json");
+        std::fs::write(&path, json).map_err(|e| P3Error::io(&path, e))?;
+        println!("saved {}", path.display());
     }
     Ok(())
 }

@@ -1,0 +1,223 @@
+//! SLO classes (priority tiers) and per-request tier mixes.
+//!
+//! Past saturation a serving fleet cannot meet every tenant's SLO at
+//! once; the scheduler needs to know *whose* budget to protect.  An
+//! [`SloClass`] is that signal: attached at the traffic layer, carried
+//! through `Request` / `ReqRecord`, read by the coordinator's
+//! admission ordering and victim selection, and reported per tier in
+//! `LoadReport` breakdowns.
+
+use crate::error::{P3Error, Result};
+use crate::testutil::Rng;
+
+/// Request priority tier.  The variant order *is* the priority order
+/// (`rank`): `Interactive` outranks `Batch` outranks `BestEffort`, so
+/// the derived `Ord` sorts highest priority first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Human-facing latency (chat, completion): the tier whose SLO the
+    /// preemptive scheduler protects under overload.
+    Interactive,
+    /// Deadline-tolerant throughput work (summarization, evals).
+    Batch,
+    /// Scavenger traffic: absorbs the loss when capacity runs out,
+    /// shielded from outright starvation only by the aging floor.
+    BestEffort,
+}
+
+impl SloClass {
+    /// Priority rank: 0 is highest.  Admission orders ascending by
+    /// rank; victims are picked descending (lowest tier first).
+    pub fn rank(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Registry name (`--tiers` breakdown labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// How much a tier's latency budget widens relative to the
+    /// scenario's base [`SloSpec`](crate::traffic::SloSpec): the
+    /// interactive tier is judged against the base budget, lower tiers
+    /// against proportionally looser ones (a best-effort request is
+    /// not "missing" a chatbot TTFT it never bought).
+    pub fn slo_factor(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 1.0,
+            SloClass::Batch => 4.0,
+            SloClass::BestEffort => 16.0,
+        }
+    }
+
+    /// Every tier, highest priority first.
+    pub fn all() -> [SloClass; 3] {
+        [SloClass::Interactive, SloClass::Batch, SloClass::BestEffort]
+    }
+
+    /// Case-insensitive lookup (accepts short spellings).
+    pub fn by_name(name: &str) -> Option<SloClass> {
+        match name.to_ascii_lowercase().as_str() {
+            "interactive" | "int" | "i" => Some(SloClass::Interactive),
+            "batch" | "b" => Some(SloClass::Batch),
+            "best-effort" | "besteffort" | "be" | "e" => {
+                Some(SloClass::BestEffort)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SloClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Relative tier weights a traffic scenario draws per-request classes
+/// from (`--tiers I/B/E`, e.g. `50/30/20`).  Weights need not sum to
+/// one; they are normalized at sampling time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierMix {
+    pub interactive: f64,
+    pub batch: f64,
+    pub best_effort: f64,
+}
+
+impl TierMix {
+    /// The mixed-tenant default the overload scenarios use: half
+    /// interactive over a batch + best-effort base.
+    pub fn mixed() -> Self {
+        TierMix { interactive: 0.5, batch: 0.3, best_effort: 0.2 }
+    }
+
+    /// Strict typed parse of an `I/B/E` weight spec ("50/30/20"):
+    /// exactly three `/`-separated weights, each finite and `>= 0`,
+    /// summing to something positive.  Anything else is a typed
+    /// [`P3Error::InvalidFlag`] on `--tiers`.
+    pub fn parse(spec: &str) -> Result<TierMix> {
+        let bad = || P3Error::InvalidFlag {
+            flag: "tiers".into(),
+            value: spec.into(),
+        };
+        let parts: Vec<f64> = spec
+            .split('/')
+            .map(|p| p.trim().parse::<f64>().map_err(|_| bad()))
+            .collect::<Result<_>>()?;
+        if parts.len() != 3
+            || parts.iter().any(|w| !w.is_finite() || *w < 0.0)
+            || parts.iter().sum::<f64>() <= 0.0
+        {
+            return Err(bad());
+        }
+        Ok(TierMix {
+            interactive: parts[0],
+            batch: parts[1],
+            best_effort: parts[2],
+        })
+    }
+
+    /// Normalized share of one tier.
+    pub fn share(&self, class: SloClass) -> f64 {
+        let total = self.interactive + self.batch + self.best_effort;
+        let w = match class {
+            SloClass::Interactive => self.interactive,
+            SloClass::Batch => self.batch,
+            SloClass::BestEffort => self.best_effort,
+        };
+        if total > 0.0 {
+            w / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Draw one class by weight (deterministic in the rng stream).
+    pub fn sample(&self, rng: &mut Rng) -> SloClass {
+        let total = self.interactive + self.batch + self.best_effort;
+        let mut u = rng.f64() * total;
+        for c in SloClass::all() {
+            let w = match c {
+                SloClass::Interactive => self.interactive,
+                SloClass::Batch => self.batch,
+                SloClass::BestEffort => self.best_effort,
+            };
+            u -= w;
+            if u <= 0.0 {
+                return c;
+            }
+        }
+        SloClass::BestEffort
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_order_priority_and_names_round_trip() {
+        assert!(SloClass::Interactive < SloClass::Batch);
+        assert!(SloClass::Batch < SloClass::BestEffort);
+        for c in SloClass::all() {
+            assert_eq!(SloClass::by_name(c.name()), Some(c));
+            assert_eq!(c.rank() as usize, SloClass::all().iter().position(|x| *x == c).unwrap());
+        }
+        assert_eq!(SloClass::by_name("BE"), Some(SloClass::BestEffort));
+        assert!(SloClass::by_name("platinum").is_none());
+        // widening is monotone in rank: lower tiers get looser budgets
+        assert!(SloClass::Interactive.slo_factor() == 1.0);
+        assert!(SloClass::Batch.slo_factor() > 1.0);
+        assert!(SloClass::BestEffort.slo_factor() > SloClass::Batch.slo_factor());
+    }
+
+    #[test]
+    fn tier_mix_parse_is_strict_and_typed() {
+        let m = TierMix::parse("50/30/20").unwrap();
+        assert!((m.share(SloClass::Interactive) - 0.5).abs() < 1e-12);
+        assert!((m.share(SloClass::BestEffort) - 0.2).abs() < 1e-12);
+        // weights normalize, so scaled specs are equivalent shares
+        let m2 = TierMix::parse("5/3/2").unwrap();
+        for c in SloClass::all() {
+            assert!((m.share(c) - m2.share(c)).abs() < 1e-12);
+        }
+        for bad in ["", "1/2", "1/2/3/4", "a/1/1", "1/-2/1", "0/0/0", "nan/1/1", "inf/1/1"] {
+            match TierMix::parse(bad) {
+                Err(P3Error::InvalidFlag { flag, value }) => {
+                    assert_eq!(flag, "tiers");
+                    assert_eq!(value, bad);
+                }
+                other => panic!("{bad:?}: expected InvalidFlag, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_tracks_shares_and_is_deterministic() {
+        let m = TierMix::mixed();
+        let draw = |seed| {
+            let mut r = Rng::new(seed);
+            (0..2000).map(|_| m.sample(&mut r)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(3), draw(3));
+        let xs = draw(3);
+        let frac = |c| {
+            xs.iter().filter(|&&x| x == c).count() as f64 / xs.len() as f64
+        };
+        assert!((frac(SloClass::Interactive) - 0.5).abs() < 0.05);
+        assert!((frac(SloClass::Batch) - 0.3).abs() < 0.05);
+        assert!((frac(SloClass::BestEffort) - 0.2).abs() < 0.05);
+        // degenerate single-tier mix draws only that tier
+        let solo = TierMix { interactive: 0.0, batch: 0.0, best_effort: 1.0 };
+        let mut r = Rng::new(1);
+        assert!((0..64).all(|_| solo.sample(&mut r) == SloClass::BestEffort));
+    }
+}

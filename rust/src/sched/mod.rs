@@ -1,0 +1,39 @@
+//! SLO-tiered preemptive scheduling: priority classes, tier mixes,
+//! and KV victim policies.
+//!
+//! Past saturation a FIFO batcher degrades every tenant at once; this
+//! layer gives the coordinator the two levers graceful degradation
+//! needs:
+//!
+//! * [`SloClass`] / [`TierMix`] -- per-request priority tiers attached
+//!   at the traffic layer and carried through `Request` / `ReqRecord`
+//!   into per-class `LoadReport` breakdowns.
+//! * [`VictimPolicy`] -- under `KvExhausted` pressure from a higher
+//!   tier, the engine evicts a low-priority in-flight decode.
+//!   [`RecomputeVictim`] drops its pages and requeues it for
+//!   re-prefill (cheap when the shared-prefix cache is warm);
+//!   [`SwapVictim`] migrates them to a modeled slow tier priced by
+//!   [`swap_restore_ms`] and restores on resume.
+//!
+//! An aging floor keeps preemption from starving the bottom tier: a
+//! request queued past the engine's aging window is promoted to
+//! top effective rank, which makes it both first in line and
+//! unpreemptable.
+//!
+//! ```
+//! use p3llm::sched::{SloClass, TierMix, victim_by_name};
+//!
+//! let mix = TierMix::parse("50/30/20").unwrap();
+//! assert!(mix.share(SloClass::Interactive) > mix.share(SloClass::BestEffort));
+//! let policy = victim_by_name("swap").unwrap();
+//! assert_eq!(policy.name(), "swap");
+//! ```
+
+mod class;
+mod victim;
+
+pub use class::{SloClass, TierMix};
+pub use victim::{
+    all_victim_names, swap_restore_ms, victim_by_name, victim_desc,
+    RecomputeVictim, SwapVictim, VictimCandidate, VictimMode, VictimPolicy,
+};

@@ -1,0 +1,232 @@
+//! Victim selection for preemptive KV admission.
+//!
+//! When a higher tier hits `KvExhausted` pressure, the coordinator
+//! frees pages by evicting a low-priority in-flight decode.  *Which*
+//! victim, and *what happens to its KV*, is the policy:
+//!
+//! * **recompute** -- drop the victim's pages and requeue it for
+//!   re-prefill.  Free is instant; the cost is repaying the prefill,
+//!   which is cheap when the shared-prefix cache still holds the
+//!   victim's registered prompt pages.
+//! * **swap** -- migrate the victim's pages to a modeled slow tier and
+//!   restore them on resume, priced as an explicit `sim::dram`
+//!   event-model transfer (the same stream-vs-bus pipeline model the
+//!   cluster layer uses for inter-replica KV handoffs).
+
+use crate::config::accel::HbmTiming;
+use crate::config::llm::LlmConfig;
+use crate::sched::SloClass;
+use crate::sim::{dram, npu};
+use std::cmp::Reverse;
+
+/// What a policy does with the victim's KV pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimMode {
+    /// Drop pages; the victim re-prefills its full context on resume.
+    Recompute,
+    /// Migrate pages to the slow tier; resume pays a modeled restore
+    /// transfer instead of recompute.
+    Swap,
+}
+
+/// One preemptible in-flight decode, as the selector sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VictimCandidate {
+    pub rid: u64,
+    pub class: SloClass,
+    /// Effective priority rank (aging may have promoted the request
+    /// above its nominal class).
+    pub rank: u8,
+    /// Tokens generated so far (progress that recompute repays).
+    pub generated: usize,
+    /// KV pages the victim currently occupies (what eviction frees).
+    pub kv_pages: usize,
+}
+
+/// Pluggable victim selection strategy.
+pub trait VictimPolicy {
+    fn name(&self) -> &'static str;
+    fn mode(&self) -> VictimMode;
+    /// Pick the index of the candidate to evict, or `None` to refuse.
+    /// Candidates are pre-filtered to ranks strictly below the
+    /// newcomer's, so any choice is priority-correct; the policy only
+    /// decides *which* low-tier request pays.
+    fn select(&self, candidates: &[VictimCandidate]) -> Option<usize>;
+}
+
+/// Evict the lowest tier with the least progress: re-prefilling a
+/// request that has barely decoded repays almost nothing beyond its
+/// (often prefix-cached) prompt.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecomputeVictim;
+
+impl VictimPolicy for RecomputeVictim {
+    fn name(&self) -> &'static str {
+        "recompute"
+    }
+
+    fn mode(&self) -> VictimMode {
+        VictimMode::Recompute
+    }
+
+    fn select(&self, candidates: &[VictimCandidate]) -> Option<usize> {
+        (0..candidates.len()).max_by_key(|&i| {
+            let c = &candidates[i];
+            (c.rank, Reverse(c.generated), c.rid)
+        })
+    }
+}
+
+/// Evict the lowest tier with the largest KV footprint: each swap
+/// costs one modeled transfer regardless of how much it frees, so
+/// taking the biggest resident maximizes pages freed per eviction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapVictim;
+
+impl VictimPolicy for SwapVictim {
+    fn name(&self) -> &'static str {
+        "swap"
+    }
+
+    fn mode(&self) -> VictimMode {
+        VictimMode::Swap
+    }
+
+    fn select(&self, candidates: &[VictimCandidate]) -> Option<usize> {
+        (0..candidates.len()).max_by_key(|&i| {
+            let c = &candidates[i];
+            (c.rank, c.kv_pages, c.rid)
+        })
+    }
+}
+
+/// Modeled one-way swap transfer time for `tokens` of packed KV: the
+/// cache streams through the stack's DRAM (event-level `sim::dram`
+/// read pass) and crosses the external bus to the slow tier; the
+/// stages pipeline, so the slower one prices the hop.  Same formula as
+/// `Cluster::kv_transfer_ms` -- a swap restore and an inter-replica
+/// handoff move identical bytes over identical links.
+pub fn swap_restore_ms(
+    hbm: &HbmTiming,
+    model: &LlmConfig,
+    tokens: usize,
+) -> f64 {
+    let bytes =
+        (2 * model.layers * tokens.max(1) * (model.kv_dim() / 2)) as f64;
+    let stream_ns = dram::gemv_pass_ns(hbm, bytes);
+    let bus_ns = npu::transfer(hbm, bytes).ns;
+    stream_ns.max(bus_ns) / 1e6
+}
+
+/// Registry names, canonical order (`--victim` accepts these).
+pub fn all_victim_names() -> Vec<&'static str> {
+    vec!["recompute", "swap"]
+}
+
+/// One-line description for `--list`-style output.
+pub fn victim_desc(name: &str) -> &'static str {
+    match name {
+        "recompute" => "drop victim pages, re-prefill on resume (cheap with warm prefix cache)",
+        "swap" => "migrate pages to a modeled slow tier, priced restore on resume",
+        _ => "",
+    }
+}
+
+/// Case-insensitive lookup (accepts short spellings).
+pub fn victim_by_name(name: &str) -> Option<Box<dyn VictimPolicy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "recompute" | "redo" | "rc" => Some(Box::new(RecomputeVictim)),
+        "swap" | "sw" => Some(Box::new(SwapVictim)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel::HbmTiming;
+    use crate::config::llm;
+
+    fn cand(
+        rid: u64,
+        class: SloClass,
+        generated: usize,
+        kv_pages: usize,
+    ) -> VictimCandidate {
+        VictimCandidate { rid, class, rank: class.rank(), generated, kv_pages }
+    }
+
+    #[test]
+    fn registry_round_trips_and_rejects_unknown() {
+        for name in all_victim_names() {
+            let p = victim_by_name(name).expect(name);
+            assert_eq!(p.name(), name);
+            assert!(!victim_desc(name).is_empty());
+        }
+        assert_eq!(victim_by_name("SWAP").unwrap().mode(), VictimMode::Swap);
+        assert_eq!(
+            victim_by_name("redo").unwrap().mode(),
+            VictimMode::Recompute
+        );
+        assert!(victim_by_name("lru").is_none());
+    }
+
+    #[test]
+    fn recompute_picks_lowest_tier_least_progress() {
+        let p = RecomputeVictim;
+        let cands = vec![
+            cand(1, SloClass::Batch, 2, 8),
+            cand(2, SloClass::BestEffort, 9, 2),
+            cand(3, SloClass::BestEffort, 3, 6),
+        ];
+        // lowest tier wins over less progress at a higher tier, and
+        // within the tier the least-progressed request pays
+        assert_eq!(p.select(&cands), Some(2));
+        assert_eq!(p.select(&[]), None);
+        // deterministic tie-break on rid
+        let tied = vec![
+            cand(7, SloClass::Batch, 5, 1),
+            cand(4, SloClass::Batch, 5, 9),
+        ];
+        assert_eq!(p.select(&tied), Some(0));
+    }
+
+    #[test]
+    fn swap_picks_lowest_tier_biggest_footprint() {
+        let p = SwapVictim;
+        let cands = vec![
+            cand(1, SloClass::BestEffort, 0, 3),
+            cand(2, SloClass::BestEffort, 12, 7),
+            cand(3, SloClass::Batch, 0, 20),
+        ];
+        assert_eq!(p.select(&cands), Some(1));
+        // aging promotion flows through rank, not class: a promoted
+        // best-effort request stops being the preferred victim
+        let aged = vec![
+            VictimCandidate {
+                rank: 0,
+                ..cand(1, SloClass::BestEffort, 0, 30)
+            },
+            cand(2, SloClass::Batch, 0, 1),
+        ];
+        assert_eq!(p.select(&aged), Some(1));
+    }
+
+    #[test]
+    fn swap_pricing_scales_with_tokens_and_model() {
+        let hbm = HbmTiming::default();
+        let tiny = llm::TINY.clone();
+        let big = llm::LLAMA2_7B.clone();
+        let t64 = swap_restore_ms(&hbm, &tiny, 64);
+        let t512 = swap_restore_ms(&hbm, &tiny, 512);
+        assert!(t64 > 0.0 && t64.is_finite());
+        assert!(t512 > t64, "{t512} vs {t64}");
+        // zero tokens still prices a minimal transfer (never free)
+        assert!(swap_restore_ms(&hbm, &tiny, 0) > 0.0);
+        // a 7B KV footprint costs far more than the tiny model's
+        assert!(
+            swap_restore_ms(&hbm, &big, 64) > 10.0 * t64,
+            "model scaling"
+        );
+    }
+}

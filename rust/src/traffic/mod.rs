@@ -22,7 +22,13 @@
 //! * [`Scenario`] -- the named registry behind `p3llm loadtest`
 //!   (`chat-poisson`, `chat-burst`, `summarize-steady`,
 //!   `code-complete`, `rag-long`, `agent-pool`, `rag-cached`,
-//!   `smoke`, `smoke-prefix`).
+//!   `smoke`, `smoke-prefix`).  Overload scenarios (`flash-crowd`,
+//!   `starve-probe`, `smoke-overload`) additionally carry a
+//!   [`TierMix`](crate::sched::TierMix) of SLO classes and a victim
+//!   policy, and [`Scenario::with_load_factor`] pins the offered
+//!   token rate to a multiple of the modeled saturation throughput
+//!   for goodput-vs-load sweeps (`p3llm overload`,
+//!   `benches/overload_degradation.rs`).
 //!
 //! ```
 //! use p3llm::traffic;

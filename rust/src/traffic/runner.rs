@@ -9,6 +9,7 @@
 
 use crate::coordinator::{Engine, Metrics};
 use crate::error::{P3Error, Result};
+use crate::sched::{SloClass, TierMix};
 use crate::testutil::Rng;
 
 use super::arrival::ArrivalProcess;
@@ -39,14 +40,16 @@ pub trait LoadTarget {
     /// Vocabulary size for synthetic prompt tokens.
     fn vocab(&self) -> usize;
 
-    /// Accept one request due at `due_ms`; returns an opaque ticket
-    /// the runner hands back to [`record`](Self::record).  A routed
-    /// fleet uses `due_ms` to stamp the chosen replica's clock.
+    /// Accept one request due at `due_ms` under SLO tier `class`;
+    /// returns an opaque ticket the runner hands back to
+    /// [`record`](Self::record).  A routed fleet uses `due_ms` to
+    /// stamp the chosen replica's clock.
     fn submit(
         &mut self,
         prompt: Vec<i32>,
         max_new: usize,
         due_ms: f64,
+        class: SloClass,
     ) -> Result<u64>;
 
     /// One unit of serving progress.
@@ -85,8 +88,9 @@ impl LoadTarget for Engine {
         prompt: Vec<i32>,
         max_new: usize,
         _due_ms: f64,
+        class: SloClass,
     ) -> Result<u64> {
-        Engine::submit(self, prompt, max_new).map(|id| id.0)
+        Engine::submit_class(self, prompt, max_new, class).map(|id| id.0)
     }
 
     fn step(&mut self) -> Result<()> {
@@ -119,6 +123,9 @@ pub struct LoadRunner {
     pub prefix_ids: Vec<Option<usize>>,
     /// tokens per shared prefix (0 = the mix has no prefix pool)
     pub prefix_len: usize,
+    /// per-request SLO tier (all [`SloClass::Interactive`] unless the
+    /// plan was built [`with_tiers`](Self::with_tiers))
+    pub classes: Vec<SloClass>,
     pub slo: SloSpec,
     seed: u64,
 }
@@ -162,7 +169,34 @@ impl LoadRunner {
             }
             _ => (vec![None; n], 0),
         };
-        LoadRunner { arrivals_ms, shapes, prefix_ids, prefix_len, slo, seed }
+        LoadRunner {
+            arrivals_ms,
+            shapes,
+            prefix_ids,
+            prefix_len,
+            classes: vec![SloClass::Interactive; n],
+            slo,
+            seed,
+        }
+    }
+
+    /// Resample per-request SLO tiers from a [`TierMix`].  The class
+    /// stream is decoupled from arrivals/shapes/prefixes (its own seed
+    /// stream), so adding tiers to a scenario never perturbs the rest
+    /// of the timeline.
+    pub fn with_tiers(mut self, mix: TierMix) -> Self {
+        let mut rng = Rng::new(self.seed ^ 0x7ea5_c1a5_5e50_0007);
+        self.classes =
+            (0..self.arrivals_ms.len()).map(|_| mix.sample(&mut rng)).collect();
+        self
+    }
+
+    /// Explicit per-request tiers (trace-style tests); length must
+    /// match the plan.
+    pub fn with_classes(mut self, classes: Vec<SloClass>) -> Self {
+        assert_eq!(classes.len(), self.arrivals_ms.len());
+        self.classes = classes;
+        self
     }
 
     /// A plan from explicit arrivals/shapes (trace-style tests).
@@ -179,6 +213,7 @@ impl LoadRunner {
             shapes,
             prefix_ids: vec![None; n],
             prefix_len: 0,
+            classes: vec![SloClass::Interactive; n],
             slo,
             seed,
         }
@@ -217,7 +252,7 @@ impl LoadRunner {
             }
             _ => (0..plen).map(|_| prng.usize(0, vocab) as i32).collect(),
         };
-        target.submit(prompt, max_new.max(1), due)
+        target.submit(prompt, max_new.max(1), due, self.classes[i])
     }
 
     /// Drive a [`LoadTarget`] (one engine, or a routed fleet)
@@ -397,6 +432,43 @@ mod tests {
             out.report.ttft_ms.mean,
             coff.report.ttft_ms.mean
         );
+    }
+
+    #[test]
+    fn tiered_plans_carry_classes_into_per_class_reports() {
+        let mk = || {
+            LoadRunner::new(
+                &ArrivalProcess::Poisson { mean_interarrival_ms: 2.0 },
+                &RequestMix::tiny(),
+                SloSpec::chatbot(),
+                16,
+                11,
+            )
+            .with_tiers(TierMix::mixed())
+        };
+        let plan = mk();
+        // the tier stream is decoupled: same arrivals/shapes as untiered
+        let untiered = LoadRunner::new(
+            &ArrivalProcess::Poisson { mean_interarrival_ms: 2.0 },
+            &RequestMix::tiny(),
+            SloSpec::chatbot(),
+            16,
+            11,
+        );
+        assert_eq!(plan.arrivals_ms, untiered.arrivals_ms);
+        assert_eq!(plan.shapes, untiered.shapes);
+        assert!(plan.classes.iter().any(|&c| c != SloClass::Interactive));
+        assert_eq!(plan.classes, mk().classes); // deterministic
+        let out = plan.run(&mut tiny_engine(4)).unwrap();
+        assert_eq!(out.report.completed, 16);
+        // records carry the submitted class, and the report splits it
+        for (r, &c) in out.records.iter().zip(&plan.classes) {
+            assert_eq!(r.class, c);
+        }
+        assert!(!out.report.per_class.is_empty());
+        let total: usize =
+            out.report.per_class.iter().map(|(_, r)| r.offered).sum();
+        assert_eq!(total, 16);
     }
 
     #[test]

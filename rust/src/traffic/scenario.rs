@@ -10,6 +10,7 @@ use crate::accel;
 use crate::config::llm;
 use crate::coordinator::{Engine, EngineBuilder, KvLayout};
 use crate::error::{P3Error, Result};
+use crate::sched::TierMix;
 
 use super::arrival::ArrivalProcess;
 use super::mix::RequestMix;
@@ -38,18 +39,31 @@ pub struct Scenario {
     /// on; `loadtest --no-prefix-cache` and `benches/prefix_cache.rs`
     /// flip it for A/B runs)
     pub prefix_cache: bool,
+    /// SLO tier mix the runner samples per-request classes from
+    /// (`None` = everything [`Interactive`](crate::sched::SloClass),
+    /// the pre-tier behaviour)
+    pub tiers: Option<TierMix>,
+    /// victim policy for preemptive scheduling on this scenario's
+    /// engines (`None` = FIFO admission, no preemption; see
+    /// `sched::victim_by_name`)
+    pub victim: Option<&'static str>,
 }
 
 impl Scenario {
-    /// Materialize this scenario's load plan for a seed.
+    /// Materialize this scenario's load plan for a seed (tier classes
+    /// sampled from [`Scenario::tiers`] when set).
     pub fn runner(&self, seed: u64) -> LoadRunner {
-        LoadRunner::new(
+        let plan = LoadRunner::new(
             &self.arrival,
             &self.mix,
             self.slo,
             self.n_requests,
             seed,
-        )
+        );
+        match self.tiers {
+            Some(mix) => plan.with_tiers(mix),
+            None => plan,
+        }
     }
 
     /// Build a sim-backend engine shaped for this scenario on the
@@ -75,6 +89,9 @@ impl Scenario {
             .ctx_limit(self.ctx_limit.min(model.max_ctx))
             .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)))
             .prefix_cache(self.prefix_cache);
+        if let Some(v) = self.victim {
+            b = b.preempt(v);
+        }
         if let Some(s) = scheme {
             b = b.scheme(s);
         }
@@ -86,6 +103,44 @@ impl Scenario {
     pub fn with_scale(mut self, factor: f64) -> Result<Self> {
         self.arrival = self.arrival.scaled(factor)?;
         Ok(self)
+    }
+
+    /// Rescale the arrival process so the offered decode-token rate is
+    /// `load` times the modeled saturation throughput of `system`
+    /// ([`Scenario::saturation_tok_s`]) -- `load = 1.0` offers exactly
+    /// saturation, `2.0` twice it.  The base rate is measured on the
+    /// materialized plan for `seed` (post-clamp output lengths over
+    /// the arrival span), so the normalization holds for the plan a
+    /// caller then actually runs with the same seed.  This is what
+    /// lets `p3llm overload` and the degradation bench talk about
+    /// "2x saturation" without knowing absolute sim timings.
+    pub fn with_load_factor(
+        self,
+        system: &str,
+        load: f64,
+        seed: u64,
+    ) -> Result<Self> {
+        if !load.is_finite() || load <= 0.0 {
+            return Err(P3Error::InvalidFlag {
+                flag: "load".into(),
+                value: format!("{load}"),
+            });
+        }
+        let sat = self.saturation_tok_s(system).ok_or_else(|| {
+            P3Error::UnknownSystem(system.into())
+        })?;
+        let plan = self.runner(seed);
+        let toks: usize = plan.shapes.iter().map(|&(_, o)| o).sum();
+        let span_ms = plan
+            .arrivals_ms
+            .last()
+            .copied()
+            .unwrap_or(0.0)
+            .max(1e-6);
+        let base_tok_s = toks as f64 / (span_ms / 1e3);
+        // with_scale(f) multiplies inter-arrival gaps by f, dividing
+        // the offered rate by f: pick f so the new rate is load * sat
+        self.with_scale(base_tok_s / (load * sat))
     }
 
     /// Weak-scaling transform for an `n`-replica fleet: `n` times the
@@ -125,6 +180,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 1024,
             kv_slots: 10,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "chat-burst",
@@ -144,6 +201,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             // overcommits the pool, exercising bounce + FIFO requeue
             kv_slots: 5,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "summarize-steady",
@@ -157,6 +216,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 2048,
             kv_slots: 10,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "code-complete",
@@ -170,6 +231,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 1024,
             kv_slots: 18,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "rag-long",
@@ -183,6 +246,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 2048,
             kv_slots: 6,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "agent-pool",
@@ -196,6 +261,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 1024,
             kv_slots: 10,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "rag-cached",
@@ -209,6 +276,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 2048,
             kv_slots: 6,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
         Scenario {
             name: "smoke",
@@ -222,6 +291,74 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 128,
             kv_slots: 6,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
+        },
+        Scenario {
+            name: "flash-crowd",
+            desc: "mixed-tenant base + interactive flash crowd bursts \
+                   (preemptive recompute evictions)",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::OnOff {
+                burst_n: 6,
+                burst_gap_ms: 40.0,
+                idle_ms: 700.0,
+            },
+            mix: RequestMix::chat(),
+            slo: SloSpec::chatbot(),
+            n_requests: 36,
+            max_batch: 8,
+            ctx_limit: 1024,
+            // fewer KV reservations than batch lanes: bursts exhaust
+            // the pool while lanes are free, so a high-tier newcomer
+            // must evict rather than bounce
+            kv_slots: 5,
+            prefix_cache: true,
+            tiers: Some(TierMix::mixed()),
+            victim: Some("recompute"),
+        },
+        Scenario {
+            name: "starve-probe",
+            desc: "80/20 interactive/best-effort: does the aging floor \
+                   keep the 20% alive? (swap evictions)",
+            model: "Llama-3.2-3B",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 70.0 },
+            mix: RequestMix::chat(),
+            slo: SloSpec::chatbot(),
+            n_requests: 40,
+            max_batch: 8,
+            ctx_limit: 1024,
+            kv_slots: 5,
+            prefix_cache: true,
+            tiers: Some(TierMix {
+                interactive: 0.8,
+                batch: 0.0,
+                best_effort: 0.2,
+            }),
+            victim: Some("swap"),
+        },
+        Scenario {
+            name: "smoke-overload",
+            desc: "CI gate: tiny model past saturation, tiered + \
+                   preemptive, milliseconds",
+            model: "tiny-1M",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 2.0 },
+            mix: RequestMix::tiny(),
+            slo: SloSpec::chatbot(),
+            n_requests: 48,
+            max_batch: 8,
+            ctx_limit: 128,
+            // 2 full-context reservations = 16 pages; typical tiny
+            // requests reserve ~3 pages, so ~5 fit -- KV binds while
+            // ~3 batch lanes stay free (eviction, not bounce)
+            kv_slots: 2,
+            prefix_cache: true,
+            tiers: Some(TierMix {
+                interactive: 0.25,
+                batch: 0.25,
+                best_effort: 0.5,
+            }),
+            victim: Some("recompute"),
         },
         Scenario {
             name: "smoke-prefix",
@@ -235,6 +372,8 @@ pub fn all_scenarios() -> Vec<Scenario> {
             ctx_limit: 128,
             kv_slots: 6,
             prefix_cache: true,
+            tiers: None,
+            victim: None,
         },
     ]
 }
@@ -320,6 +459,68 @@ mod tests {
             on.ttft_ms.mean,
             off.ttft_ms.mean
         );
+    }
+
+    #[test]
+    fn overload_scenarios_are_tiered_and_kv_bound() {
+        for name in ["flash-crowd", "starve-probe", "smoke-overload"] {
+            let s = by_name(name).unwrap();
+            assert!(s.tiers.is_some(), "{name}: untiered");
+            assert!(s.victim.is_some(), "{name}: no victim policy");
+            // KV must bind before batch lanes do, or a high-tier
+            // newcomer bounces instead of evicting
+            assert!(s.kv_slots < s.max_batch, "{name}");
+            let eng = s.engine("P3-LLM", None).unwrap();
+            assert_eq!(eng.victim_policy(), Some(s.victim.unwrap()));
+        }
+        // load normalization: rescaled plans offer load*saturation
+        let s = by_name("smoke-overload").unwrap();
+        let sat = s.saturation_tok_s("P3-LLM").unwrap();
+        for load in [0.5, 2.0] {
+            let scaled = s
+                .clone()
+                .with_load_factor("P3-LLM", load, 7)
+                .unwrap();
+            let plan = scaled.runner(7);
+            let toks: usize =
+                plan.shapes.iter().map(|&(_, o)| o).sum();
+            let rate =
+                toks as f64 / (plan.arrivals_ms.last().unwrap() / 1e3);
+            assert!(
+                (rate / sat - load).abs() < 0.05 * load,
+                "load {load}: offered {rate} vs sat {sat}"
+            );
+        }
+        assert!(s
+            .clone()
+            .with_load_factor("P3-LLM", f64::NAN, 7)
+            .is_err());
+        assert!(s.with_load_factor("no-such-system", 1.0, 7).is_err());
+    }
+
+    #[test]
+    fn smoke_overload_preempts_and_completes_past_saturation() {
+        let s = by_name("smoke-overload")
+            .unwrap()
+            .with_load_factor("P3-LLM", 2.0, 7)
+            .unwrap();
+        let mut eng = s.engine("P3-LLM", None).unwrap();
+        let out = s.runner(7).run(&mut eng).unwrap();
+        // nothing lost: every preempted request resumed and finished
+        assert_eq!(out.report.completed, out.report.offered);
+        // past saturation with tiers, high-tier newcomers must have
+        // evicted lower-tier decodes at least once
+        assert!(out.report.preemptions > 0);
+        assert_eq!(
+            out.report.pages_swapped, 0,
+            "recompute policy must not swap"
+        );
+        assert!(out.report.pages_recomputed > 0);
+        // the report splits tiers
+        assert!(!out.report.per_class.is_empty());
+        let total: usize =
+            out.report.per_class.iter().map(|(_, r)| r.offered).sum();
+        assert_eq!(total, out.report.offered);
     }
 
     #[test]

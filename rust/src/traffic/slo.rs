@@ -7,6 +7,7 @@
 //! exactly the distinction the Section I chatbot scenario draws.
 
 use crate::coordinator::{Metrics, Percentiles, Request};
+use crate::sched::SloClass;
 
 /// Latency targets for one request class: time-to-first-token and
 /// mean per-output-token budgets, both in engine-clock milliseconds.
@@ -39,6 +40,16 @@ impl SloSpec {
         ttft_ms <= self.ttft_ms
             && tpot_ms.map_or(true, |t| t <= self.tpot_ms)
     }
+
+    /// Widen (factor > 1) or tighten (< 1) both budgets -- how a
+    /// scenario's base spec becomes a lower tier's looser target
+    /// ([`SloClass::slo_factor`]).
+    pub fn scaled(&self, factor: f64) -> Self {
+        SloSpec {
+            ttft_ms: self.ttft_ms * factor,
+            tpot_ms: self.tpot_ms * factor,
+        }
+    }
 }
 
 /// Per-request timeline observed by the closed-loop runner.  All
@@ -58,6 +69,15 @@ pub struct ReqRecord {
     /// prompt tokens served from the shared-prefix KV cache (0 = miss
     /// or cache disabled): their prefill compute was skipped
     pub cached_prefix_tokens: usize,
+    /// SLO priority tier the request was submitted under
+    pub class: SloClass,
+    /// mid-decode evictions this request absorbed
+    pub preemptions: usize,
+    /// KV pages migrated to the slow tier across its swap preemptions
+    pub pages_swapped: usize,
+    /// KV pages dropped and re-prefilled across its recompute
+    /// preemptions
+    pub pages_recomputed: usize,
 }
 
 impl ReqRecord {
@@ -76,6 +96,10 @@ impl ReqRecord {
             prompt_len: req.prompt.len(),
             tokens_generated: req.generated.len(),
             cached_prefix_tokens: req.cached_prefix_tokens,
+            class: req.class,
+            preemptions: req.preemptions,
+            pages_swapped: req.pages_swapped,
+            pages_recomputed: req.pages_recomputed,
         }
     }
 
@@ -136,6 +160,19 @@ pub struct LoadReport {
     pub prefix_hit_rate: f64,
     /// prompt tokens whose prefill compute the cache skipped
     pub prefill_tokens_saved: usize,
+    /// mid-decode evictions across all requests (preemptive scheduling)
+    pub preemptions: usize,
+    /// KV pages migrated to the modeled slow tier by swap preemptions
+    pub pages_swapped: usize,
+    /// KV pages dropped and re-prefilled by recompute preemptions
+    pub pages_recomputed: usize,
+    /// Per-tier breakdown, in [`SloClass::all`] order, present only
+    /// when the run carried more than one tier.  Each sub-report is
+    /// judged against the base SLO scaled by that tier's
+    /// [`SloClass::slo_factor`]; engine-wide columns (`busy_tok_s`,
+    /// `saturation_tok_s`) are zeroed/`None` in sub-reports, and
+    /// their own `per_class` is empty.
+    pub per_class: Vec<(SloClass, LoadReport)>,
     pub queue_delay_ms: Percentiles,
     pub ttft_ms: Percentiles,
     pub tpot_ms: Percentiles,
@@ -151,6 +188,16 @@ impl LoadReport {
         slo: &SloSpec,
         metrics: &Metrics,
         saturation_tok_s: Option<f64>,
+    ) -> Self {
+        Self::from_records_inner(records, slo, metrics, saturation_tok_s, true)
+    }
+
+    fn from_records_inner(
+        records: &[ReqRecord],
+        slo: &SloSpec,
+        metrics: &Metrics,
+        saturation_tok_s: Option<f64>,
+        with_classes: bool,
     ) -> Self {
         let offered = records.len();
         let completed = records.iter().filter(|r| r.finished()).count();
@@ -206,6 +253,36 @@ impl LoadReport {
                 0.0
             }
         };
+        // per-tier breakdown: only when the run actually mixed tiers,
+        // so single-class flows (every pre-existing scenario) report
+        // exactly as before.  Sub-reports recurse with
+        // `with_classes = false` (bounded depth) and judge each tier
+        // against its widened SLO.
+        let mut per_class = vec![];
+        if with_classes
+            && records.iter().any(|r| r.class != records[0].class)
+        {
+            for class in SloClass::all() {
+                let subset: Vec<ReqRecord> = records
+                    .iter()
+                    .filter(|r| r.class == class)
+                    .copied()
+                    .collect();
+                if subset.is_empty() {
+                    continue;
+                }
+                per_class.push((
+                    class,
+                    Self::from_records_inner(
+                        &subset,
+                        &slo.scaled(class.slo_factor()),
+                        &Metrics::default(),
+                        None,
+                        false,
+                    ),
+                ));
+            }
+        }
         LoadReport {
             offered,
             completed,
@@ -228,6 +305,13 @@ impl LoadReport {
                 0.0
             },
             prefill_tokens_saved,
+            preemptions: records.iter().map(|r| r.preemptions).sum(),
+            pages_swapped: records.iter().map(|r| r.pages_swapped).sum(),
+            pages_recomputed: records
+                .iter()
+                .map(|r| r.pages_recomputed)
+                .sum(),
+            per_class,
             queue_delay_ms: Percentiles::from_samples(&queues),
             ttft_ms: Percentiles::from_samples(&ttfts),
             tpot_ms: Percentiles::from_samples(&tpots),
@@ -260,6 +344,10 @@ mod tests {
             prompt_len: 16,
             tokens_generated: tokens,
             cached_prefix_tokens: 0,
+            class: SloClass::Interactive,
+            preemptions: 0,
+            pages_swapped: 0,
+            pages_recomputed: 0,
         }
     }
 
@@ -364,6 +452,54 @@ mod tests {
         assert_eq!(r.throughput_tok_s, 0.0);
         assert_eq!(r.goodput_req_s, 0.0);
         assert_eq!(r.goodput_tok_s, 0.0);
+    }
+
+    #[test]
+    fn per_class_breakdown_judges_each_tier_against_scaled_slo() {
+        let slo = SloSpec { ttft_ms: 100.0, tpot_ms: 10.0 };
+        // interactive: ttft 150 misses the base budget
+        let mut int = rec(0.0, 150.0, 650.0, 101);
+        int.class = SloClass::Interactive;
+        // batch: same ttft 150 fits the 4x-widened budget (400 ms)
+        let mut bat = rec(0.0, 150.0, 650.0, 101);
+        bat.class = SloClass::Batch;
+        bat.preemptions = 2;
+        bat.pages_swapped = 14;
+        let r = LoadReport::from_records(
+            &[int, bat],
+            &slo,
+            &Metrics::default(),
+            None,
+        );
+        // top-level judges everyone against the base SLO
+        assert_eq!(r.slo_met, 0);
+        assert_eq!(r.preemptions, 2);
+        assert_eq!(r.pages_swapped, 14);
+        assert_eq!(r.pages_recomputed, 0);
+        // breakdown: one row per present tier, in all() order
+        assert_eq!(r.per_class.len(), 2);
+        let (c0, int_r) = &r.per_class[0];
+        let (c1, bat_r) = &r.per_class[1];
+        assert_eq!(*c0, SloClass::Interactive);
+        assert_eq!(*c1, SloClass::Batch);
+        assert_eq!(int_r.offered, 1);
+        assert_eq!(int_r.slo_met, 0); // 150 > 100
+        assert_eq!(bat_r.offered, 1);
+        assert_eq!(bat_r.slo_met, 1); // 150 <= 400
+        assert_eq!(bat_r.preemptions, 2);
+        assert!(int_r.per_class.is_empty() && bat_r.per_class.is_empty());
+        // single-tier runs keep the breakdown empty (legacy flows)
+        let solo = LoadReport::from_records(
+            &[rec(0.0, 10.0, 100.0, 5)],
+            &slo,
+            &Metrics::default(),
+            None,
+        );
+        assert!(solo.per_class.is_empty());
+        // scaled() arithmetic
+        let wide = slo.scaled(SloClass::BestEffort.slo_factor());
+        assert!((wide.ttft_ms - 1600.0).abs() < 1e-9);
+        assert!((wide.tpot_ms - 160.0).abs() < 1e-9);
     }
 
     #[test]

@@ -27,6 +27,8 @@ fn bursty_tiny(n_requests: usize, kv_slots: usize) -> Scenario {
         ctx_limit: 128,
         kv_slots,
         prefix_cache: true,
+        tiers: None,
+        victim: None,
     }
 }
 

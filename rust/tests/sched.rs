@@ -1,0 +1,153 @@
+//! Integration tests for the preemptive sched layer through the
+//! public API: KV-page conservation across preempt/restore churn for
+//! both victim policies, bit-identical overload runs under a seed,
+//! the interactive tail-latency win over FIFO past saturation, and
+//! the aging floor that stops best-effort starvation.
+
+use p3llm::config::llm;
+use p3llm::coordinator::{Engine, EngineBuilder, KvLayout};
+use p3llm::sched::SloClass;
+use p3llm::traffic::{scenario_by_name, LoadReport, Scenario};
+
+const SYSTEM: &str = "P3-LLM";
+const SEED: u64 = 7;
+
+/// The CI overload scenario pinned to 2x the modeled saturation
+/// throughput (`Scenario::with_load_factor`), with the victim policy
+/// overridden (None = FIFO baseline, no preemption).
+fn overloaded(victim: Option<&'static str>) -> Scenario {
+    let mut sc = scenario_by_name("smoke-overload")
+        .unwrap()
+        .with_load_factor(SYSTEM, 2.0, SEED)
+        .unwrap();
+    sc.victim = victim;
+    sc
+}
+
+fn run(sc: &Scenario) -> (LoadReport, Engine) {
+    let mut eng = sc.engine(SYSTEM, None).unwrap();
+    let out = sc
+        .runner(SEED)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .unwrap();
+    (out.report, eng)
+}
+
+fn interactive(r: &LoadReport) -> &LoadReport {
+    r.per_class
+        .iter()
+        .find(|(c, _)| *c == SloClass::Interactive)
+        .map(|(_, cr)| cr)
+        .expect("tiered run carries an interactive tier")
+}
+
+/// Tentpole invariant: a 2x-saturation run that preempts, restores,
+/// and re-prefills must end with every request served and every KV
+/// page back on the free list -- for both victim policies.
+#[test]
+fn overload_churn_conserves_kv_pages_for_both_victims() {
+    for victim in ["recompute", "swap"] {
+        let sc = overloaded(Some(victim));
+        let (r, eng) = run(&sc);
+        assert_eq!(
+            r.completed, r.offered,
+            "{victim}: requests lost under overload"
+        );
+        assert!(
+            r.preemptions > 0,
+            "{victim}: 2x overload never preempted"
+        );
+        match victim {
+            "recompute" => {
+                assert!(r.pages_recomputed > 0, "recompute counted no pages");
+                assert_eq!(r.pages_swapped, 0, "recompute must not swap");
+            }
+            _ => {
+                assert!(r.pages_swapped > 0, "swap counted no pages");
+                assert_eq!(r.pages_recomputed, 0, "swap must not recompute");
+            }
+        }
+        // conservation: no live sequences and no pinned bytes remain
+        // (cache-only prefix pages are reclaimable and excluded from
+        // used_bytes by contract)
+        assert_eq!(eng.kv_entries(), 0, "{victim}: live KV entries leaked");
+        assert_eq!(eng.pool_used_bytes(), 0, "{victim}: pool bytes leaked");
+    }
+}
+
+/// Preempt/swap/restore decisions ride the same virtual clock as
+/// everything else: identical seeds must give identical reports,
+/// including the per-tier breakdown and preemption counters.
+#[test]
+fn overload_runs_are_bit_identical_under_a_seed() {
+    let sc = overloaded(Some("swap"));
+    let (a, _) = run(&sc);
+    let (b, _) = run(&sc);
+    assert_eq!(a, b, "overload run is nondeterministic");
+    assert!(!a.per_class.is_empty(), "tiered run lost its breakdown");
+    assert!(a.preemptions > 0 && a.pages_swapped > 0);
+}
+
+/// The point of the subsystem: past saturation, preemption keeps the
+/// interactive tier's tail TTFT strictly below the FIFO baseline's
+/// (same arrivals, same tiers, no eviction).
+#[test]
+fn preemption_beats_fifo_on_interactive_tail_latency_past_saturation() {
+    let (pre, _) = run(&overloaded(Some("recompute")));
+    let (fifo, _) = run(&overloaded(None));
+    assert_eq!(fifo.preemptions, 0, "FIFO baseline must not preempt");
+    assert_eq!(fifo.completed, fifo.offered);
+    let (ipre, ififo) = (interactive(&pre), interactive(&fifo));
+    assert!(
+        ipre.ttft_ms.p95 < ififo.ttft_ms.p95,
+        "preemptive interactive p95 TTFT {:.4} ms not below FIFO's \
+         {:.4} ms at 2x saturation",
+        ipre.ttft_ms.p95,
+        ififo.ttft_ms.p95
+    );
+}
+
+/// Starvation regression: the aging floor promotes long-waiting
+/// requests to interactive rank.  With an instant floor every request
+/// ages immediately, so nothing outranks anything -- preemption must
+/// go completely quiet (aged best-effort decodes are unpreemptible)
+/// while the run still drains; with the floor pushed past the run's
+/// timescale the preemptive schedule re-emerges.
+#[test]
+fn aging_floor_quiesces_preemption_and_prevents_starvation() {
+    let sc = overloaded(Some("recompute"));
+    let model = llm::by_name(sc.model).unwrap();
+    let per_req = KvLayout {
+        layers: model.layers,
+        kv_dim: model.kv_dim(),
+        head_dim: model.head_dim,
+        max_ctx: sc.ctx_limit.min(model.max_ctx),
+    }
+    .bytes_per_request();
+    let drive = |aging_ms: f64| {
+        let mut eng = EngineBuilder::sim()
+            .model(sc.model)
+            .system(SYSTEM)
+            .max_batch(sc.max_batch)
+            .ctx_limit(sc.ctx_limit.min(model.max_ctx))
+            .kv_capacity(per_req.saturating_mul(sc.kv_slots.max(1)))
+            .prefix_cache(sc.prefix_cache)
+            .preempt("recompute")
+            .aging_ms(aging_ms)
+            .build()
+            .unwrap();
+        let r = sc.runner(SEED).run(&mut eng).unwrap().report;
+        assert_eq!(r.completed, r.offered, "aging run lost requests");
+        r
+    };
+    let aged = drive(1e-9);
+    assert_eq!(
+        aged.preemptions, 0,
+        "aged requests must be unpreemptible (starvation floor)"
+    );
+    let unaged = drive(1e12);
+    assert!(
+        unaged.preemptions > 0,
+        "inactive aging floor must preempt under 2x overload"
+    );
+}
