@@ -96,4 +96,33 @@ if ! printf '%s\n' "$O1" | grep -q "interactive"; then
     exit 1
 fi
 echo "ci: overload smoke OK"
+
+# Telemetry gate: the smoke-overload scenario traced end-to-end.  The
+# binary enforces in-process determinism (two runs must export
+# byte-identical Chrome-trace JSON), nonzero NPU/PIM/bus busy time,
+# a complete enqueue->retire chain, a firing flight recorder under an
+# injected zero TTFT budget, and that a telemetry-off run produces an
+# identical report while recording zero events (the zero-overhead
+# guarantee); the diff below additionally enforces bit-identical
+# stdout across two processes.
+echo "ci: trace smoke"
+T1=$(cargo run --release --quiet -- trace --smoke --seed 7)
+T2=$(cargo run --release --quiet -- trace --smoke --seed 7)
+if [ "$T1" != "$T2" ]; then
+    echo "ci: trace smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$T1" | grep -q "overlap factor"; then
+    echo "ci: trace smoke output missing the NPU/PIM overlap summary" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$T1" | grep -q "flight recorder: replica"; then
+    echo "ci: trace smoke flight recorder never fired" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$T1" | grep -q "telemetry off: report identical, 0 events recorded"; then
+    echo "ci: trace smoke did not prove the disabled-telemetry zero-event path" >&2
+    exit 1
+fi
+echo "ci: trace smoke OK"
 echo "ci: PASS"

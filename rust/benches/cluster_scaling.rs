@@ -11,6 +11,7 @@
 //! flat is a routing bug -- the harness asserts JSQ reaches at least
 //! 2.5x the 1-replica goodput at 4 replicas.
 
+use p3llm::benchkit::BenchRecord;
 use p3llm::cluster::{all_policy_names, Cluster};
 use p3llm::report::{f2, Table};
 use p3llm::traffic::scenario_by_name;
@@ -37,6 +38,7 @@ fn main() {
         ],
     );
     let mut jsq_curve: Vec<(usize, f64)> = vec![];
+    let mut recs: Vec<BenchRecord> = vec![];
     for policy in all_policy_names() {
         let mut base_goodput = 0.0f64;
         for n in [1usize, 2, 4, 8] {
@@ -57,6 +59,23 @@ fn main() {
             let r = &rep.fleet;
             if policy == "jsq" {
                 jsq_curve.push((n, r.goodput_tok_s));
+            }
+            let cfg = format!("policy={policy},replicas={n}");
+            for (metric, value) in [
+                ("goodput_tok_s", r.goodput_tok_s),
+                ("throughput_tok_s", r.throughput_tok_s),
+                ("slo_attainment", r.slo_attainment),
+                ("ttft_p95_ms", r.ttft_ms.p95),
+                ("util_skew", rep.util_skew),
+            ] {
+                recs.push(BenchRecord::new(cfg.as_str(), metric, value));
+            }
+            if let Some(e) = rep.scaling_efficiency {
+                recs.push(BenchRecord::new(
+                    cfg.as_str(),
+                    "scaling_efficiency",
+                    e,
+                ));
             }
             t.row(vec![
                 policy.into(),
@@ -103,4 +122,7 @@ fn main() {
          KV handoff"
     );
     t.save(p3llm::benchkit::reports_dir(), "cluster_scaling").unwrap();
+    let p = p3llm::benchkit::save_bench_json("cluster_scaling", seed, &recs)
+        .expect("write BENCH_cluster_scaling.json");
+    println!("saved {}", p.display());
 }

@@ -14,9 +14,13 @@
 //! that at 2x saturation interactive attainment under preemption is
 //! strictly above FIFO's -- graceful degradation instead of collapse.
 //!
-//! `--save` additionally emits `BENCH_overload.json`
-//! (scenario x victim x load -> per-tier goodput/attainment/p99).
+//! `--save` additionally emits `BENCH_overload_degradation.json`
+//! through the shared `p3llm::benchkit::save_bench_json` emitter:
+//! a flat `{bench, config, metric, value, seed}` array covering the
+//! per-run counters and the per-tier goodput/attainment/p99 at every
+//! `scenario x victim x load` point.
 
+use p3llm::benchkit::BenchRecord;
 use p3llm::report::{f2, f3, Table};
 use p3llm::sched::SloClass;
 use p3llm::traffic::{scenario_by_name, LoadReport, Scenario, SloSpec};
@@ -75,7 +79,7 @@ fn main() {
             "recomputed",
         ],
     );
-    let mut json_scenarios = String::new();
+    let mut recs: Vec<BenchRecord> = vec![];
     for name in ["smoke-overload", "flash-crowd"] {
         let sc = scenario_by_name(name).expect("registry scenario");
         assert!(sc.tiers.is_some(), "{name} must be a tiered scenario");
@@ -84,7 +88,11 @@ fn main() {
         assert!(t_base > 0.0, "{name}: empty calibration run");
         let budget =
             SloSpec { ttft_ms: 8.0 * t_base, tpot_ms: f64::INFINITY };
-        let mut curves = String::new();
+        recs.push(BenchRecord::new(
+            format!("scenario={name}"),
+            "ttft_budget_ms",
+            budget.ttft_ms,
+        ));
         // (victim label, interactive attainment at 2x saturation)
         let mut att2: Vec<(&str, f64)> = vec![];
         for &load in &LOADS {
@@ -104,7 +112,6 @@ fn main() {
                         "{name}/{label} at {load}x never preempted"
                     );
                 }
-                let mut tiers = String::new();
                 for (class, cr) in &r.per_class {
                     t.row(vec![
                         name.into(),
@@ -119,35 +126,37 @@ fn main() {
                         cr.pages_swapped.to_string(),
                         cr.pages_recomputed.to_string(),
                     ]);
-                    if !tiers.is_empty() {
-                        tiers.push(',');
+                    let cfg = format!(
+                        "scenario={name},victim={label},load={load},\
+                         tier={}",
+                        class.name()
+                    );
+                    for (metric, value) in [
+                        ("goodput_req_s", cr.goodput_req_s),
+                        ("slo_attainment", cr.slo_attainment),
+                        ("ttft_p99_ms", cr.ttft_ms.p99),
+                    ] {
+                        recs.push(BenchRecord::new(
+                            cfg.as_str(),
+                            metric,
+                            value,
+                        ));
                     }
-                    tiers.push_str(&format!(
-                        "{{\"tier\":\"{}\",\"goodput_req_s\":{:.6},\
-                         \"attainment\":{:.6},\"ttft_p99_ms\":{:.6}}}",
-                        class.name(),
-                        cr.goodput_req_s,
-                        cr.slo_attainment,
-                        cr.ttft_ms.p99
-                    ));
+                }
+                let cfg =
+                    format!("scenario={name},victim={label},load={load}");
+                for (metric, value) in [
+                    ("offered", r.offered as f64),
+                    ("completed", r.completed as f64),
+                    ("preemptions", r.preemptions as f64),
+                    ("pages_swapped", r.pages_swapped as f64),
+                    ("pages_recomputed", r.pages_recomputed as f64),
+                ] {
+                    recs.push(BenchRecord::new(cfg.as_str(), metric, value));
                 }
                 if (load - 2.0).abs() < 1e-9 {
                     att2.push((label, interactive(&r).slo_attainment));
                 }
-                if !curves.is_empty() {
-                    curves.push(',');
-                }
-                curves.push_str(&format!(
-                    "{{\"victim\":\"{label}\",\"load\":{load},\
-                     \"offered\":{},\"completed\":{},\
-                     \"preemptions\":{},\"pages_swapped\":{},\
-                     \"pages_recomputed\":{},\"tiers\":[{tiers}]}}",
-                    r.offered,
-                    r.completed,
-                    r.preemptions,
-                    r.pages_swapped,
-                    r.pages_recomputed
-                ));
             }
         }
         let fifo = att2
@@ -170,14 +179,6 @@ fn main() {
                  strictly above FIFO's {fifo:.3} at 2x saturation"
             );
         }
-        if !json_scenarios.is_empty() {
-            json_scenarios.push(',');
-        }
-        json_scenarios.push_str(&format!(
-            "{{\"scenario\":\"{name}\",\"ttft_budget_ms\":{:.6},\
-             \"curves\":[{curves}]}}",
-            budget.ttft_ms
-        ));
     }
     t.print();
     println!(
@@ -190,13 +191,12 @@ fn main() {
     let dir = p3llm::benchkit::reports_dir();
     t.save(&dir, "overload_degradation").unwrap();
     if save_json {
-        let json = format!(
-            "{{\"bench\":\"overload_degradation\",\"system\":\
-             \"{SYSTEM}\",\"seed\":{SEED},\
-             \"scenarios\":[{json_scenarios}]}}\n"
-        );
-        let path = dir.join("BENCH_overload.json");
-        std::fs::write(&path, json).expect("write BENCH_overload.json");
-        println!("saved {}", path.display());
+        let p = p3llm::benchkit::save_bench_json(
+            "overload_degradation",
+            SEED,
+            &recs,
+        )
+        .expect("write BENCH_overload_degradation.json");
+        println!("saved {}", p.display());
     }
 }

@@ -9,6 +9,7 @@
 //! mean TTFT on the cached run of the deterministic CI scenarios
 //! (`smoke-prefix`, `agent-pool`).
 
+use p3llm::benchkit::BenchRecord;
 use p3llm::report::{f2, Table};
 use p3llm::traffic::{scenario_by_name, LoadReport};
 
@@ -36,10 +37,21 @@ fn main() {
             "goodput tok/s",
         ],
     );
+    let mut recs: Vec<BenchRecord> = vec![];
     for name in ["smoke-prefix", "agent-pool", "rag-cached"] {
         let on = run(name, true, seed);
         let off = run(name, false, seed);
         for (label, r) in [("on", &on), ("off", &off)] {
+            let cfg = format!("scenario={name},cache={label}");
+            for (metric, value) in [
+                ("prefix_hit_rate", r.prefix_hit_rate),
+                ("prefill_tokens_saved", r.prefill_tokens_saved as f64),
+                ("ttft_mean_ms", r.ttft_ms.mean),
+                ("ttft_p95_ms", r.ttft_ms.p95),
+                ("goodput_tok_s", r.goodput_tok_s),
+            ] {
+                recs.push(BenchRecord::new(cfg.as_str(), metric, value));
+            }
             t.row(vec![
                 name.into(),
                 label.into(),
@@ -94,4 +106,7 @@ fn main() {
          same plan with the cache disabled"
     );
     t.save(p3llm::benchkit::reports_dir(), "prefix_cache").unwrap();
+    let p = p3llm::benchkit::save_bench_json("prefix_cache", seed, &recs)
+        .expect("write BENCH_prefix_cache.json");
+    println!("saved {}", p.display());
 }

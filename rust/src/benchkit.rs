@@ -54,6 +54,72 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     }
 }
 
+/// One `(config, metric, value)` sample of a bench sweep -- the unit
+/// of the machine-readable `BENCH_<name>.json` sidecars the serving
+/// benches write next to their TSVs.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Which point of the sweep, e.g. `"policy=jsq,replicas=4"`.
+    pub config: String,
+    /// Metric name, e.g. `"goodput_tok_s"`.
+    pub metric: String,
+    pub value: f64,
+}
+
+impl BenchRecord {
+    pub fn new(
+        config: impl Into<String>,
+        metric: impl Into<String>,
+        value: f64,
+    ) -> Self {
+        BenchRecord { config: config.into(), metric: metric.into(), value }
+    }
+}
+
+/// Render bench records as a flat JSON array, one object per record,
+/// schema `{"bench","config","metric","value","seed"}`.  Hand-rolled
+/// (the offline crate set has no serde); the flat shape keeps every
+/// bench's sidecar `jq`-able with the same query, no per-bench
+/// nesting to know.  Non-finite values serialize as `null` -- JSON
+/// has no `inf`.
+pub fn bench_json(
+    bench: &str,
+    seed: u64,
+    records: &[BenchRecord],
+) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let value = if r.value.is_finite() {
+            format!("{:.6}", r.value)
+        } else {
+            "null".into()
+        };
+        out.push_str(&format!(
+            "{{\"bench\":\"{bench}\",\"config\":\"{}\",\
+             \"metric\":\"{}\",\"value\":{value},\"seed\":{seed}}}{}\n",
+            r.config,
+            r.metric,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write [`bench_json`] to `BENCH_<bench>.json` under [`reports_dir`];
+/// returns the path written.
+pub fn save_bench_json(
+    bench: &str,
+    seed: u64,
+    records: &[BenchRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, bench_json(bench, seed, records))?;
+    Ok(path)
+}
+
 /// Quick-mode switch: `P3LLM_BENCH_FAST=1` trims block counts so the
 /// full `cargo bench` suite stays in CI budget.
 pub fn eval_blocks() -> usize {
@@ -77,6 +143,25 @@ pub fn require_artifacts() -> Option<String> {
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn bench_json_is_flat_and_null_safe() {
+        use super::BenchRecord;
+        let recs = vec![
+            BenchRecord::new("n=1", "goodput_tok_s", 12.5),
+            BenchRecord::new("n=2", "ttft_p99_ms", f64::INFINITY),
+        ];
+        let j = super::bench_json("demo", 7, &recs);
+        assert!(j.starts_with("[\n") && j.ends_with("]\n"));
+        assert!(j.contains(
+            "{\"bench\":\"demo\",\"config\":\"n=1\",\
+             \"metric\":\"goodput_tok_s\",\"value\":12.500000,\"seed\":7},"
+        ));
+        // infinities land as null, and only the last record skips the
+        // trailing comma
+        assert!(j.contains("\"value\":null,\"seed\":7}\n]"));
+        assert_eq!(j.matches('{').count(), 2);
+    }
+
     #[test]
     fn timing_monotone() {
         let t = super::time(1, 5, || {

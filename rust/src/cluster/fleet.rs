@@ -25,6 +25,7 @@ use crate::coordinator::{
 use crate::error::{P3Error, Result};
 use crate::sched::SloClass;
 use crate::sim::{dram, npu};
+use crate::telemetry::Trace;
 use crate::traffic::{
     LoadReport, LoadRunner, LoadTarget, ReqRecord, RunOutcome, Scenario,
 };
@@ -132,6 +133,28 @@ impl Cluster {
             .system
             .hbm;
         Cluster::new(engines, policy, hbm)
+    }
+
+    /// [`Cluster::from_scenario`] with telemetry: replica `i` records
+    /// into [`trace.for_replica(i)`](Trace::for_replica), so the whole
+    /// fleet shares one sink and its streams merge by construction --
+    /// every event carries its replica tag, and one export renders one
+    /// Perfetto track group per replica.
+    pub fn from_scenario_traced(
+        scenario: &Scenario,
+        system: &str,
+        scheme: Option<&str>,
+        replicas: usize,
+        policy_name: &str,
+        trace: &Trace,
+    ) -> Result<Self> {
+        let mut c = Cluster::from_scenario(
+            scenario, system, scheme, replicas, policy_name,
+        )?;
+        for (i, r) in c.replicas.iter_mut().enumerate() {
+            r.set_trace(trace.for_replica(i as u32));
+        }
+        Ok(c)
     }
 
     pub fn replicas(&self) -> usize {

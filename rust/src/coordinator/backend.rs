@@ -164,4 +164,10 @@ pub trait ExecBackend {
     fn mapping_summary(&self) -> Option<MapSummary> {
         None
     }
+
+    /// Adopt a telemetry handle for device-occupancy spans (NPU / PIM
+    /// / bus tracks).  Backends without per-operator visibility (PJRT:
+    /// opaque AOT graphs) keep the no-op default -- the engine still
+    /// records the request lifecycle on its own clock.
+    fn set_trace(&mut self, _trace: crate::telemetry::Trace) {}
 }

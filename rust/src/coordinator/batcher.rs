@@ -96,6 +96,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// `(queued, active)` depths in one call -- the telemetry layer
+    /// samples this at every step boundary into the `queue_depth` /
+    /// `active_lanes` counter tracks.
+    pub fn depths(&self) -> (usize, usize) {
+        (self.queue.len(), self.active.len())
+    }
+
     pub fn idle(&self) -> bool {
         self.active.is_empty() && self.queue.is_empty()
     }

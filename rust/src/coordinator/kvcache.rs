@@ -768,6 +768,13 @@ impl KvPool {
         self.cache.slots.len()
     }
 
+    /// `(used_bytes, cached_bytes, live_seqs)` in one call -- the
+    /// telemetry layer samples this at every step boundary into the
+    /// `kv_used_bytes` / `kv_cached_bytes` counter tracks.
+    pub fn occupancy(&self) -> (usize, usize, usize) {
+        (self.used_bytes(), self.cached_bytes(), self.seqs.len())
+    }
+
     /// Release sequence `id`: its private pages return to the free
     /// list; shared pages drop one reference, and cached pages outlive
     /// the sequence for future prefix hits (reclaimed by LRU eviction

@@ -42,6 +42,7 @@ use crate::config::scheme;
 use crate::coordinator::mapper::MapSummary;
 use crate::error::{P3Error, Result};
 use crate::sched::{SloClass, VictimCandidate, VictimMode, VictimPolicy};
+use crate::telemetry::{Trace, TraceLane};
 
 /// Latency distribution summary (nearest-rank percentiles).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -224,6 +225,8 @@ pub struct Engine {
     acc: StatsAcc,
     /// SLO-tiered preemptive scheduling (None = FIFO)
     sched: Option<SchedState>,
+    /// request-lifecycle telemetry (default off = zero overhead)
+    trace: Trace,
 }
 
 impl Engine {
@@ -276,7 +279,26 @@ impl Engine {
             next_id: 1,
             acc: StatsAcc::default(),
             sched: None,
+            trace: Trace::off(),
         })
+    }
+
+    /// Adopt a telemetry handle: the engine records the request
+    /// lifecycle (enqueue / admit / bounce / prefill / tokens /
+    /// preempt / retire) and the backend records device-occupancy
+    /// lanes, all on the engine clock.  The handle's replica tag
+    /// stamps every event ([`Trace::for_replica`]); the default-off
+    /// handle makes every emit a no-op.
+    pub fn set_trace(&mut self, trace: Trace) {
+        self.backend.set_trace(trace.clone());
+        self.trace = trace;
+    }
+
+    /// The engine's telemetry handle (disabled unless
+    /// [`set_trace`](Engine::set_trace) /
+    /// [`EngineBuilder::telemetry`] installed one).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
     }
 
     pub fn model(&self) -> &LlmConfig {
@@ -391,12 +413,20 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
+        let prompt_len = prompt.len();
         let mut req = Request::new(id, prompt, max_new, self.backend.now_ms());
         req.prefill_charge_ms = install_ms;
         req.class = class;
         let rid = req.id;
         self.requests.insert(id, req);
         self.batcher.enqueue(rid);
+        self.trace.instant(
+            "enqueue",
+            self.backend.now_ms(),
+            Some(rid.0),
+            Some(class),
+            prompt_len as f64,
+        );
         Ok(rid)
     }
 
@@ -469,6 +499,7 @@ impl Engine {
         let prompt_len = req.prompt.len();
         let max_new = req.max_new_tokens;
         let charge = req.prefill_charge_ms;
+        let class = req.class;
         let use_cache = self.prefix_cache && charge.is_none();
         // the lookup pins the matched pages (they cannot be evicted
         // while the backend runs); the hit is resolved below -- by
@@ -494,8 +525,18 @@ impl Engine {
                 let tile = self.backend.max_prefill().max(1);
                 let mut offset = cached;
                 for chunk in ctx[cached..].chunks(tile) {
+                    let tile_t0 = self.backend.now_ms();
                     match self.backend.prefill_continue(chunk, offset) {
                         Ok(o) => {
+                            self.trace.span(
+                                TraceLane::Host,
+                                "prefill_tile",
+                                tile_t0,
+                                self.backend.now_ms(),
+                                Some(rid.0),
+                                Some(class),
+                                chunk.len() as f64,
+                            );
                             offset += chunk.len();
                             outs.push(o);
                         }
@@ -551,8 +592,33 @@ impl Engine {
         if cached > 0 && !resume {
             self.acc.prefix_hits += 1;
             self.acc.prefix_tokens_saved += cached;
+            self.trace.instant(
+                "prefix_hit",
+                t0,
+                Some(rid.0),
+                Some(class),
+                cached as f64,
+            );
         }
         let now = self.backend.now_ms();
+        // one span per prefill call; the name says how the context got
+        // here: fresh compute, preemption recovery (swap restore vs
+        // recompute re-prefill), or a migrated-KV install
+        let span_name = match (charge.is_some(), resume) {
+            (false, false) => "prefill",
+            (false, true) => "recompute",
+            (true, true) => "restore",
+            (true, false) => "kv_install",
+        };
+        self.trace.span(
+            TraceLane::Host,
+            span_name,
+            t0,
+            now,
+            Some(rid.0),
+            Some(class),
+            (ctx.len() - cached) as f64,
+        );
         let req = self.requests.get_mut(&rid.0).unwrap();
         req.pos = total_len;
         // the installed context ends one slot short of the pending
@@ -562,6 +628,13 @@ impl Engine {
             req.cached_prefix_tokens = cached;
             req.generated.push(first_token);
             req.first_token_ms = Some(now);
+            self.trace.instant(
+                "first_token",
+                now,
+                Some(rid.0),
+                Some(class),
+                first_token as f64,
+            );
         }
         req.pos += 1; // KV slot for the pending token is written by decode
         // a migrated-KV charge is consumed by the install: if this
@@ -586,6 +659,17 @@ impl Engine {
             self.acc.tpot.push(t);
         }
         self.acc.completed += 1;
+        let (class, generated) = {
+            let r = &self.requests[&rid.0];
+            (r.class, r.generated.len())
+        };
+        self.trace.instant(
+            "retire",
+            now,
+            Some(rid.0),
+            Some(class),
+            generated as f64,
+        );
         self.batcher.retire(rid);
         self.pool.free(rid.0);
     }
@@ -658,6 +742,7 @@ impl Engine {
         req.state = State::Queued;
         req.preemptions += 1;
         self.acc.preemptions += 1;
+        let class = req.class;
         match mode {
             VictimMode::Recompute => {
                 req.pages_recomputed += pages;
@@ -670,6 +755,13 @@ impl Engine {
                 req.prefill_charge_ms = swap_ms;
             }
         }
+        self.trace.instant(
+            mode.event_name(),
+            self.backend.now_ms(),
+            Some(rid.0),
+            Some(class),
+            pages as f64,
+        );
         Ok(())
     }
 
@@ -739,8 +831,26 @@ impl Engine {
                     "empty pool refused a request build() sized for"
                 );
                 blocked = true;
+                if self.trace.enabled() {
+                    self.trace.instant(
+                        "bounce",
+                        self.backend.now_ms(),
+                        Some(rid.0),
+                        Some(self.requests[&rid.0].class),
+                        total_max as f64,
+                    );
+                }
                 bounced.push(rid);
                 continue;
+            }
+            if self.trace.enabled() {
+                self.trace.instant(
+                    "admit",
+                    self.backend.now_ms(),
+                    Some(rid.0),
+                    Some(self.requests[&rid.0].class),
+                    total_max as f64,
+                );
             }
             if let Err(e) = self.prefill(rid) {
                 // keep the engine consistent on a failed prefill: the
@@ -749,6 +859,17 @@ impl Engine {
                 self.pool.free(rid.0);
                 if let Some(r) = self.requests.get_mut(&rid.0) {
                     r.state = State::Finished;
+                }
+                if self.trace.enabled() {
+                    let class =
+                        self.requests.get(&rid.0).map(|r| r.class);
+                    self.trace.instant(
+                        "error",
+                        self.backend.now_ms(),
+                        Some(rid.0),
+                        class,
+                        0.0,
+                    );
                 }
                 return Err(e);
             }
@@ -819,6 +940,15 @@ impl Engine {
             req.generated.push(out.tokens[lane]);
             req.pos += 1;
             emitted += 1;
+            if self.trace.enabled() {
+                self.trace.instant(
+                    "token",
+                    now,
+                    Some(rid.0),
+                    Some(req.class),
+                    req.generated.len() as f64,
+                );
+            }
             if req.done(self.ctx_cap) {
                 self.retire_finished(*rid, now);
             }
@@ -827,7 +957,25 @@ impl Engine {
         self.acc.tokens_out += emitted;
         // measured after the KV append loop so the host-side INT4
         // pack work stays inside decode_ms (as in the original engine)
-        self.acc.decode_ms += self.backend.now_ms() - t0;
+        let t1 = self.backend.now_ms();
+        self.acc.decode_ms += t1 - t0;
+        if self.trace.enabled() {
+            self.trace.span(
+                TraceLane::Host,
+                "decode_step",
+                t0,
+                t1,
+                None,
+                None,
+                n as f64,
+            );
+            let (used, cached, _live) = self.pool.occupancy();
+            let (queued, active) = self.batcher.depths();
+            self.trace.counter("kv_used_bytes", t1, used as f64);
+            self.trace.counter("kv_cached_bytes", t1, cached as f64);
+            self.trace.counter("queue_depth", t1, queued as f64);
+            self.trace.counter("active_lanes", t1, active as f64);
+        }
         Ok(emitted)
     }
 
@@ -846,9 +994,67 @@ impl Engine {
         Ok(self.metrics())
     }
 
+    /// Debug-only counter audit with the event stream as ground truth:
+    /// the hand-maintained prefix-cache and preemption aggregates in
+    /// [`Metrics`] must equal what telemetry recorded, so the two can
+    /// never silently diverge.  Skipped when tracing is off or the
+    /// bounded sink dropped events (the stream is then incomplete by
+    /// design).
+    #[cfg(debug_assertions)]
+    fn audit_counters(&self) {
+        if !self.trace.enabled() || self.trace.dropped() > 0 {
+            return;
+        }
+        let rep = self.trace.replica_id();
+        let evs = self.trace.snapshot();
+        let count = |name: &str| {
+            evs.iter()
+                .filter(|e| e.replica == rep && e.name == name)
+                .count()
+        };
+        let sum = |name: &str| -> f64 {
+            evs.iter()
+                .filter(|e| e.replica == rep && e.name == name)
+                .map(|e| e.value)
+                .sum()
+        };
+        debug_assert_eq!(
+            count("prefix_hit"),
+            self.acc.prefix_hits,
+            "Metrics.prefix_hits drifted from the trace's prefix_hit \
+             events"
+        );
+        debug_assert_eq!(
+            sum("prefix_hit") as usize,
+            self.acc.prefix_tokens_saved,
+            "Metrics.prefix_tokens_saved drifted from the trace's \
+             prefix_hit token counts"
+        );
+        debug_assert_eq!(
+            count("preempt:swap") + count("preempt:recompute"),
+            self.acc.preemptions,
+            "Metrics.preemptions drifted from the trace's preempt \
+             events"
+        );
+        debug_assert_eq!(
+            sum("preempt:swap") as usize,
+            self.acc.pages_swapped,
+            "Metrics.pages_swapped drifted from the trace's \
+             preempt:swap page counts"
+        );
+        debug_assert_eq!(
+            sum("preempt:recompute") as usize,
+            self.acc.pages_recomputed,
+            "Metrics.pages_recomputed drifted from the trace's \
+             preempt:recompute page counts"
+        );
+    }
+
     /// Metrics snapshot (callable mid-run; distributions cover retired
     /// requests only).
     pub fn metrics(&self) -> Metrics {
+        #[cfg(debug_assertions)]
+        self.audit_counters();
         Metrics {
             backend: self.backend.name(),
             completed: self.acc.completed,
@@ -922,6 +1128,8 @@ pub struct EngineBuilder {
     victim: Option<String>,
     /// anti-starvation floor override (ms on the engine clock)
     aging_ms: Option<f64>,
+    /// telemetry handle installed at build (default off)
+    trace: Trace,
 }
 
 impl EngineBuilder {
@@ -939,6 +1147,7 @@ impl EngineBuilder {
             prefix_cache: None,
             victim: None,
             aging_ms: None,
+            trace: Trace::off(),
         }
     }
 
@@ -1045,6 +1254,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Install a telemetry handle on the built engine (and its
+    /// backend, for the NPU/PIM/bus device lanes).  Keep a clone to
+    /// read the trace after the run; the default-off handle records
+    /// nothing and costs nothing.  See [`crate::telemetry`].
+    pub fn telemetry(mut self, trace: Trace) -> Self {
+        self.trace = trace;
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let scheme_name = self.scheme.as_deref().unwrap_or("p3llm");
         let scheme = scheme::by_name(scheme_name)
@@ -1109,7 +1327,7 @@ impl EngineBuilder {
                     quantized,
                     self.device_weights,
                 )?;
-                Engine::with_backend(
+                let mut eng = Engine::with_backend(
                     Box::new(backend),
                     self.max_batch,
                     self.kv_capacity,
@@ -1117,7 +1335,9 @@ impl EngineBuilder {
                     // exact numerics by default; caching is explicit
                     // opt-in on the real-numerics backend
                     self.prefix_cache.unwrap_or(false),
-                )
+                )?;
+                eng.set_trace(self.trace.clone());
+                Ok(eng)
             }
             BackendKind::Sim => {
                 let model_name = self.model.as_deref().unwrap_or("tiny-1M");
@@ -1172,6 +1392,7 @@ impl EngineBuilder {
                     self.prefix_cache.unwrap_or(true),
                 )?;
                 eng.sched = sched;
+                eng.set_trace(self.trace.clone());
                 Ok(eng)
             }
         }

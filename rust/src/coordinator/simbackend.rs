@@ -15,12 +15,16 @@
 
 use super::backend::{DecodeOut, ExecBackend, Lane, PrefillOut};
 use super::kvcache::mix64 as mix;
-use super::mapper::{map_decode_step, summarize, MapSummary};
+use super::mapper::{
+    map_decode_step, summarize, Assignment, Engine as MapEngine, MapSummary,
+};
 use super::pjrt::PREFILL_T;
 use crate::accel::Accel;
 use crate::config::llm::LlmConfig;
 use crate::coordinator::kvcache::KvPool;
 use crate::error::Result;
+use crate::sim::npu;
+use crate::telemetry::{Trace, TraceLane};
 
 /// value in [-1, 1) from a hash
 fn unit(h: u64) -> f32 {
@@ -35,8 +39,13 @@ pub struct SimBackend {
     ctx_limit: usize,
     clock_ms: f64,
     last_map: Option<MapSummary>,
+    /// per-op assignments behind `last_map` (device-lane telemetry
+    /// replays them every step; shape-invariant like the summary)
+    last_asg: Vec<Assignment>,
     /// (bs, ctx) the cached mapping summary was computed for
     map_key: (usize, usize),
+    /// device-occupancy telemetry (default off = zero overhead)
+    trace: Trace,
 }
 
 impl SimBackend {
@@ -48,7 +57,55 @@ impl SimBackend {
             ctx_limit,
             clock_ms: 0.0,
             last_map: None,
+            last_asg: vec![],
             map_key: (0, 0),
+            trace: Trace::off(),
+        }
+    }
+
+    /// Lay the step's per-op assignments onto the NPU/PIM device lanes
+    /// and price the PIM partial-sum return on the bus lane.  The ops
+    /// tile `[t0, t1]` serially (the engine executes them in trace
+    /// order today -- the overlap factor reads ~0 until the ROADMAP's
+    /// sub-batch interleaving lands), normalized so the lane timeline
+    /// matches the clock charge exactly.
+    fn trace_decode_lanes(&self, t0: f64, t1: f64, bs: usize) {
+        let serial_ns: f64 = self.last_asg.iter().map(|a| a.ns).sum();
+        if serial_ns <= 0.0 || t1 <= t0 {
+            return;
+        }
+        let scale = (t1 - t0) / (serial_ns / 1e6);
+        let mut cur = t0;
+        let mut pim_used = false;
+        for a in &self.last_asg {
+            let lane = match a.engine {
+                MapEngine::Npu => TraceLane::Npu,
+                MapEngine::Pim => {
+                    pim_used = true;
+                    TraceLane::Pim
+                }
+            };
+            let d = a.ns / 1e6 * scale;
+            self.trace
+                .span(lane, a.op, cur, cur + d, None, None, a.commands as f64);
+            cur += d;
+        }
+        if pim_used {
+            // PIM results (fp16 activations, one row per lane) return
+            // to the NPU over the external bus each step
+            let bytes = (bs * self.model.hidden * 2) as f64;
+            let bus_ms =
+                npu::transfer(&self.accel.system.hbm, bytes).ns / 1e6;
+            let b0 = (t1 - bus_ms).max(t0);
+            self.trace.span(
+                TraceLane::Bus,
+                "pim_return",
+                b0,
+                t1,
+                None,
+                None,
+                bytes,
+            );
         }
     }
 
@@ -144,7 +201,17 @@ impl ExecBackend for SimBackend {
     fn prefill(&mut self, prompt: &[i32]) -> Result<PrefillOut> {
         let out = self.synth_prefill(prompt);
         // prefill is NPU territory (compute-bound GEMM, Section II)
+        let t0 = self.clock_ms;
         self.clock_ms += self.accel.prefill_ms(&self.model, out.true_len);
+        self.trace.span(
+            TraceLane::Npu,
+            "prefill",
+            t0,
+            self.clock_ms,
+            None,
+            None,
+            out.true_len as f64,
+        );
         Ok(out)
     }
 
@@ -166,7 +233,17 @@ impl ExecBackend for SimBackend {
             self.accel.prefill_ms(&self.model, prefix_len)
         };
         let inc = self.accel.prefill_ms(&self.model, end) - base;
+        let t0 = self.clock_ms;
         self.clock_ms += inc.max(0.0);
+        self.trace.span(
+            TraceLane::Npu,
+            "prefill_tile",
+            t0,
+            self.clock_ms,
+            None,
+            None,
+            out.true_len as f64,
+        );
         Ok(out)
     }
 
@@ -181,7 +258,17 @@ impl ExecBackend for SimBackend {
         // the sim decode path never reads KV contents, only its
         // occupancy), transfer-priced clock advance
         let out = self.synth_prefill(prompt);
+        let t0 = self.clock_ms;
         self.clock_ms += charge_ms.max(0.0);
+        self.trace.span(
+            TraceLane::Bus,
+            "kv_install",
+            t0,
+            self.clock_ms,
+            None,
+            None,
+            out.true_len as f64,
+        );
         Ok(out)
     }
 
@@ -196,13 +283,18 @@ impl ExecBackend for SimBackend {
             .unwrap_or(1)
             .min(self.ctx_limit);
         let step = self.accel.decode_step(&self.model, bs, ctx);
+        let t0 = self.clock_ms;
         self.clock_ms += step.total_ns() / 1e6;
         if self.map_key != (bs, ctx) {
             // refresh the operator-mapping summary when the step shape
             // changes (it is invariant otherwise)
             let asg = map_decode_step(&self.accel, &self.model, bs, ctx);
             self.last_map = Some(summarize(&asg));
+            self.last_asg = asg;
             self.map_key = (bs, ctx);
+        }
+        if self.trace.enabled() {
+            self.trace_decode_lanes(t0, self.clock_ms, bs);
         }
         let kvd = self.model.kv_dim();
         let layers = self.model.layers;
@@ -224,6 +316,10 @@ impl ExecBackend for SimBackend {
 
     fn mapping_summary(&self) -> Option<MapSummary> {
         self.last_map
+    }
+
+    fn set_trace(&mut self, trace: Trace) {
+        self.trace = trace;
     }
 }
 

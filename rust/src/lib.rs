@@ -35,6 +35,13 @@
 //!   reports, and a pluggable [`VictimPolicy`] registry (recompute
 //!   vs priced KV swap) the engine uses to protect interactive
 //!   traffic under KV exhaustion -- see `p3llm overload`.
+//! * `telemetry` -- zero-cost-when-disabled structured tracing across
+//!   the whole stack: a [`Trace`] handle over a bounded ring
+//!   [`telemetry::TraceSink`] records request lifecycle spans and
+//!   per-operator NPU/PIM/bus device timelines on the engine clock,
+//!   with Chrome-trace/Perfetto export, a utilization + NPU/PIM
+//!   overlap summary, and a flight recorder for SLO-missing requests
+//!   -- see `p3llm trace`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
@@ -80,6 +87,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod testutil;
 pub mod traffic;
 pub mod workload;
@@ -91,6 +99,7 @@ pub use coordinator::{
 };
 pub use error::{P3Error, Result};
 pub use sched::{SloClass, TierMix, VictimPolicy};
+pub use telemetry::{Trace, TraceEvent, TraceLane};
 pub use traffic::{LoadReport, LoadRunner, LoadTarget, Scenario, SloSpec};
 
 pub fn version() -> &'static str {

@@ -22,6 +22,7 @@ use p3llm::error::{P3Error, Result};
 use p3llm::report::{f2, f3, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
 use p3llm::sched::{victim_by_name, SloClass, TierMix};
+use p3llm::telemetry::{export, flight, summary, Trace, TraceLane};
 use p3llm::traffic::{
     self, ArrivalProcess, LoadReport, RequestMix, Scenario, SloSpec,
 };
@@ -94,6 +95,30 @@ commands:
                       interactive attainment >= 0.9 against a
                       calibrated TTFT budget the FIFO baseline
                       strictly misses
+  trace      request-span tracing + NPU/PIM/bus device timelines: run
+             one scenario traced (sim backend), export a Chrome
+             trace-event JSON (open in Perfetto or about:tracing),
+             print per-lane utilization + the NPU||PIM overlap factor,
+             and flight-dump requests that miss their TTFT budget
+             --scenario NAME (default chat-poisson; --smoke uses
+                      smoke-overload at 2x saturation: preemptions,
+                      bounces, and restores all land in the trace)
+             --system NAME --scheme NAME --seed N --requests N
+             --replicas N --policy NAME    trace a routed fleet (one
+                      track group per replica, shared sink)
+             --tiers I/B/E --victim NAME   (as in loadtest)
+             --out FILE            trace path (default reports/trace.json)
+             --sample-requests K   per-request tracks (default 4)
+             --ring N              event retention bound (default 262144)
+             --flight-on-miss      dump last events of SLO-missing or
+                      errored requests
+             --flight-last N       flight-recorder depth (default 16)
+             --save   also write the utilization table TSV
+             --smoke  CI gate: bit-identical two-run export, nonzero
+                      NPU+PIM+bus busy time, a complete enqueue->retire
+                      span chain, flight recorder fires on an injected
+                      zero TTFT budget, and a telemetry-off run is
+                      report-identical with 0 events recorded
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -108,6 +133,7 @@ fn main() {
         Some("loadtest") => cmd_loadtest(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("overload") => cmd_overload(&args),
+        Some("trace") => cmd_trace(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -259,6 +285,24 @@ fn tier_rows(t: &mut Table, scenario: &str, config: &str, r: &LoadReport) {
             cr.pages_recomputed.to_string(),
         ]);
     }
+}
+
+/// Save a subcommand's primary table -- plus its per-tier companion
+/// when one has rows -- under `p3llm::benchkit::reports_dir()`,
+/// printing each written path.  The one save block `loadtest`,
+/// `cluster`, `overload`, and `trace` share.
+fn save_tables(t: &Table, tiers: Option<&Table>, name: &str) -> Result<()> {
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, name).map_err(|e| P3Error::io(&dir, e))?;
+    println!("saved {}", dir.join(format!("{name}.tsv")).display());
+    if let Some(tt) = tiers {
+        if !tt.rows.is_empty() {
+            let tname = format!("{name}_tiers");
+            tt.save(&dir, &tname).map_err(|e| P3Error::io(&dir, e))?;
+            println!("saved {}", dir.join(format!("{tname}.tsv")).display());
+        }
+    }
+    Ok(())
 }
 
 /// Apply the shared `--tiers I/B/E` and `--victim NAME` overrides.
@@ -675,15 +719,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         tiers_t.print();
     }
     if args.has("save") {
-        let dir = p3llm::benchkit::reports_dir();
-        t.save(&dir, "loadtest").map_err(|e| P3Error::io(&dir, e))?;
-        println!("saved {}", dir.join("loadtest.tsv").display());
-        if !tiers_t.rows.is_empty() {
-            tiers_t
-                .save(&dir, "loadtest_tiers")
-                .map_err(|e| P3Error::io(&dir, e))?;
-            println!("saved {}", dir.join("loadtest_tiers.tsv").display());
-        }
+        save_tables(&t, Some(&tiers_t), "loadtest")?;
     }
     Ok(())
 }
@@ -820,15 +856,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         tiers_t.print();
     }
     if args.has("save") {
-        let dir = p3llm::benchkit::reports_dir();
-        t.save(&dir, "cluster").map_err(|e| P3Error::io(&dir, e))?;
-        println!("saved {}", dir.join("cluster.tsv").display());
-        if !tiers_t.rows.is_empty() {
-            tiers_t
-                .save(&dir, "cluster_tiers")
-                .map_err(|e| P3Error::io(&dir, e))?;
-            println!("saved {}", dir.join("cluster_tiers.tsv").display());
-        }
+        save_tables(&t, Some(&tiers_t), "cluster")?;
     }
     Ok(())
 }
@@ -1092,15 +1120,8 @@ fn cmd_overload(args: &Args) -> Result<()> {
     }
 
     if args.has("save") {
+        save_tables(&t, Some(&tiers_t), "overload")?;
         let dir = p3llm::benchkit::reports_dir();
-        t.save(&dir, "overload").map_err(|e| P3Error::io(&dir, e))?;
-        println!("saved {}", dir.join("overload.tsv").display());
-        if !tiers_t.rows.is_empty() {
-            tiers_t
-                .save(&dir, "overload_tiers")
-                .map_err(|e| P3Error::io(&dir, e))?;
-            println!("saved {}", dir.join("overload_tiers.tsv").display());
-        }
         let json = format!(
             "{{\"bench\":\"overload\",\"scenario\":\"{}\",\
              \"system\":\"{system}\",\"seed\":{seed},\
@@ -1110,6 +1131,232 @@ fn cmd_overload(args: &Args) -> Result<()> {
         let path = dir.join("BENCH_overload.json");
         std::fs::write(&path, json).map_err(|e| P3Error::io(&path, e))?;
         println!("saved {}", path.display());
+    }
+    Ok(())
+}
+
+/// Run one scenario with telemetry on: export a Chrome trace-event
+/// JSON (open in Perfetto or about:tracing), print the per-lane
+/// utilization table and NPU/PIM overlap factor, and flight-dump
+/// requests that missed their TTFT budget or died in an error path.
+/// `--smoke` turns the run into the deterministic CI gate `ci.sh`
+/// wires in.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM").to_string();
+    let scheme = args.get("scheme");
+    let default_sc = if smoke { "smoke-overload" } else { "chat-poisson" };
+    let name = args.get_or("scenario", default_sc);
+    let mut sc = traffic::scenario_by_name(name).ok_or_else(|| {
+        P3Error::InvalidConfig(format!(
+            "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+        ))
+    })?;
+    if args.get("requests").is_some() {
+        sc.n_requests = args.get_usize("requests", 1)?.max(1);
+    }
+    apply_tier_flags(args, std::slice::from_mut(&mut sc))?;
+    if smoke {
+        // overload at 2x saturation with the swap victim: preemptions,
+        // restores, bounces, and bus traffic all show up in the trace
+        sc = sc.with_load_factor(&system, 2.0, seed)?;
+        if sc.tiers.is_none() {
+            sc.tiers = Some(TierMix::mixed());
+        }
+        if sc.victim.is_none() {
+            sc.victim = Some("swap");
+        }
+    }
+    let replicas = args.get_usize("replicas", 1)?.max(1);
+    let policy = args.get_or("policy", "jsq").to_string();
+    if policy_by_name(&policy).is_none() {
+        return Err(P3Error::InvalidConfig(format!(
+            "unknown routing policy {policy:?} (see `p3llm cluster --list`)"
+        )));
+    }
+    let ring = args.get_usize("ring", 1 << 18)?.max(1);
+    let sample_k = args.get_usize("sample-requests", 4)?;
+    let flight_last = args.get_usize("flight-last", 16)?.max(1);
+    let flight_on_miss = args.has("flight-on-miss") || smoke;
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => p3llm::benchkit::reports_dir().join("trace.json"),
+    };
+
+    let run = |trace: &Trace| -> Result<LoadReport> {
+        if replicas > 1 {
+            let fleet_sc = sc.clone().for_fleet(replicas)?;
+            let mut cl = Cluster::from_scenario_traced(
+                &sc, &system, scheme, replicas, &policy, trace,
+            )?;
+            let out = cl
+                .run(&fleet_sc.runner(seed), sc.saturation_tok_s(&system))?;
+            Ok(out.report.fleet)
+        } else {
+            let mut engine = sc.engine(&system, scheme)?;
+            engine.set_trace(trace.clone());
+            let plan = sc.runner(seed);
+            let out = plan.run_with_saturation(
+                &mut engine,
+                sc.saturation_tok_s(&system),
+            )?;
+            Ok(out.report)
+        }
+    };
+
+    let trace = Trace::ring(ring);
+    let report = run(&trace)?;
+    let events = trace.snapshot();
+    let sampled = export::sample_requests(&events, sample_k);
+    let json = export::chrome_trace_json(&events, &sampled);
+
+    print_load_report(&report);
+    let util = summary::utilization(&events);
+    util.table().print();
+    if !util.overlap.is_empty() {
+        println!("{}", util.overlap_lines());
+    }
+    println!(
+        "trace: {} events recorded ({} dropped), {} request tracks sampled",
+        events.len(),
+        trace.dropped(),
+        sampled.len()
+    );
+
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| P3Error::io(dir, e))?;
+        }
+    }
+    std::fs::write(&out_path, &json)
+        .map_err(|e| P3Error::io(&out_path, e))?;
+    println!("saved {}", out_path.display());
+    if args.has("save") {
+        save_tables(&util.table(), None, "trace_util")?;
+    }
+
+    if flight_on_miss {
+        // judge TTFT against the scenario's own budget (scaled per
+        // tier); the smoke gate injects an impossible zero budget so
+        // the recorder provably fires
+        let base_ttft = if smoke { 0.0 } else { sc.slo.ttft_ms };
+        let mut dumps: Vec<(u32, u64, Option<f64>)> =
+            flight::ttft_misses(&events, base_ttft)
+                .into_iter()
+                .map(|(rep, rid, ttft)| (rep, rid, Some(ttft)))
+                .collect();
+        for (rep, rid) in flight::error_requests(&events) {
+            if !dumps.iter().any(|d| d.0 == rep && d.1 == rid) {
+                dumps.push((rep, rid, None));
+            }
+        }
+        if dumps.is_empty() {
+            println!("flight recorder: no SLO misses, nothing to dump");
+        }
+        for (i, (rep, rid, ttft)) in dumps.iter().enumerate() {
+            if i >= 3 {
+                println!(
+                    "flight recorder: ... {} more missing requests \
+                     (not dumped)",
+                    dumps.len() - i
+                );
+                break;
+            }
+            let why = match ttft {
+                Some(t) => format!("TTFT {t:.3} ms over budget"),
+                None => "error terminal".into(),
+            };
+            println!(
+                "flight recorder: replica {rep} request {rid} ({why}), \
+                 last {flight_last} events:"
+            );
+            println!(
+                "{}",
+                flight::render(&flight::flight_dump(
+                    &events,
+                    *rep,
+                    *rid,
+                    flight_last
+                ))
+            );
+        }
+    }
+
+    if smoke {
+        // (a) a second identical in-process run must export
+        // byte-identical JSON (ci.sh additionally diffs two processes)
+        let trace2 = Trace::ring(ring);
+        let report2 = run(&trace2)?;
+        let events2 = trace2.snapshot();
+        let json2 = export::chrome_trace_json(
+            &events2,
+            &export::sample_requests(&events2, sample_k),
+        );
+        if json2 != json || report2 != report {
+            return Err(P3Error::Serve(
+                "trace smoke gate: two identical runs disagreed \
+                 (nondeterminism)"
+                    .into(),
+            ));
+        }
+        if trace.dropped() > 0 {
+            return Err(P3Error::Serve(format!(
+                "trace smoke gate: ring dropped {} events (raise --ring)",
+                trace.dropped()
+            )));
+        }
+        // (b) the device timelines must actually light up
+        for lane in [TraceLane::Npu, TraceLane::Pim, TraceLane::Bus] {
+            let busy: f64 = (0..replicas as u32)
+                .map(|r| util.busy_ms(r, lane))
+                .sum();
+            if !(busy > 0.0) {
+                return Err(P3Error::Serve(format!(
+                    "trace smoke gate: {} lane shows zero busy time",
+                    lane.name()
+                )));
+            }
+        }
+        // (c) at least one complete enqueue -> retire span chain
+        let complete =
+            events.iter().filter(|e| e.name == "retire").any(|e| {
+                events.iter().any(|q| {
+                    q.name == "enqueue"
+                        && q.replica == e.replica
+                        && q.rid == e.rid
+                })
+            });
+        if !complete {
+            return Err(P3Error::Serve(
+                "trace smoke gate: no complete enqueue->retire span chain"
+                    .into(),
+            ));
+        }
+        // (d) the flight recorder fired on the injected zero budget
+        if flight::ttft_misses(&events, 0.0).is_empty() {
+            return Err(P3Error::Serve(
+                "trace smoke gate: flight recorder found no TTFT misses \
+                 under a zero budget"
+                    .into(),
+            ));
+        }
+        // (e) zero-overhead proof: the same run with telemetry off
+        // must produce an identical report and record nothing
+        let off = Trace::off();
+        let plain = run(&off)?;
+        if plain != report {
+            return Err(P3Error::Serve(
+                "trace smoke gate: disabled telemetry perturbed the run"
+                    .into(),
+            ));
+        }
+        println!(
+            "smoke gate: deterministic export, all device lanes busy, \
+             complete request chains, flight recorder fired; telemetry \
+             off: report identical, {} events recorded",
+            off.snapshot().len()
+        );
     }
     Ok(())
 }

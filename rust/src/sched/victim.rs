@@ -29,6 +29,18 @@ pub enum VictimMode {
     Swap,
 }
 
+impl VictimMode {
+    /// Stable telemetry event name of a preemption under this mode --
+    /// what pairs a `preempt:*` instant with its later `recompute` /
+    /// `restore` span in the trace (see the DESIGN.md event schema).
+    pub fn event_name(self) -> &'static str {
+        match self {
+            VictimMode::Recompute => "preempt:recompute",
+            VictimMode::Swap => "preempt:swap",
+        }
+    }
+}
+
 /// One preemptible in-flight decode, as the selector sees it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct VictimCandidate {

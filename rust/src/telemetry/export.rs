@@ -1,0 +1,209 @@
+//! Chrome trace-event JSON export (loadable in Perfetto / about:tracing).
+//!
+//! Track layout: one *process* per replica, with one *thread* per
+//! device lane (`host` / `npu` / `pim` / `bus`) plus one thread per
+//! sampled request (its host-lane lifecycle events move onto that
+//! track, so a request's journey reads as a single row).  Timestamps
+//! convert from engine-clock ms to the trace format's microseconds.
+//!
+//! The output is deterministic: events sort by `(ts, seq)`, floats
+//! print with fixed precision, and track metadata is emitted in sorted
+//! order -- two same-seed runs export byte-identical JSON (a CI gate).
+
+use std::collections::BTreeSet;
+
+use super::{EventKind, TraceEvent, TraceLane};
+
+/// First `k` distinct requests by appearance (emission order) -- the
+/// default sampling the `trace` subcommand uses for per-request
+/// tracks.  Keys are `(replica, rid)`: request ids are per-replica
+/// counters, so the pair is the only cross-replica-unique identity.
+pub fn sample_requests(events: &[TraceEvent], k: usize) -> Vec<(u32, u64)> {
+    let mut seen = BTreeSet::new();
+    let mut out = vec![];
+    let mut by_seq: Vec<&TraceEvent> = events.iter().collect();
+    by_seq.sort_by_key(|e| e.seq);
+    for e in by_seq {
+        if let Some(rid) = e.rid {
+            if out.len() < k && seen.insert((e.replica, rid)) {
+                out.push((e.replica, rid));
+            }
+        }
+    }
+    out
+}
+
+fn push_args(out: &mut String, e: &TraceEvent) {
+    out.push_str("\"args\":{");
+    let mut first = true;
+    let mut field = |out: &mut String, s: String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&s);
+    };
+    if let Some(rid) = e.rid {
+        field(out, format!("\"rid\":{rid}"));
+    }
+    if let Some(c) = e.class {
+        field(out, format!("\"class\":\"{}\"", c.name()));
+    }
+    field(out, format!("\"value\":{:.3}", e.value));
+    out.push('}');
+}
+
+/// Render `events` as Chrome trace-event JSON.  `sampled` request keys
+/// (see [`sample_requests`]) get their own per-request track; every
+/// other event lands on its replica x lane track.
+pub fn chrome_trace_json(
+    events: &[TraceEvent],
+    sampled: &[(u32, u64)],
+) -> String {
+    let req_tid = |replica: u32, rid: u64| -> Option<u32> {
+        sampled
+            .iter()
+            .position(|&(rep, r)| rep == replica && r == rid)
+            .map(|i| 16 + i as u32)
+    };
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.ts_ms.total_cmp(&b.ts_ms).then(a.seq.cmp(&b.seq))
+    });
+    // track metadata in deterministic order
+    let mut replicas = BTreeSet::new();
+    let mut lanes = BTreeSet::new();
+    for e in events {
+        replicas.insert(e.replica);
+        lanes.insert((e.replica, e.lane));
+    }
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |out: &mut String, line: String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&line);
+    };
+    for &rep in &replicas {
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{rep},\
+                 \"tid\":0,\"args\":{{\"name\":\"replica {rep}\"}}}}"
+            ),
+        );
+    }
+    for &(rep, lane) in &lanes {
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{rep},\
+                 \"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                lane.index(),
+                lane.name()
+            ),
+        );
+    }
+    for (i, &(rep, rid)) in sampled.iter().enumerate() {
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{rep},\
+                 \"tid\":{},\"args\":{{\"name\":\"req {rid}\"}}}}",
+                16 + i
+            ),
+        );
+    }
+    for e in sorted {
+        let tid = match (e.rid, e.lane) {
+            (Some(rid), TraceLane::Host) => {
+                req_tid(e.replica, rid).unwrap_or(e.lane.index())
+            }
+            _ => e.lane.index(),
+        };
+        let ts_us = e.ts_ms * 1e3;
+        let mut line = format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"pid\":{},\"tid\":{tid},\
+             \"ts\":{ts_us:.3},",
+            e.name,
+            e.lane.name(),
+            e.replica
+        );
+        match e.kind {
+            EventKind::Span => {
+                line.push_str(&format!(
+                    "\"ph\":\"X\",\"dur\":{:.3},",
+                    e.dur_ms * 1e3
+                ));
+            }
+            EventKind::Instant => {
+                line.push_str("\"ph\":\"i\",\"s\":\"t\",");
+            }
+            EventKind::Counter => {
+                line.push_str("\"ph\":\"C\",");
+            }
+        }
+        push_args(&mut line, e);
+        line.push('}');
+        push(&mut out, line);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Trace;
+
+    fn demo_events() -> Vec<TraceEvent> {
+        let t = Trace::ring(64);
+        let r1 = t.for_replica(1);
+        t.instant("enqueue", 0.0, Some(1), None, 3.0);
+        t.span(TraceLane::Npu, "prefill", 0.0, 2.0, None, None, 3.0);
+        t.span(TraceLane::Pim, "qk", 2.0, 2.5, None, None, 8.0);
+        r1.instant("retire", 4.0, Some(1), None, 2.0);
+        t.counter("kv_used_bytes", 4.0, 1024.0);
+        t.snapshot()
+    }
+
+    #[test]
+    fn sampling_is_first_seen_and_replica_aware() {
+        let evs = demo_events();
+        let s = sample_requests(&evs, 4);
+        assert_eq!(s, vec![(0, 1), (1, 1)]);
+        assert_eq!(sample_requests(&evs, 1), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn export_emits_tracks_and_phases() {
+        let evs = demo_events();
+        let json = chrome_trace_json(&evs, &sample_requests(&evs, 2));
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("replica 0"));
+        assert!(json.contains("replica 1"));
+        assert!(json.contains("\"name\":\"npu\""));
+        assert!(json.contains("\"name\":\"pim\""));
+        assert!(json.contains("req 1"));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"ph\":\"C\""));
+        // sampled request events moved off the shared host track
+        assert!(json.contains("\"tid\":16"));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = {
+            let e = demo_events();
+            chrome_trace_json(&e, &sample_requests(&e, 2))
+        };
+        let b = {
+            let e = demo_events();
+            chrome_trace_json(&e, &sample_requests(&e, 2))
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,162 @@
+//! Flight recorder: reconstruct the last N events of one request's
+//! history from a (possibly ring-truncated) trace -- the post-mortem
+//! view for requests that missed their SLO or died in an error path.
+//!
+//! The [`RingSink`](super::RingSink) drops *oldest* events first, so
+//! the tail every dump needs is exactly what a bounded sink retains on
+//! long runs.
+
+use super::TraceEvent;
+
+/// Last `last_n` events of request `(replica, rid)`, in emission
+/// order.  Device-lane events carry no request id and are not
+/// attributed; the request's own host-lane history is what dumps.
+pub fn flight_dump(
+    events: &[TraceEvent],
+    replica: u32,
+    rid: u64,
+    last_n: usize,
+) -> Vec<TraceEvent> {
+    let mut mine: Vec<TraceEvent> = events
+        .iter()
+        .filter(|e| e.replica == replica && e.rid == Some(rid))
+        .copied()
+        .collect();
+    mine.sort_by_key(|e| e.seq);
+    let skip = mine.len().saturating_sub(last_n);
+    mine.split_off(skip)
+}
+
+/// Requests that hit an error terminal (`"error"` event) -- always
+/// flight-dump candidates, independent of SLO judging.
+pub fn error_requests(events: &[TraceEvent]) -> Vec<(u32, u64)> {
+    let mut out: Vec<(u32, u64)> = events
+        .iter()
+        .filter(|e| e.name == "error")
+        .filter_map(|e| e.rid.map(|r| (e.replica, r)))
+        .collect();
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Requests whose event-derived TTFT (`enqueue` to `first_token`)
+/// exceeds `base_ttft_ms` scaled by their tier's
+/// [`slo_factor`](crate::sched::SloClass::slo_factor) -- the SLO-miss
+/// detector behind `trace --flight-on-miss`.  Returns sorted
+/// `(replica, rid, ttft_ms)` triples; requests whose `enqueue` was
+/// ring-dropped are skipped (no start time, no verdict).
+pub fn ttft_misses(
+    events: &[TraceEvent],
+    base_ttft_ms: f64,
+) -> Vec<(u32, u64, f64)> {
+    let mut out = vec![];
+    for e in events.iter().filter(|e| e.name == "first_token") {
+        let Some(rid) = e.rid else { continue };
+        let Some(enq) = events.iter().find(|q| {
+            q.name == "enqueue" && q.replica == e.replica && q.rid == e.rid
+        }) else {
+            continue;
+        };
+        let ttft = e.ts_ms - enq.ts_ms;
+        let budget =
+            base_ttft_ms * e.class.map(|c| c.slo_factor()).unwrap_or(1.0);
+        if ttft > budget {
+            out.push((e.replica, rid, ttft));
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.0, a.1).cmp(&(b.0, b.1)).then(a.2.total_cmp(&b.2))
+    });
+    out.dedup_by_key(|m| (m.0, m.1));
+    out
+}
+
+/// Render one dump as indented human-readable lines (what the `trace`
+/// subcommand prints under `--flight-on-miss`).
+pub fn render(events: &[TraceEvent]) -> String {
+    events
+        .iter()
+        .map(|e| {
+            let span = if e.dur_ms > 0.0 {
+                format!(" +{:.3}ms", e.dur_ms)
+            } else {
+                String::new()
+            };
+            let class = e
+                .class
+                .map(|c| format!(" class={}", c.name()))
+                .unwrap_or_default();
+            format!(
+                "  {:>12.3} ms  {:<16}{span}{class} value={:.1}",
+                e.ts_ms, e.name, e.value
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Trace, TraceLane};
+
+    #[test]
+    fn dump_keeps_the_tail_in_order() {
+        let t = Trace::ring(64);
+        t.instant("enqueue", 0.0, Some(7), None, 1.0);
+        for i in 0..5 {
+            t.instant("token", 1.0 + i as f64, Some(7), None, i as f64);
+        }
+        t.instant("retire", 9.0, Some(7), None, 5.0);
+        t.instant("enqueue", 0.5, Some(8), None, 1.0);
+        let d = flight_dump(&t.snapshot(), 0, 7, 3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].name, "token");
+        assert_eq!(d[2].name, "retire");
+        assert!(d.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(flight_dump(&t.snapshot(), 1, 7, 3).is_empty());
+    }
+
+    #[test]
+    fn error_terminals_are_found() {
+        let t = Trace::ring(16);
+        t.instant("enqueue", 0.0, Some(3), None, 0.0);
+        t.instant("error", 1.0, Some(3), None, 0.0);
+        t.for_replica(2).instant("error", 1.0, Some(4), None, 0.0);
+        assert_eq!(error_requests(&t.snapshot()), vec![(0, 3), (2, 4)]);
+    }
+
+    #[test]
+    fn ttft_misses_scale_budgets_by_tier() {
+        use crate::sched::SloClass;
+        let t = Trace::ring(32);
+        // interactive: ttft 5 vs budget 2 -> miss
+        t.instant("enqueue", 0.0, Some(1), Some(SloClass::Interactive), 0.0);
+        t.instant(
+            "first_token",
+            5.0,
+            Some(1),
+            Some(SloClass::Interactive),
+            0.0,
+        );
+        // batch: ttft 5 vs budget 2*4 -> within budget
+        t.instant("enqueue", 0.0, Some(2), Some(SloClass::Batch), 0.0);
+        t.instant("first_token", 5.0, Some(2), Some(SloClass::Batch), 0.0);
+        let misses = ttft_misses(&t.snapshot(), 2.0);
+        assert_eq!(misses.len(), 1);
+        assert_eq!((misses[0].0, misses[0].1), (0, 1));
+        assert!((misses[0].2 - 5.0).abs() < 1e-9);
+        // a zero budget flags everyone (the smoke gate's injected miss)
+        assert_eq!(ttft_misses(&t.snapshot(), 0.0).len(), 2);
+    }
+
+    #[test]
+    fn render_mentions_names_and_spans() {
+        let t = Trace::ring(8);
+        t.span(TraceLane::Host, "prefill", 1.0, 3.0, Some(1), None, 4.0);
+        let s = render(&t.snapshot());
+        assert!(s.contains("prefill"));
+        assert!(s.contains("+2.000ms"));
+    }
+}

@@ -1,0 +1,385 @@
+//! Structured tracing across the serving stack: request-span events,
+//! NPU/PIM/bus device timelines, Perfetto export, and a flight
+//! recorder -- zero-cost when disabled.
+//!
+//! The stack's terminal aggregates ([`Metrics`](crate::Metrics),
+//! [`LoadReport`](crate::LoadReport)) say *how much* time went where;
+//! this layer says *where it went*: every request's journey (enqueue
+//! -> admit/bounce -> prefill tiles -> decode steps -> preempt/restore
+//! -> retire) and every device lane's occupancy (NPU, PIM, DRAM bus)
+//! as timestamped events on the engine clock (simulated ms for the sim
+//! backend, wall ms for PJRT).
+//!
+//! The [`Trace`] handle is the whole integration surface: a cheap
+//! cloneable reference to a shared [`TraceSink`] plus a replica tag.
+//! A disabled handle ([`Trace::off`], the default everywhere) makes
+//! every emit a no-op branch, so untraced runs stay bit-identical --
+//! `ci.sh` proves this by diffing `loadtest --smoke` output.  Enable
+//! with [`Trace::ring`] and thread the handle through
+//! [`EngineBuilder::telemetry`](crate::EngineBuilder::telemetry) (or
+//! [`Engine::set_trace`](crate::Engine::set_trace)); a cluster gives
+//! each replica a [`Trace::for_replica`] clone of one shared sink, so
+//! fleet events merge by construction.
+//!
+//! Exporters live in the submodules: [`export`] (Chrome trace-event
+//! JSON, loadable in Perfetto), [`summary`] (busy%, idle gaps, and the
+//! NPU/PIM overlap factor ROADMAP item 1 is gated on), and [`flight`]
+//! (last-N-events dump for requests that miss their SLO or die in an
+//! error path).  `p3llm trace` drives all three from the CLI.
+//!
+//! ```
+//! use p3llm::telemetry::Trace;
+//! use p3llm::EngineBuilder;
+//! # fn main() -> p3llm::Result<()> {
+//! let trace = Trace::ring(4096);
+//! let mut eng = EngineBuilder::sim()
+//!     .model("tiny-1M")
+//!     .max_batch(2)
+//!     .ctx_limit(128)
+//!     .telemetry(trace.clone())
+//!     .build()?;
+//! eng.submit(vec![1, 2, 3], 4)?;
+//! eng.run_to_completion()?;
+//! let events = trace.snapshot();
+//! assert!(events.iter().any(|e| e.name == "retire"));
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod export;
+pub mod flight;
+pub mod summary;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::sched::SloClass;
+
+/// Which timeline an event lives on.  `Host` carries the request
+/// lifecycle and engine-level spans; the other three are the device
+/// occupancy tracks the sim backend emits per operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceLane {
+    /// engine/request lifecycle (enqueue, admit, prefill, retire, ...)
+    Host,
+    /// NPU compute occupancy (prefill tiles, NPU-mapped decode ops)
+    Npu,
+    /// PIM compute occupancy (PIM-mapped decode ops)
+    Pim,
+    /// DRAM/external-bus transfers (PIM result return, KV install,
+    /// swap restore)
+    Bus,
+}
+
+impl TraceLane {
+    /// Stable lower-case lane name (track labels, JSON categories).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLane::Host => "host",
+            TraceLane::Npu => "npu",
+            TraceLane::Pim => "pim",
+            TraceLane::Bus => "bus",
+        }
+    }
+
+    /// Stable small index (Chrome trace `tid` for device tracks).
+    pub fn index(self) -> u32 {
+        match self {
+            TraceLane::Host => 0,
+            TraceLane::Npu => 1,
+            TraceLane::Pim => 2,
+            TraceLane::Bus => 3,
+        }
+    }
+}
+
+/// Event shape: a duration span, a point-in-time marker, or a sampled
+/// counter value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// `[ts_ms, ts_ms + dur_ms]` occupancy on a lane
+    Span,
+    /// point event (`dur_ms` is 0)
+    Instant,
+    /// sampled value (`value` holds the sample; `dur_ms` is 0)
+    Counter,
+}
+
+/// One structured trace event.  `seq` is the sink-assigned emission
+/// order -- the deterministic tiebreak for equal timestamps and the
+/// key exporters sort by.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// emission order within the sink (assigned by [`TraceSink::record`])
+    pub seq: u64,
+    /// start time on the engine clock (ms)
+    pub ts_ms: f64,
+    /// span duration (0 for instants and counters)
+    pub dur_ms: f64,
+    pub kind: EventKind,
+    pub lane: TraceLane,
+    /// stable event name (see the DESIGN.md event-schema table)
+    pub name: &'static str,
+    /// request the event belongs to (None for device/engine events).
+    /// Request ids are per-replica counters: the cross-replica key is
+    /// `(replica, rid)`.
+    pub rid: Option<u64>,
+    /// SLO tier of the request (when known)
+    pub class: Option<SloClass>,
+    /// replica tag ([`Trace::for_replica`]; 0 for a single engine)
+    pub replica: u32,
+    /// event payload: tokens for prefill/hit events, pages for
+    /// preemptions, batch size for decode steps, the sample for
+    /// counters, bytes for transfers
+    pub value: f64,
+}
+
+/// Destination for trace events.  Implementations must assign `seq`
+/// in [`record`](TraceSink::record) and may bound retention (dropping
+/// *oldest* first) -- the bundled [`RingSink`] does both.
+pub trait TraceSink {
+    /// Append one event, stamping its `seq`.
+    fn record(&mut self, ev: TraceEvent);
+    /// Retained events, oldest first.
+    fn snapshot(&self) -> Vec<TraceEvent>;
+    /// Events discarded so far to stay within the retention bound.
+    fn dropped(&self) -> usize;
+}
+
+/// Bounded ring-buffer sink: keeps the newest `cap` events, counts
+/// what it dropped.  The drop-oldest policy is what makes the flight
+/// recorder work on long runs -- the tail of every request's history
+/// survives.
+#[derive(Debug)]
+pub struct RingSink {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+    dropped: usize,
+    next_seq: u64,
+}
+
+impl RingSink {
+    /// `cap` >= 1 retained events (0 is clamped to 1).
+    pub fn new(cap: usize) -> Self {
+        RingSink {
+            cap: cap.max(1),
+            buf: VecDeque::new(),
+            dropped: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Retention bound this ring was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&mut self, mut ev: TraceEvent) {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    fn snapshot(&self) -> Vec<TraceEvent> {
+        self.buf.iter().copied().collect()
+    }
+
+    fn dropped(&self) -> usize {
+        self.dropped
+    }
+}
+
+/// Cheap cloneable tracing handle: a shared [`TraceSink`] plus the
+/// replica tag stamped on every event this clone emits.  The default
+/// ([`Trace::off`]) is disabled -- every emit returns after one branch
+/// and no event is ever constructed, which is the zero-overhead path
+/// the whole stack ships with.
+#[derive(Clone, Default)]
+pub struct Trace {
+    sink: Option<Rc<RefCell<Box<dyn TraceSink>>>>,
+    replica: u32,
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace")
+            .field("enabled", &self.enabled())
+            .field("replica", &self.replica)
+            .finish()
+    }
+}
+
+impl Trace {
+    /// Disabled handle (the default): emits are no-ops, snapshots are
+    /// empty.
+    pub fn off() -> Self {
+        Trace::default()
+    }
+
+    /// Enabled handle over a fresh [`RingSink`] retaining `cap` events.
+    pub fn ring(cap: usize) -> Self {
+        Trace::with_sink(Box::new(RingSink::new(cap)))
+    }
+
+    /// Enabled handle over a caller-provided sink.
+    pub fn with_sink(sink: Box<dyn TraceSink>) -> Self {
+        Trace { sink: Some(Rc::new(RefCell::new(sink))), replica: 0 }
+    }
+
+    /// Is this handle recording?
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Replica tag this handle stamps on its events.
+    pub fn replica_id(&self) -> u32 {
+        self.replica
+    }
+
+    /// Clone sharing the same sink but tagging events with `replica`
+    /// -- how a cluster merges per-replica streams into one timeline.
+    pub fn for_replica(&self, replica: u32) -> Trace {
+        Trace { sink: self.sink.clone(), replica }
+    }
+
+    fn record(&self, kind: EventKind, lane: TraceLane, name: &'static str,
+        ts_ms: f64, dur_ms: f64, rid: Option<u64>, class: Option<SloClass>,
+        value: f64)
+    {
+        let Some(sink) = &self.sink else { return };
+        sink.borrow_mut().record(TraceEvent {
+            seq: 0,
+            ts_ms,
+            dur_ms,
+            kind,
+            lane,
+            name,
+            rid,
+            class,
+            replica: self.replica,
+            value,
+        });
+    }
+
+    /// Emit a `[t0_ms, t1_ms]` occupancy span on `lane`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(&self, lane: TraceLane, name: &'static str, t0_ms: f64,
+        t1_ms: f64, rid: Option<u64>, class: Option<SloClass>, value: f64)
+    {
+        self.record(
+            EventKind::Span,
+            lane,
+            name,
+            t0_ms,
+            (t1_ms - t0_ms).max(0.0),
+            rid,
+            class,
+            value,
+        );
+    }
+
+    /// Emit a lifecycle point event (always on the [`TraceLane::Host`]
+    /// lane).
+    pub fn instant(&self, name: &'static str, ts_ms: f64, rid: Option<u64>,
+        class: Option<SloClass>, value: f64)
+    {
+        self.record(
+            EventKind::Instant,
+            TraceLane::Host,
+            name,
+            ts_ms,
+            0.0,
+            rid,
+            class,
+            value,
+        );
+    }
+
+    /// Emit a sampled counter value (host lane, no request).
+    pub fn counter(&self, name: &'static str, ts_ms: f64, value: f64) {
+        self.record(
+            EventKind::Counter,
+            TraceLane::Host,
+            name,
+            ts_ms,
+            0.0,
+            None,
+            None,
+            value,
+        );
+    }
+
+    /// Snapshot of the sink's retained events (empty when disabled).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        match &self.sink {
+            Some(s) => s.borrow().snapshot(),
+            None => vec![],
+        }
+    }
+
+    /// Events the sink discarded to stay bounded (0 when disabled).
+    pub fn dropped(&self) -> usize {
+        match &self.sink {
+            Some(s) => s.borrow().dropped(),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::off();
+        assert!(!t.enabled());
+        t.instant("enqueue", 1.0, Some(1), None, 0.0);
+        t.span(TraceLane::Npu, "prefill", 0.0, 2.0, None, None, 0.0);
+        t.counter("kv_used_bytes", 3.0, 42.0);
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_sink_keeps_newest_and_counts_drops() {
+        let t = Trace::ring(8);
+        for i in 0..100 {
+            t.instant("tick", i as f64, None, None, i as f64);
+        }
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 8);
+        assert_eq!(t.dropped(), 92);
+        // newest survive, in emission order, with monotone seq
+        assert_eq!(evs[0].value, 92.0);
+        assert_eq!(evs[7].value, 99.0);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn replica_clones_share_one_sink() {
+        let t = Trace::ring(64);
+        let r1 = t.for_replica(1);
+        t.instant("enqueue", 0.0, Some(1), None, 0.0);
+        r1.instant("enqueue", 0.0, Some(1), None, 0.0);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].replica, 0);
+        assert_eq!(evs[1].replica, 1);
+        assert_eq!(r1.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn span_clamps_negative_durations() {
+        let t = Trace::ring(4);
+        t.span(TraceLane::Bus, "xfer", 5.0, 4.0, None, None, 0.0);
+        assert_eq!(t.snapshot()[0].dur_ms, 0.0);
+    }
+}

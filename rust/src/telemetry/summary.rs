@@ -1,0 +1,248 @@
+//! Derived utilization view of a trace: per replica x device lane busy
+//! time, idle gaps, and the NPU/PIM overlap factor -- the metric the
+//! ROADMAP's sub-batch interleaving work (item 1) is gated on: today's
+//! engine serializes operators, so the factor reports ~0 and the
+//! overlap PR must move it.
+
+use crate::report::{f2, Table};
+
+use super::{EventKind, TraceEvent, TraceLane};
+
+/// Busy/idle statistics of one replica x lane track.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneStat {
+    pub replica: u32,
+    pub lane: TraceLane,
+    /// union of the lane's span intervals (double-counts nothing)
+    pub busy_ms: f64,
+    /// busy_ms / the trace's wall window
+    pub busy_frac: f64,
+    pub spans: usize,
+    /// gaps between consecutive busy intervals on this lane
+    pub idle_gaps: usize,
+    pub max_gap_ms: f64,
+}
+
+/// Per-replica NPU/PIM concurrency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapStat {
+    pub replica: u32,
+    /// time both the NPU and PIM lanes were busy simultaneously
+    pub overlap_ms: f64,
+    /// overlap_ms / min(npu busy, pim busy): 0 = fully serialized,
+    /// 1 = the less-busy engine is always covered by the other
+    pub factor: f64,
+}
+
+/// Whole-trace utilization summary ([`utilization`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilSummary {
+    /// wall window covered by the trace (first ts to last span end)
+    pub wall_ms: f64,
+    pub lanes: Vec<LaneStat>,
+    pub overlap: Vec<OverlapStat>,
+}
+
+/// Merge sorted-or-not intervals into a disjoint ascending union.
+fn merged(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut out: Vec<(f64, f64)> = vec![];
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 + 1e-9 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn span_ms(iv: &[(f64, f64)]) -> f64 {
+    iv.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Intersection length of two disjoint ascending interval unions.
+fn overlap_ms(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let (mut i, mut j, mut total) = (0, 0, 0.0);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 < b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+/// Compute the utilization summary of an event stream.  Only `Span`
+/// events contribute occupancy; instants and counters shape nothing
+/// here.  Deterministic for a deterministic trace.
+pub fn utilization(events: &[TraceEvent]) -> UtilSummary {
+    let spans: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.kind == EventKind::Span).collect();
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for e in events {
+        t_min = t_min.min(e.ts_ms);
+        t_max = t_max.max(e.ts_ms + e.dur_ms);
+    }
+    let wall_ms = if t_max > t_min { t_max - t_min } else { 0.0 };
+    let mut keys: Vec<(u32, TraceLane)> =
+        spans.iter().map(|e| (e.replica, e.lane)).collect();
+    keys.sort();
+    keys.dedup();
+    let mut lanes = vec![];
+    let mut replicas: Vec<u32> = keys.iter().map(|k| k.0).collect();
+    replicas.dedup();
+    let lane_union = |replica: u32, lane: TraceLane| {
+        merged(
+            spans
+                .iter()
+                .filter(|e| e.replica == replica && e.lane == lane)
+                .map(|e| (e.ts_ms, e.ts_ms + e.dur_ms))
+                .collect(),
+        )
+    };
+    for &(replica, lane) in &keys {
+        let union = lane_union(replica, lane);
+        let busy = span_ms(&union);
+        let mut idle_gaps = 0;
+        let mut max_gap = 0.0f64;
+        for w in union.windows(2) {
+            let gap = w[1].0 - w[0].1;
+            if gap > 1e-9 {
+                idle_gaps += 1;
+                max_gap = max_gap.max(gap);
+            }
+        }
+        lanes.push(LaneStat {
+            replica,
+            lane,
+            busy_ms: busy,
+            busy_frac: if wall_ms > 0.0 { busy / wall_ms } else { 0.0 },
+            spans: spans
+                .iter()
+                .filter(|e| e.replica == replica && e.lane == lane)
+                .count(),
+            idle_gaps,
+            max_gap_ms: max_gap,
+        });
+    }
+    let overlap = replicas
+        .iter()
+        .map(|&replica| {
+            let npu = lane_union(replica, TraceLane::Npu);
+            let pim = lane_union(replica, TraceLane::Pim);
+            let o = overlap_ms(&npu, &pim);
+            let floor = span_ms(&npu).min(span_ms(&pim));
+            OverlapStat {
+                replica,
+                overlap_ms: o,
+                factor: if floor > 0.0 { o / floor } else { 0.0 },
+            }
+        })
+        .collect();
+    UtilSummary { wall_ms, lanes, overlap }
+}
+
+impl UtilSummary {
+    /// Busy time of one replica's lane (0 when the lane never ran).
+    pub fn busy_ms(&self, replica: u32, lane: TraceLane) -> f64 {
+        self.lanes
+            .iter()
+            .find(|l| l.replica == replica && l.lane == lane)
+            .map(|l| l.busy_ms)
+            .unwrap_or(0.0)
+    }
+
+    /// Render the per-lane rows as a printable [`Table`].
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!("device utilization over {:.1} ms", self.wall_ms),
+            &[
+                "replica", "lane", "busy ms", "busy %", "spans",
+                "idle gaps", "max gap ms",
+            ],
+        );
+        for l in &self.lanes {
+            t.row(vec![
+                l.replica.to_string(),
+                l.lane.name().into(),
+                f2(l.busy_ms),
+                f2(l.busy_frac * 100.0),
+                l.spans.to_string(),
+                l.idle_gaps.to_string(),
+                f2(l.max_gap_ms),
+            ]);
+        }
+        t
+    }
+
+    /// One-line overlap report per replica (the `trace` subcommand
+    /// prints this; `trace --smoke` greps for "overlap factor").
+    pub fn overlap_lines(&self) -> String {
+        self.overlap
+            .iter()
+            .map(|o| {
+                format!(
+                    "replica {}: NPU||PIM overlap factor {:.3} \
+                     ({:.2} ms concurrent)",
+                    o.replica, o.factor, o.overlap_ms
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Trace;
+
+    #[test]
+    fn busy_gaps_and_overlap() {
+        let t = Trace::ring(64);
+        // npu: [0,2] + [5,6]; pim: [1,3]; overlap [1,2]
+        t.span(TraceLane::Npu, "a", 0.0, 2.0, None, None, 0.0);
+        t.span(TraceLane::Npu, "b", 5.0, 6.0, None, None, 0.0);
+        t.span(TraceLane::Pim, "c", 1.0, 3.0, None, None, 0.0);
+        let u = utilization(&t.snapshot());
+        assert!((u.wall_ms - 6.0).abs() < 1e-9);
+        assert!((u.busy_ms(0, TraceLane::Npu) - 3.0).abs() < 1e-9);
+        assert!((u.busy_ms(0, TraceLane::Pim) - 2.0).abs() < 1e-9);
+        let npu = u
+            .lanes
+            .iter()
+            .find(|l| l.lane == TraceLane::Npu)
+            .unwrap();
+        assert_eq!(npu.idle_gaps, 1);
+        assert!((npu.max_gap_ms - 3.0).abs() < 1e-9);
+        let o = &u.overlap[0];
+        assert!((o.overlap_ms - 1.0).abs() < 1e-9);
+        assert!((o.factor - 0.5).abs() < 1e-9);
+        assert!(u.overlap_lines().contains("overlap factor"));
+    }
+
+    #[test]
+    fn serialized_lanes_have_zero_overlap() {
+        let t = Trace::ring(16);
+        t.span(TraceLane::Npu, "a", 0.0, 1.0, None, None, 0.0);
+        t.span(TraceLane::Pim, "b", 1.0, 2.0, None, None, 0.0);
+        let u = utilization(&t.snapshot());
+        assert_eq!(u.overlap[0].overlap_ms, 0.0);
+        assert_eq!(u.overlap[0].factor, 0.0);
+    }
+
+    #[test]
+    fn empty_trace_is_all_zero() {
+        let u = utilization(&[]);
+        assert_eq!(u.wall_ms, 0.0);
+        assert!(u.lanes.is_empty());
+        assert!(u.overlap.is_empty());
+    }
+}

@@ -1,0 +1,248 @@
+//! Integration and property tests for the telemetry layer through the
+//! public API: well-formed per-request event histories across every
+//! victim policy under bursty 2x-saturation load, byte-identical
+//! Chrome-trace exports under a seed, per-replica tagging on a shared
+//! cluster sink, ring truncation behavior, and the zero-event
+//! guarantee with telemetry disabled.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use p3llm::cluster::Cluster;
+use p3llm::telemetry::{export, EventKind, Trace, TraceEvent};
+use p3llm::traffic::{scenario_by_name, Scenario};
+
+const SYSTEM: &str = "P3-LLM";
+const EPS: f64 = 1e-9;
+
+/// The CI overload scenario pinned to 2x modeled saturation with the
+/// victim policy overridden (None = FIFO baseline, no preemption) --
+/// the same shape the sched tests and the overload bench use, so the
+/// trace covers enqueue/bounce/admit/preempt/restore/retire churn.
+fn overloaded(victim: Option<&'static str>, seed: u64) -> Scenario {
+    let mut sc = scenario_by_name("smoke-overload")
+        .unwrap()
+        .with_load_factor(SYSTEM, 2.0, seed)
+        .unwrap();
+    sc.victim = victim;
+    sc
+}
+
+/// Run a scenario on a single traced engine and return the recorded
+/// events (asserting the ring never overflowed, so the history is
+/// complete).
+fn traced_run(sc: &Scenario, seed: u64, trace: &Trace) -> Vec<TraceEvent> {
+    let mut eng = sc.engine(SYSTEM, None).unwrap();
+    eng.set_trace(trace.clone());
+    sc.runner(seed)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .unwrap();
+    assert_eq!(trace.dropped(), 0, "ring too small for a complete history");
+    trace.snapshot()
+}
+
+/// The well-formedness property over every request history in an
+/// event stream; returns the total preemption count so callers can
+/// assert the pairing check was not vacuous.
+///
+/// Per `(replica, rid)`:
+/// * the first event (by emission order) is `enqueue`, and no event
+///   predates it on the engine clock;
+/// * there is exactly one terminal (`retire` or `error`), it is the
+///   last event, and nothing (spans included) extends past it;
+/// * every `prefill_tile` span nests inside a covering
+///   prefill-family span;
+/// * every preemption instant is paired with a recovery prefill
+///   (`restore` for swap victims, `recompute` for recompute victims).
+fn check_request_histories(events: &[TraceEvent]) -> usize {
+    let mut by_req: BTreeMap<(u32, u64), Vec<&TraceEvent>> = BTreeMap::new();
+    for e in events {
+        if let Some(rid) = e.rid {
+            by_req.entry((e.replica, rid)).or_default().push(e);
+        }
+    }
+    assert!(!by_req.is_empty(), "run recorded no request events");
+    let mut total_preempts = 0usize;
+    for ((rep, rid), evs) in &by_req {
+        let mut evs = evs.clone();
+        evs.sort_by_key(|e| e.seq);
+        let first = evs.first().unwrap();
+        assert_eq!(
+            first.name, "enqueue",
+            "({rep},{rid}): history starts with {}",
+            first.name
+        );
+        let terminals = evs
+            .iter()
+            .filter(|e| e.name == "retire" || e.name == "error")
+            .count();
+        assert_eq!(terminals, 1, "({rep},{rid}): {terminals} terminals");
+        let last = evs.last().unwrap();
+        assert!(
+            last.name == "retire" || last.name == "error",
+            "({rep},{rid}): history continues after terminal ({})",
+            last.name
+        );
+        let (t_start, t_end) = (first.ts_ms, last.ts_ms);
+        for e in &evs {
+            assert!(
+                e.ts_ms >= t_start - EPS && e.ts_ms <= t_end + EPS,
+                "({rep},{rid}): {} at {} outside [{t_start}, {t_end}]",
+                e.name,
+                e.ts_ms
+            );
+            if e.kind == EventKind::Span {
+                assert!(e.dur_ms >= 0.0, "({rep},{rid}): negative span");
+                assert!(
+                    e.ts_ms + e.dur_ms <= t_end + EPS,
+                    "({rep},{rid}): {} span ends after terminal",
+                    e.name
+                );
+            }
+        }
+        let covers: Vec<(f64, f64)> = evs
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.name,
+                    "prefill" | "recompute" | "restore" | "kv_install"
+                )
+            })
+            .map(|e| (e.ts_ms, e.ts_ms + e.dur_ms))
+            .collect();
+        for tile in evs.iter().filter(|e| e.name == "prefill_tile") {
+            assert!(
+                covers.iter().any(|&(a, b)| {
+                    tile.ts_ms >= a - EPS && tile.ts_ms + tile.dur_ms <= b + EPS
+                }),
+                "({rep},{rid}): prefill_tile at {} nests in no prefill span",
+                tile.ts_ms
+            );
+        }
+        let preempts = evs
+            .iter()
+            .filter(|e| e.name.starts_with("preempt:"))
+            .count();
+        let recoveries = evs
+            .iter()
+            .filter(|e| e.name == "recompute" || e.name == "restore")
+            .count();
+        assert_eq!(
+            preempts, recoveries,
+            "({rep},{rid}): {preempts} preemptions vs {recoveries} \
+             recovery prefills"
+        );
+        total_preempts += preempts;
+    }
+    total_preempts
+}
+
+/// Property test: every victim policy (and the FIFO baseline), several
+/// seeds, bursty 2x-saturation load -- all request histories stay
+/// well-formed, and the preempt/recovery pairing check is exercised
+/// for real on the pinned CI seed.
+#[test]
+fn event_histories_are_well_formed_across_victim_policies() {
+    for victim in [None, Some("recompute"), Some("swap")] {
+        for seed in [7u64, 11, 23] {
+            let sc = overloaded(victim, seed);
+            let trace = Trace::ring(1 << 20);
+            let events = traced_run(&sc, seed, &trace);
+            let preempts = check_request_histories(&events);
+            if victim.is_none() {
+                assert_eq!(preempts, 0, "FIFO baseline preempted");
+            } else if seed == 7 {
+                // the sched tests pin this seed as guaranteed to
+                // preempt at 2x; without it the pairing check above
+                // would be vacuous
+                assert!(
+                    preempts > 0,
+                    "{victim:?}/seed {seed}: 2x overload never preempted"
+                );
+            }
+        }
+    }
+}
+
+/// Two identical seeded runs export byte-identical Chrome traces --
+/// the determinism the `trace --smoke` CI gate relies on.
+#[test]
+fn exported_traces_are_byte_identical_under_a_seed() {
+    let sc = overloaded(Some("swap"), 7);
+    let export_once = || {
+        let trace = Trace::ring(1 << 20);
+        let events = traced_run(&sc, 7, &trace);
+        let sampled = export::sample_requests(&events, 4);
+        export::chrome_trace_json(&events, &sampled)
+    };
+    let a = export_once();
+    let b = export_once();
+    assert_eq!(a, b, "same-seed exports differ byte-wise");
+    assert!(a.contains("\"traceEvents\""));
+    assert!(a.contains("\"prefill\""));
+}
+
+/// A 2-replica cluster sharing one sink tags every event with its
+/// replica, both replicas land events, and the merged stream still
+/// passes the per-request well-formedness property (request ids are
+/// per-replica counters; `(replica, rid)` is the cross-replica key).
+#[test]
+fn cluster_sink_tags_replicas_and_stays_well_formed() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let trace = Trace::ring(1 << 20);
+    let mut fleet =
+        Cluster::from_scenario_traced(&sc, SYSTEM, None, 2, "jsq", &trace)
+            .unwrap();
+    let plan = sc.clone().for_fleet(2).unwrap().runner(7);
+    fleet.run(&plan, sc.saturation_tok_s(SYSTEM)).unwrap();
+    assert_eq!(trace.dropped(), 0);
+    let events = trace.snapshot();
+    let replicas: BTreeSet<u32> = events.iter().map(|e| e.replica).collect();
+    assert_eq!(
+        replicas.into_iter().collect::<Vec<_>>(),
+        vec![0, 1],
+        "JSQ over 2 replicas must land events on both"
+    );
+    check_request_histories(&events);
+}
+
+/// A deliberately tiny ring drops the oldest events but keeps an
+/// unbroken, in-order tail ending at the last emission -- exactly the
+/// retention the flight recorder needs on long runs.
+#[test]
+fn bounded_ring_keeps_only_the_newest_tail() {
+    let sc = overloaded(None, 7);
+    let trace = Trace::ring(64);
+    let mut eng = sc.engine(SYSTEM, None).unwrap();
+    eng.set_trace(trace.clone());
+    sc.runner(7)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .unwrap();
+    let events = trace.snapshot();
+    assert_eq!(events.len(), 64);
+    assert!(trace.dropped() > 0, "overload run fit in 64 events?");
+    assert!(events.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+    let last = events.last().unwrap();
+    assert_eq!(
+        last.seq as usize,
+        64 + trace.dropped() - 1,
+        "tail must end at the newest event"
+    );
+}
+
+/// With telemetry disabled nothing is recorded and nothing is
+/// allocated per event -- the zero-overhead default path.
+#[test]
+fn disabled_trace_records_nothing() {
+    let sc = overloaded(Some("recompute"), 7);
+    let trace = Trace::off();
+    let mut eng = sc.engine(SYSTEM, None).unwrap();
+    eng.set_trace(trace.clone());
+    let out = sc
+        .runner(7)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .unwrap();
+    assert!(out.report.completed > 0);
+    assert!(!trace.enabled());
+    assert!(trace.snapshot().is_empty());
+    assert_eq!(trace.dropped(), 0);
+}
