@@ -125,4 +125,47 @@ if ! printf '%s\n' "$T1" | grep -q "telemetry off: report identical, 0 events re
     exit 1
 fi
 echo "ci: trace smoke OK"
+
+# Tiered-KV gate: the long-document scenario whose working set
+# overflows the HBM hot tier (hot fraction 0.3) must complete every
+# request with a nonzero prefetch hit rate and a strictly lower mean
+# TPOT than the identical demand-paging run, and a 32k-context
+# Mistral-7B pair must prove the same on a real model footprint; the
+# binary enforces all of that under --smoke (plus an in-process
+# double-run report equality check), and the diff below enforces
+# bit-identical stdout across two processes under a fixed seed.
+echo "ci: memtier smoke"
+M1=$(cargo run --release --quiet -- memtier --smoke --seed 7)
+M2=$(cargo run --release --quiet -- memtier --smoke --seed 7)
+if [ "$M1" != "$M2" ]; then
+    echo "ci: memtier smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$M1" | grep -q "prefetch hit rate"; then
+    echo "ci: memtier smoke output missing the prefetch hit rate proof" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$M1" | grep -q "32k long-doc on Mistral-7B"; then
+    echo "ci: memtier smoke skipped the 32k long-context proof" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$M1" | grep -q "< demand"; then
+    echo "ci: memtier smoke did not prove prefetch beats demand paging" >&2
+    exit 1
+fi
+echo "ci: memtier smoke OK"
+
+# Every smoke gate above writes a BENCH_*.json sidecar through
+# benchkit::save_bench_json so downstream tooling can diff runs
+# without scraping tables; their absence means a smoke path silently
+# stopped emitting.
+echo "ci: bench sidecars"
+REPORTS="${P3LLM_REPORTS:-reports}"
+for b in loadtest_smoke cluster_smoke overload_smoke trace_smoke memtier_smoke; do
+    if [ ! -f "$REPORTS/BENCH_$b.json" ]; then
+        echo "ci: missing bench sidecar $REPORTS/BENCH_$b.json" >&2
+        exit 1
+    fi
+done
+echo "ci: bench sidecars OK"
 echo "ci: PASS"

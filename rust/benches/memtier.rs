@@ -1,0 +1,160 @@
+//! Tiered-KV hierarchy curves (extension experiment, not a paper
+//! figure): sweep the HBM hot-tier fraction against the
+//! ahead-of-decode prefetch depth on the long-document scenario and
+//! report TTFT/TPOT next to the page-migration counters.
+//!
+//! The claim under test is the one the `memtier --smoke` CI gate
+//! enforces: whenever the working set overflows the hot tier (hot
+//! fraction < 1), turning the prefetcher on strictly lowers mean
+//! decode TPOT versus pure demand paging on identical seeds, because
+//! prefetched pages cross the CXL link overlapped with decode while
+//! demand misses stall the engine clock.  At hot fraction 1.0 the
+//! hierarchy must be inert: no pages migrate and the timings match the
+//! untiered engine exactly.
+//!
+//! Emits `BENCH_memtier.json` through the shared
+//! `p3llm::benchkit::save_bench_json` emitter: a flat
+//! `{bench, config, metric, value, seed}` array covering every
+//! `hot x depth` point.
+
+use p3llm::benchkit::BenchRecord;
+use p3llm::report::{f2, f3, Table};
+use p3llm::traffic::{scenario_by_name, LoadReport};
+
+const SYSTEM: &str = "P3-LLM";
+const SEED: u64 = 7;
+const HOTS: [f64; 3] = [0.25, 0.5, 1.0];
+const DEPTHS: [usize; 3] = [0, 4, 8];
+
+fn run_tiered(hot: f64, depth: usize) -> LoadReport {
+    let sc = scenario_by_name("smoke-longdoc").expect("registry scenario");
+    let mut engine = sc
+        .engine_tiered(SYSTEM, None, hot, depth)
+        .expect("tiered engine build");
+    sc.runner(SEED)
+        .run_with_saturation(&mut engine, sc.saturation_tok_s(SYSTEM))
+        .expect("closed-loop run")
+        .report
+}
+
+fn main() {
+    let sc = scenario_by_name("smoke-longdoc").expect("registry scenario");
+    let mut t = Table::new(
+        format!(
+            "memtier: hot-tier fraction x prefetch depth on {SYSTEM}, \
+             {} scenario, seed {SEED}",
+            sc.name
+        ),
+        &[
+            "hot",
+            "depth",
+            "done",
+            "mean TTFT ms",
+            "mean TPOT ms",
+            "p95 TPOT ms",
+            "prefetched",
+            "demand",
+        ],
+    );
+    let mut recs: Vec<BenchRecord> = vec![];
+
+    // untiered reference: the hierarchy disabled entirely
+    let mut base_eng = sc.engine(SYSTEM, None).expect("engine build");
+    let base = sc
+        .runner(SEED)
+        .run_with_saturation(&mut base_eng, sc.saturation_tok_s(SYSTEM))
+        .expect("closed-loop run")
+        .report;
+    assert_eq!(base.completed, base.offered, "untiered baseline lost requests");
+
+    for &hot in &HOTS {
+        // (depth, report) points at this hot fraction
+        let mut points: Vec<(usize, LoadReport)> = vec![];
+        for &depth in &DEPTHS {
+            let r = run_tiered(hot, depth);
+            assert_eq!(
+                r.completed, r.offered,
+                "hot={hot} depth={depth} lost requests"
+            );
+            t.row(vec![
+                format!("{hot}"),
+                depth.to_string(),
+                format!("{}/{}", r.completed, r.offered),
+                f2(r.ttft_ms.mean),
+                f3(r.tpot_ms.mean),
+                f3(r.tpot_ms.p95),
+                r.pages_prefetched.to_string(),
+                r.pages_demand.to_string(),
+            ]);
+            let cfg = format!("hot={hot},depth={depth}");
+            for (metric, value) in [
+                ("ttft_mean_ms", r.ttft_ms.mean),
+                ("tpot_mean_ms", r.tpot_ms.mean),
+                ("tpot_p95_ms", r.tpot_ms.p95),
+                ("pages_prefetched", r.pages_prefetched as f64),
+                ("pages_demand", r.pages_demand as f64),
+            ] {
+                recs.push(BenchRecord::new(cfg.as_str(), metric, value));
+            }
+            points.push((depth, r));
+        }
+        let demand = &points
+            .iter()
+            .find(|(d, _)| *d == 0)
+            .expect("depth-0 point")
+            .1;
+        if hot >= 1.0 {
+            // full hot tier: the hierarchy must be inert at any depth
+            for (depth, r) in &points {
+                assert_eq!(
+                    r.pages_prefetched + r.pages_demand,
+                    0,
+                    "hot=1.0 depth={depth} migrated pages"
+                );
+                assert_eq!(
+                    r.tpot_ms.mean, base.tpot_ms.mean,
+                    "hot=1.0 depth={depth} perturbed decode timing"
+                );
+            }
+        } else {
+            // overflowing hot tier: demand paging stalls, prefetch
+            // overlaps -- strictly lower mean TPOT at every depth > 0
+            assert!(
+                demand.pages_demand > 0,
+                "hot={hot} never overflowed the hot tier"
+            );
+            assert_eq!(demand.pages_prefetched, 0);
+            for (depth, r) in points.iter().filter(|(d, _)| *d > 0) {
+                assert!(
+                    r.pages_prefetched > 0,
+                    "hot={hot} depth={depth}: prefetcher never fired"
+                );
+                println!(
+                    "check: hot={hot} depth={depth}: prefetch mean TPOT \
+                     {:.4} ms vs demand-paging {:.4} ms",
+                    r.tpot_ms.mean, demand.tpot_ms.mean
+                );
+                assert!(
+                    r.tpot_ms.mean < demand.tpot_ms.mean,
+                    "hot={hot} depth={depth}: prefetch mean TPOT \
+                     {:.4} ms not strictly below demand paging's {:.4} ms",
+                    r.tpot_ms.mean,
+                    demand.tpot_ms.mean
+                );
+            }
+        }
+    }
+    t.print();
+    println!(
+        "expected shape: at hot fraction 1.0 the tier is inert (no \
+         migrations, untiered timings); below it, demand paging pays a \
+         CXL stall per cold page each step while the prefetcher pulls \
+         the next attention window overlapped with decode, so TPOT \
+         falls monotonically as depth grows until the window is covered"
+    );
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, "memtier").unwrap();
+    let p = p3llm::benchkit::save_bench_json("memtier", SEED, &recs)
+        .expect("write BENCH_memtier.json");
+    println!("saved {}", p.display());
+}

@@ -13,18 +13,20 @@
 //! Routing is pluggable ([`RoutePolicy`]).  Colocated policies place
 //! each request on one replica; the prefill/decode-disaggregated
 //! policy runs the prompt on a prefill replica, then hands the
-//! finished KV to a decode replica, charging a transfer priced from
-//! the `sim::dram` event model and the HBM external bus bandwidth
-//! (the two stages pipeline, so the slower one prices the hop).
+//! finished KV to a decode replica *through the shared CXL cold
+//! pool* -- the prefill side writes the prompt KV out, the decode side
+//! reads it back, two link passes priced by the unified slow-tier
+//! transfer model in [`crate::mem::transfer`] (each pass is the max of
+//! the HBM streaming pass and the CXL link time).
 
 use crate::accel;
 use crate::config::accel::HbmTiming;
+use crate::config::cxl::CxlLink;
 use crate::coordinator::{
     prefix_page_hash, Engine, Metrics, Percentiles, RequestId,
 };
 use crate::error::{P3Error, Result};
 use crate::sched::SloClass;
-use crate::sim::{dram, npu};
 use crate::telemetry::Trace;
 use crate::traffic::{
     LoadReport, LoadRunner, LoadTarget, ReqRecord, RunOutcome, Scenario,
@@ -62,6 +64,8 @@ pub struct Cluster {
     /// HBM timing of the modeled system: prices inter-replica KV
     /// handoffs (disaggregated routing)
     hbm: HbmTiming,
+    /// CXL link of the shared cold pool the `pd` handoff rides
+    cxl: CxlLink,
     tickets: Vec<Ticket>,
     /// ticket indices whose prefill side has not handed off yet
     open_handoffs: Vec<usize>,
@@ -100,6 +104,7 @@ impl Cluster {
             replicas: engines,
             policy,
             hbm,
+            cxl: CxlLink::default(),
             tickets: vec![],
             open_handoffs: vec![],
             ran: false,
@@ -190,21 +195,19 @@ impl Cluster {
             .collect()
     }
 
-    /// Modeled inter-replica KV handoff time for `tokens` cached
-    /// tokens: the packed KV streams out of the source stack's DRAM
-    /// (event-level `sim::dram` read pass) and crosses the external
-    /// bus; the stages pipeline, so the slower one prices the hop.
+    /// Modeled KV handoff time for `tokens` cached tokens moving from
+    /// the prefill replica to the decode replica *through the shared
+    /// CXL cold pool* (no replica-to-replica bus copy): the prefill
+    /// side writes the packed KV out and the decode side reads it
+    /// back, two link passes priced by
+    /// [`crate::mem::pool_handoff_ms`].
     ///
     /// Priced on the *exact* packed bytes (2 sides x layers x tokens x
     /// kv_dim/2), not the page-rounded `bytes_per_request` sizing
     /// helper -- only occupied token slots cross the fabric.
     pub fn kv_transfer_ms(&self, tokens: usize) -> f64 {
         let m = self.replicas[0].model();
-        let bytes =
-            (2 * m.layers * tokens.max(1) * (m.kv_dim() / 2)) as f64;
-        let stream_ns = dram::gemv_pass_ns(&self.hbm, bytes);
-        let bus_ns = npu::transfer(&self.hbm, bytes).ns;
-        stream_ns.max(bus_ns) / 1e6
+        crate::mem::pool_handoff_ms(&self.hbm, &self.cxl, m, tokens)
     }
 
     /// Hand off every finished prefill on `replica` to a decode
@@ -416,10 +419,12 @@ impl LoadTarget for Cluster {
             rec.finished_ms = dec.finished_ms;
             rec.tokens_generated =
                 pre.generated.len() + dec.generated.len();
-            // preemption churn can hit either phase
+            // preemption and tier churn can hit either phase
             rec.preemptions += dec.preemptions;
             rec.pages_swapped += dec.pages_swapped;
             rec.pages_recomputed += dec.pages_recomputed;
+            rec.pages_prefetched += dec.pages_prefetched;
+            rec.pages_demand += dec.pages_demand;
         }
         Ok(rec)
     }
@@ -457,6 +462,11 @@ impl LoadTarget for Cluster {
                 .iter()
                 .map(|m| m.pages_recomputed)
                 .sum(),
+            pages_prefetched: per
+                .iter()
+                .map(|m| m.pages_prefetched)
+                .sum(),
+            pages_demand: per.iter().map(|m| m.pages_demand).sum(),
             ttft_ms: Percentiles::merge(&ttfts),
             per_token_ms: Percentiles::merge(&tpots),
         }

@@ -154,6 +154,11 @@ impl ClusterReport {
                 .iter()
                 .map(|r| r.pages_recomputed)
                 .sum(),
+            pages_prefetched: per
+                .iter()
+                .map(|r| r.pages_prefetched)
+                .sum(),
+            pages_demand: per.iter().map(|r| r.pages_demand).sum(),
             per_class,
             queue_delay_ms: Percentiles::merge(&queue_parts),
             ttft_ms: Percentiles::merge(&ttft_parts),
@@ -217,6 +222,8 @@ mod tests {
             preemptions: 0,
             pages_swapped: 0,
             pages_recomputed: 0,
+            pages_prefetched: 0,
+            pages_demand: 0,
         }
     }
 

@@ -1,0 +1,60 @@
+//! CXL/DDR cold-tier link parameters for the two-tier KV hierarchy
+//! (see [`crate::mem`]).
+//!
+//! The hot tier is the PIM-attached HBM the paged [`KvPool`] models;
+//! the cold tier sits behind a CXL.mem link with its own bandwidth and
+//! access latency.  Defaults follow a single CXL 3.x x8 port in front
+//! of a DDR5 expander: ~64 GB/s of usable link bandwidth and a few
+//! hundred ns of added round-trip latency -- an order of magnitude
+//! below the multi-TB/s in-package HBM, which is exactly the gap the
+//! ahead-of-decode prefetcher exists to hide.
+//!
+//! [`KvPool`]: crate::coordinator::KvPool
+
+/// CXL link model for the cold KV tier.  Bandwidth uses the same
+/// GB/s == bytes/ns convention as [`HbmTiming::ext_bw_gbps`]
+/// (`crate::config::accel::HbmTiming::ext_bw_gbps`), so
+/// `latency_ns + bytes / bw_gbps` is a transfer time in ns.
+///
+/// [`HbmTiming::ext_bw_gbps`]: crate::config::accel::HbmTiming
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CxlLink {
+    /// usable link bandwidth in GB/s (bytes per ns)
+    pub bw_gbps: f64,
+    /// fixed per-transfer access latency in ns (link traversal +
+    /// expander-side DDR access), charged once per migration
+    pub latency_ns: f64,
+}
+
+impl Default for CxlLink {
+    fn default() -> Self {
+        CxlLink { bw_gbps: 64.0, latency_ns: 600.0 }
+    }
+}
+
+impl CxlLink {
+    /// Link-side time to move `bytes` across the CXL port, in ns.
+    /// The full migration price additionally races the HBM-side
+    /// streaming pass -- see [`crate::mem::transfer_ns`].
+    pub fn link_ns(&self, bytes: f64) -> f64 {
+        self.latency_ns + bytes / self.bw_gbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_link_is_sane_and_latency_bound_for_small_transfers() {
+        let link = CxlLink::default();
+        assert!(link.bw_gbps > 0.0 && link.latency_ns > 0.0);
+        // a 64-byte line is latency-dominated; a 1 MiB page stream is
+        // bandwidth-dominated
+        assert!(link.link_ns(64.0) < 2.0 * link.latency_ns);
+        let big = link.link_ns((1 << 20) as f64);
+        assert!(big > 10.0 * link.latency_ns, "{big}");
+        // monotone in bytes
+        assert!(link.link_ns(2048.0) > link.link_ns(1024.0));
+    }
+}

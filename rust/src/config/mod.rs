@@ -1,10 +1,12 @@
 //! Configuration: LLM architectures, accelerator hardware parameters,
-//! and quantization schemes.
+//! CXL cold-tier link timing, and quantization schemes.
 
 pub mod accel;
+pub mod cxl;
 pub mod llm;
 pub mod scheme;
 
 pub use accel::{HbmTiming, NpuConfig, PcuConfig, PimConfig, SystemConfig};
+pub use cxl::CxlLink;
 pub use llm::{LlmConfig, RopeStage};
 pub use scheme::{OperandBits, QuantScheme};

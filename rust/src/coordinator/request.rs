@@ -64,6 +64,12 @@ pub struct Request {
     pub pages_swapped: usize,
     /// KV pages dropped and re-prefilled across recompute preemptions
     pub pages_recomputed: usize,
+    /// cold-tier KV pages the ahead-of-decode prefetcher pulled back
+    /// to HBM for this request (tiered engines only)
+    pub pages_prefetched: usize,
+    /// cold-tier KV pages demand-migrated at step time, each stalling
+    /// this request's decode (tiered engines only)
+    pub pages_demand: usize,
 }
 
 impl Request {
@@ -86,6 +92,8 @@ impl Request {
             preemptions: 0,
             pages_swapped: 0,
             pages_recomputed: 0,
+            pages_prefetched: 0,
+            pages_demand: 0,
         }
     }
 

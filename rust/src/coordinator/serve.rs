@@ -30,15 +30,17 @@
 
 use std::collections::HashMap;
 
-use super::backend::{BackendKind, ExecBackend, Lane};
+use super::backend::{BackendKind, ExecBackend, Lane, PrefillOut};
 use super::batcher::{Batcher, COMPILED_BATCHES};
-use super::kvcache::{KvLayout, KvPool, PAGE_TOKENS};
+use super::kvcache::{KvLayout, KvPool, PrefixHit, PAGE_TOKENS};
 use super::pjrt::PjrtBackend;
 use super::request::{Request, RequestId, RequestStatus, State};
 use super::simbackend::SimBackend;
 use crate::config::accel::HbmTiming;
+use crate::config::cxl::CxlLink;
 use crate::config::llm::LlmConfig;
 use crate::config::scheme;
+use crate::mem::TieredKv;
 use crate::coordinator::mapper::MapSummary;
 use crate::error::{P3Error, Result};
 use crate::sched::{SloClass, VictimCandidate, VictimMode, VictimPolicy};
@@ -158,6 +160,14 @@ pub struct Metrics {
     pub pages_swapped: usize,
     /// KV pages dropped for re-prefill (recompute victims)
     pub pages_recomputed: usize,
+    /// KV pages the ahead-of-decode prefetcher pulled back from the
+    /// CXL cold tier before the step that reads them -- overlapped
+    /// with the previous step's compute, so no engine-clock charge
+    /// (0 on single-tier engines)
+    pub pages_prefetched: usize,
+    /// cold-tier KV pages demand-migrated at step time, each charged
+    /// as an engine-clock stall (0 on single-tier engines)
+    pub pages_demand: usize,
     pub ttft_ms: Percentiles,
     pub per_token_ms: Percentiles,
 }
@@ -185,6 +195,8 @@ struct StatsAcc {
     preemptions: usize,
     pages_swapped: usize,
     pages_recomputed: usize,
+    pages_prefetched: usize,
+    pages_demand: usize,
     ttft: Vec<f64>,
     tpot: Vec<f64>,
 }
@@ -199,6 +211,17 @@ struct SchedState {
     aging_ms: f64,
     /// HBM timing the swap transfer model prices against
     hbm: HbmTiming,
+}
+
+/// Two-tier KV hierarchy state (present only when the builder set a
+/// hot-tier fraction; `None` keeps every page HBM-resident).
+struct TierState {
+    /// per-page hot/cold residency overlay with the ahead-of-decode
+    /// prefetcher and LRU eviction to the hot cap
+    tier: TieredKv,
+    /// modeled cost of moving one KV page across the CXL link (ms),
+    /// priced once at build ([`crate::mem::page_migration_ms`])
+    page_ms: f64,
 }
 
 /// Nominal class rank, promoted to 0 once the request has waited past
@@ -225,6 +248,8 @@ pub struct Engine {
     acc: StatsAcc,
     /// SLO-tiered preemptive scheduling (None = FIFO)
     sched: Option<SchedState>,
+    /// HBM-hot / CXL-cold tiered KV hierarchy (None = single-tier)
+    tier: Option<TierState>,
     /// request-lifecycle telemetry (default off = zero overhead)
     trace: Trace,
 }
@@ -279,6 +304,7 @@ impl Engine {
             next_id: 1,
             acc: StatsAcc::default(),
             sched: None,
+            tier: None,
             trace: Trace::off(),
         })
     }
@@ -514,11 +540,25 @@ impl Engine {
         };
         let cached = hit.as_ref().map(|h| h.tokens).unwrap_or(0);
         let total_max = (prompt_len + max_new).min(self.ctx_cap);
-        let mut outs = Vec::new();
+        // tiles STREAM into the pool: each backend output is packed to
+        // INT4 pages and dropped before the next tile runs, so a long
+        // prompt never holds its full float K/V at once -- peak
+        // transient memory is one tile, which is what makes the
+        // 32k-128k long-context scenarios servable
+        let mut hit = hit;
+        let mut installed = false;
+        let mut total_len = cached;
+        let mut first_token = 0i32;
         let mut backend_err: Option<P3Error> = None;
         match charge {
             Some(ms) => match self.backend.install_prefill(&ctx, ms) {
-                Ok(o) => outs.push(o),
+                Ok(o) => {
+                    let (n, ft) = self.install_tile(
+                        rid, total_max, o, &mut hit, &mut installed,
+                    )?;
+                    total_len += n;
+                    first_token = ft;
+                }
                 Err(e) => backend_err = Some(e),
             },
             None => {
@@ -538,7 +578,11 @@ impl Engine {
                                 chunk.len() as f64,
                             );
                             offset += chunk.len();
-                            outs.push(o);
+                            let (n, ft) = self.install_tile(
+                                rid, total_max, o, &mut hit, &mut installed,
+                            )?;
+                            total_len += n;
+                            first_token = ft;
                         }
                         Err(e) => {
                             backend_err = Some(e);
@@ -549,42 +593,19 @@ impl Engine {
             }
         }
         if let Some(e) = backend_err {
-            if let Some(h) = hit {
+            // a hit the first tile never consumed still pins pages;
+            // a partially installed sequence is freed by the caller's
+            // error path (`step` retires the request and frees its KV)
+            if let Some(h) = hit.take() {
                 self.pool.release_hit(h);
             }
             return Err(e);
         }
-        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
-        // keys quantize in the smoothed domain: a prefix hit must keep
-        // the cached pages' factors (they were packed under them; the
-        // hit gives its copy up -- alloc_seq only reads the pages); a
-        // fresh prefill takes them from the first tile
-        let (smooth, hit) = match hit {
-            Some(mut h) => {
-                let s = std::mem::take(&mut h.smooth);
-                (s, Some(h))
-            }
-            None => (std::mem::take(&mut outs[0].smooth), None),
-        };
-        self.pool.alloc_seq(rid.0, smooth, total_max, hit)?;
-        let mut total_len = cached;
-        let mut first_token = 0i32;
-        for out in &outs {
-            for t in 0..out.true_len {
-                for l in 0..layers {
-                    let off = (l * out.true_len + t) * kvd;
-                    self.pool.push_token(
-                        rid.0,
-                        l,
-                        &out.k[off..off + kvd],
-                        &out.v[off..off + kvd],
-                    )?;
-                }
-                self.pool.commit_token(rid.0)?;
-            }
-            total_len += out.true_len;
-            first_token = out.first_token;
-        }
+        debug_assert!(
+            installed,
+            "prefill ran zero tiles (lookup_prefix caps hits below the \
+             full context, so a suffix always remains)"
+        );
         if use_cache && !resume {
             // ctx == prompt on the non-resume path
             self.pool.register_prefix(rid.0, &ctx);
@@ -646,6 +667,59 @@ impl Engine {
         Ok(())
     }
 
+    /// Install one prefill tile's output into the pool.  The first
+    /// tile allocates the sequence's page table -- keys quantize in
+    /// the smoothed domain, so a prefix hit must keep the cached
+    /// pages' factors (they were packed under them; the hit gives its
+    /// copy up and alloc_seq consumes the hit) while a fresh prefill
+    /// takes the factors from that first tile.  Every tile then packs
+    /// its tokens layer-by-layer; the caller drops the float buffers
+    /// before the next tile runs.  Returns (tokens installed, tile's
+    /// emitted token).
+    fn install_tile(
+        &mut self,
+        rid: RequestId,
+        total_max: usize,
+        mut out: PrefillOut,
+        hit: &mut Option<PrefixHit>,
+        installed: &mut bool,
+    ) -> Result<(usize, i32)> {
+        if !*installed {
+            let (smooth, h) = match hit.take() {
+                Some(mut h) => {
+                    let s = std::mem::take(&mut h.smooth);
+                    (s, Some(h))
+                }
+                None => (std::mem::take(&mut out.smooth), None),
+            };
+            self.pool.alloc_seq(rid.0, smooth, total_max, h)?;
+            *installed = true;
+        }
+        let (layers, kvd) = (self.model.layers, self.model.kv_dim());
+        for t in 0..out.true_len {
+            for l in 0..layers {
+                let off = (l * out.true_len + t) * kvd;
+                self.pool.push_token(
+                    rid.0,
+                    l,
+                    &out.k[off..off + kvd],
+                    &out.v[off..off + kvd],
+                )?;
+            }
+            self.pool.commit_token(rid.0)?;
+        }
+        Ok((out.true_len, out.first_token))
+    }
+
+    /// Free a request's KV everywhere it is tracked: the pool's page
+    /// table and (on tiered engines) the residency overlay.
+    fn free_kv(&mut self, rid: RequestId) {
+        self.pool.free(rid.0);
+        if let Some(ts) = self.tier.as_mut() {
+            ts.tier.free(rid.0);
+        }
+    }
+
     /// Retire a finished request at `now`: stamp completion, record
     /// its latency samples, free the lane and the KV reservation.
     fn retire_finished(&mut self, rid: RequestId, now: f64) {
@@ -671,7 +745,7 @@ impl Engine {
             generated as f64,
         );
         self.batcher.retire(rid);
-        self.pool.free(rid.0);
+        self.free_kv(rid);
     }
 
     /// Pick a preemption victim for a newcomer of `newcomer_rank`:
@@ -733,7 +807,7 @@ impl Engine {
             };
             (mode, ms)
         };
-        self.pool.free(rid.0);
+        self.free_kv(rid);
         self.batcher.requeue_front(rid);
         let req = self
             .requests
@@ -856,7 +930,7 @@ impl Engine {
                 // keep the engine consistent on a failed prefill: the
                 // lane must not stay active with no KV entry / pos 0
                 self.batcher.retire(rid);
-                self.pool.free(rid.0);
+                self.free_kv(rid);
                 if let Some(r) = self.requests.get_mut(&rid.0) {
                     r.state = State::Finished;
                 }
@@ -896,6 +970,56 @@ impl Engine {
         let active: Vec<RequestId> = self.batcher.active().to_vec();
         if active.is_empty() {
             return Ok(0);
+        }
+        // tiered KV: walk each active lane's page table ahead of the
+        // decode step.  Prefetched pages were pulled back overlapped
+        // with the previous step's compute (a span on the cxl lane,
+        // no clock charge); demand misses serialize on the link and
+        // stall the engine clock before the step runs.
+        if let Some(ts) = self.tier.as_mut() {
+            let walk_t0 = self.backend.now_ms();
+            let mut cursor = walk_t0;
+            for rid in &active {
+                let tokens = self.pool.seq_len(rid.0).unwrap_or(0);
+                let npages = tokens.div_ceil(PAGE_TOKENS).max(1);
+                let o = ts.tier.step_lane(rid.0, npages);
+                if o.prefetched == 0 && o.demand == 0 {
+                    continue;
+                }
+                let req = self.requests.get_mut(&rid.0).unwrap();
+                req.pages_prefetched += o.prefetched;
+                req.pages_demand += o.demand;
+                self.acc.pages_prefetched += o.prefetched;
+                self.acc.pages_demand += o.demand;
+                let class = req.class;
+                if o.prefetched > 0 {
+                    self.trace.span(
+                        TraceLane::Cxl,
+                        "prefetch",
+                        walk_t0,
+                        walk_t0 + o.prefetched as f64 * ts.page_ms,
+                        Some(rid.0),
+                        Some(class),
+                        o.prefetched as f64,
+                    );
+                }
+                if o.demand > 0 {
+                    let stall = o.demand as f64 * ts.page_ms;
+                    self.trace.span(
+                        TraceLane::Cxl,
+                        "demand_migrate",
+                        cursor,
+                        cursor + stall,
+                        Some(rid.0),
+                        Some(class),
+                        o.demand as f64,
+                    );
+                    cursor += stall;
+                }
+            }
+            if cursor > walk_t0 {
+                self.backend.advance_to(cursor);
+            }
         }
         let t0 = self.backend.now_ms();
         let lanes: Vec<Lane> = active
@@ -1048,6 +1172,18 @@ impl Engine {
             "Metrics.pages_recomputed drifted from the trace's \
              preempt:recompute page counts"
         );
+        debug_assert_eq!(
+            sum("prefetch") as usize,
+            self.acc.pages_prefetched,
+            "Metrics.pages_prefetched drifted from the cxl lane's \
+             prefetch page counts"
+        );
+        debug_assert_eq!(
+            sum("demand_migrate") as usize,
+            self.acc.pages_demand,
+            "Metrics.pages_demand drifted from the cxl lane's \
+             demand_migrate page counts"
+        );
     }
 
     /// Metrics snapshot (callable mid-run; distributions cover retired
@@ -1068,6 +1204,8 @@ impl Engine {
             preemptions: self.acc.preemptions,
             pages_swapped: self.acc.pages_swapped,
             pages_recomputed: self.acc.pages_recomputed,
+            pages_prefetched: self.acc.pages_prefetched,
+            pages_demand: self.acc.pages_demand,
             ttft_ms: Percentiles::from_samples(&self.acc.ttft),
             per_token_ms: Percentiles::from_samples(&self.acc.tpot),
         }
@@ -1104,6 +1242,18 @@ impl Engine {
     pub fn victim_policy(&self) -> Option<&'static str> {
         self.sched.as_ref().map(|s| s.victim.name())
     }
+
+    /// `(hot pages, cold pages, hot-tier page cap)` of the tiered KV
+    /// hierarchy; `None` on a single-tier engine.
+    pub fn tier_occupancy(&self) -> Option<(usize, usize, usize)> {
+        self.tier.as_ref().map(|t| {
+            (
+                t.tier.hot_pages(),
+                t.tier.cold_pages(),
+                t.tier.hot_cap_pages(),
+            )
+        })
+    }
 }
 
 /// Typed builder for the serving engine: model + scheme by name from
@@ -1128,6 +1278,10 @@ pub struct EngineBuilder {
     victim: Option<String>,
     /// anti-starvation floor override (ms on the engine clock)
     aging_ms: Option<f64>,
+    /// hot-tier fraction of the pool's pages (None = single-tier)
+    hot_fraction: Option<f64>,
+    /// ahead-of-decode prefetch depth in pages per lane per step
+    prefetch_depth: Option<usize>,
     /// telemetry handle installed at build (default off)
     trace: Trace,
 }
@@ -1147,6 +1301,8 @@ impl EngineBuilder {
             prefix_cache: None,
             victim: None,
             aging_ms: None,
+            hot_fraction: None,
+            prefetch_depth: None,
             trace: Trace::off(),
         }
     }
@@ -1254,6 +1410,29 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable the two-tier KV hierarchy (sim backend): this fraction
+    /// of the pool's pages stays resident in PIM-attached HBM (the hot
+    /// tier); the rest of the combined capacity lives in the CXL/DDR
+    /// cold pool and pages migrate at the modeled link cost (see
+    /// [`crate::mem`]).  Admission overcommits HBM against the cold
+    /// pool -- `KvExhausted` fires only when *both* tiers are full.
+    /// Must be in `(0, 1]`; unset keeps the engine single-tier.
+    pub fn hot_fraction(mut self, f: f64) -> Self {
+        self.hot_fraction = Some(f);
+        self
+    }
+
+    /// Pages per lane per step the ahead-of-decode prefetcher pulls
+    /// back from the cold tier before the step that reads them,
+    /// overlapped with the previous step's compute (no stall).  Cold
+    /// pages past the depth demand-migrate and stall the engine clock.
+    /// Requires [`hot_fraction`](EngineBuilder::hot_fraction); the
+    /// default 0 is pure demand paging.
+    pub fn prefetch_depth(mut self, pages: usize) -> Self {
+        self.prefetch_depth = Some(pages);
+        self
+    }
+
     /// Install a telemetry handle on the built engine (and its
     /// backend, for the NPU/PIM/bus device lanes).  Keep a clone to
     /// read the trace after the run; the default-off handle records
@@ -1270,6 +1449,13 @@ impl EngineBuilder {
         if self.aging_ms.is_some() && self.victim.is_none() {
             return Err(P3Error::InvalidConfig(
                 "aging_ms requires a victim policy (preempt(..))".into(),
+            ));
+        }
+        if self.prefetch_depth.is_some() && self.hot_fraction.is_none() {
+            return Err(P3Error::InvalidConfig(
+                "prefetch_depth requires a tiered KV hierarchy \
+                 (hot_fraction(..))"
+                    .into(),
             ));
         }
         match self.kind {
@@ -1295,6 +1481,14 @@ impl EngineBuilder {
                     return Err(P3Error::InvalidConfig(
                         "ctx_limit is a sim-backend knob (the PJRT decode \
                          graphs are compiled for the model's full context)"
+                            .into(),
+                    ));
+                }
+                if self.hot_fraction.is_some() {
+                    return Err(P3Error::InvalidConfig(
+                        "the tiered KV hierarchy (hot_fraction / \
+                         prefetch_depth) is a sim-backend knob (PJRT \
+                         serves from device HBM only)"
                             .into(),
                     ));
                 }
@@ -1383,6 +1577,24 @@ impl EngineBuilder {
                     }
                     None => None,
                 };
+                // price the per-page CXL migration once, before the
+                // backend takes ownership of the configs
+                let tier_cfg = match self.hot_fraction {
+                    Some(f) => {
+                        if !f.is_finite() || f <= 0.0 || f > 1.0 {
+                            return Err(P3Error::InvalidConfig(format!(
+                                "hot_fraction must be in (0, 1], got {f}"
+                            )));
+                        }
+                        let page_ms = crate::mem::page_migration_ms(
+                            &accel.system.hbm,
+                            &CxlLink::default(),
+                            &model,
+                        );
+                        Some((f, self.prefetch_depth.unwrap_or(0), page_ms))
+                    }
+                    None => None,
+                };
                 let backend = SimBackend::new(accel, model, ctx_cap);
                 let mut eng = Engine::with_backend(
                     Box::new(backend),
@@ -1392,6 +1604,14 @@ impl EngineBuilder {
                     self.prefix_cache.unwrap_or(true),
                 )?;
                 eng.sched = sched;
+                if let Some((f, depth, page_ms)) = tier_cfg {
+                    let cap = (eng.pool.total_pages() as f64 * f).floor()
+                        as usize;
+                    eng.tier = Some(TierState {
+                        tier: TieredKv::new(cap.max(1), depth),
+                        page_ms,
+                    });
+                }
                 eng.set_trace(self.trace.clone());
                 Ok(eng)
             }
@@ -1658,6 +1878,36 @@ mod tests {
             EngineBuilder::sim().preempt("swap").aging_ms(f64::NAN).build(),
             Err(P3Error::InvalidConfig(_))
         ));
+        // tiered-KV knobs: sim-only, typed rejections
+        assert!(matches!(
+            EngineBuilder::pjrt("artifacts").hot_fraction(0.5).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::sim().prefetch_depth(4).build(),
+            Err(P3Error::InvalidConfig(_))
+        ));
+        for bad in [0.0, -0.25, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(
+                matches!(
+                    EngineBuilder::sim().hot_fraction(bad).build(),
+                    Err(P3Error::InvalidConfig(_))
+                ),
+                "hot_fraction({bad}) should be rejected"
+            );
+        }
+        let tiered = EngineBuilder::sim()
+            .hot_fraction(0.5)
+            .prefetch_depth(2)
+            .build()
+            .unwrap();
+        let (hot, cold, cap) = tiered.tier_occupancy().unwrap();
+        assert_eq!((hot, cold), (0, 0));
+        assert!(cap >= 1);
+        assert_eq!(
+            EngineBuilder::sim().build().unwrap().tier_occupancy(),
+            None
+        );
         let eng = EngineBuilder::sim()
             .preempt("swap")
             .aging_ms(f64::INFINITY)
@@ -1913,5 +2163,151 @@ mod tests {
         }
         assert!(eng.submit(vec![1; 15], 1).is_ok());
         assert!(eng.run_to_completion().is_ok());
+    }
+
+    /// Tiered engine over a working set that overflows the hot tier:
+    /// a full-size hot tier is timing-identical to the single-tier
+    /// engine, demand paging pays migration stalls, and the
+    /// ahead-of-decode prefetcher strictly reduces both the stall
+    /// count and the mean decode TPOT on the identical workload.
+    #[test]
+    fn tiered_kv_prefetch_strictly_beats_demand_paging() {
+        let model = crate::config::llm::TINY;
+        let layout = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: 160,
+        };
+        let per_req = layout.bytes_per_request();
+        let mk = |hot: Option<(f64, usize)>| {
+            let mut b = EngineBuilder::sim()
+                .model("tiny-1M")
+                .ctx_limit(160)
+                .max_batch(2)
+                .kv_capacity(per_req * 2);
+            if let Some((f, depth)) = hot {
+                b = b.hot_fraction(f).prefetch_depth(depth);
+            }
+            b.build().unwrap()
+        };
+        let run = |mut eng: Engine| {
+            for i in 0..2i32 {
+                eng.submit(vec![5 + i; 120], 30).unwrap();
+            }
+            let m = eng.run_to_completion().unwrap();
+            assert_eq!(eng.kv_entries(), 0);
+            if let Some((hot, cold, _)) = eng.tier_occupancy() {
+                assert_eq!((hot, cold), (0, 0), "tier overlay leaked");
+            }
+            m
+        };
+        let base = run(mk(None));
+        // hot tier == whole pool: no page ever leaves HBM, and the
+        // timeline is bit-identical to the single-tier engine
+        let full = run(mk(Some((1.0, 0))));
+        assert_eq!(full.pages_prefetched + full.pages_demand, 0);
+        assert_eq!(full.wall_ms, base.wall_ms);
+        assert_eq!(full.per_token_ms, base.per_token_ms);
+        // hot tier a quarter of the pool: both lanes' attention
+        // windows (10 pages each) overflow the 5-page cap every step
+        let demand = run(mk(Some((0.25, 0))));
+        let prefetch = run(mk(Some((0.25, 4))));
+        assert_eq!(demand.completed, 2);
+        assert_eq!(prefetch.completed, 2);
+        assert!(demand.pages_demand > 0, "{demand:?}");
+        assert_eq!(demand.pages_prefetched, 0);
+        assert!(prefetch.pages_prefetched > 0, "{prefetch:?}");
+        assert!(
+            prefetch.pages_demand < demand.pages_demand,
+            "prefetch converted no demand misses: {} !< {}",
+            prefetch.pages_demand,
+            demand.pages_demand
+        );
+        // the decode step sequence is identical (same admissions, same
+        // sim costs); only the demand stalls differ, so the TPOT win
+        // is strict, and any migration traffic costs wall clock over
+        // the single-tier baseline
+        assert!(
+            prefetch.per_token_ms.mean < demand.per_token_ms.mean,
+            "prefetch-on TPOT {} !< demand-paging TPOT {}",
+            prefetch.per_token_ms.mean,
+            demand.per_token_ms.mean
+        );
+        assert!(demand.wall_ms > base.wall_ms);
+    }
+
+    /// Satellite of `mem::tier`'s residency-conservation property:
+    /// the same invariants under real engine churn -- randomized SLO
+    /// classes, shared prefixes, preemption (swap and recompute) and
+    /// retirement over a tiered pool.  Every request finishes with its
+    /// full budget and both the pool and the residency overlay drain
+    /// to empty.
+    #[test]
+    fn property_tiered_churn_conserves_pages_and_requests() {
+        use crate::testutil::{Rng, Runner};
+        let model = crate::config::llm::TINY;
+        let layout = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: 128,
+        };
+        let per_req = layout.bytes_per_request();
+        Runner::new(8).run(|rng: &mut Rng| {
+            let mut eng = EngineBuilder::sim()
+                .model("tiny-1M")
+                .ctx_limit(128)
+                .max_batch(4)
+                .kv_capacity(per_req * 2)
+                .preempt(if rng.bool() { "swap" } else { "recompute" })
+                .aging_ms(f64::INFINITY)
+                .hot_fraction(0.2 + 0.6 * rng.f64())
+                .prefetch_depth(rng.usize(0, 5))
+                .build()
+                .unwrap();
+            let shared: Vec<i32> = (0..32).collect();
+            let mut ids = vec![];
+            let n = rng.usize(4, 10);
+            for k in 0..n {
+                let mut prompt = if rng.bool() {
+                    shared.clone()
+                } else {
+                    vec![60 + k as i32; rng.usize(8, 40)]
+                };
+                if rng.bool() {
+                    let ext = rng.usize(1, 30);
+                    prompt.extend((0..ext).map(|j| 100 + j as i32));
+                }
+                let class = *rng.pick(&crate::sched::SloClass::all());
+                let max_new = rng.usize(1, 24);
+                ids.push(eng.submit_class(prompt, max_new, class).unwrap());
+                if rng.bool() {
+                    eng.step().unwrap();
+                }
+                // the overlay's own invariants hold mid-churn
+                eng.tier.as_ref().unwrap().tier.check_invariants();
+            }
+            let m = eng.run_to_completion().unwrap();
+            assert_eq!(m.completed, ids.len());
+            let (mut pre, mut dem) = (0usize, 0usize);
+            for id in &ids {
+                let st = eng.poll(*id).unwrap();
+                assert!(st.finished, "{id:?} did not finish");
+                let r = eng.request(*id).unwrap();
+                pre += r.pages_prefetched;
+                dem += r.pages_demand;
+            }
+            // per-request counters telescope to the engine totals
+            assert_eq!(m.pages_prefetched, pre);
+            assert_eq!(m.pages_demand, dem);
+            // pool and overlay both drain: no page left in any tier
+            assert_eq!(eng.kv_entries(), 0);
+            assert_eq!(eng.pool_used_bytes(), 0);
+            let ts = eng.tier.as_ref().unwrap();
+            ts.tier.check_invariants();
+            let (hot, cold, _) = eng.tier_occupancy().unwrap();
+            assert_eq!((hot, cold), (0, 0), "residency overlay leaked");
+        });
     }
 }

@@ -30,6 +30,13 @@
 //!   with modeled KV handoff), reporting fleet goodput / utilization
 //!   skew / scaling efficiency ([`ClusterReport`]) -- see
 //!   `p3llm cluster`.
+//! * `mem` -- the two-tier KV hierarchy: hot pages in PIM-attached
+//!   HBM, cold pages offloaded to a CXL/DDR pool
+//!   ([`config::CxlLink`]), a per-page residency overlay with an
+//!   ahead-of-decode prefetcher ([`mem::TieredKv`]), and the single
+//!   slow-tier transfer pricing model every tier crossing (victim
+//!   swap restores, page migrations, `pd` pool handoffs) delegates to
+//!   -- see `p3llm memtier`.
 //! * `sched` -- SLO-tiered preemptive scheduling: [`SloClass`]
 //!   priority tiers carried from the traffic layer into per-class
 //!   reports, and a pluggable [`VictimPolicy`] registry (recompute
@@ -81,6 +88,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod mem;
 pub mod pcu;
 pub mod quant;
 pub mod report;

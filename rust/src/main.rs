@@ -12,12 +12,13 @@
 //! request path.
 
 use p3llm::accel::Accel;
+use p3llm::benchkit::BenchRecord;
 use p3llm::cli::Args;
 use p3llm::cluster::{
     all_policy_names, policy_by_name, policy_desc, Cluster, ClusterOutcome,
 };
 use p3llm::config::llm;
-use p3llm::coordinator::{Engine, EngineBuilder, Metrics};
+use p3llm::coordinator::{Engine, EngineBuilder, KvLayout, Metrics};
 use p3llm::error::{P3Error, Result};
 use p3llm::report::{f2, f3, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
@@ -119,6 +120,25 @@ commands:
                       span chain, flight recorder fires on an injected
                       zero TTFT budget, and a telemetry-off run is
                       report-identical with 0 events recorded
+  memtier    tiered KV hierarchy (HBM hot tier / CXL cold pool) sweep:
+             hot-tier fraction x prefetch depth x scenario through the
+             closed-loop runner; reports TTFT/TPOT curves next to
+             prefetched vs demand-migrated page counts
+             --scenario NAME[,NAME..]   (default smoke-longdoc; the
+                      long-doc-32k / long-doc-128k scenarios are the
+                      full-size long-context sweeps)
+             --hot F[,F..]     hot-tier fractions of the KV pool's
+                      pages (default 0.25,0.5,1.0; 1.0 = no cold tier)
+             --depth N[,N..]   ahead-of-decode prefetch depths in
+                      pages/request/step (default 0,4,8; 0 = pure
+                      demand paging, every cold page stalls decode)
+             --system NAME --scheme NAME --seed N --requests N
+             --save   write memtier.tsv + BENCH_memtier.json
+             --smoke  CI gate: bit-identical double run; the long-doc
+                      scenario overflows the hot tier yet loses zero
+                      requests with a nonzero prefetch hit rate;
+                      prefetch-on strictly beats demand paging on mean
+                      TPOT, incl. a 32k-context Mistral-7B proof
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -134,6 +154,7 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("overload") => cmd_overload(&args),
         Some("trace") => cmd_trace(&args),
+        Some("memtier") => cmd_memtier(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -242,6 +263,17 @@ fn print_load_report(r: &LoadReport) {
         println!(
             "preemptions: {} ({} pages swapped, {} recomputed)",
             r.preemptions, r.pages_swapped, r.pages_recomputed
+        );
+    }
+    if r.pages_prefetched + r.pages_demand > 0 {
+        let hit = r.pages_prefetched as f64
+            / (r.pages_prefetched + r.pages_demand) as f64;
+        println!(
+            "cxl tier: {} pages prefetched, {} demand-migrated \
+             (prefetch hit rate {:.1}%)",
+            r.pages_prefetched,
+            r.pages_demand,
+            hit * 100.0
         );
     }
 }
@@ -650,6 +682,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         "per-tier breakdown (SLO budget x tier slo_factor)",
         &TIER_HEADERS,
     );
+    let mut bench_records: Vec<BenchRecord> = vec![];
     for sc in &scenarios {
         for sys in &systems {
             let mut engine = sc.engine(sys, scheme)?;
@@ -712,11 +745,33 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                 r.prefill_tokens_saved.to_string(),
             ]);
             tier_rows(&mut tiers_t, sc.name, sys, r);
+            if smoke {
+                let cfg = format!("scenario={},system={sys}", sc.name);
+                bench_records.push(BenchRecord::new(
+                    cfg.clone(),
+                    "goodput_tok_s",
+                    r.goodput_tok_s,
+                ));
+                bench_records.push(BenchRecord::new(
+                    cfg,
+                    "ttft_mean_ms",
+                    r.ttft_ms.mean,
+                ));
+            }
         }
     }
     t.print();
     if !tiers_t.rows.is_empty() {
         tiers_t.print();
+    }
+    if smoke {
+        let path = p3llm::benchkit::save_bench_json(
+            "loadtest_smoke",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
     }
     if args.has("save") {
         save_tables(&t, Some(&tiers_t), "loadtest")?;
@@ -802,6 +857,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "per-tier fleet breakdown (SLO budget x tier slo_factor)",
         &TIER_HEADERS,
     );
+    let mut bench_records: Vec<BenchRecord> = vec![];
     for sc in &scenarios {
         let sat = sc.saturation_tok_s(system);
         for pol in &policies {
@@ -848,12 +904,31 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                     &format!("{pol} x{n}"),
                     &rep.fleet,
                 );
+                if smoke {
+                    bench_records.push(BenchRecord::new(
+                        format!(
+                            "scenario={},policy={pol},replicas={n}",
+                            sc.name
+                        ),
+                        "goodput_tok_s",
+                        r.goodput_tok_s,
+                    ));
+                }
             }
         }
     }
     t.print();
     if !tiers_t.rows.is_empty() {
         tiers_t.print();
+    }
+    if smoke {
+        let path = p3llm::benchkit::save_bench_json(
+            "cluster_smoke",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
     }
     if args.has("save") {
         save_tables(&t, Some(&tiers_t), "cluster")?;
@@ -1000,6 +1075,7 @@ fn cmd_overload(args: &Args) -> Result<()> {
         &TIER_HEADERS,
     );
     let mut curves = String::new();
+    let mut bench_records: Vec<BenchRecord> = vec![];
     for &load in &loads {
         for victim in victims.iter().map(|v| Some(*v)).chain([None]) {
             let label = victim.unwrap_or("fifo");
@@ -1023,6 +1099,19 @@ fn cmd_overload(args: &Args) -> Result<()> {
                 r.pages_recomputed.to_string(),
             ]);
             tier_rows(&mut tiers_t, sc.name, &format!("{label}@{load}x"), &r);
+            if smoke {
+                let cfg = format!("victim={label},load={load}");
+                bench_records.push(BenchRecord::new(
+                    cfg.clone(),
+                    "goodput_tok_s",
+                    r.goodput_tok_s,
+                ));
+                bench_records.push(BenchRecord::new(
+                    cfg,
+                    "attainment",
+                    r.slo_attainment,
+                ));
+            }
             if !curves.is_empty() {
                 curves.push(',');
             }
@@ -1117,6 +1206,13 @@ fn cmd_overload(args: &Args) -> Result<()> {
                 att, fifo_att, budget.ttft_ms, r.preemptions
             );
         }
+        let path = p3llm::benchkit::save_bench_json(
+            "overload_smoke",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
     }
 
     if args.has("save") {
@@ -1351,12 +1447,309 @@ fn cmd_trace(args: &Args) -> Result<()> {
                     .into(),
             ));
         }
+        let mut bench_records: Vec<BenchRecord> = vec![BenchRecord::new(
+            format!("scenario={}", sc.name),
+            "events",
+            events.len() as f64,
+        )];
+        for l in &util.lanes {
+            bench_records.push(BenchRecord::new(
+                format!("replica={},lane={}", l.replica, l.lane.name()),
+                "busy_ms",
+                l.busy_ms,
+            ));
+        }
+        let path = p3llm::benchkit::save_bench_json(
+            "trace_smoke",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
         println!(
             "smoke gate: deterministic export, all device lanes busy, \
              complete request chains, flight recorder fired; telemetry \
              off: report identical, {} events recorded",
             off.snapshot().len()
         );
+    }
+    Ok(())
+}
+
+/// Sweep the tiered KV hierarchy: hot-tier fraction x ahead-of-decode
+/// prefetch depth x scenario through the closed-loop runner.  Every
+/// engine keeps its hot pages in PIM-attached HBM and overflows to the
+/// modeled CXL cold pool; `--depth 0` is pure demand paging (each cold
+/// page stalls the decode clock for one link transfer), larger depths
+/// overlap the next attention window's pulls with decode.  `--smoke`
+/// is the CI gate ci.sh wires in.
+fn cmd_memtier(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM").to_string();
+    let scheme = args.get("scheme");
+    let mut scenarios = vec![];
+    for name in args.get_list("scenario", "smoke-longdoc") {
+        scenarios.push(traffic::scenario_by_name(&name).ok_or_else(|| {
+            P3Error::InvalidConfig(format!(
+                "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+            ))
+        })?);
+    }
+    if args.get("requests").is_some() {
+        let n = args.get_usize("requests", 1)?.max(1);
+        for s in &mut scenarios {
+            s.n_requests = n;
+        }
+    }
+    let mut hots: Vec<f64> = vec![];
+    for tok in args.get_list("hot", "0.25,0.5,1.0") {
+        let f = tok
+            .parse::<f64>()
+            .ok()
+            .filter(|f| f.is_finite() && *f > 0.0 && *f <= 1.0)
+            .ok_or_else(|| P3Error::InvalidFlag {
+                flag: "hot".into(),
+                value: tok.clone(),
+            })?;
+        hots.push(f);
+    }
+    let mut depths: Vec<usize> = vec![];
+    for tok in args.get_list("depth", "0,4,8") {
+        let d = tok.parse::<usize>().ok().ok_or_else(|| {
+            P3Error::InvalidFlag { flag: "depth".into(), value: tok.clone() }
+        })?;
+        depths.push(d);
+    }
+
+    let mut t = Table::new(
+        format!(
+            "memtier: hot-tier fraction x prefetch depth on {system}, \
+             seed {seed}",
+            ),
+        &[
+            "scenario",
+            "hot",
+            "depth",
+            "done",
+            "goodput tok/s",
+            "p95 TTFT ms",
+            "mean TPOT ms",
+            "p95 TPOT ms",
+            "prefetched",
+            "demand",
+        ],
+    );
+    let mut bench_records: Vec<BenchRecord> = vec![];
+    for sc in &scenarios {
+        for &hot in &hots {
+            for &depth in &depths {
+                let mut engine =
+                    sc.engine_tiered(&system, scheme, hot, depth)?;
+                let out = sc.runner(seed).run_with_saturation(
+                    &mut engine,
+                    sc.saturation_tok_s(&system),
+                )?;
+                let r = &out.report;
+                if smoke && r.completed < r.offered {
+                    return Err(P3Error::Serve(format!(
+                        "memtier smoke gate: {} hot={hot} depth={depth} \
+                         lost requests ({}/{} completed)",
+                        sc.name, r.completed, r.offered
+                    )));
+                }
+                t.row(vec![
+                    sc.name.into(),
+                    format!("{hot}"),
+                    depth.to_string(),
+                    format!("{}/{}", r.completed, r.offered),
+                    f2(r.goodput_tok_s),
+                    f2(r.ttft_ms.p95),
+                    f3(r.tpot_ms.mean),
+                    f3(r.tpot_ms.p95),
+                    r.pages_prefetched.to_string(),
+                    r.pages_demand.to_string(),
+                ]);
+                let cfg = format!(
+                    "scenario={},hot={hot},depth={depth}",
+                    sc.name
+                );
+                bench_records.push(BenchRecord::new(
+                    cfg.clone(),
+                    "tpot_mean_ms",
+                    r.tpot_ms.mean,
+                ));
+                bench_records.push(BenchRecord::new(
+                    cfg.clone(),
+                    "pages_prefetched",
+                    r.pages_prefetched as f64,
+                ));
+                bench_records.push(BenchRecord::new(
+                    cfg,
+                    "pages_demand",
+                    r.pages_demand as f64,
+                ));
+            }
+        }
+    }
+    t.print();
+
+    if smoke {
+        // (a) determinism: an identical in-process tiered re-run must
+        // agree bit-for-bit (ci.sh additionally diffs two processes)
+        let sc = traffic::scenario_by_name("smoke-longdoc").ok_or_else(
+            || P3Error::InvalidConfig("smoke-longdoc missing".into()),
+        )?;
+        let run_tiered = |hot: f64, depth: usize| -> Result<LoadReport> {
+            let mut engine = sc.engine_tiered(&system, scheme, hot, depth)?;
+            let out = sc.runner(seed).run_with_saturation(
+                &mut engine,
+                sc.saturation_tok_s(&system),
+            )?;
+            Ok(out.report)
+        };
+        let pf = run_tiered(0.3, 4)?;
+        if run_tiered(0.3, 4)? != pf {
+            return Err(P3Error::Serve(
+                "memtier smoke gate: two identical tiered runs \
+                 disagreed (nondeterminism)"
+                    .into(),
+            ));
+        }
+        // (b) the long-doc scenario overflows the hot tier yet loses
+        // nothing, and the prefetcher actually fires
+        if pf.completed < pf.offered {
+            return Err(P3Error::Serve(format!(
+                "memtier smoke gate: smoke-longdoc lost requests \
+                 ({}/{} completed)",
+                pf.completed, pf.offered
+            )));
+        }
+        if pf.pages_prefetched == 0 {
+            return Err(P3Error::Serve(
+                "memtier smoke gate: prefetcher never fired on an \
+                 overflowing hot tier"
+                    .into(),
+            ));
+        }
+        // (c) prefetch-on strictly beats pure demand paging on mean
+        // decode TPOT under identical seeds
+        let dm = run_tiered(0.3, 0)?;
+        if dm.completed < dm.offered || dm.pages_prefetched != 0 {
+            return Err(P3Error::Serve(
+                "memtier smoke gate: demand-paging baseline is broken"
+                    .into(),
+            ));
+        }
+        if !(pf.tpot_ms.mean < dm.tpot_ms.mean) {
+            return Err(P3Error::Serve(format!(
+                "memtier smoke gate: prefetch mean TPOT {:.4} ms !< \
+                 demand-paging {:.4} ms",
+                pf.tpot_ms.mean, dm.tpot_ms.mean
+            )));
+        }
+        let hit = pf.pages_prefetched as f64
+            / (pf.pages_prefetched + pf.pages_demand) as f64;
+        println!(
+            "smoke gate: smoke-longdoc hot=0.3: {}/{} completed, \
+             prefetch hit rate {:.1}%, prefetch mean TPOT {:.4} ms < \
+             demand-paging {:.4} ms",
+            pf.completed,
+            pf.offered,
+            hit * 100.0,
+            pf.tpot_ms.mean,
+            dm.tpot_ms.mean
+        );
+        // (d) the 32k-context proof: two ~8k-token Mistral-7B long
+        // docs on one replica whose hot tier holds only a quarter of
+        // the pool -- the working set cannot fit HBM alone, yet both
+        // complete, and the ahead-of-decode prefetcher strictly beats
+        // demand migration on the same seeds
+        let model = llm::by_name("Mistral-7B")
+            .ok_or_else(|| P3Error::UnknownModel("Mistral-7B".into()))?;
+        let per_req = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: 32768,
+        }
+        .bytes_per_request();
+        let run_32k = |depth: usize| -> Result<Metrics> {
+            let mut eng = EngineBuilder::sim()
+                .model("Mistral-7B")
+                .system(&system)
+                .max_batch(2)
+                .ctx_limit(32768)
+                .kv_capacity(per_req)
+                .hot_fraction(0.25)
+                .prefetch_depth(depth)
+                .build()?;
+            let mut rng = p3llm::testutil::Rng::new(0x32c0 ^ seed);
+            for _ in 0..2 {
+                let toks: Vec<i32> = (0..8192)
+                    .map(|_| rng.usize(0, 32000) as i32)
+                    .collect();
+                eng.submit(toks, 24)?;
+            }
+            eng.run_to_completion()
+        };
+        let dm32 = run_32k(0)?;
+        let pf32 = run_32k(8)?;
+        if dm32.completed != 2 || pf32.completed != 2 {
+            return Err(P3Error::Serve(format!(
+                "memtier smoke gate: 32k long-doc lost requests \
+                 (demand {}/2, prefetch {}/2)",
+                dm32.completed, pf32.completed
+            )));
+        }
+        if pf32.pages_prefetched == 0
+            || dm32.pages_prefetched != 0
+            || !(pf32.per_token_ms.mean < dm32.per_token_ms.mean)
+        {
+            return Err(P3Error::Serve(format!(
+                "memtier smoke gate: 32k proof failed (prefetch TPOT \
+                 {:.4} ms vs demand {:.4} ms, {} pages prefetched)",
+                pf32.per_token_ms.mean,
+                dm32.per_token_ms.mean,
+                pf32.pages_prefetched
+            )));
+        }
+        println!(
+            "smoke gate: 32k long-doc on Mistral-7B (hot tier 0.25): \
+             2/2 completed; prefetch mean TPOT {:.4} ms < demand \
+             {:.4} ms ({} pages prefetched)",
+            pf32.per_token_ms.mean,
+            dm32.per_token_ms.mean,
+            pf32.pages_prefetched
+        );
+        bench_records.push(BenchRecord::new(
+            "model=Mistral-7B,ctx=32768,hot=0.25,depth=0",
+            "tpot_mean_ms",
+            dm32.per_token_ms.mean,
+        ));
+        bench_records.push(BenchRecord::new(
+            "model=Mistral-7B,ctx=32768,hot=0.25,depth=8",
+            "tpot_mean_ms",
+            pf32.per_token_ms.mean,
+        ));
+        let path = p3llm::benchkit::save_bench_json(
+            "memtier_smoke",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
+    }
+
+    if args.has("save") {
+        save_tables(&t, None, "memtier")?;
+        let path = p3llm::benchkit::save_bench_json(
+            "memtier",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
     }
     Ok(())
 }

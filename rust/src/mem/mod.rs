@@ -1,0 +1,33 @@
+//! `mem/`: the two-tier KV memory hierarchy -- HBM-hot / CXL-cold
+//! paged offload with ahead-of-decode prefetch.
+//!
+//! P3-LLM's decode phase is KV-bandwidth-bound and a replica's
+//! PIM-attached HBM caps the context it can serve.  This layer opens
+//! the 32k-128k long-context scenarios by backing the paged
+//! [`KvPool`](crate::coordinator::KvPool) with a CXL/DDR cold pool:
+//!
+//! * [`tier::TieredKv`] -- the per-page residency overlay (every page
+//!   in exactly one [`Tier`]), LRU eviction to the hot-tier cap, and
+//!   the ahead-of-decode prefetcher that pulls the next attention
+//!   window back to HBM before the step that needs it, falling back
+//!   to demand migration (an engine-clock stall) past its depth.
+//! * [`transfer`] -- the single pricing model for every byte crossing
+//!   a tier boundary: `max(HBM streaming pass, link latency + bytes /
+//!   link bandwidth)`.  The `swap` victim policy's restore leg, CXL
+//!   page migrations, and the cluster `pd` policy's pool-mediated
+//!   prefill handoff all delegate here, so slow-tier cost lives in
+//!   exactly one place.
+//!
+//! Link parameters come from [`crate::config::CxlLink`]; the engine
+//! enables the hierarchy via `EngineBuilder::hot_fraction` /
+//! `prefetch_depth` (sim backend), and migrations show up on the
+//! telemetry `cxl` lane and in the `memtier` CLI sweep.
+
+pub mod tier;
+pub mod transfer;
+
+pub use tier::{LaneOutcome, Tier, TieredKv};
+pub use transfer::{
+    kv_bytes, migration_ms, page_migration_ms, pool_handoff_ms,
+    swap_restore_ms, transfer_ns,
+};

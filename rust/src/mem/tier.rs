@@ -1,0 +1,340 @@
+//! Per-page residency map of the two-tier KV hierarchy.
+//!
+//! [`TieredKv`] is a pure overlay on the paged
+//! [`KvPool`](crate::coordinator::KvPool): the pool keeps owning page
+//! storage, refcounts and free lists for the *combined* capacity
+//! (admission overcommits HBM against the cold pool, so the typed
+//! `KvExhausted` only fires when both tiers are full), while the
+//! overlay tracks which of a request's pages are resident in
+//! PIM-attached HBM (hot) and which have been evicted to the CXL/DDR
+//! cold pool.  Residency is keyed `(request, page index)` -- page
+//! indices are derived from committed token counts exactly as the
+//! pool derives them (`ceil(tokens / PAGE_TOKENS)`), so the overlay
+//! never reaches into the pool's private page tables.
+//!
+//! Life cycle per decode step, per lane ([`TieredKv::step_lane`]):
+//! pages written this step (prefill output, the newest decode token's
+//! page) are *born hot* -- the device writes them to HBM.  Cold pages
+//! the attention pass needs are pulled back over the CXL link: the
+//! ahead-of-decode prefetcher covers up to `prefetch_depth` of them
+//! (it walked the page table during the previous step, so the
+//! transfer overlapped compute and costs no engine time), the rest
+//! are demand misses the engine charges as a clock stall.  After the
+//! walk the hot set is trimmed back to `hot_cap_pages` by evicting
+//! the least-recently-touched pages (deterministic tie-break on
+//! `(request, page index)`); eviction is an asynchronous write-back
+//! behind the ongoing decode, matching the `swap` victim policy's
+//! swap-out convention, so it is counted but not charged.
+
+use std::collections::BTreeMap;
+
+/// Which tier a page is resident in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// PIM-attached HBM: attention reads execute in place.
+    Hot,
+    /// CXL/DDR cold pool: the page must migrate back before use.
+    Cold,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PageState {
+    tier: Tier,
+    /// last-touch stamp (monotone per overlay) driving LRU eviction
+    tick: u64,
+}
+
+/// What one lane's pre-step page walk cost ([`TieredKv::step_lane`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneOutcome {
+    /// pages written fresh to HBM this step (no transfer)
+    pub born: usize,
+    /// cold pages the prefetcher pulled back ahead of the step
+    /// (overlapped -- no engine-clock charge)
+    pub prefetched: usize,
+    /// cold pages demand-migrated at step time (each charges one page
+    /// migration as an engine-clock stall)
+    pub demand: usize,
+}
+
+/// Residency map + LRU clock for the hot tier.  See the module docs.
+#[derive(Debug, Clone)]
+pub struct TieredKv {
+    /// per-request page residency, indexed by page number
+    lanes: BTreeMap<u64, Vec<PageState>>,
+    hot_cap_pages: usize,
+    prefetch_depth: usize,
+    hot_count: usize,
+    tick: u64,
+    // lifetime counters (mirrored into serving metrics by the engine)
+    prefetched: usize,
+    demand: usize,
+    evicted: usize,
+}
+
+impl TieredKv {
+    /// `hot_cap_pages` is the HBM-resident page budget (at least one
+    /// page -- a decode step must be able to land its output);
+    /// `prefetch_depth` is how many cold pages per lane per step the
+    /// ahead-of-decode prefetcher can hide (0 = pure demand paging).
+    pub fn new(hot_cap_pages: usize, prefetch_depth: usize) -> Self {
+        TieredKv {
+            lanes: BTreeMap::new(),
+            hot_cap_pages: hot_cap_pages.max(1),
+            prefetch_depth,
+            hot_count: 0,
+            tick: 0,
+            prefetched: 0,
+            demand: 0,
+            evicted: 0,
+        }
+    }
+
+    pub fn hot_cap_pages(&self) -> usize {
+        self.hot_cap_pages
+    }
+
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch_depth
+    }
+
+    /// Pages currently resident in HBM.
+    pub fn hot_pages(&self) -> usize {
+        self.hot_count
+    }
+
+    /// Pages currently parked in the cold pool.
+    pub fn cold_pages(&self) -> usize {
+        self.total_pages() - self.hot_count
+    }
+
+    /// Pages tracked across both tiers (== live pages of tracked
+    /// lanes; every page is in exactly one tier).
+    pub fn total_pages(&self) -> usize {
+        self.lanes.values().map(|v| v.len()).sum()
+    }
+
+    /// Lifetime `(prefetched, demand, evicted)` page counts.
+    pub fn counters(&self) -> (usize, usize, usize) {
+        (self.prefetched, self.demand, self.evicted)
+    }
+
+    /// Walk one lane's page table just before its decode step:
+    /// `npages` is the page count the step reads and grows
+    /// (`ceil(tokens / PAGE_TOKENS)` committed so far).  New page
+    /// indices are born hot; known-cold pages split into prefetched
+    /// (up to the depth) and demand misses; every touched page gets a
+    /// fresh LRU stamp; finally the hot set is trimmed to cap.
+    pub fn step_lane(&mut self, rid: u64, npages: usize) -> LaneOutcome {
+        let entry = self.lanes.entry(rid).or_default();
+        let mut out = LaneOutcome::default();
+        let known = entry.len().min(npages);
+        for page in entry.iter_mut().take(known) {
+            self.tick += 1;
+            page.tick = self.tick;
+            if page.tier == Tier::Cold {
+                if out.prefetched < self.prefetch_depth {
+                    out.prefetched += 1;
+                } else {
+                    out.demand += 1;
+                }
+                page.tier = Tier::Hot;
+                self.hot_count += 1;
+            }
+        }
+        while entry.len() < npages {
+            self.tick += 1;
+            entry.push(PageState { tier: Tier::Hot, tick: self.tick });
+            self.hot_count += 1;
+            out.born += 1;
+        }
+        self.prefetched += out.prefetched;
+        self.demand += out.demand;
+        self.evict_to_cap();
+        out
+    }
+
+    /// Drop a lane's residency entries (request retired, preempted,
+    /// or its prefill failed -- wherever the pool frees the
+    /// sequence).  Unknown lanes are a no-op: requests that retire at
+    /// prefill never enter a decode-step walk.
+    pub fn free(&mut self, rid: u64) {
+        if let Some(pages) = self.lanes.remove(&rid) {
+            self.hot_count -=
+                pages.iter().filter(|p| p.tier == Tier::Hot).count();
+        }
+    }
+
+    /// Evict least-recently-touched hot pages to the cold tier until
+    /// the hot set fits the cap.  One sorted pass; ties (impossible
+    /// with the monotone tick, but cheap to guarantee) break on
+    /// `(request, page index)` so eviction order is deterministic.
+    fn evict_to_cap(&mut self) {
+        if self.hot_count <= self.hot_cap_pages {
+            return;
+        }
+        let mut hot: Vec<(u64, u64, usize)> = self
+            .lanes
+            .iter()
+            .flat_map(|(&rid, pages)| {
+                pages.iter().enumerate().filter_map(move |(i, p)| {
+                    (p.tier == Tier::Hot).then_some((p.tick, rid, i))
+                })
+            })
+            .collect();
+        hot.sort_unstable();
+        let excess = self.hot_count - self.hot_cap_pages;
+        for &(_, rid, i) in hot.iter().take(excess) {
+            self.lanes.get_mut(&rid).unwrap()[i].tier = Tier::Cold;
+            self.hot_count -= 1;
+            self.evicted += 1;
+        }
+    }
+
+    /// Recompute the hot count from scratch and assert every
+    /// bookkeeping quantity holds (test support): each page in
+    /// exactly one tier, the incremental hot count exact, and the hot
+    /// set within cap.
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        let hot = self
+            .lanes
+            .values()
+            .flatten()
+            .filter(|p| p.tier == Tier::Hot)
+            .count();
+        assert_eq!(hot, self.hot_count, "hot count drifted");
+        assert!(
+            self.hot_count <= self.hot_cap_pages,
+            "hot set {} over cap {}",
+            self.hot_count,
+            self.hot_cap_pages
+        );
+        assert_eq!(
+            self.hot_pages() + self.cold_pages(),
+            self.total_pages(),
+            "a page left both tiers"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{Rng, Runner};
+
+    #[test]
+    fn pages_are_born_hot_then_age_to_cold_and_migrate_back() {
+        let mut t = TieredKv::new(4, 1);
+        // a 6-page lane: born hot, trimmed to the 4-page cap
+        let o = t.step_lane(1, 6);
+        assert_eq!(o, LaneOutcome { born: 6, prefetched: 0, demand: 0 });
+        assert_eq!(t.hot_pages(), 4);
+        assert_eq!(t.cold_pages(), 2);
+        // LRU: the lowest-indexed (earliest-stamped) pages went cold
+        // first, so the next walk pulls exactly those two back --
+        // one hidden by the depth-1 prefetcher, one demand miss
+        let o = t.step_lane(1, 6);
+        assert_eq!(o, LaneOutcome { born: 0, prefetched: 1, demand: 1 });
+        assert_eq!(t.hot_pages() + t.cold_pages(), 6);
+        let (pre, dem, ev) = t.counters();
+        assert_eq!((pre, dem), (1, 1));
+        assert!(ev >= 2);
+        t.check_invariants();
+        t.free(1);
+        assert_eq!(t.total_pages(), 0);
+        assert_eq!(t.hot_pages(), 0);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn depth_zero_is_pure_demand_paging() {
+        let mut t = TieredKv::new(2, 0);
+        t.step_lane(9, 5);
+        let o = t.step_lane(9, 5);
+        assert_eq!(o.prefetched, 0);
+        assert_eq!(o.demand, 3);
+        // a deep prefetcher hides the same walk entirely
+        let mut p = TieredKv::new(2, 8);
+        p.step_lane(9, 5);
+        let o = p.step_lane(9, 5);
+        assert_eq!(o.prefetched, 3);
+        assert_eq!(o.demand, 0);
+    }
+
+    #[test]
+    fn eviction_prefers_idle_lanes_over_the_stepping_lane() {
+        let mut t = TieredKv::new(3, 0);
+        t.step_lane(1, 3); // lane 1 fills the hot tier
+        t.step_lane(2, 3); // lane 2 steps: lane 1's pages all go cold
+        let again = t.step_lane(2, 3);
+        assert_eq!(again.demand, 0, "the active lane stayed resident");
+        let back = t.step_lane(1, 3);
+        assert_eq!(back.demand, 3, "the idle lane's pages went cold");
+        t.check_invariants();
+    }
+
+    /// Satellite: cross-tier residency conservation under randomized
+    /// prefetch / evict / demand-miss / free churn.  After every
+    /// operation each tracked page is in exactly one tier, the
+    /// incremental hot count matches a from-scratch recount, the hot
+    /// set respects the cap, and no lane loses pages (a lane's page
+    /// count only grows until it is freed).  The companion engine-
+    /// level churn test (preemption + prefix sharing on a live pool)
+    /// lives in `coordinator::serve`.
+    #[test]
+    fn property_residency_conservation_under_churn() {
+        Runner::new(48).run(|rng: &mut Rng| {
+            let cap = rng.usize(1, 12);
+            let depth = rng.usize(0, 5);
+            let mut t = TieredKv::new(cap, depth);
+            let mut expect: BTreeMap<u64, usize> = BTreeMap::new();
+            let (mut pre, mut dem) = (0usize, 0usize);
+            for _ in 0..rng.usize(20, 120) {
+                let rid = rng.usize(1, 6) as u64;
+                if rng.usize(0, 5) == 0 {
+                    t.free(rid);
+                    expect.remove(&rid);
+                } else {
+                    let have = expect.get(&rid).copied().unwrap_or(0);
+                    let npages = if rng.bool() {
+                        have.max(1) // re-walk at the current size
+                    } else {
+                        have + rng.usize(1, 8) // grow
+                    };
+                    let o = t.step_lane(rid, npages);
+                    // growth is exactly the born count; nothing lost
+                    assert_eq!(o.born, npages.max(have) - have);
+                    // a walk migrates cold pages only, prefetch-first
+                    assert!(o.prefetched <= depth);
+                    if o.demand > 0 {
+                        assert_eq!(o.prefetched, depth);
+                    }
+                    // known cold pages all migrated: what the walk
+                    // didn't migrate or bear fresh was already hot,
+                    // and the hot set is capped
+                    assert!(o.prefetched + o.demand + o.born + cap >= npages);
+                    expect.insert(rid, npages.max(have));
+                    pre += o.prefetched;
+                    dem += o.demand;
+                }
+                t.check_invariants();
+                assert_eq!(
+                    t.total_pages(),
+                    expect.values().sum::<usize>(),
+                    "a lane lost pages"
+                );
+                let (tp, td, _) = t.counters();
+                assert_eq!((tp, td), (pre, dem));
+            }
+            for rid in expect.keys() {
+                t.free(*rid);
+            }
+            // free() is also callable on already-freed / unknown rids
+            t.free(999);
+            assert_eq!(t.total_pages(), 0);
+            assert_eq!(t.hot_pages(), 0);
+            t.check_invariants();
+        });
+    }
+}

@@ -9,14 +9,13 @@
 //!   which is cheap when the shared-prefix cache still holds the
 //!   victim's registered prompt pages.
 //! * **swap** -- migrate the victim's pages to a modeled slow tier and
-//!   restore them on resume, priced as an explicit `sim::dram`
-//!   event-model transfer (the same stream-vs-bus pipeline model the
-//!   cluster layer uses for inter-replica KV handoffs).
+//!   restore them on resume, priced by the unified slow-tier transfer
+//!   model in [`crate::mem::transfer`] (the same model that prices CXL
+//!   page migrations and cluster KV handoffs).
 
 use crate::config::accel::HbmTiming;
 use crate::config::llm::LlmConfig;
 use crate::sched::SloClass;
-use crate::sim::{dram, npu};
 use std::cmp::Reverse;
 
 /// What a policy does with the victim's KV pages.
@@ -115,19 +114,16 @@ impl VictimPolicy for SwapVictim {
 /// Modeled one-way swap transfer time for `tokens` of packed KV: the
 /// cache streams through the stack's DRAM (event-level `sim::dram`
 /// read pass) and crosses the external bus to the slow tier; the
-/// stages pipeline, so the slower one prices the hop.  Same formula as
-/// `Cluster::kv_transfer_ms` -- a swap restore and an inter-replica
-/// handoff move identical bytes over identical links.
+/// stages pipeline, so the slower one prices the hop.  Delegates to
+/// the unified slow-tier transfer model
+/// ([`crate::mem::swap_restore_ms`]) so every tier crossing in the
+/// stack is priced in one place.
 pub fn swap_restore_ms(
     hbm: &HbmTiming,
     model: &LlmConfig,
     tokens: usize,
 ) -> f64 {
-    let bytes =
-        (2 * model.layers * tokens.max(1) * (model.kv_dim() / 2)) as f64;
-    let stream_ns = dram::gemv_pass_ns(hbm, bytes);
-    let bus_ns = npu::transfer(hbm, bytes).ns;
-    stream_ns.max(bus_ns) / 1e6
+    crate::mem::swap_restore_ms(hbm, model, tokens)
 }
 
 /// Registry names, canonical order (`--victim` accepts these).

@@ -164,6 +164,7 @@ mod tests {
         t.instant("enqueue", 0.0, Some(1), None, 3.0);
         t.span(TraceLane::Npu, "prefill", 0.0, 2.0, None, None, 3.0);
         t.span(TraceLane::Pim, "qk", 2.0, 2.5, None, None, 8.0);
+        t.span(TraceLane::Cxl, "prefetch", 2.0, 3.0, Some(1), None, 2.0);
         r1.instant("retire", 4.0, Some(1), None, 2.0);
         t.counter("kv_used_bytes", 4.0, 1024.0);
         t.snapshot()
@@ -186,6 +187,12 @@ mod tests {
         assert!(json.contains("replica 1"));
         assert!(json.contains("\"name\":\"npu\""));
         assert!(json.contains("\"name\":\"pim\""));
+        // the tiered-KV migration lane exports as its own track: a
+        // thread_name record plus the span tagged with its category
+        assert!(json.contains("\"name\":\"cxl\""));
+        assert!(json.contains("\"cat\":\"cxl\""));
+        assert!(json
+            .contains(&format!("\"tid\":{}", TraceLane::Cxl.index())));
         assert!(json.contains("req 1"));
         assert!(json.contains("\"ph\":\"X\""));
         assert!(json.contains("\"ph\":\"i\""));

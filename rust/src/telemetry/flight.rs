@@ -152,6 +152,30 @@ mod tests {
     }
 
     #[test]
+    fn cxl_migrations_attribute_to_their_request() {
+        let t = Trace::ring(32);
+        t.instant("enqueue", 0.0, Some(5), None, 1.0);
+        t.span(TraceLane::Cxl, "prefetch", 1.0, 2.0, Some(5), None, 3.0);
+        t.span(
+            TraceLane::Cxl,
+            "demand_migrate",
+            2.0,
+            2.5,
+            Some(5),
+            None,
+            1.0,
+        );
+        // another request's prefetch must not leak into rid 5's dump
+        t.span(TraceLane::Cxl, "prefetch", 1.5, 2.5, Some(6), None, 2.0);
+        let d = flight_dump(&t.snapshot(), 0, 5, 8);
+        let names: Vec<&str> = d.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["enqueue", "prefetch", "demand_migrate"]);
+        let s = render(&d);
+        assert!(s.contains("demand_migrate"));
+        assert!(s.contains("prefetch"));
+    }
+
+    #[test]
     fn render_mentions_names_and_spans() {
         let t = Trace::ring(8);
         t.span(TraceLane::Host, "prefill", 1.0, 3.0, Some(1), None, 4.0);

@@ -70,6 +70,10 @@ pub enum TraceLane {
     /// DRAM/external-bus transfers (PIM result return, KV install,
     /// swap restore)
     Bus,
+    /// CXL link occupancy of the tiered KV hierarchy (ahead-of-decode
+    /// prefetches and demand page migrations between HBM and the cold
+    /// pool)
+    Cxl,
 }
 
 impl TraceLane {
@@ -80,6 +84,7 @@ impl TraceLane {
             TraceLane::Npu => "npu",
             TraceLane::Pim => "pim",
             TraceLane::Bus => "bus",
+            TraceLane::Cxl => "cxl",
         }
     }
 
@@ -90,6 +95,7 @@ impl TraceLane {
             TraceLane::Npu => 1,
             TraceLane::Pim => 2,
             TraceLane::Bus => 3,
+            TraceLane::Cxl => 4,
         }
     }
 }

@@ -239,6 +239,36 @@ mod tests {
     }
 
     #[test]
+    fn cxl_lane_rolls_up_like_any_device_track() {
+        let t = Trace::ring(32);
+        t.span(TraceLane::Npu, "decode", 0.0, 4.0, None, None, 0.0);
+        // two prefetch bursts and one demand stall on the cxl lane
+        t.span(TraceLane::Cxl, "prefetch", 0.0, 1.0, Some(1), None, 2.0);
+        t.span(TraceLane::Cxl, "prefetch", 0.5, 1.5, Some(2), None, 2.0);
+        t.span(
+            TraceLane::Cxl,
+            "demand_migrate",
+            3.0,
+            3.5,
+            Some(1),
+            None,
+            1.0,
+        );
+        let u = utilization(&t.snapshot());
+        // overlapping prefetches union to [0,1.5]; the stall adds 0.5
+        assert!((u.busy_ms(0, TraceLane::Cxl) - 2.0).abs() < 1e-9);
+        let cxl = u
+            .lanes
+            .iter()
+            .find(|l| l.lane == TraceLane::Cxl)
+            .unwrap();
+        assert_eq!(cxl.spans, 3);
+        assert_eq!(cxl.idle_gaps, 1);
+        let rendered = u.table().render();
+        assert!(rendered.contains("cxl"));
+    }
+
+    #[test]
     fn empty_trace_is_all_zero() {
         let u = utilization(&[]);
         assert_eq!(u.wall_ms, 0.0);

@@ -220,6 +220,79 @@ impl RequestMix {
         }
     }
 
+    /// Long-document analysis at 32k-class contexts (book chapters,
+    /// contracts, log bundles): prompts run to tens of KV pages per
+    /// request, so a working set of a few concurrent requests
+    /// overflows an HBM hot tier and exercises the CXL cold pool.
+    /// A small pool of shared instruction headers keeps the
+    /// prefix cache in play.
+    pub fn long_doc() -> Self {
+        RequestMix {
+            name: "long-doc",
+            prompt_mu: mu(8192),
+            prompt_sigma: 0.5,
+            output_mu: mu(192),
+            output_sigma: 0.5,
+            min_prompt: 2048,
+            max_prompt: 24576,
+            min_output: 32,
+            max_output: 768,
+            prefixes: Some(PrefixPool {
+                n: 3,
+                len: 1024,
+                zipf: 1.1,
+                p_none: 0.2,
+            }),
+        }
+    }
+
+    /// Extreme long-context at 128k-class budgets (codebase dumps,
+    /// multi-document synthesis): the per-request KV alone dwarfs any
+    /// plausible hot tier, so decode throughput is set by how well the
+    /// prefetcher hides cold-pool pulls.
+    pub fn long_doc_xl() -> Self {
+        RequestMix {
+            name: "long-doc-xl",
+            prompt_mu: mu(32768),
+            prompt_sigma: 0.4,
+            output_mu: mu(256),
+            output_sigma: 0.5,
+            min_prompt: 8192,
+            max_prompt: 98304,
+            min_output: 32,
+            max_output: 1024,
+            prefixes: Some(PrefixPool {
+                n: 2,
+                len: 4096,
+                zipf: 1.0,
+                p_none: 0.25,
+            }),
+        }
+    }
+
+    /// Miniature long-document mix for the tiny-1M model (CI smoke
+    /// gate for the tiered KV hierarchy: prompts near the 160-token
+    /// context ceiling so a fractional hot tier always overflows).
+    pub fn long_doc_tiny() -> Self {
+        RequestMix {
+            name: "long-doc-tiny",
+            prompt_mu: mu(112),
+            prompt_sigma: 0.2,
+            output_mu: mu(12),
+            output_sigma: 0.4,
+            min_prompt: 96,
+            max_prompt: 128,
+            min_output: 2,
+            max_output: 24,
+            prefixes: Some(PrefixPool {
+                n: 2,
+                len: 32,
+                zipf: 1.0,
+                p_none: 0.1,
+            }),
+        }
+    }
+
     /// Draw one `(prompt_tokens, output_tokens)` pair.
     pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
         let p = rng.lognormal(self.prompt_mu, self.prompt_sigma).round()
@@ -248,8 +321,11 @@ pub fn all_mixes() -> Vec<RequestMix> {
         RequestMix::rag_long(),
         RequestMix::agent(),
         RequestMix::rag_cached(),
+        RequestMix::long_doc(),
+        RequestMix::long_doc_xl(),
         RequestMix::tiny(),
         RequestMix::tiny_prefix(),
+        RequestMix::long_doc_tiny(),
     ]
 }
 

@@ -98,6 +98,46 @@ impl Scenario {
         b.build()
     }
 
+    /// Build this scenario's engine with the tiered KV hierarchy
+    /// enabled: `hot_fraction` of the pool's pages live in PIM-attached
+    /// HBM, the rest in the modeled CXL cold pool, and the
+    /// ahead-of-decode prefetcher pulls `prefetch_depth` pages per
+    /// request per step (`0` = pure demand paging).  This is the engine
+    /// shape `p3llm memtier` sweeps.
+    pub fn engine_tiered(
+        &self,
+        system: &str,
+        scheme: Option<&str>,
+        hot_fraction: f64,
+        prefetch_depth: usize,
+    ) -> Result<Engine> {
+        let model = llm::by_name(self.model)
+            .ok_or_else(|| P3Error::UnknownModel(self.model.into()))?;
+        let per_req = KvLayout {
+            layers: model.layers,
+            kv_dim: model.kv_dim(),
+            head_dim: model.head_dim,
+            max_ctx: self.ctx_limit.min(model.max_ctx),
+        }
+        .bytes_per_request();
+        let mut b = EngineBuilder::sim()
+            .model(self.model)
+            .system(system)
+            .max_batch(self.max_batch)
+            .ctx_limit(self.ctx_limit.min(model.max_ctx))
+            .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)))
+            .prefix_cache(self.prefix_cache)
+            .hot_fraction(hot_fraction)
+            .prefetch_depth(prefetch_depth);
+        if let Some(v) = self.victim {
+            b = b.preempt(v);
+        }
+        if let Some(s) = scheme {
+            b = b.scheme(s);
+        }
+        b.build()
+    }
+
     /// Scale the arrival process (`--scale`: > 1 thins the load, < 1
     /// intensifies it); degenerate factors are typed errors.
     pub fn with_scale(mut self, factor: f64) -> Result<Self> {
@@ -361,6 +401,61 @@ pub fn all_scenarios() -> Vec<Scenario> {
             victim: Some("recompute"),
         },
         Scenario {
+            name: "long-doc-32k",
+            desc: "32k-context document analysis: per-request KV spans \
+                   hundreds of pages (HBM/CXL tiering territory)",
+            model: "Mistral-7B",
+            arrival: ArrivalProcess::Poisson {
+                mean_interarrival_ms: 2000.0,
+            },
+            mix: RequestMix::long_doc(),
+            slo: SloSpec::relaxed(),
+            n_requests: 8,
+            max_batch: 4,
+            ctx_limit: 32768,
+            // two full-context reservations back ~4 concurrent long
+            // docs: admission overcommits against the cold pool while
+            // a fractional hot tier overflows every step
+            kv_slots: 2,
+            prefix_cache: true,
+            tiers: None,
+            victim: None,
+        },
+        Scenario {
+            name: "long-doc-128k",
+            desc: "128k-context synthesis: KV per request dwarfs any \
+                   hot tier, decode rides the prefetcher",
+            model: "Llama-3.1-8B",
+            arrival: ArrivalProcess::Poisson {
+                mean_interarrival_ms: 8000.0,
+            },
+            mix: RequestMix::long_doc_xl(),
+            slo: SloSpec::relaxed(),
+            n_requests: 4,
+            max_batch: 2,
+            ctx_limit: 131072,
+            kv_slots: 1,
+            prefix_cache: true,
+            tiers: None,
+            victim: None,
+        },
+        Scenario {
+            name: "smoke-longdoc",
+            desc: "CI gate: tiny model, near-ceiling prompts over a \
+                   fractional HBM hot tier, milliseconds",
+            model: "tiny-1M",
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 5.0 },
+            mix: RequestMix::long_doc_tiny(),
+            slo: SloSpec::relaxed(),
+            n_requests: 12,
+            max_batch: 4,
+            ctx_limit: 160,
+            kv_slots: 4,
+            prefix_cache: true,
+            tiers: None,
+            victim: None,
+        },
+        Scenario {
             name: "smoke-prefix",
             desc: "CI gate: shared-prefix cache on the tiny model",
             model: "tiny-1M",
@@ -459,6 +554,33 @@ mod tests {
             on.ttft_ms.mean,
             off.ttft_ms.mean
         );
+    }
+
+    #[test]
+    fn smoke_longdoc_overflows_the_hot_tier_and_loses_nothing() {
+        let sc = by_name("smoke-longdoc").unwrap();
+        // near-ceiling prompts: a 0.3 hot tier cannot hold even one
+        // request's pages, so every step crosses the CXL link
+        let mut eng = sc.engine_tiered("P3-LLM", None, 0.3, 4).unwrap();
+        assert!(eng.tier_occupancy().is_some());
+        let on = sc.runner(7).run(&mut eng).unwrap().report;
+        assert_eq!(on.completed, sc.n_requests, "requests lost");
+        assert!(on.pages_prefetched > 0, "prefetcher never fired");
+        // the same scenario demand-paged on identical seeds: at least
+        // as many stalls as the prefetching run, never a faster decode
+        let mut deng = sc.engine_tiered("P3-LLM", None, 0.3, 0).unwrap();
+        let off = sc.runner(7).run(&mut deng).unwrap().report;
+        assert_eq!(off.completed, sc.n_requests);
+        assert_eq!(off.pages_prefetched, 0);
+        assert!(off.pages_demand > on.pages_demand);
+        assert!(
+            on.tpot_ms.mean < off.tpot_ms.mean,
+            "prefetch {} !< demand {}",
+            on.tpot_ms.mean,
+            off.tpot_ms.mean
+        );
+        // the untiered engine path is untouched by the knobs
+        assert!(sc.engine("P3-LLM", None).unwrap().tier_occupancy().is_none());
     }
 
     #[test]

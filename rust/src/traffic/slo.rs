@@ -78,6 +78,12 @@ pub struct ReqRecord {
     /// KV pages dropped and re-prefilled across its recompute
     /// preemptions
     pub pages_recomputed: usize,
+    /// cold-tier KV pages prefetched back to HBM ahead of this
+    /// request's decode steps (tiered engines only)
+    pub pages_prefetched: usize,
+    /// cold-tier KV pages demand-migrated at step time, each stalling
+    /// this request's decode (tiered engines only)
+    pub pages_demand: usize,
 }
 
 impl ReqRecord {
@@ -100,6 +106,8 @@ impl ReqRecord {
             preemptions: req.preemptions,
             pages_swapped: req.pages_swapped,
             pages_recomputed: req.pages_recomputed,
+            pages_prefetched: req.pages_prefetched,
+            pages_demand: req.pages_demand,
         }
     }
 
@@ -166,6 +174,11 @@ pub struct LoadReport {
     pub pages_swapped: usize,
     /// KV pages dropped and re-prefilled by recompute preemptions
     pub pages_recomputed: usize,
+    /// cold-tier KV pages prefetched ahead of decode (tiered engines)
+    pub pages_prefetched: usize,
+    /// cold-tier KV pages demand-migrated at step time, each an
+    /// engine-clock stall (tiered engines)
+    pub pages_demand: usize,
     /// Per-tier breakdown, in [`SloClass::all`] order, present only
     /// when the run carried more than one tier.  Each sub-report is
     /// judged against the base SLO scaled by that tier's
@@ -311,6 +324,11 @@ impl LoadReport {
                 .iter()
                 .map(|r| r.pages_recomputed)
                 .sum(),
+            pages_prefetched: records
+                .iter()
+                .map(|r| r.pages_prefetched)
+                .sum(),
+            pages_demand: records.iter().map(|r| r.pages_demand).sum(),
             per_class,
             queue_delay_ms: Percentiles::from_samples(&queues),
             ttft_ms: Percentiles::from_samples(&ttfts),
@@ -348,6 +366,8 @@ mod tests {
             preemptions: 0,
             pages_swapped: 0,
             pages_recomputed: 0,
+            pages_prefetched: 0,
+            pages_demand: 0,
         }
     }
 
