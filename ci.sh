@@ -155,17 +155,55 @@ if ! printf '%s\n' "$M1" | grep -q "< demand"; then
 fi
 echo "ci: memtier smoke OK"
 
+# Interleaving gate: the decode-heavy smoke-interleave scenario A/Bd
+# serial vs NPU||PIM sub-batch interleaved on identical seeds.  The
+# binary enforces (in-process, both modes double-run for report
+# equality) that the serial schedule charges zero interleaving, no
+# requests are lost, and at batch 8 the interleaved run overlaps real
+# steps with an overlap factor above 0.3, strictly higher goodput,
+# and a strictly shorter makespan; the diff below enforces
+# bit-identical stdout across two processes under a fixed seed.
+echo "ci: interleave smoke"
+I1=$(cargo run --release --quiet -- interleave --smoke --seed 7)
+I2=$(cargo run --release --quiet -- interleave --smoke --seed 7)
+if [ "$I1" != "$I2" ]; then
+    echo "ci: interleave smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$I1" | grep -q "overlap factor"; then
+    echo "ci: interleave smoke output missing the overlap factor proof" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$I1" | grep -q "> serial"; then
+    echo "ci: interleave smoke did not prove interleaved goodput beats serial" >&2
+    exit 1
+fi
+echo "ci: interleave smoke OK"
+
 # Every smoke gate above writes a BENCH_*.json sidecar through
 # benchkit::save_bench_json so downstream tooling can diff runs
 # without scraping tables; their absence means a smoke path silently
 # stopped emitting.
 echo "ci: bench sidecars"
 REPORTS="${P3LLM_REPORTS:-reports}"
-for b in loadtest_smoke cluster_smoke overload_smoke trace_smoke memtier_smoke; do
+for b in loadtest_smoke cluster_smoke overload_smoke trace_smoke memtier_smoke interleave; do
     if [ ! -f "$REPORTS/BENCH_$b.json" ]; then
         echo "ci: missing bench sidecar $REPORTS/BENCH_$b.json" >&2
         exit 1
     fi
 done
 echo "ci: bench sidecars OK"
+
+# Trend gate: the sidecars the smokes just wrote must sit inside the
+# tolerance bands committed in rust/benches/baselines.json (absolute
+# floors for the interleave gates, presence-only for the simulated-
+# clock metrics until wall-clock benches land).
+echo "ci: trend"
+TR=$(cargo run --release --quiet -- trend)
+printf '%s\n' "$TR"
+if ! printf '%s\n' "$TR" | grep -q "bands within tolerance"; then
+    echo "ci: trend gate did not confirm the tolerance bands" >&2
+    exit 1
+fi
+echo "ci: trend OK"
 echo "ci: PASS"

@@ -120,6 +120,222 @@ pub fn save_bench_json(
     Ok(path)
 }
 
+/// Which direction of drift a [`TrendBand`] tolerates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrendDir {
+    /// Higher is better: fail when the value falls below
+    /// `base * (1 - tol)`.  Upward drift never fails.
+    Higher,
+    /// Lower is better: fail when the value rises above
+    /// `base * (1 + tol)`.  Downward drift never fails.
+    Lower,
+    /// Fail when the value leaves `base +- tol * |base|` either way.
+    Either,
+}
+
+impl TrendDir {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "higher" => Some(TrendDir::Higher),
+            "lower" => Some(TrendDir::Lower),
+            "either" => Some(TrendDir::Either),
+            _ => None,
+        }
+    }
+}
+
+/// One tolerance band from `benches/baselines.json`: pins a single
+/// `(bench, config, metric)` record of a `BENCH_<bench>.json` sidecar
+/// to a committed baseline value.  `value: null` turns the band into a
+/// presence-only check -- the record must exist, but any number (or
+/// null) passes; use it for metrics whose absolute level is machine-
+/// or model-tuning-dependent while the emission itself is the
+/// contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrendBand {
+    pub bench: String,
+    pub config: String,
+    pub metric: String,
+    /// committed baseline; `None` = presence-only
+    pub value: Option<f64>,
+    /// relative tolerance around `value` (absolute when `value` is 0)
+    pub tol: f64,
+    pub dir: TrendDir,
+}
+
+/// Outcome of [`check_trend`]: every band was evaluated; `failures`
+/// holds one human-readable line per violated band.
+#[derive(Debug, Clone, Default)]
+pub struct TrendReport {
+    /// one "<bench>/<config>/<metric>: ..." line per passing band
+    pub passes: Vec<String>,
+    pub failures: Vec<String>,
+}
+
+impl TrendReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Extract the raw value of `"key":` from one flat-JSON record line:
+/// the quoted string body for string fields, the bare token up to the
+/// next `,` or `}` otherwise.  Hand-rolled to match [`bench_json`]'s
+/// own emitter (no serde in the offline crate set); not a general
+/// JSON parser -- escaped quotes inside strings are out of scope.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    if let Some(body) = rest.strip_prefix('"') {
+        body.find('"').map(|end| &body[..end])
+    } else {
+        let end = rest.find([',', '}']).unwrap_or(rest.len());
+        Some(rest[..end].trim())
+    }
+}
+
+/// Parse `benches/baselines.json` -- the same flat line-oriented shape
+/// as [`bench_json`] plus `"tol"` and `"dir"` keys per record.  Lines
+/// without a `"bench"` key (the array brackets) are skipped; any
+/// malformed record line is a hard error, not a silent skip, so a
+/// typo'd baseline cannot turn into vacuous coverage.
+pub fn parse_trend_baselines(
+    text: &str,
+) -> std::result::Result<Vec<TrendBand>, String> {
+    let mut bands = vec![];
+    for (ln, line) in text.lines().enumerate() {
+        if !line.contains("\"bench\"") {
+            continue;
+        }
+        let get = |key: &str| {
+            field(line, key).ok_or_else(|| {
+                format!("baselines line {}: missing \"{key}\"", ln + 1)
+            })
+        };
+        let raw_value = get("value")?;
+        let value = if raw_value == "null" {
+            None
+        } else {
+            Some(raw_value.parse::<f64>().map_err(|_| {
+                format!(
+                    "baselines line {}: bad value {raw_value:?}",
+                    ln + 1
+                )
+            })?)
+        };
+        let tol = get("tol")?.parse::<f64>().map_err(|_| {
+            format!("baselines line {}: bad tol", ln + 1)
+        })?;
+        if tol.is_nan() || tol < 0.0 {
+            return Err(format!(
+                "baselines line {}: tol must be >= 0",
+                ln + 1
+            ));
+        }
+        let dir = TrendDir::parse(get("dir")?).ok_or_else(|| {
+            format!(
+                "baselines line {}: dir must be higher|lower|either",
+                ln + 1
+            )
+        })?;
+        bands.push(TrendBand {
+            bench: get("bench")?.to_string(),
+            config: get("config")?.to_string(),
+            metric: get("metric")?.to_string(),
+            value,
+            tol,
+            dir,
+        });
+    }
+    if bands.is_empty() {
+        return Err("baselines.json defines no bands".into());
+    }
+    Ok(bands)
+}
+
+/// Evaluate one band against its sidecar text (`None` = the sidecar
+/// file is missing).  Returns a pass line or a failure line.
+pub fn check_band(
+    band: &TrendBand,
+    sidecar: Option<&str>,
+) -> std::result::Result<String, String> {
+    let who =
+        format!("{}/{}/{}", band.bench, band.config, band.metric);
+    let text = sidecar.ok_or_else(|| {
+        format!("{who}: sidecar BENCH_{}.json missing", band.bench)
+    })?;
+    let rec = text
+        .lines()
+        .find(|l| {
+            field(l, "config") == Some(band.config.as_str())
+                && field(l, "metric") == Some(band.metric.as_str())
+        })
+        .ok_or_else(|| {
+            format!("{who}: no such record in the sidecar")
+        })?;
+    let raw = field(rec, "value")
+        .ok_or_else(|| format!("{who}: record has no value field"))?;
+    let base = match band.value {
+        // presence-only band: the record existing is the whole check
+        None => return Ok(format!("{who}: present ({raw})")),
+        Some(b) => b,
+    };
+    let cur = raw.parse::<f64>().map_err(|_| {
+        format!("{who}: value is {raw}, baseline expects {base}")
+    })?;
+    let dev = if base == 0.0 { band.tol } else { band.tol * base.abs() };
+    let verdict = match band.dir {
+        TrendDir::Higher if cur < base - dev => Some("fell below"),
+        TrendDir::Lower if cur > base + dev => Some("rose above"),
+        TrendDir::Either if (cur - base).abs() > dev => {
+            Some("drifted outside")
+        }
+        _ => None,
+    };
+    match verdict {
+        Some(how) => Err(format!(
+            "{who}: {cur} {how} baseline {base} (tol {})",
+            band.tol
+        )),
+        None => Ok(format!("{who}: {cur} within {base} +- tol {}",
+            band.tol)),
+    }
+}
+
+/// Check every band of a committed baselines file against the
+/// `BENCH_<bench>.json` sidecars under `reports`.  `Err` is reserved
+/// for an unusable baselines file; individual band violations land in
+/// [`TrendReport::failures`] so a run reports *all* regressions, not
+/// just the first.
+pub fn check_trend(
+    baselines_json: &str,
+    reports: &std::path::Path,
+) -> std::result::Result<TrendReport, String> {
+    let bands = parse_trend_baselines(baselines_json)?;
+    let mut cache: Vec<(String, Option<String>)> = vec![];
+    let mut rep = TrendReport::default();
+    for band in &bands {
+        if !cache.iter().any(|(b, _)| b == &band.bench) {
+            let path =
+                reports.join(format!("BENCH_{}.json", band.bench));
+            cache.push((
+                band.bench.clone(),
+                std::fs::read_to_string(path).ok(),
+            ));
+        }
+        let text = cache
+            .iter()
+            .find(|(b, _)| b == &band.bench)
+            .and_then(|(_, t)| t.as_deref());
+        match check_band(band, text) {
+            Ok(line) => rep.passes.push(line),
+            Err(line) => rep.failures.push(line),
+        }
+    }
+    Ok(rep)
+}
+
 /// Quick-mode switch: `P3LLM_BENCH_FAST=1` trims block counts so the
 /// full `cargo bench` suite stays in CI budget.
 pub fn eval_blocks() -> usize {
@@ -160,6 +376,104 @@ mod tests {
         // trailing comma
         assert!(j.contains("\"value\":null,\"seed\":7}\n]"));
         assert_eq!(j.matches('{').count(), 2);
+    }
+
+    #[test]
+    fn trend_bands_parse_and_judge() {
+        use super::{check_band, parse_trend_baselines, TrendDir};
+        let baselines = r#"[
+{"bench":"demo","config":"n=1","metric":"goodput_tok_s","value":100.0,"tol":0.05,"dir":"higher"},
+{"bench":"demo","config":"n=1","metric":"ttft_p99_ms","value":2.0,"tol":0.10,"dir":"lower"},
+{"bench":"demo","config":"n=1","metric":"events","value":null,"tol":0,"dir":"either"}
+]"#;
+        let bands = parse_trend_baselines(baselines).unwrap();
+        assert_eq!(bands.len(), 3);
+        assert_eq!(bands[0].dir, TrendDir::Higher);
+        assert_eq!(bands[2].value, None);
+
+        let sidecar = super::bench_json(
+            "demo",
+            7,
+            &[
+                super::BenchRecord::new("n=1", "goodput_tok_s", 96.0),
+                super::BenchRecord::new("n=1", "ttft_p99_ms", 2.19),
+                super::BenchRecord::new("n=1", "events", f64::NAN),
+            ],
+        );
+        // 96 >= 100*(1-0.05) and 2.19 <= 2*(1+0.10): inside the bands
+        assert!(check_band(&bands[0], Some(&sidecar)).is_ok());
+        assert!(check_band(&bands[1], Some(&sidecar)).is_ok());
+        // presence-only band passes even on a null value
+        assert!(check_band(&bands[2], Some(&sidecar)).is_ok());
+
+        let regressed = super::bench_json(
+            "demo",
+            7,
+            &[
+                super::BenchRecord::new("n=1", "goodput_tok_s", 94.9),
+                super::BenchRecord::new("n=1", "ttft_p99_ms", 2.21),
+            ],
+        );
+        assert!(check_band(&bands[0], Some(&regressed))
+            .unwrap_err()
+            .contains("fell below"));
+        assert!(check_band(&bands[1], Some(&regressed))
+            .unwrap_err()
+            .contains("rose above"));
+        // events record vanished entirely -> presence band fails
+        assert!(check_band(&bands[2], Some(&regressed))
+            .unwrap_err()
+            .contains("no such record"));
+        // missing sidecar fails every band
+        assert!(check_band(&bands[0], None)
+            .unwrap_err()
+            .contains("missing"));
+    }
+
+    #[test]
+    fn trend_improvements_never_fail_directional_bands() {
+        use super::{check_band, parse_trend_baselines};
+        let bands = parse_trend_baselines(
+            "[\n{\"bench\":\"d\",\"config\":\"c\",\"metric\":\"g\",\
+             \"value\":10.0,\"tol\":0.0,\"dir\":\"higher\"},\n\
+             {\"bench\":\"d\",\"config\":\"c\",\"metric\":\"t\",\
+             \"value\":5.0,\"tol\":0.0,\"dir\":\"lower\"}\n]",
+        )
+        .unwrap();
+        let sidecar = super::bench_json(
+            "d",
+            7,
+            &[
+                super::BenchRecord::new("c", "g", 1000.0),
+                super::BenchRecord::new("c", "t", 0.001),
+            ],
+        );
+        assert!(check_band(&bands[0], Some(&sidecar)).is_ok());
+        assert!(check_band(&bands[1], Some(&sidecar)).is_ok());
+    }
+
+    #[test]
+    fn trend_baselines_reject_garbage() {
+        use super::parse_trend_baselines;
+        assert!(parse_trend_baselines("[]").is_err());
+        assert!(parse_trend_baselines(
+            "{\"bench\":\"d\",\"config\":\"c\",\"metric\":\"m\",\
+             \"value\":1.0,\"tol\":0.1,\"dir\":\"sideways\"}"
+        )
+        .unwrap_err()
+        .contains("dir"));
+        assert!(parse_trend_baselines(
+            "{\"bench\":\"d\",\"config\":\"c\",\"metric\":\"m\",\
+             \"value\":1.0,\"tol\":-0.1,\"dir\":\"higher\"}"
+        )
+        .unwrap_err()
+        .contains("tol"));
+        assert!(parse_trend_baselines(
+            "{\"bench\":\"d\",\"config\":\"c\",\"value\":1.0,\
+             \"tol\":0.1,\"dir\":\"higher\"}"
+        )
+        .unwrap_err()
+        .contains("metric"));
     }
 
     #[test]

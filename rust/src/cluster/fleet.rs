@@ -467,6 +467,15 @@ impl LoadTarget for Cluster {
                 .map(|m| m.pages_prefetched)
                 .sum(),
             pages_demand: per.iter().map(|m| m.pages_demand).sum(),
+            npu_busy_ms: per.iter().map(|m| m.npu_busy_ms).sum(),
+            pim_busy_ms: per.iter().map(|m| m.pim_busy_ms).sum(),
+            overlap_ms: per.iter().map(|m| m.overlap_ms).sum(),
+            interleaved_steps: per
+                .iter()
+                .map(|m| m.interleaved_steps)
+                .sum(),
+            fused_steps: per.iter().map(|m| m.fused_steps).sum(),
+            serial_saved_ms: per.iter().map(|m| m.serial_saved_ms).sum(),
             ttft_ms: Percentiles::merge(&ttfts),
             per_token_ms: Percentiles::merge(&tpots),
         }

@@ -159,6 +159,29 @@ impl ClusterReport {
                 .map(|r| r.pages_prefetched)
                 .sum(),
             pages_demand: per.iter().map(|r| r.pages_demand).sum(),
+            npu_busy_ms: per.iter().map(|r| r.npu_busy_ms).sum(),
+            pim_busy_ms: per.iter().map(|r| r.pim_busy_ms).sum(),
+            overlap_ms: per.iter().map(|r| r.overlap_ms).sum(),
+            interleaved_steps: per
+                .iter()
+                .map(|r| r.interleaved_steps)
+                .sum(),
+            fused_steps: per.iter().map(|r| r.fused_steps).sum(),
+            serial_saved_ms: per
+                .iter()
+                .map(|r| r.serial_saved_ms)
+                .sum(),
+            overlap_factor: {
+                let npu: f64 = per.iter().map(|r| r.npu_busy_ms).sum();
+                let pim: f64 = per.iter().map(|r| r.pim_busy_ms).sum();
+                let over: f64 = per.iter().map(|r| r.overlap_ms).sum();
+                let floor = npu.min(pim);
+                if floor > 0.0 {
+                    over / floor
+                } else {
+                    0.0
+                }
+            },
             per_class,
             queue_delay_ms: Percentiles::merge(&queue_parts),
             ttft_ms: Percentiles::merge(&ttft_parts),

@@ -73,6 +73,44 @@ pub struct PrefillOut {
     pub true_len: usize,
 }
 
+/// Cumulative NPU‖PIM sub-batch interleaving counters a backend has
+/// accrued over its lifetime (see
+/// [`ExecBackend::decode_step_interleaved`]).  All `_ms` fields are
+/// raw busy/overlap sums so fleet reports can merge replicas by
+/// addition; [`overlap_factor`](Self::overlap_factor) derives the
+/// bounded ratio.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InterleaveStats {
+    /// summed NPU occupancy across both sub-batch timelines (ms)
+    pub npu_busy_ms: f64,
+    /// summed PIM occupancy across both sub-batch timelines (ms)
+    pub pim_busy_ms: f64,
+    /// wall time both engines were busy simultaneously (ms)
+    pub overlap_ms: f64,
+    /// decode steps charged on the two-timeline critical path
+    pub interleaved_steps: u64,
+    /// decode steps where the serial schedule was cheaper and the
+    /// backend fused the sub-batches back into one serial step
+    pub fused_steps: u64,
+    /// serial-schedule cost minus the charged critical path, summed
+    /// over interleaved steps (ms saved vs `interleave=off`)
+    pub serial_saved_ms: f64,
+}
+
+impl InterleaveStats {
+    /// Concurrency ratio in `[0, 1]`: overlap time over the smaller
+    /// engine's total busy time (1.0 = the scarcer engine was never
+    /// the only one running).
+    pub fn overlap_factor(&self) -> f64 {
+        let floor = self.npu_busy_ms.min(self.pim_busy_ms);
+        if floor > 0.0 {
+            self.overlap_ms / floor
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Result of one batched decode step over `lanes`.
 pub struct DecodeOut {
     /// next token per lane (greedy)
@@ -148,6 +186,42 @@ pub trait ExecBackend {
     /// One decode step over the active lanes, reading cached KV from
     /// `pool`.  Advances the backend clock.
     fn decode_step(&mut self, lanes: &[Lane], pool: &KvPool) -> Result<DecodeOut>;
+
+    /// One decode step over two interleaved sub-batches, so sub-batch
+    /// A's NPU phase overlaps sub-batch B's PIM phase and vice versa.
+    /// `stall_a_ms` / `stall_b_ms` are per-sub-batch demand-miss stalls
+    /// (tiered KV) delaying only that timeline; `serial_stall_ms` is
+    /// the single serialized stall the fallback serial schedule would
+    /// charge.  Backends without two device timelines keep this
+    /// default: concatenate the lanes, charge the serialized stall,
+    /// and run the ordinary serial step -- bit-identical to
+    /// `interleave=off`.  Implementations must return tokens/KV rows
+    /// in `lanes_a ++ lanes_b` order.
+    fn decode_step_interleaved(
+        &mut self,
+        lanes_a: &[Lane],
+        lanes_b: &[Lane],
+        stall_a_ms: f64,
+        stall_b_ms: f64,
+        serial_stall_ms: f64,
+        pool: &KvPool,
+    ) -> Result<DecodeOut> {
+        let _ = (stall_a_ms, stall_b_ms);
+        if serial_stall_ms > 0.0 {
+            let cursor = self.now_ms() + serial_stall_ms;
+            self.advance_to(cursor);
+        }
+        let mut lanes = Vec::with_capacity(lanes_a.len() + lanes_b.len());
+        lanes.extend_from_slice(lanes_a);
+        lanes.extend_from_slice(lanes_b);
+        self.decode_step(&lanes, pool)
+    }
+
+    /// Cumulative interleaving counters (zero for backends that only
+    /// ever run the serial schedule).
+    fn interleave_stats(&self) -> InterleaveStats {
+        InterleaveStats::default()
+    }
 
     /// Engine clock in milliseconds: wall time since backend creation
     /// for PJRT, accumulated simulated time for sim.

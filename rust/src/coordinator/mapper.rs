@@ -38,6 +38,20 @@ pub struct MapSummary {
     pub total_ns: f64,
 }
 
+/// Per-engine serialized occupancy of one step's assignments:
+/// `(npu_ms, pim_ms)`.  The interleaved sim backend prices each
+/// sub-batch's critical path from these two sums.
+pub fn engine_ms(assignments: &[Assignment]) -> (f64, f64) {
+    let (mut npu, mut pim) = (0.0, 0.0);
+    for a in assignments {
+        match a.engine {
+            Engine::Npu => npu += a.ns,
+            Engine::Pim => pim += a.ns,
+        }
+    }
+    (npu / 1e6, pim / 1e6)
+}
+
 pub fn summarize(assignments: &[Assignment]) -> MapSummary {
     let mut s = MapSummary::default();
     for a in assignments {
@@ -170,6 +184,19 @@ mod tests {
         assert_eq!(s.npu_ops + s.pim_ops, asg.len());
         assert!(s.pim_ops > 0 && s.pim_commands > 0);
         assert!(s.total_ns > 0.0);
+    }
+
+    #[test]
+    fn engine_ms_partitions_the_serial_sum() {
+        let a = Accel::p3llm();
+        let asg = map_decode_step(&a, &LLAMA31_8B, 1, 4096);
+        let (npu_ms, pim_ms) = engine_ms(&asg);
+        let s = summarize(&asg);
+        assert!(npu_ms > 0.0 && pim_ms > 0.0);
+        assert!(
+            ((npu_ms + pim_ms) - s.total_ns / 1e6).abs() < 1e-9,
+            "engine split must sum to the serialized total"
+        );
     }
 
     #[test]

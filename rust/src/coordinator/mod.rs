@@ -17,12 +17,16 @@ pub mod request;
 pub mod serve;
 pub mod simbackend;
 
-pub use backend::{BackendKind, DecodeOut, ExecBackend, Lane, PrefillOut};
+pub use backend::{
+    BackendKind, DecodeOut, ExecBackend, InterleaveStats, Lane, PrefillOut,
+};
 pub use batcher::{covering_batch, Batcher, COMPILED_BATCHES};
 pub use kvcache::{
     prefix_page_hash, KvLayout, KvPool, PrefixHit, PAGE_TOKENS,
 };
-pub use mapper::{map_decode_step, Assignment, Engine as MapEngine, MapSummary};
+pub use mapper::{
+    engine_ms, map_decode_step, Assignment, Engine as MapEngine, MapSummary,
+};
 pub use pjrt::{PjrtBackend, PREFILL_T};
 pub use request::{Request, RequestId, RequestStatus, State};
 pub use serve::{Engine, EngineBuilder, Metrics, Percentiles};

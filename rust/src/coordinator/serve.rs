@@ -168,6 +168,22 @@ pub struct Metrics {
     /// cold-tier KV pages demand-migrated at step time, each charged
     /// as an engine-clock stall (0 on single-tier engines)
     pub pages_demand: usize,
+    /// NPU busy time summed across both sub-batch timelines (ms; 0
+    /// when the engine runs the serial schedule)
+    pub npu_busy_ms: f64,
+    /// PIM busy time summed across both sub-batch timelines (ms)
+    pub pim_busy_ms: f64,
+    /// wall time NPU and PIM ran concurrently (ms; raw sum so fleet
+    /// reports merge by addition -- see [`Metrics::overlap_factor`])
+    pub overlap_ms: f64,
+    /// decode steps charged on the two-timeline critical path
+    pub interleaved_steps: u64,
+    /// decode steps where the split lost and the sub-batches fused
+    /// back into one serial step
+    pub fused_steps: u64,
+    /// serial-schedule cost minus the charged critical path, summed
+    /// over interleaved steps (ms saved vs `interleave=off`)
+    pub serial_saved_ms: f64,
     pub ttft_ms: Percentiles,
     pub per_token_ms: Percentiles,
 }
@@ -179,6 +195,18 @@ impl Metrics {
 
     pub fn mean_ttft_ms(&self) -> f64 {
         self.ttft_ms.mean
+    }
+
+    /// NPU‖PIM concurrency ratio in `[0, 1]`: overlap time over the
+    /// scarcer engine's total busy time.  ~0 under the serial
+    /// schedule; the interleave smoke gates on > 0.3.
+    pub fn overlap_factor(&self) -> f64 {
+        let floor = self.npu_busy_ms.min(self.pim_busy_ms);
+        if floor > 0.0 {
+            self.overlap_ms / floor
+        } else {
+            0.0
+        }
     }
 }
 
@@ -250,6 +278,10 @@ pub struct Engine {
     sched: Option<SchedState>,
     /// HBM-hot / CXL-cold tiered KV hierarchy (None = single-tier)
     tier: Option<TierState>,
+    /// NPU/PIM sub-batch interleaving: split each decode step's lanes
+    /// into two sub-batches whose engine phases overlap (false = the
+    /// serial schedule, bit-identical to the pre-interleave engine)
+    interleave: bool,
     /// request-lifecycle telemetry (default off = zero overhead)
     trace: Trace,
 }
@@ -305,6 +337,7 @@ impl Engine {
             acc: StatsAcc::default(),
             sched: None,
             tier: None,
+            interleave: false,
             trace: Trace::off(),
         })
     }
@@ -976,10 +1009,16 @@ impl Engine {
         // with the previous step's compute (a span on the cxl lane,
         // no clock charge); demand misses serialize on the link and
         // stall the engine clock before the step runs.
+        let (mut stall_a, mut stall_b, mut serial_stall) =
+            (0.0f64, 0.0f64, 0.0f64);
         if let Some(ts) = self.tier.as_mut() {
             let walk_t0 = self.backend.now_ms();
             let mut cursor = walk_t0;
-            for rid in &active {
+            // per-sub-batch stall frontiers: under interleaving only
+            // the sub-batch owning a missing page waits for it (even
+            // lane index -> A, odd -> B -- the decode split below)
+            let (mut end_a, mut end_b) = (walk_t0, walk_t0);
+            for (idx, rid) in active.iter().enumerate() {
                 let tokens = self.pool.seq_len(rid.0).unwrap_or(0);
                 let npages = tokens.div_ceil(PAGE_TOKENS).max(1);
                 let o = ts.tier.step_lane(rid.0, npages);
@@ -1015,9 +1054,21 @@ impl Engine {
                         o.demand as f64,
                     );
                     cursor += stall;
+                    if idx % 2 == 0 {
+                        end_a = cursor;
+                    } else {
+                        end_b = cursor;
+                    }
                 }
             }
-            if cursor > walk_t0 {
+            if self.interleave {
+                // the backend folds the stalls into the interleaved
+                // step's critical path (or the serialized stall into
+                // the fused fallback) -- no engine-clock charge here
+                stall_a = end_a - walk_t0;
+                stall_b = end_b - walk_t0;
+                serial_stall = cursor - walk_t0;
+            } else if cursor > walk_t0 {
                 self.backend.advance_to(cursor);
             }
         }
@@ -1034,7 +1085,28 @@ impl Engine {
                 }
             })
             .collect();
-        let out = self.backend.decode_step(&lanes, &self.pool)?;
+        let out = if self.interleave {
+            // even-index lanes -> sub-batch A, odd -> B: A's NPU phase
+            // overlaps B's PIM phase and vice versa in the backend
+            let (mut la, mut lb) = (Vec::new(), Vec::new());
+            for (i, l) in lanes.iter().enumerate() {
+                if i % 2 == 0 {
+                    la.push(*l);
+                } else {
+                    lb.push(*l);
+                }
+            }
+            self.backend.decode_step_interleaved(
+                &la,
+                &lb,
+                stall_a,
+                stall_b,
+                serial_stall,
+                &self.pool,
+            )?
+        } else {
+            self.backend.decode_step(&lanes, &self.pool)?
+        };
         if out.tokens.len() != lanes.len() {
             return Err(P3Error::Serve(format!(
                 "backend returned {} tokens for {} lanes",
@@ -1044,14 +1116,29 @@ impl Engine {
         }
         let (layers, kvd) = (self.model.layers, self.model.kv_dim());
         let n = lanes.len();
+        // interleaved steps return rows in sub-batch A ++ B order;
+        // remap each active lane to its row so the install/retire loop
+        // keeps running in active (admission) order in both modes
+        let n_a = n.div_ceil(2);
+        let ilv = self.interleave;
+        let row = move |lane: usize| {
+            if !ilv {
+                lane
+            } else if lane % 2 == 0 {
+                lane / 2
+            } else {
+                n_a + lane / 2
+            }
+        };
         let now = self.backend.now_ms();
         let mut emitted = 0;
         for (lane, rid) in active.iter().enumerate() {
+            let r = row(lane);
             // store the k/v of the token we just processed (the pool
             // allocates pages at boundaries from the request's
             // admission-time reservation)
             for layer in 0..layers {
-                let off = (layer * n + lane) * kvd;
+                let off = (layer * n + r) * kvd;
                 self.pool.push_token(
                     rid.0,
                     layer,
@@ -1061,7 +1148,7 @@ impl Engine {
             }
             self.pool.commit_token(rid.0)?;
             let req = self.requests.get_mut(&rid.0).unwrap();
-            req.generated.push(out.tokens[lane]);
+            req.generated.push(out.tokens[r]);
             req.pos += 1;
             emitted += 1;
             if self.trace.enabled() {
@@ -1191,6 +1278,7 @@ impl Engine {
     pub fn metrics(&self) -> Metrics {
         #[cfg(debug_assertions)]
         self.audit_counters();
+        let ilv = self.backend.interleave_stats();
         Metrics {
             backend: self.backend.name(),
             completed: self.acc.completed,
@@ -1206,6 +1294,12 @@ impl Engine {
             pages_recomputed: self.acc.pages_recomputed,
             pages_prefetched: self.acc.pages_prefetched,
             pages_demand: self.acc.pages_demand,
+            npu_busy_ms: ilv.npu_busy_ms,
+            pim_busy_ms: ilv.pim_busy_ms,
+            overlap_ms: ilv.overlap_ms,
+            interleaved_steps: ilv.interleaved_steps,
+            fused_steps: ilv.fused_steps,
+            serial_saved_ms: ilv.serial_saved_ms,
             ttft_ms: Percentiles::from_samples(&self.acc.ttft),
             per_token_ms: Percentiles::from_samples(&self.acc.tpot),
         }
@@ -1236,6 +1330,11 @@ impl Engine {
     /// Is shared-prefix KV caching enabled on this engine?
     pub fn prefix_cache_enabled(&self) -> bool {
         self.prefix_cache
+    }
+
+    /// Is NPU‖PIM sub-batch interleaving enabled on this engine?
+    pub fn interleave_enabled(&self) -> bool {
+        self.interleave
     }
 
     /// Name of the active victim policy (None = FIFO, no preemption).
@@ -1282,6 +1381,8 @@ pub struct EngineBuilder {
     hot_fraction: Option<f64>,
     /// ahead-of-decode prefetch depth in pages per lane per step
     prefetch_depth: Option<usize>,
+    /// NPU/PIM sub-batch interleaving (sim backend; default off)
+    interleave: bool,
     /// telemetry handle installed at build (default off)
     trace: Trace,
 }
@@ -1303,6 +1404,7 @@ impl EngineBuilder {
             aging_ms: None,
             hot_fraction: None,
             prefetch_depth: None,
+            interleave: false,
             trace: Trace::off(),
         }
     }
@@ -1433,6 +1535,20 @@ impl EngineBuilder {
         self
     }
 
+    /// NPU‖PIM sub-batch interleaving (sim backend): split each decode
+    /// step's lanes into two sub-batches whose engine phases run
+    /// concurrently -- sub-batch A's NPU work overlaps B's PIM work
+    /// and vice versa -- and charge the critical path across both
+    /// timelines instead of the serial sum.  Steps where the split
+    /// schedule would lose (e.g. PIM weight-streaming passes conserve
+    /// across the split) fuse back to the serial charge, so
+    /// interleaving never regresses a step.  Default off; `false` is
+    /// bit-identical to the pre-interleave engine.
+    pub fn interleave(mut self, on: bool) -> Self {
+        self.interleave = on;
+        self
+    }
+
     /// Install a telemetry handle on the built engine (and its
     /// backend, for the NPU/PIM/bus device lanes).  Keep a clone to
     /// read the trace after the run; the default-off handle records
@@ -1495,6 +1611,14 @@ impl EngineBuilder {
                 if self.system.is_some() {
                     return Err(P3Error::InvalidConfig(
                         "system selection is a sim-backend knob".into(),
+                    ));
+                }
+                if self.interleave {
+                    return Err(P3Error::InvalidConfig(
+                        "NPU/PIM sub-batch interleaving is a sim-backend \
+                         knob (the PJRT backend has one wall clock, not \
+                         two device timelines)"
+                            .into(),
                     ));
                 }
                 if !COMPILED_BATCHES.contains(&self.max_batch) {
@@ -1604,6 +1728,7 @@ impl EngineBuilder {
                     self.prefix_cache.unwrap_or(true),
                 )?;
                 eng.sched = sched;
+                eng.interleave = self.interleave;
                 if let Some((f, depth, page_ms)) = tier_cfg {
                     let cap = (eng.pool.total_pages() as f64 * f).floor()
                         as usize;

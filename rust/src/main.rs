@@ -45,6 +45,8 @@ commands:
              closed-loop serving view of the chosen system
              --model NAME --batch N --ctx N --system NAME --seed N
              --requests N --max-new N --interarrival MS
+             --interleave   overlap NPU||PIM sub-batches in the
+                      closed-loop view (see `interleave`)
   loadtest   sweep traffic scenarios x systems through the closed-loop
              load runner; reports goodput / SLO attainment (sim only,
              no artifacts, bit-identical under a fixed --seed)
@@ -139,6 +141,25 @@ commands:
                       requests with a nonzero prefetch hit rate;
                       prefetch-on strictly beats demand paging on mean
                       TPOT, incl. a 32k-context Mistral-7B proof
+  interleave A/B the NPU||PIM sub-batch interleaving against the
+             serial schedule on the same seeds: split each step's
+             active lanes into two sub-batches so A's NPU phase
+             overlaps B's PIM phase (steps that would lose fuse back
+             to the serial charge); reports goodput / makespan /
+             overlap factor per mode
+             --scenario NAME[,NAME..]   (default smoke-interleave)
+             --system NAME --scheme NAME --seed N --requests N
+             --tiers I/B/E --victim NAME   (as in loadtest)
+             --save   write interleave.tsv + BENCH_interleave.json
+             --smoke  CI gate: in-process double-run determinism per
+                      mode; serial mode charges zero interleaving;
+                      at batch 8 the decode-heavy scenario overlaps
+                      > 0.3 of the less-busy engine and beats serial
+                      goodput strictly
+  trend      compare the BENCH_*.json sidecars under reports/ against
+             the committed tolerance bands in benches/baselines.json;
+             prints one line per band and fails on any regression
+             --baselines FILE   (default rust/benches/baselines.json)
   version
 
 common: --artifacts DIR (default: artifacts)";
@@ -155,6 +176,8 @@ fn main() {
         Some("overload") => cmd_overload(&args),
         Some("trace") => cmd_trace(&args),
         Some("memtier") => cmd_memtier(&args),
+        Some("interleave") => cmd_interleave(&args),
+        Some("trend") => cmd_trend(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
             Ok(())
@@ -274,6 +297,16 @@ fn print_load_report(r: &LoadReport) {
             r.pages_prefetched,
             r.pages_demand,
             hit * 100.0
+        );
+    }
+    if r.interleaved_steps + r.fused_steps > 0 {
+        println!(
+            "interleave: {} steps overlapped, {} fused back to serial, \
+             overlap factor {:.2}, {:.3}ms saved vs serial",
+            r.interleaved_steps,
+            r.fused_steps,
+            r.overlap_factor,
+            r.serial_saved_ms
         );
     }
 }
@@ -511,6 +544,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         prefix_cache: !args.has("no-prefix-cache"),
         tiers: None,
         victim: None,
+        interleave: args.has("interleave"),
     };
     let mut engine = sc.engine(system, None)?;
     println!(
@@ -849,6 +883,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             "tok/s",
             "p95 TTFT ms",
             "hit %",
+            "overlap",
             "skew",
             "scale-eff %",
         ],
@@ -893,6 +928,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                     f2(r.throughput_tok_s),
                     f2(r.ttft_ms.p95),
                     f2(r.prefix_hit_rate * 100.0),
+                    f2(r.overlap_factor),
                     f2(rep.util_skew),
                     rep.scaling_efficiency
                         .map(|e| f2(e * 100.0))
@@ -1751,5 +1787,242 @@ fn cmd_memtier(args: &Args) -> Result<()> {
         .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
         println!("saved {}", path.display());
     }
+    Ok(())
+}
+
+/// A/B the NPU||PIM sub-batch interleaving against the serial
+/// schedule: the same scenario, seed for seed, once with
+/// `interleave=off` (bit-identical to the pre-interleave engine) and
+/// once with the two device timelines overlapped.  `--smoke` is the
+/// CI gate ci.sh wires in: in-process double-run determinism per
+/// mode, a serial run that charges zero interleaving, and -- on the
+/// decode-heavy smoke scenario at batch 8 -- an overlap factor above
+/// 0.3 with goodput strictly above serial.
+fn cmd_interleave(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM").to_string();
+    let scheme = args.get("scheme");
+    let mut scenarios = vec![];
+    for name in args.get_list("scenario", "smoke-interleave") {
+        scenarios.push(traffic::scenario_by_name(&name).ok_or_else(|| {
+            P3Error::InvalidConfig(format!(
+                "unknown scenario {name:?} (see `p3llm loadtest --list`)"
+            ))
+        })?);
+    }
+    if args.get("requests").is_some() {
+        let n = args.get_usize("requests", 1)?.max(1);
+        for s in &mut scenarios {
+            s.n_requests = n;
+        }
+    }
+    apply_tier_flags(args, &mut scenarios)?;
+
+    let run_mode = |sc: &Scenario, on: bool| -> Result<LoadReport> {
+        let mut sc = sc.clone();
+        sc.interleave = on;
+        let mut engine = sc.engine(&system, scheme)?;
+        let out = sc
+            .runner(seed)
+            .run_with_saturation(&mut engine, sc.saturation_tok_s(&system))?;
+        Ok(out.report)
+    };
+
+    let mut t = Table::new(
+        format!(
+            "interleave: serial vs NPU||PIM sub-batch overlap on \
+             {system}, seed {seed}"
+        ),
+        &[
+            "scenario",
+            "mode",
+            "done",
+            "goodput tok/s",
+            "makespan ms",
+            "mean TPOT ms",
+            "overlap",
+            "steps ilv/fused",
+            "saved ms",
+        ],
+    );
+    let mut bench_records: Vec<BenchRecord> = vec![];
+    let mut gate: Option<(Scenario, LoadReport, LoadReport)> = None;
+    for sc in &scenarios {
+        let serial = run_mode(sc, false)?;
+        let ilv = run_mode(sc, true)?;
+        for (mode, r) in [("serial", &serial), ("interleaved", &ilv)] {
+            t.row(vec![
+                sc.name.into(),
+                mode.into(),
+                format!("{}/{}", r.completed, r.offered),
+                f2(r.goodput_tok_s),
+                f3(r.makespan_ms),
+                f3(r.tpot_ms.mean),
+                f2(r.overlap_factor),
+                format!("{}/{}", r.interleaved_steps, r.fused_steps),
+                f3(r.serial_saved_ms),
+            ]);
+            let cfg =
+                format!("scenario={},mode={mode},batch={}", sc.name, sc.max_batch);
+            bench_records.push(BenchRecord::new(
+                cfg.clone(),
+                "goodput_tok_s",
+                r.goodput_tok_s,
+            ));
+            bench_records.push(BenchRecord::new(
+                cfg.clone(),
+                "overlap_factor",
+                r.overlap_factor,
+            ));
+            bench_records.push(BenchRecord::new(
+                cfg,
+                "serial_saved_ms",
+                r.serial_saved_ms,
+            ));
+        }
+        bench_records.push(BenchRecord::new(
+            format!("scenario={},batch={}", sc.name, sc.max_batch),
+            "goodput_speedup",
+            if serial.goodput_tok_s > 0.0 {
+                ilv.goodput_tok_s / serial.goodput_tok_s
+            } else {
+                0.0
+            },
+        ));
+        if gate.is_none() {
+            gate = Some((sc.clone(), serial, ilv));
+        }
+    }
+    t.print();
+
+    if smoke {
+        let (sc, serial, ilv) = gate.expect("at least one scenario ran");
+        // (a) determinism: identical in-process re-runs of both modes
+        // must agree bit-for-bit (ci.sh additionally diffs processes)
+        if run_mode(&sc, false)? != serial || run_mode(&sc, true)? != ilv {
+            return Err(P3Error::Serve(
+                "interleave smoke gate: two identical runs disagreed \
+                 (nondeterminism)"
+                    .into(),
+            ));
+        }
+        // (b) the serial schedule charges zero interleaving: no
+        // overlapped or fused steps, no concurrent busy time
+        if serial.interleaved_steps != 0
+            || serial.fused_steps != 0
+            || serial.overlap_ms != 0.0
+            || serial.overlap_factor != 0.0
+            || serial.serial_saved_ms != 0.0
+        {
+            return Err(P3Error::Serve(format!(
+                "interleave smoke gate: serial mode charged \
+                 interleaving ({} steps, {:.3} ms overlap)",
+                serial.interleaved_steps, serial.overlap_ms
+            )));
+        }
+        // (c) neither mode loses requests
+        if serial.completed < serial.offered || ilv.completed < ilv.offered
+        {
+            return Err(P3Error::Serve(format!(
+                "interleave smoke gate: lost requests (serial {}/{}, \
+                 interleaved {}/{})",
+                serial.completed, serial.offered, ilv.completed,
+                ilv.offered
+            )));
+        }
+        // (d) the win: at batch >= 8 the decode-heavy scenario must
+        // overlap more than 0.3 of the less-busy engine and convert
+        // that into strictly higher goodput than the serial schedule
+        if ilv.interleaved_steps == 0 {
+            return Err(P3Error::Serve(
+                "interleave smoke gate: no step ever interleaved"
+                    .into(),
+            ));
+        }
+        if ilv.overlap_factor <= 0.3 {
+            return Err(P3Error::Serve(format!(
+                "interleave smoke gate: overlap factor {:.3} <= 0.3",
+                ilv.overlap_factor
+            )));
+        }
+        if ilv.goodput_tok_s <= serial.goodput_tok_s
+            || ilv.makespan_ms >= serial.makespan_ms
+            || ilv.serial_saved_ms <= 0.0
+        {
+            return Err(P3Error::Serve(format!(
+                "interleave smoke gate: no win over serial (goodput \
+                 {:.2} vs {:.2} tok/s, makespan {:.3} vs {:.3} ms)",
+                ilv.goodput_tok_s,
+                serial.goodput_tok_s,
+                ilv.makespan_ms,
+                serial.makespan_ms
+            )));
+        }
+        println!(
+            "smoke gate: {} batch={}: overlap factor {:.3} > 0.3; \
+             interleaved goodput {:.2} tok/s > serial {:.2} tok/s \
+             ({} steps overlapped, {} fused, {:.3} ms saved)",
+            sc.name,
+            sc.max_batch,
+            ilv.overlap_factor,
+            ilv.goodput_tok_s,
+            serial.goodput_tok_s,
+            ilv.interleaved_steps,
+            ilv.fused_steps,
+            ilv.serial_saved_ms
+        );
+        let path = p3llm::benchkit::save_bench_json(
+            "interleave",
+            seed,
+            &bench_records,
+        )
+        .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+        println!("saved {}", path.display());
+    }
+
+    if args.has("save") {
+        save_tables(&t, None, "interleave")?;
+        if !smoke {
+            let path = p3llm::benchkit::save_bench_json(
+                "interleave",
+                seed,
+                &bench_records,
+            )
+            .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+            println!("saved {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+/// Check the committed bench baselines (`rust/benches/baselines.json`)
+/// against the `BENCH_*.json` sidecars the smoke gates just wrote.
+/// Every band is evaluated -- a run reports all regressions, not just
+/// the first -- and any violation is a hard error, so ci.sh can gate
+/// on the exit code alone.
+fn cmd_trend(args: &Args) -> Result<()> {
+    let path = args
+        .get_or("baselines", "rust/benches/baselines.json")
+        .to_string();
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| P3Error::io(&path, e))?;
+    let reports = p3llm::benchkit::reports_dir();
+    let rep = p3llm::benchkit::check_trend(&text, &reports)
+        .map_err(P3Error::InvalidConfig)?;
+    for line in &rep.passes {
+        println!("trend OK: {line}");
+    }
+    for line in &rep.failures {
+        println!("trend FAIL: {line}");
+    }
+    if !rep.ok() {
+        return Err(P3Error::Serve(format!(
+            "trend: {} of {} bands regressed against {path}",
+            rep.failures.len(),
+            rep.failures.len() + rep.passes.len()
+        )));
+    }
+    println!("trend: {} bands within tolerance of {path}", rep.passes.len());
     Ok(())
 }

@@ -151,6 +151,25 @@ impl RequestMix {
         }
     }
 
+    /// Decode-heavy miniature mix for the tiny-1M model (CI smoke gate
+    /// for NPU/PIM sub-batch interleaving: short prompts, long
+    /// outputs, so the run's device time is dominated by batched
+    /// decode steps whose NPU and PIM phases can overlap).
+    pub fn tiny_decode() -> Self {
+        RequestMix {
+            name: "tiny-decode",
+            prompt_mu: mu(12),
+            prompt_sigma: 0.4,
+            output_mu: mu(48),
+            output_sigma: 0.3,
+            min_prompt: 4,
+            max_prompt: 24,
+            min_output: 32,
+            max_output: 64,
+            prefixes: None,
+        }
+    }
+
     /// Agentic tool loop: every request re-sends one of a few long
     /// system prompts (tool schemas, instructions) ahead of a
     /// conversation-state suffix -- the canonical shared-prefix
@@ -325,6 +344,7 @@ pub fn all_mixes() -> Vec<RequestMix> {
         RequestMix::long_doc_xl(),
         RequestMix::tiny(),
         RequestMix::tiny_prefix(),
+        RequestMix::tiny_decode(),
         RequestMix::long_doc_tiny(),
     ]
 }

@@ -47,6 +47,10 @@ pub struct Scenario {
     /// engines (`None` = FIFO admission, no preemption; see
     /// `sched::victim_by_name`)
     pub victim: Option<&'static str>,
+    /// NPU/PIM sub-batch interleaving on this scenario's engines
+    /// (`false` = the serial schedule; `p3llm interleave` and the
+    /// A/B bench flip it)
+    pub interleave: bool,
 }
 
 impl Scenario {
@@ -88,7 +92,8 @@ impl Scenario {
             .max_batch(self.max_batch)
             .ctx_limit(self.ctx_limit.min(model.max_ctx))
             .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)))
-            .prefix_cache(self.prefix_cache);
+            .prefix_cache(self.prefix_cache)
+            .interleave(self.interleave);
         if let Some(v) = self.victim {
             b = b.preempt(v);
         }
@@ -127,6 +132,7 @@ impl Scenario {
             .ctx_limit(self.ctx_limit.min(model.max_ctx))
             .kv_capacity(per_req.saturating_mul(self.kv_slots.max(1)))
             .prefix_cache(self.prefix_cache)
+            .interleave(self.interleave)
             .hot_fraction(hot_fraction)
             .prefetch_depth(prefetch_depth);
         if let Some(v) = self.victim {
@@ -222,6 +228,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "chat-burst",
@@ -243,6 +250,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "summarize-steady",
@@ -258,6 +266,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "code-complete",
@@ -273,6 +282,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "rag-long",
@@ -288,6 +298,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "agent-pool",
@@ -303,6 +314,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "rag-cached",
@@ -318,6 +330,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "smoke",
@@ -333,6 +346,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "flash-crowd",
@@ -356,6 +370,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: Some(TierMix::mixed()),
             victim: Some("recompute"),
+            interleave: false,
         },
         Scenario {
             name: "starve-probe",
@@ -376,6 +391,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
                 best_effort: 0.2,
             }),
             victim: Some("swap"),
+            interleave: false,
         },
         Scenario {
             name: "smoke-overload",
@@ -399,6 +415,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
                 best_effort: 0.5,
             }),
             victim: Some("recompute"),
+            interleave: false,
         },
         Scenario {
             name: "long-doc-32k",
@@ -420,6 +437,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "long-doc-128k",
@@ -438,6 +456,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
         Scenario {
             name: "smoke-longdoc",
@@ -454,6 +473,29 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
+        },
+        Scenario {
+            name: "smoke-interleave",
+            desc: "CI gate: decode-heavy tiny batches for the NPU/PIM \
+                   sub-batch interleaving A/B, milliseconds",
+            model: "tiny-1M",
+            // arrivals outpace the ~microsecond decode steps so the
+            // backlog pins the batch at all 8 lanes for most of the
+            // run (the acceptance regime: decode-heavy at batch >= 8)
+            arrival: ArrivalProcess::Poisson { mean_interarrival_ms: 0.005 },
+            mix: RequestMix::tiny_decode(),
+            slo: SloSpec::chatbot(),
+            n_requests: 32,
+            max_batch: 8,
+            ctx_limit: 128,
+            kv_slots: 10,
+            prefix_cache: true,
+            tiers: None,
+            victim: None,
+            // the registry default is the serial schedule; the
+            // `interleave` CLI and bench flip this for the A/B
+            interleave: false,
         },
         Scenario {
             name: "smoke-prefix",
@@ -469,6 +511,7 @@ pub fn all_scenarios() -> Vec<Scenario> {
             prefix_cache: true,
             tiers: None,
             victim: None,
+            interleave: false,
         },
     ]
 }
@@ -643,6 +686,43 @@ mod tests {
         let total: usize =
             out.report.per_class.iter().map(|(_, r)| r.offered).sum();
         assert_eq!(total, out.report.offered);
+    }
+
+    #[test]
+    fn smoke_interleave_scenario_wins_the_ab() {
+        let s = by_name("smoke-interleave").unwrap();
+        // the registry default is the serial schedule
+        assert!(!s.interleave);
+        let mut ser = s.engine("P3-LLM", None).unwrap();
+        assert!(!ser.interleave_enabled());
+        let off = s.runner(7).run(&mut ser).unwrap().report;
+        assert_eq!(off.completed, s.n_requests);
+        assert_eq!(off.interleaved_steps, 0);
+        assert_eq!(off.overlap_factor, 0.0);
+        let mut on_sc = s.clone();
+        on_sc.interleave = true;
+        let mut ilv = on_sc.engine("P3-LLM", None).unwrap();
+        assert!(ilv.interleave_enabled());
+        let on = on_sc.runner(7).run(&mut ilv).unwrap().report;
+        assert_eq!(on.completed, s.n_requests);
+        // at batch 8 on the tiny model the split schedule wins: the
+        // run must actually interleave, overlap both engines past the
+        // CI threshold, and strictly beat the serial goodput
+        assert!(on.interleaved_steps > 0);
+        assert!(on.overlap_factor > 0.3, "{}", on.overlap_factor);
+        assert!(on.serial_saved_ms > 0.0);
+        assert!(
+            on.makespan_ms < off.makespan_ms,
+            "interleaved {} !< serial {}",
+            on.makespan_ms,
+            off.makespan_ms
+        );
+        assert!(
+            on.goodput_tok_s > off.goodput_tok_s,
+            "interleaved {} !> serial {}",
+            on.goodput_tok_s,
+            off.goodput_tok_s
+        );
     }
 
     #[test]

@@ -179,6 +179,22 @@ pub struct LoadReport {
     /// cold-tier KV pages demand-migrated at step time, each an
     /// engine-clock stall (tiered engines)
     pub pages_demand: usize,
+    /// NPU busy ms across both interleaved sub-batch timelines (0
+    /// under the serial schedule; zeroed in per-class sub-reports)
+    pub npu_busy_ms: f64,
+    /// PIM busy ms across both interleaved sub-batch timelines
+    pub pim_busy_ms: f64,
+    /// ms NPU and PIM ran concurrently (raw sum, fleet-mergeable)
+    pub overlap_ms: f64,
+    /// decode steps charged on the interleaved critical path
+    pub interleaved_steps: u64,
+    /// decode steps where the split lost and fused back to serial
+    pub fused_steps: u64,
+    /// ms saved vs the serial schedule across interleaved steps
+    pub serial_saved_ms: f64,
+    /// derived NPU‖PIM concurrency ratio in `[0, 1]`
+    /// ([`Metrics::overlap_factor`])
+    pub overlap_factor: f64,
     /// Per-tier breakdown, in [`SloClass::all`] order, present only
     /// when the run carried more than one tier.  Each sub-report is
     /// judged against the base SLO scaled by that tier's
@@ -329,6 +345,13 @@ impl LoadReport {
                 .map(|r| r.pages_prefetched)
                 .sum(),
             pages_demand: records.iter().map(|r| r.pages_demand).sum(),
+            npu_busy_ms: metrics.npu_busy_ms,
+            pim_busy_ms: metrics.pim_busy_ms,
+            overlap_ms: metrics.overlap_ms,
+            interleaved_steps: metrics.interleaved_steps,
+            fused_steps: metrics.fused_steps,
+            serial_saved_ms: metrics.serial_saved_ms,
+            overlap_factor: metrics.overlap_factor(),
             per_class,
             queue_delay_ms: Percentiles::from_samples(&queues),
             ttft_ms: Percentiles::from_samples(&ttfts),

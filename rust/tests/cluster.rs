@@ -29,6 +29,7 @@ fn bursty_tiny(n_requests: usize, kv_slots: usize) -> Scenario {
         prefix_cache: true,
         tiers: None,
         victim: None,
+        interleave: false,
     }
 }
 

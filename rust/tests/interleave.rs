@@ -1,0 +1,275 @@
+//! Property + integration suite for NPU||PIM sub-batch interleaving:
+//! token/work conservation across seeds, scenarios, and victim
+//! policies; interleaved makespan never exceeds the serial schedule's;
+//! two-run byte determinism in both modes; the serial mode's golden
+//! guarantee (an `interleave(false)` engine is bit-identical to a
+//! default-built one -- the pre-interleave code path); per-sub-batch
+//! demand-stall isolation under the tiered KV hierarchy; the PJRT
+//! builder rejection; and the traced end-to-end overlap factor the
+//! telemetry summary derives from the device timelines.
+
+use p3llm::coordinator::{EngineBuilder, Metrics};
+use p3llm::telemetry::{summary, Trace, TraceLane};
+use p3llm::testutil::{Rng, Runner};
+use p3llm::traffic::{scenario_by_name, LoadReport, Scenario};
+
+const SYSTEM: &str = "P3-LLM";
+
+/// Run one scenario mode and return its report plus the per-request
+/// `(prompt_len, tokens_generated, cached_prefix_tokens)` ledger in
+/// arrival order -- the conservation observables whose values must not
+/// depend on how a step's lanes were grouped into sub-batches.
+fn run_mode(
+    sc: &Scenario,
+    interleave: bool,
+    seed: u64,
+) -> (LoadReport, Vec<(usize, usize, usize)>) {
+    let mut sc = sc.clone();
+    sc.interleave = interleave;
+    let mut eng = sc.engine(SYSTEM, None).expect("engine build");
+    assert_eq!(eng.interleave_enabled(), interleave);
+    let out = sc
+        .runner(seed)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .expect("closed-loop run");
+    let ledger = out
+        .records
+        .iter()
+        .map(|r| (r.prompt_len, r.tokens_generated, r.cached_prefix_tokens))
+        .collect();
+    (out.report, ledger)
+}
+
+/// Satellite: conservation for any seed x scenario x victim policy.
+/// Both modes retire every offered request and generate the same
+/// per-request token counts, and the interleaved makespan never
+/// exceeds the serial one -- the fused fallback caps every step at
+/// its serial charge.  Preemption decisions are clock-driven, so once
+/// a run actually preempts, the two modes may evict different victims
+/// (recompute then re-prefills different pages); the per-request
+/// output ledger must survive that, but the prefix-hit accounting and
+/// the makespan bound are only comparable while both schedules stayed
+/// preemption-free.
+#[test]
+fn interleaving_conserves_work_for_any_seed_scenario_and_victim() {
+    for name in
+        ["smoke-interleave", "smoke", "smoke-prefix", "smoke-overload"]
+    {
+        for victim in [None, Some("recompute"), Some("swap")] {
+            Runner::new(3).run(|r: &mut Rng| {
+                let seed = r.next_u64() % 10_000;
+                let mut sc =
+                    scenario_by_name(name).expect("registry scenario");
+                sc.victim = victim;
+                let (serial, led_s) = run_mode(&sc, false, seed);
+                let (ilv, led_i) = run_mode(&sc, true, seed);
+                for (tag, rep) in
+                    [("serial", &serial), ("interleaved", &ilv)]
+                {
+                    assert_eq!(
+                        rep.completed, rep.offered,
+                        "{name}/{victim:?}/{seed}: {tag} lost requests"
+                    );
+                }
+                // grouping lanes into sub-batches must not change what
+                // any request computed -- only when it computed it
+                let outputs = |l: &[(usize, usize, usize)]| {
+                    l.iter().map(|&(p, t, _)| (p, t)).collect::<Vec<_>>()
+                };
+                assert_eq!(
+                    outputs(&led_s),
+                    outputs(&led_i),
+                    "{name}/{victim:?}/{seed}: per-request output \
+                     ledger diverged between modes"
+                );
+                if serial.preemptions == 0 && ilv.preemptions == 0 {
+                    assert_eq!(
+                        led_s, led_i,
+                        "{name}/{victim:?}/{seed}: prefix-hit \
+                         accounting diverged between modes"
+                    );
+                    assert!(
+                        ilv.makespan_ms <= serial.makespan_ms + 1e-9,
+                        "{name}/{victim:?}/{seed}: interleaved \
+                         makespan {:.6} ms exceeds serial {:.6} ms",
+                        ilv.makespan_ms,
+                        serial.makespan_ms
+                    );
+                }
+                // the serial schedule never charges interleaving
+                assert_eq!(serial.interleaved_steps, 0);
+                assert_eq!(serial.fused_steps, 0);
+                assert_eq!(serial.overlap_ms, 0.0);
+                assert_eq!(serial.serial_saved_ms, 0.0);
+            });
+        }
+    }
+}
+
+/// Satellite: two-run byte determinism in both modes -- the whole
+/// report (Debug-rendered, every float bit included) must agree.
+#[test]
+fn both_modes_are_byte_deterministic_across_runs() {
+    let sc = scenario_by_name("smoke-interleave").expect("scenario");
+    for interleave in [false, true] {
+        let (a, la) = run_mode(&sc, interleave, 7);
+        let (b, lb) = run_mode(&sc, interleave, 7);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "interleave={interleave}: two identical runs disagreed"
+        );
+        assert_eq!(la, lb);
+    }
+}
+
+/// Drive an engine through a fixed 8-lane decode-heavy workload and
+/// return its metrics plus every request's generated token stream.
+fn drive(mut eng: p3llm::coordinator::Engine) -> (Metrics, Vec<Vec<i32>>) {
+    let mut ids = vec![];
+    for i in 0..8 {
+        let mut rng = Rng::new(0x1eaf ^ i as u64);
+        let toks: Vec<i32> =
+            (0..100).map(|_| rng.usize(0, 251) as i32).collect();
+        ids.push(eng.submit(toks, 24).expect("submit"));
+    }
+    let m = eng.run_to_completion().expect("run");
+    let streams = ids
+        .into_iter()
+        .map(|id| eng.take_tokens(id).expect("tokens"))
+        .collect();
+    (m, streams)
+}
+
+fn sim_engine() -> EngineBuilder {
+    EngineBuilder::sim()
+        .model("tiny-1M")
+        .system(SYSTEM)
+        .max_batch(8)
+        .ctx_limit(128)
+}
+
+/// Golden diff: `interleave(false)` is the pre-interleave code path.
+/// An engine with the knob spelled out must match a default-built one
+/// bit for bit -- metrics (every timing float included) and token
+/// streams -- and the interleaved engine must produce the same tokens
+/// while finishing strictly earlier on this decode-heavy workload.
+#[test]
+fn interleave_off_is_bit_identical_and_on_conserves_tokens() {
+    let (m_default, t_default) = drive(sim_engine().build().unwrap());
+    let (m_off, t_off) =
+        drive(sim_engine().interleave(false).build().unwrap());
+    assert_eq!(format!("{m_default:?}"), format!("{m_off:?}"));
+    assert_eq!(t_default, t_off);
+
+    let (m_on, t_on) =
+        drive(sim_engine().interleave(true).build().unwrap());
+    // same tokens, earlier clock: the split changes scheduling only
+    assert_eq!(t_default, t_on);
+    assert_eq!(m_on.completed, m_default.completed);
+    assert_eq!(m_on.tokens_out, m_default.tokens_out);
+    assert!(
+        m_on.wall_ms < m_default.wall_ms,
+        "interleaved wall {:.6} ms not below serial {:.6} ms",
+        m_on.wall_ms,
+        m_default.wall_ms
+    );
+    assert!(m_on.interleaved_steps > 0);
+    assert!(
+        m_on.overlap_factor() > 0.3,
+        "overlap factor {:.3} <= 0.3",
+        m_on.overlap_factor()
+    );
+    assert!(m_on.serial_saved_ms > 0.0);
+    // serial engines report zeroed interleave counters
+    assert_eq!(m_default.interleaved_steps, 0);
+    assert_eq!(m_default.fused_steps, 0);
+    assert_eq!(m_default.overlap_factor(), 0.0);
+}
+
+/// Satellite regression: under the tiered KV hierarchy, a demand-miss
+/// stall charged to one sub-batch must not push the whole step to the
+/// serial stall total -- the tiered interleaved run still completes
+/// everything and never finishes later than tiered serial.
+#[test]
+fn tiered_demand_stalls_do_not_regress_the_interleaved_run() {
+    let sc = scenario_by_name("smoke-longdoc").expect("scenario");
+    let run_tiered = |interleave: bool| -> LoadReport {
+        let mut sc = sc.clone();
+        sc.interleave = interleave;
+        // depth 0 = pure demand paging: every cold page stalls
+        let mut eng =
+            sc.engine_tiered(SYSTEM, None, 0.3, 0).expect("engine");
+        sc.runner(7)
+            .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+            .expect("run")
+            .report
+    };
+    let serial = run_tiered(false);
+    let ilv = run_tiered(true);
+    assert!(
+        serial.pages_demand > 0,
+        "hot tier never overflowed; the stall path was not exercised"
+    );
+    for (tag, r) in [("serial", &serial), ("interleaved", &ilv)] {
+        assert_eq!(
+            r.completed, r.offered,
+            "tiered {tag} run lost requests"
+        );
+    }
+    assert!(
+        ilv.makespan_ms <= serial.makespan_ms + 1e-9,
+        "per-sub-batch stalls regressed the step: interleaved \
+         {:.6} ms vs serial {:.6} ms",
+        ilv.makespan_ms,
+        serial.makespan_ms
+    );
+}
+
+/// The PJRT backend has one wall clock, not two device timelines: the
+/// builder must reject the knob instead of silently ignoring it.
+#[test]
+fn pjrt_builder_rejects_interleaving() {
+    let err = EngineBuilder::pjrt("artifacts")
+        .interleave(true)
+        .build()
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("sim-backend"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Satellite e2e: the traced device timelines agree with the metrics.
+/// A traced interleaved run's NPU||PIM overlap factor (derived by
+/// `telemetry::summary` from the actual span intervals) clears the
+/// 0.3 gate, while the serial schedule's stays ~0.
+#[test]
+fn traced_overlap_factor_clears_the_gate_only_when_interleaved() {
+    let sc = scenario_by_name("smoke-interleave").expect("scenario");
+    let traced_factor = |interleave: bool| -> f64 {
+        let mut sc = sc.clone();
+        sc.interleave = interleave;
+        let mut eng = sc.engine(SYSTEM, None).expect("engine");
+        let trace = Trace::ring(1 << 18);
+        eng.set_trace(trace.clone());
+        sc.runner(7)
+            .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+            .expect("run");
+        assert_eq!(trace.dropped(), 0, "ring too small");
+        let util = summary::utilization(&trace.snapshot());
+        assert!(
+            util.busy_ms(0, TraceLane::Npu) > 0.0
+                && util.busy_ms(0, TraceLane::Pim) > 0.0,
+            "trace missing device busy time"
+        );
+        util.overlap[0].factor
+    };
+    let serial = traced_factor(false);
+    let ilv = traced_factor(true);
+    assert!(
+        serial < 0.05,
+        "serial schedule shows overlap factor {serial:.3}"
+    );
+    assert!(ilv > 0.3, "interleaved overlap factor {ilv:.3} <= 0.3");
+}
