@@ -180,13 +180,39 @@ if ! printf '%s\n' "$I1" | grep -q "> serial"; then
 fi
 echo "ci: interleave smoke OK"
 
+# Observability gate: the injected flash crowd run with the burn-rate
+# alert engine scraping the live engine.  The binary enforces
+# (in-process) that the interactive burn-rate alert fires strictly
+# before the end-of-run report reflects the attainment dip and
+# resolves after the crowd subsides, that a metrics-off run produces a
+# byte-identical LoadReport while recording zero series points (the
+# zero-cost guarantee), and that two instrumented runs export
+# byte-identical Prometheus text and series JSON; the diff below
+# additionally enforces bit-identical stdout across two processes.
+echo "ci: monitor smoke"
+N1=$(cargo run --release --quiet -- monitor --smoke --seed 7)
+N2=$(cargo run --release --quiet -- monitor --smoke --seed 7)
+if [ "$N1" != "$N2" ]; then
+    echo "ci: monitor smoke is not deterministic under --seed 7" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$N1" | grep -q "interactive burn-rate alert fired"; then
+    echo "ci: monitor smoke did not prove the alert led the report" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$N1" | grep -q "metrics off: report identical"; then
+    echo "ci: monitor smoke did not prove the disabled-metrics zero-cost path" >&2
+    exit 1
+fi
+echo "ci: monitor smoke OK"
+
 # Every smoke gate above writes a BENCH_*.json sidecar through
 # benchkit::save_bench_json so downstream tooling can diff runs
 # without scraping tables; their absence means a smoke path silently
 # stopped emitting.
 echo "ci: bench sidecars"
 REPORTS="${P3LLM_REPORTS:-reports}"
-for b in loadtest_smoke cluster_smoke overload_smoke trace_smoke memtier_smoke interleave; do
+for b in loadtest_smoke cluster_smoke overload_smoke trace_smoke memtier_smoke interleave monitor; do
     if [ ! -f "$REPORTS/BENCH_$b.json" ]; then
         echo "ci: missing bench sidecar $REPORTS/BENCH_$b.json" >&2
         exit 1

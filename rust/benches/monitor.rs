@@ -1,0 +1,229 @@
+//! Burn-rate alert lead time under an injected flash crowd (extension
+//! experiment, not a paper figure): sweep the burst size on the
+//! 3-phase plan the `monitor --smoke` CI gate runs (calm lead-in ->
+//! flash crowd -> calm recovery) and measure how far ahead of the
+//! end-of-run attainment report the interactive burn-rate alert fires.
+//!
+//! The claim under test: a multi-window burn-rate rule over scraped
+//! miss counters calls the SLO dip while the crowd is still in the
+//! queue -- strictly before the terminal `LoadReport` can show it --
+//! and resolves on its own once the load subsides, while a calm run
+//! of the same shape never fires at all (pending fizzles are allowed;
+//! a firing is not).
+//!
+//! Emits `BENCH_monitor_bench.json` through the shared
+//! `p3llm::benchkit::save_bench_json` emitter (the `monitor_bench`
+//! name keeps it clear of the `BENCH_monitor.json` sidecar the CI
+//! smoke gate writes).
+
+use p3llm::benchkit::BenchRecord;
+use p3llm::coordinator::{Engine, EngineBuilder};
+use p3llm::obs::{AlertKind, Obs, ObsConfig};
+use p3llm::report::{f2, f3, Table};
+use p3llm::sched::SloClass;
+use p3llm::traffic::{LoadReport, LoadRunner, SloSpec};
+
+const SEED: u64 = 7;
+const BURSTS: [usize; 3] = [0, 16, 32];
+
+fn build(obs: &Obs) -> Engine {
+    let mut e = EngineBuilder::sim()
+        .model("tiny-1M")
+        .max_batch(2)
+        .ctx_limit(128)
+        .preempt("recompute")
+        .build()
+        .expect("engine build");
+    e.set_obs(obs.clone());
+    e
+}
+
+/// The smoke gate's plan shape, with the crowd size as the knob: 12
+/// calm interactive requests, `burst` simultaneous arrivals at 96
+/// calibrated-TTFT units (classes cycling interactive-heavy), then 16
+/// recovery requests.
+fn mk_plan(burst: usize, t_base: f64, budget: SloSpec) -> LoadRunner {
+    let mut arrivals = vec![];
+    let mut shapes = vec![];
+    let mut classes = vec![];
+    for i in 0..12 {
+        arrivals.push(i as f64 * 8.0 * t_base);
+        shapes.push((16, 8));
+        classes.push(SloClass::Interactive);
+    }
+    for i in 0..burst {
+        arrivals.push(96.0 * t_base);
+        shapes.push((16, 8));
+        classes.push(match i % 4 {
+            0 | 1 => SloClass::Interactive,
+            2 => SloClass::Batch,
+            _ => SloClass::BestEffort,
+        });
+    }
+    for i in 0..16 {
+        arrivals.push(220.0 * t_base + i as f64 * 12.0 * t_base);
+        shapes.push((16, 8));
+        classes.push(SloClass::Interactive);
+    }
+    LoadRunner::from_plan(arrivals, shapes, budget, SEED)
+        .with_classes(classes)
+}
+
+/// Post-run cool-down: keep the scrape clock ticking through the quiet
+/// tail so the windowed burn decays and firing alerts resolve (same
+/// helper the monitor subcommand uses).
+fn cool_down(obs: &Obs, from_ms: f64, step_ms: f64, horizon_ms: f64) {
+    let from = obs.last_scrape_ms().unwrap_or(from_ms).max(from_ms);
+    let step = step_ms.max(1e-3);
+    let mut k = 1u64;
+    while (k as f64) * step <= horizon_ms + 1e-9 {
+        obs.scrape_now(from + k as f64 * step);
+        k += 1;
+    }
+}
+
+fn main() {
+    // calibrate the budget off a calm probe, exactly like the CI gate:
+    // the tiny model's absolute latencies are meaningless, its p95
+    // under no contention is the unit everything else is timed in
+    let probe = LoadRunner::from_plan(
+        (0..8).map(|i| i as f64 * 200.0).collect(),
+        vec![(16, 8); 8],
+        SloSpec::chatbot(),
+        SEED,
+    );
+    let mut eng = build(&Obs::off());
+    let t_base = probe.run(&mut eng).expect("probe run").report.ttft_ms.p95;
+    assert!(t_base > 0.0, "calibration run produced no TTFT");
+    let budget = SloSpec { ttft_ms: 6.0 * t_base, tpot_ms: f64::INFINITY };
+    let (scrape, fast, slow) =
+        (2.0 * t_base, 24.0 * t_base, 60.0 * t_base);
+
+    let mut t = Table::new(
+        format!(
+            "monitor: alert lead vs flash-crowd size, tiny-1M sim \
+             engine, budget 6x calibrated p95 TTFT, seed {SEED}"
+        ),
+        &[
+            "burst",
+            "done",
+            "makespan ms",
+            "att I",
+            "transitions",
+            "firing ms",
+            "lead ms",
+            "resolved ms",
+        ],
+    );
+    let mut recs: Vec<BenchRecord> = vec![];
+    let mut calm_att = 1.0;
+    for &burst in &BURSTS {
+        let obs =
+            Obs::new(ObsConfig::with_windows(budget, scrape, fast, slow));
+        let mut eng = build(&obs);
+        let r: LoadReport = mk_plan(burst, t_base, budget)
+            .run(&mut eng)
+            .expect("closed-loop run")
+            .report;
+        cool_down(&obs, r.makespan_ms, scrape, slow + 2.0 * fast);
+        assert_eq!(
+            r.completed, r.offered,
+            "burst={burst} lost requests"
+        );
+        let events = obs.events();
+        let firing = events.iter().find(|e| {
+            e.class == SloClass::Interactive && e.kind == AlertKind::Firing
+        });
+        let resolved = firing.and_then(|f| {
+            events.iter().find(|e| {
+                e.class == SloClass::Interactive
+                    && e.kind == AlertKind::Resolved
+                    && e.ts_ms > f.ts_ms
+            })
+        });
+        let att = r
+            .class_attainment(SloClass::Interactive)
+            .unwrap_or(r.slo_attainment);
+        let lead = firing.map(|f| r.makespan_ms - f.ts_ms);
+        t.row(vec![
+            burst.to_string(),
+            format!("{}/{}", r.completed, r.offered),
+            f3(r.makespan_ms),
+            f2(att),
+            events.len().to_string(),
+            firing.map(|f| f3(f.ts_ms)).unwrap_or_else(|| "-".into()),
+            lead.map(f3).unwrap_or_else(|| "-".into()),
+            resolved.map(|e| f3(e.ts_ms)).unwrap_or_else(|| "-".into()),
+        ]);
+        let cfg = format!("burst={burst}");
+        for (metric, value) in [
+            ("interactive_attainment", att),
+            ("alert_transitions", events.len() as f64),
+            ("alert_lead_ms", lead.unwrap_or(0.0)),
+            ("makespan_ms", r.makespan_ms),
+        ] {
+            recs.push(BenchRecord::new(cfg.as_str(), metric, value));
+        }
+        if burst == 0 {
+            // a calm run must never page anyone: pending fizzles are
+            // fine, a firing is a false alarm
+            assert!(
+                firing.is_none(),
+                "burst=0: burn-rate alert fired on a calm run \
+                 ({events:?})"
+            );
+            calm_att = att;
+            println!(
+                "check: burst=0: attainment {att:.3}, no firing \
+                 ({} transitions)",
+                events.len()
+            );
+        } else if burst == 32 {
+            // the flash crowd: the alert must fire strictly before the
+            // end of the run, resolve after the crowd subsides, and
+            // the terminal report must confirm the dip it called early
+            let f = firing.expect(
+                "burst=32: interactive burn-rate alert never fired",
+            );
+            let lead = r.makespan_ms - f.ts_ms;
+            assert!(
+                lead > 0.0,
+                "burst=32: alert fired at {:.1} ms, not before the end \
+                 of the run ({:.1} ms)",
+                f.ts_ms,
+                r.makespan_ms
+            );
+            resolved.expect(
+                "burst=32: firing alert never resolved after the crowd",
+            );
+            assert!(
+                att < 1.0,
+                "burst=32: flash crowd left no attainment dip"
+            );
+            assert!(
+                att < calm_att + 1e-9,
+                "burst=32: attainment {att:.3} not below the calm \
+                 run's {calm_att:.3}"
+            );
+            println!(
+                "check: burst=32: fired at {:.1} ms, lead {:.1} ms \
+                 ahead of the report, attainment {att:.3} (calm \
+                 {calm_att:.3})",
+                f.ts_ms, lead
+            );
+        }
+    }
+    t.print();
+    println!(
+        "expected shape: the calm run never fires; as the crowd grows \
+         the interactive attainment drops below the calm baseline and \
+         the burn-rate alert calls it while requests are still queued \
+         -- a positive lead over the end-of-run report -- then resolves \
+         once the recovery phase drains"
+    );
+    let dir = p3llm::benchkit::reports_dir();
+    t.save(&dir, "monitor_bench").unwrap();
+    let p = p3llm::benchkit::save_bench_json("monitor_bench", SEED, &recs)
+        .expect("write BENCH_monitor_bench.json");
+    println!("saved {}", p.display());
+}

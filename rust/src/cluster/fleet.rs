@@ -26,6 +26,7 @@ use crate::coordinator::{
     prefix_page_hash, Engine, Metrics, Percentiles, RequestId,
 };
 use crate::error::{P3Error, Result};
+use crate::obs::Obs;
 use crate::sched::SloClass;
 use crate::telemetry::Trace;
 use crate::traffic::{
@@ -158,6 +159,31 @@ impl Cluster {
         )?;
         for (i, r) in c.replicas.iter_mut().enumerate() {
             r.set_trace(trace.for_replica(i as u32));
+        }
+        Ok(c)
+    }
+
+    /// [`Cluster::from_scenario_traced`] plus observability: replica
+    /// `i` samples into [`obs.for_replica(i)`](Obs::for_replica), so
+    /// the fleet shares one metrics hub -- per-replica series carry
+    /// their replica tag, fleet rollups (burn-rate alerting, the
+    /// health report's replica skew) merge across tags by
+    /// construction, and the shared scrape clock samples the whole
+    /// fleet at one cadence.
+    pub fn from_scenario_observed(
+        scenario: &Scenario,
+        system: &str,
+        scheme: Option<&str>,
+        replicas: usize,
+        policy_name: &str,
+        trace: &Trace,
+        obs: &Obs,
+    ) -> Result<Self> {
+        let mut c = Cluster::from_scenario_traced(
+            scenario, system, scheme, replicas, policy_name, trace,
+        )?;
+        for (i, r) in c.replicas.iter_mut().enumerate() {
+            r.set_obs(obs.for_replica(i as u32));
         }
         Ok(c)
     }

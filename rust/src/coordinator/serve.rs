@@ -43,6 +43,7 @@ use crate::config::scheme;
 use crate::mem::TieredKv;
 use crate::coordinator::mapper::MapSummary;
 use crate::error::{P3Error, Result};
+use crate::obs::Obs;
 use crate::sched::{SloClass, VictimCandidate, VictimMode, VictimPolicy};
 use crate::telemetry::{Trace, TraceLane};
 
@@ -284,6 +285,9 @@ pub struct Engine {
     interleave: bool,
     /// request-lifecycle telemetry (default off = zero overhead)
     trace: Trace,
+    /// metrics registry + scraper + SLO burn-rate alerting (default
+    /// off = zero overhead)
+    obs: Obs,
 }
 
 impl Engine {
@@ -339,6 +343,7 @@ impl Engine {
             tier: None,
             interleave: false,
             trace: Trace::off(),
+            obs: Obs::off(),
         })
     }
 
@@ -358,6 +363,24 @@ impl Engine {
     /// [`EngineBuilder::telemetry`] installed one).
     pub fn trace(&self) -> &Trace {
         &self.trace
+    }
+
+    /// Adopt an observability handle: the engine feeds the metrics
+    /// registry (admission / preemption / prefix-cache counters,
+    /// queue-depth and KV-occupancy gauges, per-tier SLO miss counters
+    /// + latency histograms) and drives its fixed-interval scraper +
+    /// burn-rate alert evaluation on the engine clock.  The handle's
+    /// replica tag stamps every sample ([`Obs::for_replica`]); the
+    /// default-off handle makes every emit a no-op.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
+    }
+
+    /// The engine's observability handle (disabled unless
+    /// [`set_obs`](Engine::set_obs) / [`EngineBuilder::observe`]
+    /// installed one).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     pub fn model(&self) -> &LlmConfig {
@@ -486,6 +509,7 @@ impl Engine {
             Some(class),
             prompt_len as f64,
         );
+        self.obs.counter_add("submitted", Some(class), 1.0);
         Ok(rid)
     }
 
@@ -642,6 +666,7 @@ impl Engine {
         if use_cache && !resume {
             // ctx == prompt on the non-resume path
             self.pool.register_prefix(rid.0, &ctx);
+            self.obs.counter_add("prefix_lookups", Some(class), 1.0);
         }
         if cached > 0 && !resume {
             self.acc.prefix_hits += 1;
@@ -653,6 +678,14 @@ impl Engine {
                 Some(class),
                 cached as f64,
             );
+            if self.obs.enabled() {
+                self.obs.counter_add("prefix_hits", Some(class), 1.0);
+                self.obs.counter_add(
+                    "prefix_tokens_saved",
+                    Some(class),
+                    cached as f64,
+                );
+            }
         }
         let now = self.backend.now_ms();
         // one span per prefill call; the name says how the context got
@@ -777,6 +810,13 @@ impl Engine {
             Some(class),
             generated as f64,
         );
+        if self.obs.enabled() {
+            let r = &self.requests[&rid.0];
+            if let Some(ttft) = r.ttft_ms() {
+                self.obs.request_finished(class, ttft, r.tpot_ms());
+            }
+            self.obs.counter_add("tokens_emitted", None, generated as f64);
+        }
         self.batcher.retire(rid);
         self.free_kv(rid);
     }
@@ -869,6 +909,14 @@ impl Engine {
             Some(class),
             pages as f64,
         );
+        if self.obs.enabled() {
+            self.obs.counter_add("preempted", Some(class), 1.0);
+            self.obs.counter_add(
+                "pages_evicted",
+                Some(class),
+                pages as f64,
+            );
+        }
         Ok(())
     }
 
@@ -947,6 +995,13 @@ impl Engine {
                         total_max as f64,
                     );
                 }
+                if self.obs.enabled() {
+                    self.obs.counter_add(
+                        "bounced",
+                        Some(self.requests[&rid.0].class),
+                        1.0,
+                    );
+                }
                 bounced.push(rid);
                 continue;
             }
@@ -958,6 +1013,19 @@ impl Engine {
                     Some(self.requests[&rid.0].class),
                     total_max as f64,
                 );
+            }
+            if self.obs.enabled() {
+                let class = self.requests[&rid.0].class;
+                self.obs.counter_add("admitted", Some(class), 1.0);
+                // rank below the class's static one = the aging floor
+                // promoted this request past its tier
+                if rank < class.rank() {
+                    self.obs.counter_add(
+                        "aging_promoted",
+                        Some(class),
+                        1.0,
+                    );
+                }
             }
             if let Err(e) = self.prefill(rid) {
                 // keep the engine consistent on a failed prefill: the
@@ -1002,6 +1070,9 @@ impl Engine {
 
         let active: Vec<RequestId> = self.batcher.active().to_vec();
         if active.is_empty() {
+            // keep the scrape clock (and alert evaluation) advancing
+            // through idle gaps the load runner fast-forwards over
+            self.obs.maybe_scrape(self.backend.now_ms());
             return Ok(0);
         }
         // tiered KV: walk each active lane's page table ahead of the
@@ -1031,6 +1102,23 @@ impl Engine {
                 self.acc.pages_prefetched += o.prefetched;
                 self.acc.pages_demand += o.demand;
                 let class = req.class;
+                if self.obs.enabled() {
+                    self.obs.counter_add(
+                        "pages_prefetched",
+                        Some(class),
+                        o.prefetched as f64,
+                    );
+                    self.obs.counter_add(
+                        "pages_demand",
+                        Some(class),
+                        o.demand as f64,
+                    );
+                    self.obs.counter_add(
+                        "cxl_busy_ms",
+                        None,
+                        (o.prefetched + o.demand) as f64 * ts.page_ms,
+                    );
+                }
                 if o.prefetched > 0 {
                     self.trace.span(
                         TraceLane::Cxl,
@@ -1187,6 +1275,32 @@ impl Engine {
             self.trace.counter("queue_depth", t1, queued as f64);
             self.trace.counter("active_lanes", t1, active as f64);
         }
+        if self.obs.enabled() {
+            let (used, cached, _live) = self.pool.occupancy();
+            let (queued, active_n) = self.batcher.depths();
+            self.obs.gauge_set("kv_used_bytes", None, used as f64);
+            self.obs.gauge_set("kv_cached_bytes", None, cached as f64);
+            self.obs.gauge_set("queue_depth", None, queued as f64);
+            self.obs.gauge_set("active_lanes", None, active_n as f64);
+            if let Some((hot, cold, _cap)) = self.tier_occupancy() {
+                self.obs.gauge_set("kv_hot_pages", None, hot as f64);
+                self.obs.gauge_set("kv_cold_pages", None, cold as f64);
+            }
+            if self.interleave {
+                let ilv = self.backend.interleave_stats();
+                self.obs.gauge_set(
+                    "overlap_factor",
+                    None,
+                    ilv.overlap_factor(),
+                );
+                self.obs.gauge_set(
+                    "fused_steps",
+                    None,
+                    ilv.fused_steps as f64,
+                );
+            }
+        }
+        self.obs.maybe_scrape(t1);
         Ok(emitted)
     }
 
@@ -1385,6 +1499,8 @@ pub struct EngineBuilder {
     interleave: bool,
     /// telemetry handle installed at build (default off)
     trace: Trace,
+    /// observability handle installed at build (default off)
+    obs: Obs,
 }
 
 impl EngineBuilder {
@@ -1406,6 +1522,7 @@ impl EngineBuilder {
             prefetch_depth: None,
             interleave: false,
             trace: Trace::off(),
+            obs: Obs::off(),
         }
     }
 
@@ -1558,6 +1675,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Install an observability handle on the built engine: the
+    /// metrics registry fills as the engine serves, the scraper runs
+    /// on the engine clock, and SLO burn-rate alerts evaluate at each
+    /// scrape.  Keep a clone to export Prometheus text / series JSON
+    /// after the run; the default-off handle records nothing and costs
+    /// nothing.  See [`crate::obs`].
+    pub fn observe(mut self, obs: Obs) -> Self {
+        self.obs = obs;
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let scheme_name = self.scheme.as_deref().unwrap_or("p3llm");
         let scheme = scheme::by_name(scheme_name)
@@ -1655,6 +1783,7 @@ impl EngineBuilder {
                     self.prefix_cache.unwrap_or(false),
                 )?;
                 eng.set_trace(self.trace.clone());
+                eng.set_obs(self.obs.clone());
                 Ok(eng)
             }
             BackendKind::Sim => {
@@ -1738,6 +1867,7 @@ impl EngineBuilder {
                     });
                 }
                 eng.set_trace(self.trace.clone());
+                eng.set_obs(self.obs.clone());
                 Ok(eng)
             }
         }

@@ -49,6 +49,14 @@
 //!   with Chrome-trace/Perfetto export, a utilization + NPU/PIM
 //!   overlap summary, and a flight recorder for SLO-missing requests
 //!   -- see `p3llm trace`.
+//! * `obs` -- virtual-clock time-series observability: a typed
+//!   metrics registry (counters / gauges / log2-bucket histograms)
+//!   scraped at a fixed engine-clock interval into ring-buffered
+//!   series, multi-window SLO burn-rate alerting per tier
+//!   (pending -> firing -> resolved, recorded into the trace stream),
+//!   Prometheus/JSON exports, and a fleet [`HealthReport`] -- the
+//!   [`Obs`] handle is zero-cost when disabled, like [`Trace`].  See
+//!   `p3llm monitor`.
 //! * `runtime` -- artifact registry, weight loaders, PJRT execution
 //!   (python never runs at inference time)
 //! * `report`/`testutil`/`cli`/`benchkit` -- harness utilities
@@ -89,6 +97,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod mem;
+pub mod obs;
 pub mod pcu;
 pub mod quant;
 pub mod report;
@@ -106,6 +115,7 @@ pub use coordinator::{
     RequestId, RequestStatus,
 };
 pub use error::{P3Error, Result};
+pub use obs::{HealthReport, Obs, ObsConfig};
 pub use sched::{SloClass, TierMix, VictimPolicy};
 pub use telemetry::{Trace, TraceEvent, TraceLane};
 pub use traffic::{LoadReport, LoadRunner, LoadTarget, Scenario, SloSpec};

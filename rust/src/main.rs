@@ -20,12 +20,14 @@ use p3llm::cluster::{
 use p3llm::config::llm;
 use p3llm::coordinator::{Engine, EngineBuilder, KvLayout, Metrics};
 use p3llm::error::{P3Error, Result};
+use p3llm::obs::{AlertEvent, AlertKind, Obs, ObsConfig, Point, BURN_FAST};
 use p3llm::report::{f2, f3, Table};
 use p3llm::runtime::{eval::eval_configs, Evaluator, Runtime};
 use p3llm::sched::{victim_by_name, SloClass, TierMix};
 use p3llm::telemetry::{export, flight, summary, Trace, TraceLane};
 use p3llm::traffic::{
-    self, ArrivalProcess, LoadReport, RequestMix, Scenario, SloSpec,
+    self, ArrivalProcess, LoadReport, LoadRunner, RequestMix, Scenario,
+    SloSpec,
 };
 
 const USAGE: &str = "\
@@ -156,6 +158,32 @@ commands:
                       at batch 8 the decode-heavy scenario overlaps
                       > 0.3 of the less-busy engine and beats serial
                       goodput strictly
+  monitor    virtual-clock observability: run scenarios with the obs
+             layer scraping typed metrics (queue depth, KV occupancy,
+             per-tier SLO counters, burn rates) into time series on a
+             fixed engine-clock cadence; prints a time-bucketed series
+             table, the burn-rate alert timeline (pending -> firing ->
+             resolved), and a fleet health snapshot, flight-dumps the
+             in-flight context of the first firing alert, and exports
+             the registry as Prometheus text + the series as JSON
+             --scenario NAME[,NAME..]|all  (default flash-crowd)
+             --system NAME --scheme NAME --seed N --requests N
+             --load F         pin offered load to F x saturation
+             --tiers I/B/E --victim NAME   (as in loadtest)
+             --replicas N --policy NAME    monitor a routed fleet
+                      (per-replica series merge at the shared hub)
+             --scrape-ms F    scrape cadence, engine-clock ms (50)
+             --fast-ms F --slow-ms F   burn-rate windows (1000/4000)
+             --flight-last N  alert flight-dump depth (default 16)
+             --out FILE       Prometheus text (reports/metrics.prom)
+             --json-out FILE  series JSON (reports/metrics_series.json)
+             --save   write the bucketed series table TSV
+             --smoke  CI gate on a calibrated flash crowd: the
+                      interactive burn-rate alert fires strictly before
+                      the end-of-run report shows the attainment dip
+                      and resolves after the crowd subsides; a
+                      metrics-off run is report-identical with zero
+                      series points; exports are byte-deterministic
   trend      compare the BENCH_*.json sidecars under reports/ against
              the committed tolerance bands in benches/baselines.json;
              prints one line per band and fails on any regression
@@ -177,6 +205,7 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("memtier") => cmd_memtier(&args),
         Some("interleave") => cmd_interleave(&args),
+        Some("monitor") => cmd_monitor(&args),
         Some("trend") => cmd_trend(&args),
         Some("version") => {
             println!("p3llm {}", p3llm::version());
@@ -1509,6 +1538,456 @@ fn cmd_trace(args: &Args) -> Result<()> {
             off.snapshot().len()
         );
     }
+    Ok(())
+}
+
+/// Print every burn-rate alert transition the run recorded, in order.
+fn print_alert_timeline(events: &[AlertEvent]) {
+    if events.is_empty() {
+        println!("alerts: none (no burn-rate rule transitioned)");
+        return;
+    }
+    println!("alerts: {} transitions", events.len());
+    for e in events {
+        println!(
+            "  {:>10.1} ms  {:<12} {:<9} burn={:.2} rule={}",
+            e.ts_ms,
+            e.class.name(),
+            e.kind.name(),
+            e.burn,
+            e.rule
+        );
+    }
+}
+
+/// Time-bucketed view of the scraped series over `[0, end_ms]`: mean
+/// per bucket for the headline gauges plus each tier's fast-window
+/// burn rate.  Empty buckets (idle gaps between arrivals) print "-".
+fn series_table(obs: &Obs, end_ms: f64, buckets: usize) -> Table {
+    let mut t = Table::new(
+        format!("scraped series ({} scrapes, mean per bucket)", obs.scrapes()),
+        &["t ms", "queue", "lanes", "kv MB", "burn I", "burn B", "burn E"],
+    );
+    let cols: Vec<(Vec<Point>, f64)> = vec![
+        (obs.series_points("queue_depth", None), 1.0),
+        (obs.series_points("active_lanes", None), 1.0),
+        (obs.series_points("kv_used_bytes", None), 1e-6),
+        (obs.series_points(BURN_FAST, Some(SloClass::Interactive)), 1.0),
+        (obs.series_points(BURN_FAST, Some(SloClass::Batch)), 1.0),
+        (obs.series_points(BURN_FAST, Some(SloClass::BestEffort)), 1.0),
+    ];
+    let buckets = buckets.max(1);
+    let w = (end_ms / buckets as f64).max(1e-9);
+    for b in 0..buckets {
+        let lo = b as f64 * w;
+        let hi = lo + w;
+        let last = b + 1 == buckets;
+        let mut row = vec![format!("{:.0}-{:.0}", lo, hi)];
+        for (pts, scale) in &cols {
+            let vals: Vec<f64> = pts
+                .iter()
+                .filter(|p| p.ts_ms >= lo && (p.ts_ms < hi || last))
+                .map(|p| p.value * scale)
+                .collect();
+            row.push(if vals.is_empty() {
+                "-".into()
+            } else {
+                f2(vals.iter().sum::<f64>() / vals.len() as f64)
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Flight-dump the in-flight context of the first firing alert the
+/// trace recorded: which requests were doing what when the burn rate
+/// crossed the firing threshold.
+fn print_alert_flight(trace: &Trace, flight_last: usize) {
+    let events = trace.snapshot();
+    let firings = flight::alert_firings(&events);
+    let Some(&(rep, class, ts, burn)) = firings.first() else {
+        return;
+    };
+    let tier = class.map(|c| format!(" {}", c.name())).unwrap_or_default();
+    println!(
+        "flight recorder: first firing alert (replica {rep}{tier} at \
+         {ts:.1} ms, burn {burn:.2}), last {flight_last} in-flight \
+         events:"
+    );
+    println!(
+        "{}",
+        flight::render(&flight::alert_context_dump(&events, ts, flight_last))
+    );
+}
+
+/// Keep the scrape clock ticking through the quiet tail after the last
+/// retire so trailing burn windows can observe the recovery and firing
+/// alerts can resolve (the engine only scrapes while it steps).
+/// Returns the last scrape timestamp.
+fn cool_down(obs: &Obs, from_ms: f64, step_ms: f64, horizon_ms: f64) -> f64 {
+    // resume from wherever the scrape clock actually stopped (the
+    // makespan is relative to the first arrival, which can lag the
+    // engine clock) so series timestamps stay monotone
+    let from = obs.last_scrape_ms().unwrap_or(from_ms).max(from_ms);
+    let step = step_ms.max(1e-3);
+    let mut t_end = from;
+    let mut k = 1u64;
+    while (k as f64) * step <= horizon_ms + 1e-9 {
+        t_end = from + k as f64 * step;
+        obs.scrape_now(t_end);
+        k += 1;
+    }
+    t_end
+}
+
+/// Continuous observability over the closed-loop runner: scrape the
+/// obs layer on a fixed virtual-clock cadence while scenarios run,
+/// then print the time-bucketed series, the alert timeline, and the
+/// fleet health snapshot, and export Prometheus text + JSON series.
+/// `--smoke` is the CI gate ci.sh wires in.
+fn cmd_monitor(args: &Args) -> Result<()> {
+    if args.has("smoke") {
+        return monitor_smoke(args);
+    }
+    let seed = args.get_u64("seed", 7)?;
+    let system = args.get_or("system", "P3-LLM").to_string();
+    let scheme = args.get("scheme");
+    let mut scenarios = select_scenarios(args, "flash-crowd")?;
+    apply_tier_flags(args, &mut scenarios)?;
+    let replicas = args.get_usize("replicas", 1)?.max(1);
+    let policy = args.get_or("policy", "jsq").to_string();
+    if policy_by_name(&policy).is_none() {
+        return Err(P3Error::InvalidConfig(format!(
+            "unknown routing policy {policy:?} (see `p3llm cluster --list`)"
+        )));
+    }
+    let scrape = args.get_f64("scrape-ms", 50.0)?.max(1e-3);
+    let fast = args.get_f64("fast-ms", 1_000.0)?.max(1e-3);
+    let slow = args.get_f64("slow-ms", 4_000.0)?.max(1e-3);
+    let flight_last = args.get_usize("flight-last", 16)?.max(1);
+
+    for (i, sc) in scenarios.iter_mut().enumerate() {
+        if sc.tiers.is_none() {
+            // burn-rate rules are per tier; an untiered run would only
+            // ever exercise the interactive rule
+            sc.tiers = Some(TierMix::mixed());
+        }
+        if let Some(tok) = args.get("load") {
+            let f = tok
+                .parse::<f64>()
+                .ok()
+                .filter(|f| f.is_finite() && *f > 0.0)
+                .ok_or_else(|| P3Error::InvalidFlag {
+                    flag: "load".into(),
+                    value: tok.into(),
+                })?;
+            *sc = sc.clone().with_load_factor(&system, f, seed)?;
+        }
+        let obs =
+            Obs::new(ObsConfig::with_windows(sc.slo, scrape, fast, slow));
+        let trace = Trace::ring(1 << 18);
+        obs.set_trace(trace.clone());
+        let report = if replicas > 1 {
+            let fleet_sc = sc.clone().for_fleet(replicas)?;
+            let mut cl = Cluster::from_scenario_observed(
+                sc, &system, scheme, replicas, &policy, &trace, &obs,
+            )?;
+            cl.run(&fleet_sc.runner(seed), sc.saturation_tok_s(&system))?
+                .report
+                .fleet
+        } else {
+            let mut engine = sc.engine(&system, scheme)?;
+            engine.set_trace(trace.clone());
+            engine.set_obs(obs.clone());
+            sc.runner(seed)
+                .run_with_saturation(
+                    &mut engine,
+                    sc.saturation_tok_s(&system),
+                )?
+                .report
+        };
+        let t_end =
+            cool_down(&obs, report.makespan_ms, scrape, slow + 2.0 * fast);
+
+        if i > 0 {
+            println!();
+        }
+        println!(
+            "monitor: {} on {system}, seed {seed}, {replicas} replica(s), \
+             scrape every {scrape} ms",
+            sc.name
+        );
+        print_load_report(&report);
+        let mut tiers_t = Table::new(
+            "per-tier breakdown (SLO budget x tier slo_factor)",
+            &TIER_HEADERS,
+        );
+        tier_rows(&mut tiers_t, sc.name, "monitor", &report);
+        if !tiers_t.rows.is_empty() {
+            tiers_t.print();
+        }
+        let st = series_table(&obs, t_end, 8);
+        st.print();
+        print_alert_timeline(&obs.events());
+        let h = obs.health(
+            t_end,
+            Some(report.throughput_tok_s),
+            report.saturation_tok_s,
+        );
+        println!("{}", h.render());
+        print_alert_flight(&trace, flight_last);
+
+        let dir = p3llm::benchkit::reports_dir();
+        let prom_path = match args.get("out") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => dir.join(format!("metrics_{}.prom", sc.name)),
+        };
+        let json_path = match args.get("json-out") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => dir.join(format!("metrics_{}_series.json", sc.name)),
+        };
+        for (path, body) in
+            [(&prom_path, obs.prometheus()), (&json_path, obs.series_json())]
+        {
+            if let Some(d) = path.parent() {
+                if !d.as_os_str().is_empty() {
+                    std::fs::create_dir_all(d)
+                        .map_err(|e| P3Error::io(d, e))?;
+                }
+            }
+            std::fs::write(path, body).map_err(|e| P3Error::io(path, e))?;
+            println!("saved {}", path.display());
+        }
+        if args.has("save") {
+            save_tables(&st, Some(&tiers_t), "monitor")?;
+        }
+    }
+    Ok(())
+}
+
+/// The `monitor --smoke` CI gate: a calibrated flash crowd on the tiny
+/// sim model proving (a) the interactive burn-rate alert fires
+/// strictly before the end-of-run report can show the attainment dip
+/// and resolves after the crowd subsides, (b) a metrics-off run is
+/// report-identical with zero series points, and (c) the Prometheus +
+/// JSON exports are byte-deterministic across runs.
+fn monitor_smoke(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 7)?;
+    let flight_last = args.get_usize("flight-last", 16)?.max(1);
+    let build = |obs: &Obs, trace: &Trace| -> Result<Engine> {
+        let mut e = EngineBuilder::sim()
+            .model("tiny-1M")
+            .max_batch(2)
+            .ctx_limit(128)
+            .preempt("recompute")
+            .build()?;
+        e.set_trace(trace.clone());
+        e.set_obs(obs.clone());
+        Ok(e)
+    };
+
+    // the absolute SLO budget is meaningless for the tiny CI model, so
+    // calibrate one: p95 TTFT under a deliberately calm probe, with 6x
+    // headroom (same idiom as the overload gate)
+    let probe = LoadRunner::from_plan(
+        (0..8).map(|i| i as f64 * 200.0).collect(),
+        vec![(16, 8); 8],
+        SloSpec::chatbot(),
+        seed,
+    );
+    let mut eng = build(&Obs::off(), &Trace::off())?;
+    let t_base = probe.run(&mut eng)?.report.ttft_ms.p95;
+    if !(t_base > 0.0) {
+        return Err(P3Error::Serve(
+            "monitor smoke gate: calibration run produced no TTFT".into(),
+        ));
+    }
+    let budget = SloSpec { ttft_ms: 6.0 * t_base, tpot_ms: f64::INFINITY };
+
+    // calm lead-in -> flash crowd -> calm recovery, all timed in units
+    // of the calibrated TTFT so the shape survives cost-model changes
+    let mk_plan = || -> LoadRunner {
+        let mut arrivals = vec![];
+        let mut shapes = vec![];
+        let mut classes = vec![];
+        for i in 0..12 {
+            arrivals.push(i as f64 * 8.0 * t_base);
+            shapes.push((16, 8));
+            classes.push(SloClass::Interactive);
+        }
+        let burst_t = 96.0 * t_base;
+        for i in 0..32 {
+            arrivals.push(burst_t);
+            shapes.push((16, 8));
+            classes.push(match i % 4 {
+                0 | 1 => SloClass::Interactive,
+                2 => SloClass::Batch,
+                _ => SloClass::BestEffort,
+            });
+        }
+        for i in 0..16 {
+            arrivals.push(220.0 * t_base + i as f64 * 12.0 * t_base);
+            shapes.push((16, 8));
+            classes.push(SloClass::Interactive);
+        }
+        LoadRunner::from_plan(arrivals, shapes, budget, seed)
+            .with_classes(classes)
+    };
+    let scrape = 2.0 * t_base;
+    let fast = 24.0 * t_base;
+    let slow = 60.0 * t_base;
+    let run_obs = || -> Result<(LoadReport, Obs, Trace, f64)> {
+        let obs =
+            Obs::new(ObsConfig::with_windows(budget, scrape, fast, slow));
+        let trace = Trace::ring(1 << 18);
+        obs.set_trace(trace.clone());
+        let mut eng = build(&obs, &trace)?;
+        let report = mk_plan().run(&mut eng)?.report;
+        let t_end =
+            cool_down(&obs, report.makespan_ms, scrape, slow + 2.0 * fast);
+        Ok((report, obs, trace, t_end))
+    };
+
+    let (report, obs, trace, t_end) = run_obs()?;
+    print_load_report(&report);
+    series_table(&obs, t_end, 8).print();
+    let events = obs.events();
+    print_alert_timeline(&events);
+    let h = obs.health(
+        t_end,
+        Some(report.throughput_tok_s),
+        report.saturation_tok_s,
+    );
+    println!("{}", h.render());
+    print_alert_flight(&trace, flight_last);
+
+    // (a) alert leads the terminal report: firing strictly before the
+    // makespan, resolution strictly after firing, and the end-of-run
+    // attainment does show the dip the alert called early
+    let firing = events
+        .iter()
+        .find(|e| {
+            e.class == SloClass::Interactive && e.kind == AlertKind::Firing
+        })
+        .ok_or_else(|| {
+            P3Error::Serve(
+                "monitor smoke gate: interactive burn-rate alert never \
+                 fired during the flash crowd"
+                    .into(),
+            )
+        })?;
+    let resolved = events
+        .iter()
+        .find(|e| {
+            e.class == SloClass::Interactive
+                && e.kind == AlertKind::Resolved
+                && e.ts_ms > firing.ts_ms
+        })
+        .ok_or_else(|| {
+            P3Error::Serve(
+                "monitor smoke gate: firing alert never resolved after \
+                 the crowd subsided"
+                    .into(),
+            )
+        })?;
+    let lead = report.makespan_ms - firing.ts_ms;
+    if !(lead > 0.0) {
+        return Err(P3Error::Serve(format!(
+            "monitor smoke gate: alert fired at {:.1} ms, not before the \
+             end of the run ({:.1} ms)",
+            firing.ts_ms, report.makespan_ms
+        )));
+    }
+    let att = report
+        .class_attainment(SloClass::Interactive)
+        .unwrap_or(report.slo_attainment);
+    if !(att < 1.0) {
+        return Err(P3Error::Serve(
+            "monitor smoke gate: flash crowd left no attainment dip to \
+             alert on"
+                .into(),
+        ));
+    }
+    if flight::alert_firings(&trace.snapshot()).is_empty() {
+        return Err(P3Error::Serve(
+            "monitor smoke gate: firing alert never reached the trace \
+             stream"
+                .into(),
+        ));
+    }
+
+    // (b) zero-cost when disabled: the identical plan with metrics and
+    // telemetry off must produce a byte-identical LoadReport
+    let mut plain_eng = build(&Obs::off(), &Trace::off())?;
+    let plain = mk_plan().run(&mut plain_eng)?.report;
+    if plain != report {
+        return Err(P3Error::Serve(
+            "monitor smoke gate: disabled metrics perturbed the run"
+                .into(),
+        ));
+    }
+
+    // (c) deterministic exports: a second instrumented run must agree
+    // byte-for-byte (ci.sh additionally diffs two full process runs)
+    let (report2, obs2, _trace2, _) = run_obs()?;
+    if report2 != report
+        || obs2.prometheus() != obs.prometheus()
+        || obs2.series_json() != obs.series_json()
+    {
+        return Err(P3Error::Serve(
+            "monitor smoke gate: two identical runs disagreed \
+             (nondeterminism)"
+                .into(),
+        ));
+    }
+
+    let bench_records = vec![
+        BenchRecord::new("scenario=flash-smoke", "alert_lead_ms", lead),
+        BenchRecord::new(
+            "scenario=flash-smoke",
+            "firing_ts_ms",
+            firing.ts_ms,
+        ),
+        BenchRecord::new(
+            "scenario=flash-smoke",
+            "resolved_ts_ms",
+            resolved.ts_ms,
+        ),
+        BenchRecord::new(
+            "scenario=flash-smoke",
+            "interactive_attainment",
+            att,
+        ),
+        BenchRecord::new(
+            "scenario=flash-smoke",
+            "series_points",
+            obs.total_points() as f64,
+        ),
+        BenchRecord::new(
+            "scenario=flash-smoke",
+            "alert_transitions",
+            events.len() as f64,
+        ),
+    ];
+    let path =
+        p3llm::benchkit::save_bench_json("monitor", seed, &bench_records)
+            .map_err(|e| P3Error::io(p3llm::benchkit::reports_dir(), e))?;
+    println!("saved {}", path.display());
+    println!(
+        "smoke gate: interactive burn-rate alert fired at {:.1} ms, \
+         {:.1} ms before the end-of-run report (makespan {:.1} ms, \
+         attainment {:.3}); resolved at {:.1} ms after the crowd \
+         subsided",
+        firing.ts_ms, lead, report.makespan_ms, att, resolved.ts_ms
+    );
+    println!(
+        "smoke gate: metrics off: report identical, 0 series points; \
+         instrumented exports byte-identical across runs ({} scrapes, \
+         {} series points)",
+        obs.scrapes(),
+        obs.total_points()
+    );
     Ok(())
 }
 

@@ -31,3 +31,28 @@ pub use transfer::{
     kv_bytes, migration_ms, page_migration_ms, pool_handoff_ms,
     swap_restore_ms, transfer_ns,
 };
+
+/// Fraction of `elapsed_ms` the slow-tier link spent moving pages, in
+/// `[0, 1]` -- the gauge the `obs` layer derives from the engine's
+/// `cxl_busy_ms` counter (prefetch + demand migrations both occupy the
+/// link; only demand stalls the clock).  Zero when nothing elapsed.
+pub fn link_utilization(busy_ms: f64, elapsed_ms: f64) -> f64 {
+    if elapsed_ms > 0.0 {
+        (busy_ms / elapsed_ms).clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn link_utilization_is_bounded() {
+        assert_eq!(super::link_utilization(0.0, 100.0), 0.0);
+        assert_eq!(super::link_utilization(25.0, 100.0), 0.25);
+        // oversubscription clamps (overlapped prefetches can exceed
+        // the wall window) and a zero window is not a division
+        assert_eq!(super::link_utilization(250.0, 100.0), 1.0);
+        assert_eq!(super::link_utilization(5.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! SLO burn-rate alerting on virtual time: multi-window rules over
+//! per-tier miss counters, with a hysteresis state machine
+//! (inactive -> pending -> firing -> resolved) that cannot flap on
+//! boundary noise.
+//!
+//! Burn rate is the SRE error-budget formulation: over a trailing
+//! window `W`, `burn = (Δmiss / Δtotal) / error_budget`, where the
+//! error budget is `1 - attainment_target` for the tier.  Burn 1.0
+//! means the tier is consuming its budget exactly at the sustainable
+//! rate; the default rules fire at 2x.  A rule goes *pending* when the
+//! fast window breaches (quick detection), *firing* only when the slow
+//! window confirms (burst immunity), and *resolves* only after the
+//! fast-window burn has stayed below a lower resolve threshold for a
+//! clear duration (hysteresis: `resolve_burn < fire_burn`, so samples
+//! oscillating around the fire threshold cannot toggle the state).
+
+use crate::sched::SloClass;
+
+use super::series::Point;
+
+/// One multi-window burn-rate rule for one SLO tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlertRule {
+    /// stable rule name (trace/event label)
+    pub name: &'static str,
+    /// tier whose miss counters this rule watches
+    pub class: SloClass,
+    /// fast detection window (engine-clock ms)
+    pub fast_ms: f64,
+    /// slow confirmation window (engine-clock ms)
+    pub slow_ms: f64,
+    /// error budget = `1 - attainment_target` for the tier
+    pub error_budget: f64,
+    /// burn threshold: pending on fast-window breach, firing when the
+    /// slow window agrees
+    pub fire_burn: f64,
+    /// hysteresis floor -- the fast-window burn must stay *below* this
+    /// (strictly lower than `fire_burn`) before resolution can start
+    pub resolve_burn: f64,
+    /// how long the burn must stay below `resolve_burn` to resolve
+    pub clear_ms: f64,
+}
+
+impl AlertRule {
+    /// The standard burn-rate rule for a tier: budget from
+    /// [`SloClass::attainment_target`], fire at 2x burn, resolve below
+    /// 1x sustained for one fast window.
+    pub fn burn(class: SloClass, fast_ms: f64, slow_ms: f64) -> Self {
+        AlertRule {
+            name: "slo-burn",
+            class,
+            fast_ms: fast_ms.max(1e-6),
+            slow_ms: slow_ms.max(fast_ms),
+            error_budget: (1.0 - class.attainment_target()).max(1e-6),
+            fire_burn: 2.0,
+            resolve_burn: 1.0,
+            clear_ms: fast_ms.max(1e-6),
+        }
+    }
+}
+
+/// Alert lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Inactive,
+    /// fast window breached; waiting for the slow window to confirm
+    Pending,
+    Firing,
+}
+
+/// A state transition the engine recorded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertKind {
+    Pending,
+    Firing,
+    Resolved,
+}
+
+impl AlertKind {
+    /// Stable trace instant name (`telemetry` event schema).
+    pub fn event_name(self) -> &'static str {
+        match self {
+            AlertKind::Pending => "alert:pending",
+            AlertKind::Firing => "alert:firing",
+            AlertKind::Resolved => "alert:resolved",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::Pending => "pending",
+            AlertKind::Firing => "firing",
+            AlertKind::Resolved => "resolved",
+        }
+    }
+}
+
+/// One typed alert transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlertEvent {
+    pub rule: &'static str,
+    pub class: SloClass,
+    pub kind: AlertKind,
+    /// engine-clock time of the evaluation that transitioned
+    pub ts_ms: f64,
+    /// fast-window burn at the transition
+    pub burn: f64,
+}
+
+/// Windowed burn rate over cumulative (total, miss) counter series at
+/// `now`: the miss fraction of requests finishing in `[now - window,
+/// now]`, divided by the error budget.  Windows with no finished
+/// requests burn nothing (no data is not an outage signal).
+pub fn windowed_burn(
+    total: &[Point],
+    miss: &[Point],
+    now_ms: f64,
+    window_ms: f64,
+    error_budget: f64,
+) -> f64 {
+    let at = |pts: &[Point], ts: f64| -> f64 {
+        pts.iter()
+            .rev()
+            .find(|p| p.ts_ms <= ts + 1e-9)
+            .map(|p| p.value)
+            .unwrap_or(0.0)
+    };
+    let t0 = now_ms - window_ms;
+    let d_total = at(total, now_ms) - at(total, t0);
+    if d_total <= 0.0 {
+        return 0.0;
+    }
+    let d_miss = (at(miss, now_ms) - at(miss, t0)).max(0.0);
+    (d_miss / d_total) / error_budget.max(1e-9)
+}
+
+/// Per-rule evaluator: the state machine plus its hysteresis clock.
+#[derive(Debug, Clone)]
+pub struct RuleEval {
+    pub rule: AlertRule,
+    state: AlertState,
+    /// when the fast-window burn last dropped below `resolve_burn`
+    /// (None = currently at or above it)
+    below_since_ms: Option<f64>,
+}
+
+impl RuleEval {
+    pub fn new(rule: AlertRule) -> Self {
+        RuleEval { rule, state: AlertState::Inactive, below_since_ms: None }
+    }
+
+    pub fn state(&self) -> AlertState {
+        self.state
+    }
+
+    /// Evaluate one scrape tick.  At most one transition per tick
+    /// (pending and firing are distinct ticks, so the timeline always
+    /// shows the pending phase).  Returns the transition, if any.
+    pub fn eval(
+        &mut self,
+        now_ms: f64,
+        burn_fast: f64,
+        burn_slow: f64,
+    ) -> Option<AlertEvent> {
+        // hysteresis clock: track how long the fast burn has stayed
+        // below the resolve floor
+        if burn_fast < self.rule.resolve_burn {
+            self.below_since_ms.get_or_insert(now_ms);
+        } else {
+            self.below_since_ms = None;
+        }
+        let cleared = self
+            .below_since_ms
+            .is_some_and(|t| now_ms - t + 1e-9 >= self.rule.clear_ms);
+        let kind = match self.state {
+            AlertState::Inactive => {
+                if burn_fast >= self.rule.fire_burn {
+                    self.state = AlertState::Pending;
+                    Some(AlertKind::Pending)
+                } else {
+                    None
+                }
+            }
+            AlertState::Pending => {
+                if burn_fast >= self.rule.fire_burn
+                    && burn_slow >= self.rule.fire_burn
+                {
+                    self.state = AlertState::Firing;
+                    Some(AlertKind::Firing)
+                } else if cleared {
+                    // a pending that fizzled goes back quietly -- only
+                    // a firing alert resolves audibly
+                    self.state = AlertState::Inactive;
+                    None
+                } else {
+                    None
+                }
+            }
+            AlertState::Firing => {
+                if cleared {
+                    self.state = AlertState::Inactive;
+                    self.below_since_ms = None;
+                    Some(AlertKind::Resolved)
+                } else {
+                    None
+                }
+            }
+        };
+        kind.map(|k| AlertEvent {
+            rule: self.rule.name,
+            class: self.rule.class,
+            kind: k,
+            ts_ms: now_ms,
+            burn: burn_fast,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter().map(|&(ts_ms, value)| Point { ts_ms, value }).collect()
+    }
+
+    #[test]
+    fn windowed_burn_is_a_delta_ratio() {
+        let total = pts(&[(0.0, 10.0), (50.0, 20.0), (100.0, 40.0)]);
+        let miss = pts(&[(0.0, 0.0), (50.0, 1.0), (100.0, 11.0)]);
+        // window [50, 100]: 20 finished, 10 missed, budget 0.05
+        let b = windowed_burn(&total, &miss, 100.0, 50.0, 0.05);
+        assert!((b - (10.0 / 20.0) / 0.05).abs() < 1e-9);
+        // empty window burns nothing
+        assert_eq!(windowed_burn(&total, &miss, 200.0, 10.0, 0.05), 0.0);
+        assert_eq!(windowed_burn(&[], &[], 100.0, 50.0, 0.05), 0.0);
+    }
+
+    fn rule() -> AlertRule {
+        AlertRule {
+            name: "slo-burn",
+            class: SloClass::Interactive,
+            fast_ms: 100.0,
+            slow_ms: 400.0,
+            error_budget: 0.05,
+            fire_burn: 2.0,
+            resolve_burn: 1.0,
+            clear_ms: 100.0,
+        }
+    }
+
+    #[test]
+    fn pending_then_firing_then_resolved() {
+        let mut e = RuleEval::new(rule());
+        assert_eq!(e.eval(0.0, 0.0, 0.0), None);
+        // fast breach -> pending
+        let p = e.eval(10.0, 5.0, 1.0).unwrap();
+        assert_eq!(p.kind, AlertKind::Pending);
+        assert_eq!(e.state(), AlertState::Pending);
+        // slow confirms -> firing (a distinct tick)
+        let f = e.eval(20.0, 5.0, 3.0).unwrap();
+        assert_eq!(f.kind, AlertKind::Firing);
+        // still burning: no transition
+        assert_eq!(e.eval(30.0, 4.0, 3.0), None);
+        // burn drops below the resolve floor but must *stay* there
+        assert_eq!(e.eval(40.0, 0.5, 3.0), None);
+        assert_eq!(e.eval(90.0, 0.5, 2.0), None);
+        let r = e.eval(140.0, 0.2, 1.0).unwrap();
+        assert_eq!(r.kind, AlertKind::Resolved);
+        assert_eq!(e.state(), AlertState::Inactive);
+    }
+
+    #[test]
+    fn boundary_noise_does_not_flap() {
+        let mut e = RuleEval::new(rule());
+        e.eval(0.0, 5.0, 5.0);
+        e.eval(10.0, 5.0, 5.0);
+        assert_eq!(e.state(), AlertState::Firing);
+        // oscillate just around the fire threshold: always above the
+        // resolve floor, so the alert must stay firing with zero
+        // transitions
+        let mut t = 20.0;
+        for i in 0..50 {
+            let burn = if i % 2 == 0 { 1.9 } else { 2.1 };
+            assert_eq!(e.eval(t, burn, burn), None, "tick {i}");
+            assert_eq!(e.state(), AlertState::Firing);
+            t += 10.0;
+        }
+        // a dip below resolve_burn shorter than clear_ms doesn't
+        // resolve either
+        assert_eq!(e.eval(t, 0.5, 1.0), None);
+        assert_eq!(e.eval(t + 50.0, 1.5, 1.0), None);
+        assert_eq!(e.state(), AlertState::Firing);
+        // only a sustained clear resolves -- exactly one transition
+        assert_eq!(e.eval(t + 100.0, 0.5, 0.5), None);
+        let r = e.eval(t + 210.0, 0.5, 0.5).unwrap();
+        assert_eq!(r.kind, AlertKind::Resolved);
+    }
+
+    #[test]
+    fn pending_fizzle_is_silent() {
+        let mut e = RuleEval::new(rule());
+        let p = e.eval(0.0, 3.0, 0.5).unwrap();
+        assert_eq!(p.kind, AlertKind::Pending);
+        // burn collapses before the slow window confirms: back to
+        // inactive with no resolved event (it never fired)
+        assert_eq!(e.eval(10.0, 0.1, 0.5), None);
+        assert_eq!(e.eval(120.0, 0.1, 0.5), None);
+        assert_eq!(e.state(), AlertState::Inactive);
+        // and it can go pending again later
+        assert!(e.eval(200.0, 3.0, 0.5).is_some());
+    }
+}

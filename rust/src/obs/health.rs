@@ -1,0 +1,145 @@
+//! Fleet health snapshot: worst-tier burn rate, saturation headroom,
+//! and per-replica skew, distilled from the metrics hub.
+//!
+//! This is the sensor the ROADMAP's planned autoscaler acts on:
+//! `worst_burn > 1` means some tier is spending its error budget
+//! faster than sustainable (add capacity), `headroom` says how much
+//! modeled throughput is left before the fleet saturates, and
+//! `replica_skew` says whether the router is the problem instead.
+
+use crate::sched::SloClass;
+
+/// One tier's burn/attainment line in a [`HealthReport`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierHealth {
+    pub class: SloClass,
+    /// requests judged (fleet-wide, cumulative)
+    pub total: f64,
+    /// SLO misses (fleet-wide, cumulative)
+    pub missed: f64,
+    /// cumulative attainment `1 - missed / total` (1.0 when idle)
+    pub attainment: f64,
+    /// fast-window burn at the last evaluation
+    pub burn: f64,
+}
+
+/// Fleet health snapshot at one evaluation instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthReport {
+    /// engine-clock time of the snapshot
+    pub ts_ms: f64,
+    /// per-tier lines, highest priority first (present tiers only)
+    pub tiers: Vec<TierHealth>,
+    /// tier with the highest current burn (None when no tier has
+    /// judged a request yet)
+    pub worst_class: Option<SloClass>,
+    /// that tier's fast-window burn rate
+    pub worst_burn: f64,
+    /// `1 - throughput / modeled saturation` (None when the modeled
+    /// peak is unknown); negative means past saturation
+    pub saturation_headroom: Option<f64>,
+    /// per-replica decode-token imbalance: `max / mean - 1` over
+    /// per-replica token counters (0.0 for a single replica or a
+    /// perfectly balanced fleet)
+    pub replica_skew: f64,
+    /// alerts currently in the firing state
+    pub firing: usize,
+    /// pending -> firing -> resolved transitions recorded so far
+    pub transitions: usize,
+}
+
+impl HealthReport {
+    /// Render as stable one-line-per-fact text (CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "health @ {:.1} ms: {} firing, {} transitions\n",
+            self.ts_ms, self.firing, self.transitions
+        ));
+        for t in &self.tiers {
+            out.push_str(&format!(
+                "  {:<12} attainment {:.3} ({} / {} met), burn {:.2}\n",
+                t.class.name(),
+                t.attainment,
+                (t.total - t.missed) as u64,
+                t.total as u64,
+                t.burn
+            ));
+        }
+        match self.worst_class {
+            Some(c) => out.push_str(&format!(
+                "  worst tier: {} (burn {:.2})\n",
+                c.name(),
+                self.worst_burn
+            )),
+            None => out.push_str("  worst tier: none (no traffic judged)\n"),
+        }
+        if let Some(h) = self.saturation_headroom {
+            out.push_str(&format!(
+                "  saturation headroom: {:.1}%\n",
+                h * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "  replica skew: {:.3}\n",
+            self.replica_skew
+        ));
+        out
+    }
+}
+
+/// `max / mean - 1` over per-replica load shares (0 when `<= 1`
+/// replica reported or all shares are zero).
+pub fn skew(shares: &[f64]) -> f64 {
+    if shares.len() < 2 {
+        return 0.0;
+    }
+    let sum: f64 = shares.iter().sum();
+    if sum <= 0.0 {
+        return 0.0;
+    }
+    let mean = sum / shares.len() as f64;
+    let max = shares.iter().fold(0.0f64, |a, &b| a.max(b));
+    (max / mean - 1.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_is_max_over_mean() {
+        assert_eq!(skew(&[]), 0.0);
+        assert_eq!(skew(&[5.0]), 0.0);
+        assert_eq!(skew(&[2.0, 2.0, 2.0]), 0.0);
+        // max 6, mean 3 -> skew 1.0
+        assert!((skew(&[6.0, 3.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(skew(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn render_is_stable_text() {
+        let r = HealthReport {
+            ts_ms: 123.0,
+            tiers: vec![TierHealth {
+                class: SloClass::Interactive,
+                total: 10.0,
+                missed: 2.0,
+                attainment: 0.8,
+                burn: 4.0,
+            }],
+            worst_class: Some(SloClass::Interactive),
+            worst_burn: 4.0,
+            saturation_headroom: Some(0.25),
+            replica_skew: 0.0,
+            firing: 1,
+            transitions: 2,
+        };
+        let s = r.render();
+        assert!(s.contains("health @ 123.0 ms: 1 firing"));
+        assert!(s.contains("interactive   attainment 0.800 (8 / 10 met)"));
+        assert!(s.contains("worst tier: interactive (burn 4.00)"));
+        assert!(s.contains("saturation headroom: 25.0%"));
+        assert_eq!(s, r.render());
+    }
+}

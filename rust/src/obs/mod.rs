@@ -1,0 +1,633 @@
+//! `obs/`: virtual-clock observability -- a typed metrics registry
+//! scraped into ring-buffered time series, SLO burn-rate alerting,
+//! and fleet health snapshots.  Zero-cost when disabled, like
+//! [`telemetry`](crate::telemetry).
+//!
+//! The terminal aggregates ([`LoadReport`](crate::LoadReport)) are
+//! end-of-run scalars: a flash crowd that craters interactive SLOs
+//! for 20 virtual seconds mid-run is invisible until the run ends.
+//! This layer is the continuous sensor: the engine updates counters /
+//! gauges / histograms as it serves ([`registry`]), a fixed
+//! virtual-clock-interval scraper samples them into bounded series
+//! ([`series`]), and multi-window burn-rate rules over the per-tier
+//! miss counters drive a pending -> firing -> resolved alert state
+//! machine ([`alert`]) whose transitions land in the trace stream and
+//! whose summary is a fleet [`HealthReport`] ([`health`]) -- the
+//! signal the ROADMAP's autoscaler item needs.
+//!
+//! The [`Obs`] handle mirrors [`Trace`](crate::telemetry::Trace):
+//! cheap to clone, replica-tagged via [`Obs::for_replica`], and the
+//! default [`Obs::off`] makes every emit a one-branch no-op so
+//! uninstrumented runs stay byte-identical (`p3llm monitor --smoke`
+//! proves it).
+//!
+//! ```
+//! use p3llm::obs::{Obs, ObsConfig};
+//! use p3llm::{EngineBuilder, SloSpec};
+//! # fn main() -> p3llm::Result<()> {
+//! let obs = Obs::new(ObsConfig::standard(SloSpec::chatbot()));
+//! let mut eng = EngineBuilder::sim()
+//!     .model("tiny-1M")
+//!     .max_batch(2)
+//!     .ctx_limit(128)
+//!     .observe(obs.clone())
+//!     .build()?;
+//! eng.submit(vec![1, 2, 3], 4)?;
+//! eng.run_to_completion()?;
+//! let prom = obs.prometheus();
+//! assert!(prom.contains("p3llm_slo_total"));
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod alert;
+pub mod health;
+pub mod registry;
+pub mod series;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sched::SloClass;
+use crate::telemetry::Trace;
+use crate::traffic::SloSpec;
+
+pub use alert::{AlertEvent, AlertKind, AlertRule, AlertState};
+pub use health::{HealthReport, TierHealth};
+pub use registry::{Histogram, Metric, MetricKey, Registry};
+pub use series::{Point, Scraper, Series};
+
+use alert::{windowed_burn, RuleEval};
+
+/// Counter of requests judged against their tier SLO.
+pub const SLO_TOTAL: &str = "slo_total";
+/// Counter of requests that missed their tier SLO.
+pub const SLO_MISS: &str = "slo_miss";
+/// Derived series name the alert engine records fast-window burns
+/// under (one series per tier).
+pub const BURN_FAST: &str = "burn_fast";
+
+/// Scraped metrics that additionally export as Perfetto counter
+/// tracks when a trace handle is attached: registry name -> the
+/// `obs:`-prefixed trace counter name (`telemetry::export` routes the
+/// prefix onto a dedicated per-replica metrics track).
+fn traced_name(name: &'static str) -> Option<&'static str> {
+    Some(match name {
+        "queue_depth" => "obs:queue_depth",
+        "active_lanes" => "obs:active_lanes",
+        "kv_used_bytes" => "obs:kv_used_bytes",
+        "kv_cached_bytes" => "obs:kv_cached_bytes",
+        "kv_hot_pages" => "obs:kv_hot_pages",
+        "kv_cold_pages" => "obs:kv_cold_pages",
+        "overlap_factor" => "obs:overlap_factor",
+        _ => return None,
+    })
+}
+
+/// Trace counter name for a tier's burn series.
+fn burn_trace_name(class: SloClass) -> &'static str {
+    match class {
+        SloClass::Interactive => "obs:burn:interactive",
+        SloClass::Batch => "obs:burn:batch",
+        SloClass::BestEffort => "obs:burn:best-effort",
+    }
+}
+
+/// Observability configuration: scrape cadence, series retention, the
+/// base SLO the per-tier judges scale from, and the alert rules.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// engine-clock ms between scrapes
+    pub scrape_interval_ms: f64,
+    /// retained points per series (drop-oldest ring)
+    pub ring: usize,
+    /// base latency budgets; tier `c` is judged against
+    /// `slo.scaled(c.slo_factor())`, same rule as
+    /// [`LoadReport`](crate::LoadReport) breakdowns
+    pub slo: SloSpec,
+    pub rules: Vec<AlertRule>,
+}
+
+impl ObsConfig {
+    /// One standard burn-rate rule per tier with the given windows.
+    pub fn with_windows(
+        slo: SloSpec,
+        scrape_interval_ms: f64,
+        fast_ms: f64,
+        slow_ms: f64,
+    ) -> Self {
+        ObsConfig {
+            scrape_interval_ms,
+            ring: 1 << 14,
+            slo,
+            rules: SloClass::all()
+                .into_iter()
+                .map(|c| AlertRule::burn(c, fast_ms, slow_ms))
+                .collect(),
+        }
+    }
+
+    /// Default cadence: scrape every 50 virtual ms, 1 s fast window,
+    /// 4 s slow window.
+    pub fn standard(slo: SloSpec) -> Self {
+        Self::with_windows(slo, 50.0, 1_000.0, 4_000.0)
+    }
+}
+
+/// The shared hub behind every [`Obs`] clone.
+struct Hub {
+    cfg: ObsConfig,
+    registry: Registry,
+    scraper: Scraper,
+    evals: Vec<RuleEval>,
+    events: Vec<AlertEvent>,
+    /// optional trace handle: scrapes mirror selected metrics as
+    /// `obs:` counters and alert transitions as `alert:*` instants
+    trace: Trace,
+}
+
+impl Hub {
+    fn new(cfg: ObsConfig) -> Self {
+        let scraper = Scraper::new(cfg.scrape_interval_ms, cfg.ring);
+        let evals =
+            cfg.rules.iter().map(|r| RuleEval::new(*r)).collect();
+        Hub {
+            cfg,
+            registry: Registry::default(),
+            scraper,
+            evals,
+            events: vec![],
+            trace: Trace::off(),
+        }
+    }
+
+    fn scrape(&mut self, now_ms: f64) {
+        self.scraper.scrape(now_ms, &self.registry);
+        if self.trace.enabled() {
+            for (key, m) in self.registry.iter() {
+                if let Some(tn) = traced_name(key.name) {
+                    self.trace.for_replica(key.replica).counter(
+                        tn,
+                        now_ms,
+                        m.scrape_value(),
+                    );
+                }
+            }
+        }
+        // evaluate the burn-rate rules on the fleet-merged cumulative
+        // miss counters this scrape just extended
+        for i in 0..self.evals.len() {
+            let rule = self.evals[i].rule;
+            let total =
+                self.scraper.fleet_points(SLO_TOTAL, Some(rule.class));
+            let miss =
+                self.scraper.fleet_points(SLO_MISS, Some(rule.class));
+            let fast = windowed_burn(
+                &total,
+                &miss,
+                now_ms,
+                rule.fast_ms,
+                rule.error_budget,
+            );
+            let slow = windowed_burn(
+                &total,
+                &miss,
+                now_ms,
+                rule.slow_ms,
+                rule.error_budget,
+            );
+            self.scraper.push_derived(
+                MetricKey {
+                    name: BURN_FAST,
+                    class: Some(rule.class),
+                    replica: 0,
+                },
+                now_ms,
+                fast,
+            );
+            self.trace.counter(burn_trace_name(rule.class), now_ms, fast);
+            if let Some(ev) = self.evals[i].eval(now_ms, fast, slow) {
+                self.trace.instant(
+                    ev.kind.event_name(),
+                    now_ms,
+                    None,
+                    Some(ev.class),
+                    ev.burn,
+                );
+                self.events.push(ev);
+            }
+        }
+    }
+
+    fn health(
+        &self,
+        now_ms: f64,
+        throughput_tok_s: Option<f64>,
+        saturation_tok_s: Option<f64>,
+    ) -> HealthReport {
+        let mut tiers = vec![];
+        let mut worst: Option<(SloClass, f64)> = None;
+        for class in SloClass::all() {
+            let total =
+                self.registry.fleet_counter(SLO_TOTAL, Some(class));
+            if total <= 0.0 {
+                continue;
+            }
+            let missed =
+                self.registry.fleet_counter(SLO_MISS, Some(class));
+            let burn = self
+                .scraper
+                .get(&MetricKey {
+                    name: BURN_FAST,
+                    class: Some(class),
+                    replica: 0,
+                })
+                .and_then(|s| s.at_or_before(now_ms))
+                .map(|p| p.value)
+                .unwrap_or(0.0);
+            tiers.push(TierHealth {
+                class,
+                total,
+                missed,
+                attainment: 1.0 - missed / total,
+                burn,
+            });
+            if worst.map_or(true, |(_, b)| burn > b) {
+                worst = Some((class, burn));
+            }
+        }
+        let shares: Vec<f64> = self
+            .registry
+            .iter()
+            .filter(|(k, _)| k.name == "tokens_emitted")
+            .map(|(_, m)| match m {
+                Metric::Counter(v) => *v,
+                _ => 0.0,
+            })
+            .collect();
+        HealthReport {
+            ts_ms: now_ms,
+            tiers,
+            worst_class: worst.map(|(c, _)| c),
+            worst_burn: worst.map(|(_, b)| b).unwrap_or(0.0),
+            saturation_headroom: match (throughput_tok_s, saturation_tok_s)
+            {
+                (Some(t), Some(s)) if s > 0.0 => Some(1.0 - t / s),
+                _ => None,
+            },
+            replica_skew: health::skew(&shares),
+            firing: self
+                .evals
+                .iter()
+                .filter(|e| e.state() == AlertState::Firing)
+                .count(),
+            transitions: self.events.len(),
+        }
+    }
+}
+
+/// Cheap cloneable observability handle: a shared metrics hub plus
+/// the replica tag stamped on every sample this clone emits.  The
+/// default ([`Obs::off`]) is disabled -- every emit returns after one
+/// branch, nothing is allocated, and instrumented code paths stay
+/// byte-identical to uninstrumented ones.
+#[derive(Clone, Default)]
+pub struct Obs {
+    hub: Option<Rc<RefCell<Hub>>>,
+    replica: u32,
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("enabled", &self.enabled())
+            .field("replica", &self.replica)
+            .finish()
+    }
+}
+
+impl Obs {
+    /// Disabled handle (the default): emits are no-ops, exports are
+    /// empty.
+    pub fn off() -> Self {
+        Obs::default()
+    }
+
+    /// Enabled handle over a fresh hub.
+    pub fn new(cfg: ObsConfig) -> Self {
+        Obs { hub: Some(Rc::new(RefCell::new(Hub::new(cfg)))), replica: 0 }
+    }
+
+    /// Is this handle recording?
+    pub fn enabled(&self) -> bool {
+        self.hub.is_some()
+    }
+
+    /// Replica tag this handle stamps on its samples.
+    pub fn replica_id(&self) -> u32 {
+        self.replica
+    }
+
+    /// Clone sharing the same hub but tagging samples with `replica`
+    /// -- how a cluster's per-replica series merge by construction.
+    pub fn for_replica(&self, replica: u32) -> Obs {
+        Obs { hub: self.hub.clone(), replica }
+    }
+
+    /// Attach a trace handle: scrapes then mirror selected metrics as
+    /// `obs:` counter events and alert transitions as `alert:*`
+    /// instants into the trace stream (hub-wide; call once on the
+    /// base handle).
+    pub fn set_trace(&self, trace: Trace) {
+        if let Some(hub) = &self.hub {
+            hub.borrow_mut().trace = trace;
+        }
+    }
+
+    fn key(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+    ) -> MetricKey {
+        MetricKey { name, class, replica: self.replica }
+    }
+
+    /// Add to a monotonic counter.
+    pub fn counter_add(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+        v: f64,
+    ) {
+        let Some(hub) = &self.hub else { return };
+        hub.borrow_mut().registry.counter_add(self.key(name, class), v);
+    }
+
+    /// Set a gauge to its latest sample.
+    pub fn gauge_set(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+        v: f64,
+    ) {
+        let Some(hub) = &self.hub else { return };
+        hub.borrow_mut().registry.gauge_set(self.key(name, class), v);
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+        v: f64,
+    ) {
+        let Some(hub) = &self.hub else { return };
+        hub.borrow_mut().registry.observe(self.key(name, class), v);
+    }
+
+    /// Judge one finished request against its tier's scaled SLO and
+    /// record the miss counters + latency histograms the burn-rate
+    /// rules watch.  `ttft_ms` / `tpot_ms` are engine-side latencies
+    /// (measured from submission).
+    pub fn request_finished(
+        &self,
+        class: SloClass,
+        ttft_ms: f64,
+        tpot_ms: Option<f64>,
+    ) {
+        let Some(hub) = &self.hub else { return };
+        let mut hub = hub.borrow_mut();
+        let spec = hub.cfg.slo.scaled(class.slo_factor());
+        let met = spec.meets(ttft_ms, tpot_ms);
+        let reg = &mut hub.registry;
+        reg.counter_add(self.key(SLO_TOTAL, Some(class)), 1.0);
+        if !met {
+            reg.counter_add(self.key(SLO_MISS, Some(class)), 1.0);
+        }
+        reg.observe(self.key("ttft_ms", Some(class)), ttft_ms);
+        if let Some(t) = tpot_ms {
+            reg.observe(self.key("tpot_ms", Some(class)), t);
+        }
+    }
+
+    /// Scrape + evaluate alerts if a full interval has elapsed on the
+    /// engine clock (the engine calls this every step; the hub clock
+    /// is shared, so a fleet scrapes once per interval, not once per
+    /// replica).
+    pub fn maybe_scrape(&self, now_ms: f64) {
+        let Some(hub) = &self.hub else { return };
+        let mut hub = hub.borrow_mut();
+        if hub.scraper.due(now_ms) {
+            hub.scrape(now_ms);
+        }
+    }
+
+    /// Force one scrape + alert evaluation at `now_ms` (end-of-run
+    /// flush).
+    pub fn scrape_now(&self, now_ms: f64) {
+        let Some(hub) = &self.hub else { return };
+        hub.borrow_mut().scrape(now_ms);
+    }
+
+    /// Alert transitions recorded so far.
+    pub fn events(&self) -> Vec<AlertEvent> {
+        match &self.hub {
+            Some(h) => h.borrow().events.clone(),
+            None => vec![],
+        }
+    }
+
+    /// Engine-clock time of the most recent scrape (None when disabled
+    /// or before the first scrape).
+    pub fn last_scrape_ms(&self) -> Option<f64> {
+        self.hub
+            .as_ref()
+            .and_then(|h| h.borrow().scraper.last_scrape_ms())
+    }
+
+    /// Scrapes performed so far.
+    pub fn scrapes(&self) -> u64 {
+        match &self.hub {
+            Some(h) => h.borrow().scraper.scrapes(),
+            None => 0,
+        }
+    }
+
+    /// Retained points across all series (0 when disabled).
+    pub fn total_points(&self) -> usize {
+        match &self.hub {
+            Some(h) => h.borrow().scraper.total_points(),
+            None => 0,
+        }
+    }
+
+    /// Fleet-merged series for `(name, class)` (sums across replicas
+    /// at each scrape timestamp).
+    pub fn series_points(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+    ) -> Vec<Point> {
+        match &self.hub {
+            Some(h) => h.borrow().scraper.fleet_points(name, class),
+            None => vec![],
+        }
+    }
+
+    /// Prometheus text-format dump of the registry's current values
+    /// (empty when disabled).
+    pub fn prometheus(&self) -> String {
+        match &self.hub {
+            Some(h) => series::prometheus_text(&h.borrow().registry),
+            None => String::new(),
+        }
+    }
+
+    /// JSON dump of every scraped series (empty when disabled).
+    pub fn series_json(&self) -> String {
+        match &self.hub {
+            Some(h) => series::series_json(&h.borrow().scraper),
+            None => String::new(),
+        }
+    }
+
+    /// Fleet health snapshot at `now_ms`.  Pass the run's observed
+    /// throughput and modeled saturation for the headroom line when
+    /// known.
+    pub fn health(
+        &self,
+        now_ms: f64,
+        throughput_tok_s: Option<f64>,
+        saturation_tok_s: Option<f64>,
+    ) -> HealthReport {
+        match &self.hub {
+            Some(h) => {
+                h.borrow().health(now_ms, throughput_tok_s, saturation_tok_s)
+            }
+            None => HealthReport {
+                ts_ms: now_ms,
+                tiers: vec![],
+                worst_class: None,
+                worst_burn: 0.0,
+                saturation_headroom: None,
+                replica_skew: 0.0,
+                firing: 0,
+                transitions: 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let o = Obs::off();
+        assert!(!o.enabled());
+        o.counter_add("x", None, 1.0);
+        o.gauge_set("y", None, 2.0);
+        o.observe("z", None, 3.0);
+        o.request_finished(SloClass::Interactive, 1.0, None);
+        o.maybe_scrape(100.0);
+        assert_eq!(o.total_points(), 0);
+        assert_eq!(o.scrapes(), 0);
+        assert!(o.prometheus().is_empty());
+        assert!(o.series_json().is_empty());
+        assert!(o.events().is_empty());
+        let h = o.health(0.0, None, None);
+        assert!(h.tiers.is_empty() && h.worst_class.is_none());
+    }
+
+    #[test]
+    fn judges_requests_against_scaled_tier_budgets() {
+        let slo = SloSpec { ttft_ms: 100.0, tpot_ms: 10.0 };
+        let o = Obs::new(ObsConfig::standard(slo));
+        // 150 ms TTFT: misses interactive (100), meets batch (400)
+        o.request_finished(SloClass::Interactive, 150.0, None);
+        o.request_finished(SloClass::Batch, 150.0, None);
+        let prom = o.prometheus();
+        assert!(prom.contains(
+            "p3llm_slo_miss{class=\"interactive\",replica=\"0\"} 1.000000"
+        ));
+        assert!(prom.contains(
+            "p3llm_slo_total{class=\"batch\",replica=\"0\"} 1.000000"
+        ));
+        assert!(!prom.contains("p3llm_slo_miss{class=\"batch\""));
+        let h = o.health(0.0, Some(50.0), Some(100.0));
+        assert_eq!(h.tiers.len(), 2);
+        assert_eq!(h.tiers[0].class, SloClass::Interactive);
+        assert_eq!(h.tiers[0].attainment, 0.0);
+        assert_eq!(h.tiers[1].attainment, 1.0);
+        assert_eq!(h.saturation_headroom, Some(0.5));
+    }
+
+    #[test]
+    fn scrape_cadence_and_burn_alerts_end_to_end() {
+        let slo = SloSpec { ttft_ms: 10.0, tpot_ms: f64::INFINITY };
+        let cfg = ObsConfig::with_windows(slo, 10.0, 50.0, 100.0);
+        let o = Obs::new(cfg);
+        // healthy phase: all meet
+        for t in 0..10 {
+            o.request_finished(SloClass::Interactive, 1.0, None);
+            o.maybe_scrape(t as f64 * 10.0);
+        }
+        assert!(o.events().is_empty());
+        // outage: every request misses -> pending, then firing
+        for t in 10..25 {
+            o.request_finished(SloClass::Interactive, 99.0, None);
+            o.request_finished(SloClass::Interactive, 99.0, None);
+            o.maybe_scrape(t as f64 * 10.0);
+        }
+        let evs = o.events();
+        assert!(
+            evs.iter().any(|e| e.kind == AlertKind::Pending),
+            "{evs:?}"
+        );
+        assert!(
+            evs.iter().any(|e| e.kind == AlertKind::Firing),
+            "{evs:?}"
+        );
+        let firing_ts = evs
+            .iter()
+            .find(|e| e.kind == AlertKind::Firing)
+            .unwrap()
+            .ts_ms;
+        // recovery: meets again; burn decays to zero and the alert
+        // resolves after the clear duration
+        for t in 25..60 {
+            o.request_finished(SloClass::Interactive, 1.0, None);
+            o.maybe_scrape(t as f64 * 10.0);
+        }
+        let evs = o.events();
+        let resolved = evs
+            .iter()
+            .find(|e| e.kind == AlertKind::Resolved)
+            .expect("alert resolved after recovery");
+        assert!(resolved.ts_ms > firing_ts);
+        // the derived burn series exists and the health snapshot sees
+        // a calm fleet again
+        assert!(!o
+            .series_points(BURN_FAST, Some(SloClass::Interactive))
+            .is_empty());
+        let h = o.health(600.0, None, None);
+        assert_eq!(h.firing, 0);
+        assert!(h.transitions >= 3);
+    }
+
+    #[test]
+    fn replica_clones_share_one_hub() {
+        let o = Obs::new(ObsConfig::standard(SloSpec::chatbot()));
+        let r1 = o.for_replica(1);
+        o.counter_add("tokens_emitted", None, 3.0);
+        r1.counter_add("tokens_emitted", None, 9.0);
+        o.scrape_now(5.0);
+        let pts = o.series_points("tokens_emitted", None);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].value, 12.0);
+        // skew sees the imbalance: max 9, mean 6 -> 0.5
+        let h = o.health(5.0, None, None);
+        assert!((h.replica_skew - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,347 @@
+//! Typed metric primitives: monotonic counters, gauges, and log2-
+//! bucket histograms with quantile estimation.
+//!
+//! The registry is a [`BTreeMap`] keyed by `(name, class, replica)`
+//! ([`MetricKey`]), so iteration order -- and therefore every scrape,
+//! export, and Prometheus dump built on it -- is deterministic by
+//! construction.  Names are `&'static str` (same discipline as
+//! [`TraceEvent::name`](crate::telemetry::TraceEvent)): the metric
+//! namespace is closed at compile time, no per-emit allocation.
+
+use std::collections::BTreeMap;
+
+use crate::sched::SloClass;
+
+/// Log2-bucket histogram: values land in geometric buckets
+/// `(2^(i-1), 2^i]`, so any estimated quantile is within a factor of
+/// two of the exact sample quantile (the bucket's bound ratio) --
+/// `tests/obs.rs` property-checks this against the exact
+/// [`Percentiles`](crate::Percentiles) on random samples.
+///
+/// 64 buckets cover `(2^-32, 2^32]` ms/bytes/counts; zero and
+/// negative observations land in a dedicated underflow bucket, values
+/// past the top saturate into the last bucket (`max` stays exact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; Self::BUCKETS],
+    /// observations `<= 0` (quantile representative: 0)
+    zero: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; Self::BUCKETS],
+            zero: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    const BUCKETS: usize = 64;
+    /// bucket 0 covers `(2^(MIN_EXP-1), 2^MIN_EXP]`
+    const MIN_EXP: i32 = -31;
+
+    /// Bucket index for a positive value (None for `v <= 0`).
+    fn bucket(v: f64) -> Option<usize> {
+        if !(v > 0.0) {
+            return None;
+        }
+        // smallest i with v <= 2^i
+        let exp = v.log2().ceil() as i32;
+        let i = (exp - Self::MIN_EXP).clamp(0, Self::BUCKETS as i32 - 1);
+        Some(i as usize)
+    }
+
+    /// Upper bound of bucket `i` -- the quantile representative (so
+    /// estimates never undershoot the exact sample quantile).
+    fn bucket_bound(i: usize) -> f64 {
+        (2.0f64).powi(i as i32 + Self::MIN_EXP)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        match Self::bucket(v) {
+            Some(i) => self.counts[i] += 1,
+            None => self.zero += 1,
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact maximum observed (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count > 0 {
+            self.max
+        } else {
+            0.0
+        }
+    }
+
+    /// Estimated quantile `q` in `[0, 1]` by nearest rank over the
+    /// buckets (the same `ceil(n * q)` rank rule
+    /// [`Percentiles`](crate::Percentiles) uses), answering with the
+    /// holding bucket's upper bound clamped to the exact max.  For a
+    /// rank-`r` sample `s` this gives an estimate in `[s, 2s)`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((self.count as f64 * q).ceil() as u64).max(1);
+        let mut cum = self.zero;
+        if cum >= rank {
+            return 0.0;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// One registered metric.  Counters are monotonic (negative deltas are
+/// clamped); gauges hold the latest sample; histograms accumulate a
+/// distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    Counter(f64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    /// Prometheus type label.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+
+    /// The scalar a scrape samples: cumulative value for counters,
+    /// current value for gauges, p95 estimate for histograms.
+    pub fn scrape_value(&self) -> f64 {
+        match self {
+            Metric::Counter(v) | Metric::Gauge(v) => *v,
+            Metric::Histogram(h) => h.quantile(0.95),
+        }
+    }
+}
+
+/// Registry key: `(name, class, replica)`.  The `Ord` derive (name
+/// first, then tier, then replica) fixes iteration order everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: &'static str,
+    /// SLO tier the sample is attributed to (None = engine-wide)
+    pub class: Option<SloClass>,
+    pub replica: u32,
+}
+
+/// The typed metrics registry: one [`Metric`] per [`MetricKey`],
+/// created on first emit.  Type conflicts on a name are a programmer
+/// error and panic in debug builds; release builds keep the first
+/// registration (emits of the wrong type are dropped).
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: BTreeMap<MetricKey, Metric>,
+}
+
+impl Registry {
+    /// Add `v` (clamped at 0) to a monotonic counter.
+    pub fn counter_add(&mut self, key: MetricKey, v: f64) {
+        let m = self
+            .metrics
+            .entry(key)
+            .or_insert(Metric::Counter(0.0));
+        match m {
+            Metric::Counter(c) => *c += v.max(0.0),
+            _ => debug_assert!(false, "{} is not a counter", key.name),
+        }
+    }
+
+    /// Set a gauge to its latest sample.
+    pub fn gauge_set(&mut self, key: MetricKey, v: f64) {
+        let m = self.metrics.entry(key).or_insert(Metric::Gauge(0.0));
+        match m {
+            Metric::Gauge(g) => *g = v,
+            _ => debug_assert!(false, "{} is not a gauge", key.name),
+        }
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&mut self, key: MetricKey, v: f64) {
+        let m = self
+            .metrics
+            .entry(key)
+            .or_insert_with(|| Metric::Histogram(Histogram::default()));
+        match m {
+            Metric::Histogram(h) => h.observe(v),
+            _ => debug_assert!(false, "{} is not a histogram", key.name),
+        }
+    }
+
+    /// Deterministic (sorted-key) iteration over every metric.
+    pub fn iter(&self) -> impl Iterator<Item = (&MetricKey, &Metric)> {
+        self.metrics.iter()
+    }
+
+    /// One metric's current state.
+    pub fn get(&self, key: &MetricKey) -> Option<&Metric> {
+        self.metrics.get(key)
+    }
+
+    /// Counter value summed across replicas for `(name, class)` --
+    /// the fleet-merged scalar.
+    pub fn fleet_counter(
+        &self,
+        name: &'static str,
+        class: Option<SloClass>,
+    ) -> f64 {
+        self.metrics
+            .iter()
+            .filter(|(k, _)| k.name == name && k.class == class)
+            .map(|(_, m)| match m {
+                Metric::Counter(v) => *v,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(name: &'static str) -> MetricKey {
+        MetricKey { name, class: None, replica: 0 }
+    }
+
+    #[test]
+    fn counters_are_monotonic_and_gauges_latch_last() {
+        let mut r = Registry::default();
+        r.counter_add(key("done"), 2.0);
+        r.counter_add(key("done"), 3.0);
+        r.counter_add(key("done"), -5.0); // clamped
+        assert_eq!(r.get(&key("done")), Some(&Metric::Counter(5.0)));
+        r.gauge_set(key("depth"), 7.0);
+        r.gauge_set(key("depth"), 4.0);
+        assert_eq!(r.get(&key("depth")), Some(&Metric::Gauge(4.0)));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_exact_ranks() {
+        let mut h = Histogram::default();
+        for v in 1..=1000 {
+            h.observe(v as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        assert_eq!(h.max(), 1000.0);
+        // exact p50 is 500; the log2 estimate must sit in [500, 1000)
+        let p50 = h.quantile(0.5);
+        assert!((500.0..1000.0).contains(&p50), "{p50}");
+        // p100 clamps to the exact max
+        assert_eq!(h.quantile(1.0), 1000.0);
+        // empty histogram answers zeros
+        let e = Histogram::default();
+        assert_eq!(e.quantile(0.5), 0.0);
+        assert_eq!(e.max(), 0.0);
+    }
+
+    #[test]
+    fn histogram_zero_and_saturation_buckets() {
+        let mut h = Histogram::default();
+        h.observe(0.0);
+        h.observe(-3.0);
+        h.observe(1e40); // saturates into the top bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.5), 0.0); // rank 2 of 3 is a zero
+        // the top-bucket estimate clamps to the exact max
+        assert_eq!(h.quantile(1.0), 1e40);
+        h.observe(f64::NAN); // ignored
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn iteration_is_sorted_by_key() {
+        let mut r = Registry::default();
+        r.counter_add(
+            MetricKey { name: "b", class: None, replica: 1 },
+            1.0,
+        );
+        r.counter_add(
+            MetricKey { name: "a", class: None, replica: 0 },
+            1.0,
+        );
+        r.counter_add(
+            MetricKey {
+                name: "a",
+                class: Some(SloClass::Interactive),
+                replica: 0,
+            },
+            1.0,
+        );
+        let names: Vec<(&str, Option<SloClass>, u32)> = r
+            .iter()
+            .map(|(k, _)| (k.name, k.class, k.replica))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                ("a", None, 0),
+                ("a", Some(SloClass::Interactive), 0),
+                ("b", None, 1),
+            ]
+        );
+        // fleet merge sums across replicas
+        r.counter_add(
+            MetricKey { name: "b", class: None, replica: 3 },
+            4.0,
+        );
+        assert_eq!(r.fleet_counter("b", None), 5.0);
+    }
+}

@@ -1,0 +1,374 @@
+//! Fixed-interval virtual-clock scraping into ring-buffered time
+//! series, plus the two deterministic exports (Prometheus text
+//! format, JSON series dump).
+//!
+//! A scrape samples every registered metric's scalar
+//! ([`Metric::scrape_value`]) at one engine-clock timestamp; the
+//! per-metric rings keep the newest `cap` points (drop-oldest, same
+//! policy as [`RingSink`](crate::telemetry::RingSink)).  Everything
+//! iterates in [`MetricKey`] order, so two identical runs export
+//! byte-identical text -- a `monitor --smoke` CI gate.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::registry::{Metric, MetricKey, Registry};
+
+/// One scraped sample on the engine clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub ts_ms: f64,
+    pub value: f64,
+}
+
+/// Ring-buffered time series of one metric.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub key: MetricKey,
+    points: VecDeque<Point>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl Series {
+    fn new(key: MetricKey, cap: usize) -> Self {
+        Series { key, points: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    fn push(&mut self, p: Point) {
+        if self.points.len() == self.cap {
+            self.points.pop_front();
+            self.dropped += 1;
+        }
+        self.points.push_back(p);
+    }
+
+    /// Retained points, oldest first.
+    pub fn points(&self) -> impl Iterator<Item = &Point> {
+        self.points.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Points discarded to stay within the ring bound.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Last sample at or before `ts_ms` (the windowed-delta lookup the
+    /// burn-rate engine runs on cumulative counter series).
+    pub fn at_or_before(&self, ts_ms: f64) -> Option<Point> {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| p.ts_ms <= ts_ms + 1e-9)
+            .copied()
+    }
+}
+
+/// The scraper: samples a [`Registry`] at a fixed virtual-clock
+/// interval into per-metric [`Series`] rings.
+#[derive(Debug)]
+pub struct Scraper {
+    interval_ms: f64,
+    cap: usize,
+    last_ms: Option<f64>,
+    scrapes: u64,
+    series: BTreeMap<MetricKey, Series>,
+}
+
+impl Scraper {
+    /// Scrape every `interval_ms` of engine-clock time, keeping the
+    /// newest `cap` points per series.
+    pub fn new(interval_ms: f64, cap: usize) -> Self {
+        Scraper {
+            interval_ms: interval_ms.max(1e-6),
+            cap: cap.max(1),
+            last_ms: None,
+            scrapes: 0,
+            series: BTreeMap::new(),
+        }
+    }
+
+    pub fn interval_ms(&self) -> f64 {
+        self.interval_ms
+    }
+
+    /// Has a full interval elapsed since the last scrape?  (The first
+    /// call is always due.)
+    pub fn due(&self, now_ms: f64) -> bool {
+        match self.last_ms {
+            Some(last) => now_ms >= last + self.interval_ms - 1e-9,
+            None => true,
+        }
+    }
+
+    /// Sample every metric at `now_ms`.
+    pub fn scrape(&mut self, now_ms: f64, registry: &Registry) {
+        self.last_ms = Some(now_ms);
+        self.scrapes += 1;
+        for (key, m) in registry.iter() {
+            let p = Point { ts_ms: now_ms, value: m.scrape_value() };
+            self.series
+                .entry(*key)
+                .or_insert_with(|| Series::new(*key, self.cap))
+                .push(p);
+        }
+    }
+
+    /// Append a derived sample (e.g. a burn rate the alert engine just
+    /// computed) outside the registry scrape.
+    pub fn push_derived(&mut self, key: MetricKey, ts_ms: f64, value: f64) {
+        self.series
+            .entry(key)
+            .or_insert_with(|| Series::new(key, self.cap))
+            .push(Point { ts_ms, value });
+    }
+
+    pub fn scrapes(&self) -> u64 {
+        self.scrapes
+    }
+
+    /// Engine-clock time of the most recent scrape (None before the
+    /// first) -- where a post-run cool-down must resume from to keep
+    /// series timestamps monotone.
+    pub fn last_scrape_ms(&self) -> Option<f64> {
+        self.last_ms
+    }
+
+    /// Total retained points across all series.
+    pub fn total_points(&self) -> usize {
+        self.series.values().map(|s| s.len()).sum()
+    }
+
+    /// All series in deterministic key order.
+    pub fn series(&self) -> impl Iterator<Item = &Series> {
+        self.series.values()
+    }
+
+    pub fn get(&self, key: &MetricKey) -> Option<&Series> {
+        self.series.get(key)
+    }
+
+    /// Fleet-merged series for `(name, class)`: per-timestamp sum of
+    /// every replica's samples (replicas scrape on the shared hub
+    /// clock, so timestamps align by construction).
+    pub fn fleet_points(
+        &self,
+        name: &'static str,
+        class: Option<crate::sched::SloClass>,
+    ) -> Vec<Point> {
+        let mut acc: BTreeMap<u64, f64> = BTreeMap::new();
+        for s in self.series.values() {
+            if s.key.name != name || s.key.class != class {
+                continue;
+            }
+            for p in s.points() {
+                *acc.entry(p.ts_ms.to_bits()).or_insert(0.0) += p.value;
+            }
+        }
+        acc.into_iter()
+            .map(|(bits, value)| Point { ts_ms: f64::from_bits(bits), value })
+            .collect()
+    }
+}
+
+fn fmt_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "NaN".into()
+    }
+}
+
+fn label_str(key: &MetricKey) -> String {
+    match key.class {
+        Some(c) => {
+            format!("{{class=\"{}\",replica=\"{}\"}}", c.name(), key.replica)
+        }
+        None => format!("{{replica=\"{}\"}}", key.replica),
+    }
+}
+
+/// Prometheus text-format dump of a registry's final values.  `# TYPE`
+/// lines are emitted once per metric name; histograms expose `_count`,
+/// `_sum` and `quantile` samples.  Deterministic: key order + fixed
+/// float precision.
+pub fn prometheus_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    for (key, m) in registry.iter() {
+        if key.name != last_name {
+            out.push_str(&format!(
+                "# TYPE p3llm_{} {}\n",
+                key.name,
+                m.kind()
+            ));
+            last_name = key.name;
+        }
+        let labels = label_str(key);
+        match m {
+            Metric::Counter(v) | Metric::Gauge(v) => {
+                out.push_str(&format!(
+                    "p3llm_{}{labels} {}\n",
+                    key.name,
+                    fmt_f(*v)
+                ));
+            }
+            Metric::Histogram(h) => {
+                let base = match key.class {
+                    Some(c) => format!(
+                        "class=\"{}\",replica=\"{}\"",
+                        c.name(),
+                        key.replica
+                    ),
+                    None => format!("replica=\"{}\"", key.replica),
+                };
+                for (q, label) in
+                    [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")]
+                {
+                    out.push_str(&format!(
+                        "p3llm_{}{{{base},quantile=\"{label}\"}} {}\n",
+                        key.name,
+                        fmt_f(h.quantile(q))
+                    ));
+                }
+                out.push_str(&format!(
+                    "p3llm_{}_count{labels} {}\n",
+                    key.name,
+                    h.count()
+                ));
+                out.push_str(&format!(
+                    "p3llm_{}_sum{labels} {}\n",
+                    key.name,
+                    fmt_f(h.sum())
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// JSON dump of every scraped series:
+/// `{"series":[{"name","class","replica","points":[[ts_ms,value],..]},..]}`.
+/// Hand-rolled like the other exporters (no serde in the crate).
+pub fn series_json(scraper: &Scraper) -> String {
+    let mut out = String::from("{\"series\":[\n");
+    let mut first = true;
+    for s in scraper.series() {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let class = match s.key.class {
+            Some(c) => format!("\"{}\"", c.name()),
+            None => "null".into(),
+        };
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"class\":{class},\"replica\":{},\
+             \"points\":[",
+            s.key.name, s.key.replica
+        ));
+        for (i, p) in s.points().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "[{:.3},{}]",
+                p.ts_ms,
+                fmt_f(p.value)
+            ));
+        }
+        out.push_str("]}");
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::SloClass;
+
+    fn key(name: &'static str) -> MetricKey {
+        MetricKey { name, class: None, replica: 0 }
+    }
+
+    #[test]
+    fn scrape_cadence_and_ring_bound() {
+        let mut reg = Registry::default();
+        reg.counter_add(key("done"), 1.0);
+        let mut sc = Scraper::new(10.0, 4);
+        assert!(sc.due(0.0));
+        sc.scrape(0.0, &reg);
+        assert!(!sc.due(5.0));
+        assert!(sc.due(10.0));
+        for t in 1..10 {
+            sc.scrape(t as f64 * 10.0, &reg);
+        }
+        let s = sc.get(&key("done")).unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.dropped(), 6);
+        assert_eq!(sc.scrapes(), 10);
+        // newest points survived
+        assert_eq!(s.points().next().unwrap().ts_ms, 60.0);
+        assert_eq!(s.at_or_before(75.0).unwrap().ts_ms, 70.0);
+        assert!(s.at_or_before(10.0).is_none());
+    }
+
+    #[test]
+    fn fleet_points_merge_replicas_by_timestamp() {
+        let mut sc = Scraper::new(1.0, 16);
+        for rep in 0..3u32 {
+            let k = MetricKey { name: "q", class: None, replica: rep };
+            sc.push_derived(k, 5.0, 1.0 + rep as f64);
+            sc.push_derived(k, 6.0, 10.0);
+        }
+        let pts = sc.fleet_points("q", None);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0], Point { ts_ms: 5.0, value: 6.0 });
+        assert_eq!(pts[1], Point { ts_ms: 6.0, value: 30.0 });
+        assert!(sc.fleet_points("other", None).is_empty());
+    }
+
+    #[test]
+    fn exports_are_deterministic_and_typed() {
+        let build = || {
+            let mut reg = Registry::default();
+            reg.counter_add(key("slo_total"), 5.0);
+            reg.counter_add(
+                MetricKey {
+                    name: "slo_total",
+                    class: Some(SloClass::Batch),
+                    replica: 1,
+                },
+                2.0,
+            );
+            reg.gauge_set(key("queue_depth"), 3.0);
+            reg.observe(key("ttft_ms"), 4.0);
+            reg.observe(key("ttft_ms"), 9.0);
+            let mut sc = Scraper::new(1.0, 8);
+            sc.scrape(1.0, &reg);
+            sc.scrape(2.0, &reg);
+            (prometheus_text(&reg), series_json(&sc))
+        };
+        let (p1, j1) = build();
+        let (p2, j2) = build();
+        assert_eq!(p1, p2);
+        assert_eq!(j1, j2);
+        assert!(p1.contains("# TYPE p3llm_slo_total counter"));
+        assert!(p1.contains("# TYPE p3llm_queue_depth gauge"));
+        assert!(p1.contains("# TYPE p3llm_ttft_ms histogram"));
+        assert!(p1
+            .contains("p3llm_slo_total{class=\"batch\",replica=\"1\"} "));
+        assert!(p1.contains("quantile=\"0.95\""));
+        assert!(p1.contains("p3llm_ttft_ms_count{replica=\"0\"} 2"));
+        assert!(j1.contains("\"name\":\"queue_depth\""));
+        assert!(j1.contains("\"points\":[[1.000,"));
+    }
+}

@@ -58,6 +58,19 @@ impl SloClass {
         }
     }
 
+    /// Target SLO attainment for the tier -- the fraction of requests
+    /// that must meet their (scaled) latency budget.  The complement
+    /// is the tier's *error budget*, which the `obs` burn-rate rules
+    /// spend: interactive tenants buy five nines of patience less than
+    /// batch ones tolerate.
+    pub fn attainment_target(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.95,
+            SloClass::Batch => 0.90,
+            SloClass::BestEffort => 0.75,
+        }
+    }
+
     /// Every tier, highest priority first.
     pub fn all() -> [SloClass; 3] {
         [SloClass::Interactive, SloClass::Batch, SloClass::BestEffort]

@@ -1,10 +1,13 @@
 //! Chrome trace-event JSON export (loadable in Perfetto / about:tracing).
 //!
 //! Track layout: one *process* per replica, with one *thread* per
-//! device lane (`host` / `npu` / `pim` / `bus`) plus one thread per
-//! sampled request (its host-lane lifecycle events move onto that
-//! track, so a request's journey reads as a single row).  Timestamps
-//! convert from engine-clock ms to the trace format's microseconds.
+//! device lane (`host` / `npu` / `pim` / `bus`), one `metrics` thread
+//! for scraped [`crate::obs`] counter tracks (counter events whose
+//! name carries the `obs:` prefix render as Perfetto counter plots on
+//! their own row), plus one thread per sampled request (its host-lane
+//! lifecycle events move onto that track, so a request's journey reads
+//! as a single row).  Timestamps convert from engine-clock ms to the
+//! trace format's microseconds.
 //!
 //! The output is deterministic: events sort by `(ts, seq)`, floats
 //! print with fixed precision, and track metadata is emitted in sorted
@@ -13,6 +16,16 @@
 use std::collections::BTreeSet;
 
 use super::{EventKind, TraceEvent, TraceLane};
+
+/// Thread id of the per-replica `metrics` track `obs:`-prefixed
+/// counter events land on (device lanes use 0..4, sampled requests
+/// 16+).
+pub const METRICS_TID: u32 = 8;
+
+/// Does this event belong on the scraped-metrics counter track?
+fn is_obs_counter(e: &TraceEvent) -> bool {
+    matches!(e.kind, EventKind::Counter) && e.name.starts_with("obs:")
+}
 
 /// First `k` distinct requests by appearance (emission order) -- the
 /// default sampling the `trace` subcommand uses for per-request
@@ -73,9 +86,14 @@ pub fn chrome_trace_json(
     // track metadata in deterministic order
     let mut replicas = BTreeSet::new();
     let mut lanes = BTreeSet::new();
+    let mut obs_replicas = BTreeSet::new();
     for e in events {
         replicas.insert(e.replica);
-        lanes.insert((e.replica, e.lane));
+        if is_obs_counter(e) {
+            obs_replicas.insert(e.replica);
+        } else {
+            lanes.insert((e.replica, e.lane));
+        }
     }
     let mut out = String::from("{\"traceEvents\":[\n");
     let mut first = true;
@@ -106,6 +124,16 @@ pub fn chrome_trace_json(
             ),
         );
     }
+    for &rep in &obs_replicas {
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{rep},\
+                 \"tid\":{METRICS_TID},\
+                 \"args\":{{\"name\":\"metrics\"}}}}"
+            ),
+        );
+    }
     for (i, &(rep, rid)) in sampled.iter().enumerate() {
         push(
             &mut out,
@@ -117,11 +145,15 @@ pub fn chrome_trace_json(
         );
     }
     for e in sorted {
-        let tid = match (e.rid, e.lane) {
-            (Some(rid), TraceLane::Host) => {
-                req_tid(e.replica, rid).unwrap_or(e.lane.index())
+        let tid = if is_obs_counter(e) {
+            METRICS_TID
+        } else {
+            match (e.rid, e.lane) {
+                (Some(rid), TraceLane::Host) => {
+                    req_tid(e.replica, rid).unwrap_or(e.lane.index())
+                }
+                _ => e.lane.index(),
             }
-            _ => e.lane.index(),
         };
         let ts_us = e.ts_ms * 1e3;
         let mut line = format!(
@@ -199,6 +231,36 @@ mod tests {
         assert!(json.contains("\"ph\":\"C\""));
         // sampled request events moved off the shared host track
         assert!(json.contains("\"tid\":16"));
+    }
+
+    #[test]
+    fn obs_counters_land_on_the_metrics_track() {
+        let t = Trace::ring(64);
+        let r1 = t.for_replica(1);
+        t.counter("obs:queue_depth", 1.0, 3.0);
+        t.counter("obs:queue_depth", 2.0, 5.0);
+        r1.counter("obs:burn:interactive", 2.0, 1.5);
+        // a plain engine counter stays on its lane track
+        t.counter("kv_used_bytes", 2.0, 64.0);
+        let evs = t.snapshot();
+        let json = chrome_trace_json(&evs, &[]);
+        // one metrics thread per replica that scraped
+        assert!(json.contains(
+            "\"pid\":0,\"tid\":8,\"args\":{\"name\":\"metrics\"}"
+        ));
+        assert!(json.contains(
+            "\"pid\":1,\"tid\":8,\"args\":{\"name\":\"metrics\"}"
+        ));
+        // obs counters moved to tid 8; the plain counter kept tid 0
+        assert!(json.contains(
+            "\"name\":\"obs:queue_depth\",\"cat\":\"host\",\"pid\":0,\
+             \"tid\":8"
+        ));
+        assert!(json.contains(
+            "\"name\":\"kv_used_bytes\",\"cat\":\"host\",\"pid\":0,\
+             \"tid\":0"
+        ));
+        assert!(json.contains("\"name\":\"obs:burn:interactive\""));
     }
 
     #[test]

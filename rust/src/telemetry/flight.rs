@@ -72,6 +72,53 @@ pub fn ttft_misses(
     out
 }
 
+/// `alert:firing` transitions the [`crate::obs`] burn-rate engine
+/// recorded into the trace stream, as sorted `(replica, class, ts_ms,
+/// burn)` tuples -- each one a flight-dump trigger: an alert firing is
+/// exactly the moment the recent history is worth keeping.
+pub fn alert_firings(
+    events: &[TraceEvent],
+) -> Vec<(u32, Option<crate::sched::SloClass>, f64, f64)> {
+    let mut out: Vec<_> = events
+        .iter()
+        .filter(|e| e.name == "alert:firing")
+        .map(|e| (e.replica, e.class, e.ts_ms, e.value))
+        .collect();
+    out.sort_by(|a, b| {
+        a.2.total_cmp(&b.2).then((a.0, a.1.map(|c| c.rank())).cmp(&(
+            b.0,
+            b.1.map(|c| c.rank()),
+        )))
+    });
+    out
+}
+
+/// The fleet-wide context around an alert transition: the last
+/// `last_n` request-lifecycle events at or before `ts_ms`, in emission
+/// order -- what was in flight when the alert fired.  Scraped metric
+/// counters (`obs:` names) are excluded; they are the *cause* of the
+/// alert and already plotted as counter tracks, while the dump answers
+/// "which requests were doing what".
+pub fn alert_context_dump(
+    events: &[TraceEvent],
+    ts_ms: f64,
+    last_n: usize,
+) -> Vec<TraceEvent> {
+    let mut ctx: Vec<TraceEvent> = events
+        .iter()
+        .filter(|e| {
+            e.ts_ms <= ts_ms + 1e-9
+                && e.rid.is_some()
+                && !e.name.starts_with("obs:")
+                && !e.name.starts_with("alert:")
+        })
+        .copied()
+        .collect();
+    ctx.sort_by_key(|e| e.seq);
+    let skip = ctx.len().saturating_sub(last_n);
+    ctx.split_off(skip)
+}
+
 /// Render one dump as indented human-readable lines (what the `trace`
 /// subcommand prints under `--flight-on-miss`).
 pub fn render(events: &[TraceEvent]) -> String {
@@ -173,6 +220,50 @@ mod tests {
         let s = render(&d);
         assert!(s.contains("demand_migrate"));
         assert!(s.contains("prefetch"));
+    }
+
+    #[test]
+    fn alert_firings_and_context_dump() {
+        use crate::sched::SloClass;
+        let t = Trace::ring(64);
+        // the in-flight history an alert should capture
+        t.instant("enqueue", 0.0, Some(1), Some(SloClass::Interactive), 1.0);
+        t.instant("admit", 1.0, Some(1), Some(SloClass::Interactive), 1.0);
+        t.instant("enqueue", 2.0, Some(2), Some(SloClass::Batch), 1.0);
+        // scraped counters and the alert instants themselves are noise
+        t.counter("obs:queue_depth", 3.0, 7.0);
+        t.instant(
+            "alert:pending",
+            3.0,
+            None,
+            Some(SloClass::Interactive),
+            2.5,
+        );
+        t.instant(
+            "alert:firing",
+            4.0,
+            None,
+            Some(SloClass::Interactive),
+            3.5,
+        );
+        // after the firing instant: must not appear in its context
+        t.instant("retire", 5.0, Some(1), Some(SloClass::Interactive), 9.0);
+        t.instant("alert:resolved", 8.0, None, Some(SloClass::Interactive), 0.5);
+        let evs = t.snapshot();
+        let firings = alert_firings(&evs);
+        assert_eq!(firings.len(), 1);
+        let (rep, class, ts, burn) = firings[0];
+        assert_eq!(rep, 0);
+        assert_eq!(class, Some(SloClass::Interactive));
+        assert!((ts - 4.0).abs() < 1e-9);
+        assert!((burn - 3.5).abs() < 1e-9);
+        let ctx = alert_context_dump(&evs, ts, 8);
+        let names: Vec<&str> = ctx.iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["enqueue", "admit", "enqueue"]);
+        // bounded tail: only the newest N survive
+        let ctx2 = alert_context_dump(&evs, ts, 2);
+        assert_eq!(ctx2.len(), 2);
+        assert_eq!(ctx2[0].name, "admit");
     }
 
     #[test]

@@ -364,6 +364,18 @@ impl LoadReport {
         self.saturation_tok_s
             .map(|s| self.throughput_tok_s / s.max(1e-9))
     }
+
+    /// One tier's SLO attainment from the [`per_class`]
+    /// (LoadReport::per_class) breakdown.  `None` when the run carried
+    /// no such tier (or was single-tier and has no breakdown) -- the
+    /// lookup the `monitor` gates use to compare end-of-run truth
+    /// against the live burn-rate alerts.
+    pub fn class_attainment(&self, class: SloClass) -> Option<f64> {
+        self.per_class
+            .iter()
+            .find(|(c, _)| *c == class)
+            .map(|(_, r)| r.slo_attainment)
+    }
 }
 
 #[cfg(test)]

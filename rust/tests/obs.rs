@@ -1,0 +1,199 @@
+//! Integration and property tests for the obs layer through the
+//! public API: histogram quantile estimates bounded by the exact
+//! sample percentiles, byte-identical scrape exports across seeds and
+//! victim policies, the report-identical guarantee with metrics
+//! disabled, the alert state machine end-to-end without flapping, and
+//! per-replica tagging on a shared cluster hub.
+
+use p3llm::cluster::Cluster;
+use p3llm::coordinator::Percentiles;
+use p3llm::obs::{AlertKind, Histogram, Obs, ObsConfig};
+use p3llm::sched::SloClass;
+use p3llm::telemetry::Trace;
+use p3llm::testutil::{Rng, Runner};
+use p3llm::traffic::{scenario_by_name, LoadReport, Scenario, SloSpec};
+
+const SYSTEM: &str = "P3-LLM";
+const EPS: f64 = 1e-9;
+
+/// The CI overload scenario pinned to 2x modeled saturation with the
+/// victim policy overridden -- the same shape the telemetry tests use,
+/// so the scraped counters cover admission, preemption, and retire
+/// churn.
+fn overloaded(victim: Option<&'static str>, seed: u64) -> Scenario {
+    let mut sc = scenario_by_name("smoke-overload")
+        .unwrap()
+        .with_load_factor(SYSTEM, 2.0, seed)
+        .unwrap();
+    sc.victim = victim;
+    sc
+}
+
+/// Run a scenario on a single observed engine and return the report.
+fn observed_run(sc: &Scenario, seed: u64, obs: &Obs) -> LoadReport {
+    let mut eng = sc.engine(SYSTEM, None).unwrap();
+    eng.set_obs(obs.clone());
+    sc.runner(seed)
+        .run_with_saturation(&mut eng, sc.saturation_tok_s(SYSTEM))
+        .unwrap()
+        .report
+}
+
+/// Property test: the log2-bucket histogram's nearest-rank quantile
+/// estimate never undershoots the exact sample percentile and stays
+/// within the bucket's factor-of-two bound above it.  Sample counts
+/// avoid multiples of 20 and 100 so the float `ceil(n * q)` rank and
+/// the exact integer `ceil(n * pct / 100)` rank agree.
+#[test]
+fn histogram_quantiles_track_exact_percentiles_within_2x() {
+    Runner::new(64).run(|rng: &mut Rng| {
+        let n = loop {
+            let n = rng.usize(5, 300);
+            if n % 20 != 0 && n % 100 != 0 {
+                break n;
+            }
+        };
+        let samples: Vec<f64> =
+            (0..n).map(|_| rng.lognormal(2.0, 1.5)).collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.observe(s);
+        }
+        assert_eq!(h.count(), n as u64);
+        let exact = Percentiles::from_samples(&samples);
+        for (q, want) in
+            [(0.5, exact.p50), (0.95, exact.p95), (0.99, exact.p99)]
+        {
+            let est = h.quantile(q);
+            assert!(
+                est + EPS >= want,
+                "n={n} q={q}: estimate {est} undershoots exact {want}"
+            );
+            assert!(
+                est <= 2.0 * want + EPS,
+                "n={n} q={q}: estimate {est} above 2x exact {want}"
+            );
+            assert!(est <= exact.max + EPS);
+        }
+    });
+}
+
+/// Two identical runs export byte-identical Prometheus text and series
+/// JSON, for every victim policy and several seeds -- the determinism
+/// the `monitor --smoke` CI gate relies on.
+#[test]
+fn scrape_exports_are_byte_identical_across_seeds_and_victims() {
+    for victim in [Some("recompute"), Some("swap")] {
+        for seed in [7u64, 11] {
+            let sc = overloaded(victim, seed);
+            let export_once = || {
+                let obs = Obs::new(ObsConfig::standard(sc.slo));
+                let report = observed_run(&sc, seed, &obs);
+                assert!(report.completed > 0);
+                assert!(obs.scrapes() > 0, "engine never scraped");
+                (obs.prometheus(), obs.series_json())
+            };
+            let (p1, j1) = export_once();
+            let (p2, j2) = export_once();
+            assert_eq!(p1, p2, "{victim:?}/seed {seed}: prometheus text");
+            assert_eq!(j1, j2, "{victim:?}/seed {seed}: series JSON");
+            assert!(p1.contains("p3llm_slo_total"));
+            assert!(p1.contains("# TYPE p3llm_queue_depth gauge"));
+            assert!(j1.contains("\"name\":\"slo_total\""));
+        }
+    }
+}
+
+/// Instrumentation must never perturb the run: a metrics-off engine
+/// produces a LoadReport identical to the observed one, and the
+/// disabled handle records nothing.
+#[test]
+fn metrics_off_run_is_report_identical() {
+    let sc = overloaded(Some("swap"), 7);
+    let obs = Obs::new(ObsConfig::standard(sc.slo));
+    let on = observed_run(&sc, 7, &obs);
+    let off = Obs::off();
+    let plain = observed_run(&sc, 7, &off);
+    assert_eq!(plain, on, "metrics changed the schedule");
+    assert!(obs.total_points() > 0);
+    assert_eq!(off.total_points(), 0);
+    assert_eq!(off.scrapes(), 0);
+    assert!(off.prometheus().is_empty());
+}
+
+/// The burn-rate state machine end-to-end through the public handle:
+/// an outage walks interactive through pending -> firing, a sustained
+/// recovery resolves it exactly once, and an isolated boundary miss
+/// afterwards cannot re-fire (the slow window refuses to confirm).
+#[test]
+fn alert_state_machine_fires_and_resolves_without_flapping() {
+    let slo = SloSpec { ttft_ms: 10.0, tpot_ms: f64::INFINITY };
+    let o = Obs::new(ObsConfig::with_windows(slo, 10.0, 50.0, 100.0));
+    let mut t = 0.0;
+    let mut tick = |o: &Obs, ttft: f64, n: usize, t: &mut f64| {
+        for _ in 0..n {
+            o.request_finished(SloClass::Interactive, ttft, None);
+            o.maybe_scrape(*t);
+            *t += 10.0;
+        }
+    };
+    tick(&o, 1.0, 10, &mut t); // healthy
+    tick(&o, 99.0, 15, &mut t); // outage
+    tick(&o, 1.0, 35, &mut t); // sustained recovery
+    // boundary noise: one isolated miss in a sea of meets
+    o.request_finished(SloClass::Interactive, 99.0, None);
+    tick(&o, 1.0, 20, &mut t);
+    let evs = o.events();
+    let of = |k: AlertKind| {
+        evs.iter()
+            .filter(|e| e.class == SloClass::Interactive && e.kind == k)
+            .count()
+    };
+    assert_eq!(of(AlertKind::Firing), 1, "{evs:?}");
+    assert_eq!(of(AlertKind::Resolved), 1, "{evs:?}");
+    let firing = evs
+        .iter()
+        .find(|e| e.kind == AlertKind::Firing)
+        .unwrap()
+        .ts_ms;
+    let pending = evs
+        .iter()
+        .find(|e| e.kind == AlertKind::Pending)
+        .unwrap()
+        .ts_ms;
+    let resolved = evs
+        .iter()
+        .find(|e| e.kind == AlertKind::Resolved)
+        .unwrap()
+        .ts_ms;
+    assert!(pending < firing && firing < resolved);
+}
+
+/// A 2-replica cluster sharing one hub tags every replica's samples,
+/// merges fleet series at scrape timestamps, and mirrors alert
+/// transitions into the shared trace sink when one is attached.
+#[test]
+fn cluster_hub_tags_replicas_and_merges_series() {
+    let sc = scenario_by_name("smoke").unwrap();
+    let obs = Obs::new(ObsConfig::standard(sc.slo));
+    let trace = Trace::ring(1 << 18);
+    obs.set_trace(trace.clone());
+    let mut fleet = Cluster::from_scenario_observed(
+        &sc, SYSTEM, None, 2, "jsq", &trace, &obs,
+    )
+    .unwrap();
+    let plan = sc.clone().for_fleet(2).unwrap().runner(7);
+    fleet.run(&plan, sc.saturation_tok_s(SYSTEM)).unwrap();
+    let prom = obs.prometheus();
+    assert!(prom.contains("replica=\"0\""), "{prom}");
+    assert!(prom.contains("replica=\"1\""), "{prom}");
+    // scrapes mirror the headline gauges into the trace as obs:
+    // counters (the Perfetto metrics track)
+    assert!(trace
+        .snapshot()
+        .iter()
+        .any(|e| e.name.starts_with("obs:")));
+    let h = obs.health(1e12, None, sc.saturation_tok_s(SYSTEM));
+    assert!(h.replica_skew >= 0.0);
+    assert!(!h.tiers.is_empty(), "no tier was ever judged");
+}
